@@ -1,0 +1,118 @@
+//! End-to-end driver: the life of one faulty TPU chip.
+//!
+//! ```text
+//! cargo run --release --example chip_provisioning
+//! ```
+//!
+//! This is the full-system workload (EXPERIMENTS.md §End-to-end):
+//!
+//! 1. **Train** the golden MNIST MLP from scratch on the procedural digit
+//!    dataset via the AOT training graph, logging the loss curve.
+//! 2. **Fabricate** a chip: a 64x64 systolic array with 15% permanent
+//!    stuck-at faults (hidden from the controller).
+//! 3. **Post-fab test**: localize every faulty MAC with the DFT bypass
+//!    binary search (no knowledge of the injected map).
+//! 4. **FAP + FAP+T**: prune and retrain for this chip's fault map.
+//! 5. **Deploy**: serve batched inference on the faulty chip's quantized
+//!    datapath (bypass live) and report accuracy, latency and throughput.
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fap::apply_fap;
+use repro::coordinator::fapt::{fapt_retrain, FaptConfig};
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{detect, inject_uniform, FaultSpec};
+use repro::model::arch;
+use repro::model::quant::calibrate_mlp;
+use repro::runtime::Runtime;
+use repro::systolic::SystolicArray;
+use repro::util::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let a = arch::by_name("mnist").unwrap();
+
+    // 1. golden training with loss-curve logging
+    println!("=== 1. training golden model ===");
+    let (train, test) = data::for_arch("mnist", 4000, 1000, 77).unwrap();
+    let tcfg = TrainConfig { steps: 400, lr: 0.05, seed: 77, log_every: 50, ..Default::default() };
+    let t0 = Instant::now();
+    let (baseline, losses) = train_baseline(&rt, &a, &train, &tcfg)?;
+    let ev = Evaluator::new(&rt);
+    let base_acc = ev.accuracy(&a, &baseline, &test)?;
+    println!(
+        "trained {} params in {:.1}s: loss {:.3} -> {:.4}, accuracy {:.2}%",
+        a.param_count(),
+        t0.elapsed().as_secs_f64(),
+        losses[0],
+        losses.last().unwrap(),
+        base_acc * 100.0
+    );
+
+    // 2. the fab delivers a wounded chip
+    println!("\n=== 2. chip arrives with hidden permanent faults ===");
+    let n = 64;
+    let true_fm = inject_uniform(FaultSpec::new(n), (n * n) * 15 / 100, &mut Rng::new(0xFAB));
+    println!("(hidden truth: {} faulty MACs, {:.1}%)", true_fm.faulty_mac_count(),
+        true_fm.fault_rate() * 100.0);
+
+    // 3. post-fab test localizes them through the DFT interface only
+    println!("\n=== 3. post-fabrication fault localization ===");
+    let mut dut = SystolicArray::with_faults(&true_fm);
+    let t0 = Instant::now();
+    let rep = detect::localize_faults(&mut dut, Default::default());
+    let truth = true_fm.faulty_macs();
+    let correct = rep.faulty.iter().filter(|f| truth.contains(f)).count();
+    println!(
+        "localized {} / {} faulty MACs ({} array test runs, {:.1} ms)",
+        correct,
+        truth.len(),
+        rep.array_runs,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 4. FAP + FAP+T for this chip
+    println!("\n=== 4. FAP + FAP+T provisioning ===");
+    let mut known = repro::faults::FaultMap::healthy(n);
+    for (r, c) in &rep.faulty {
+        known.add(repro::faults::StuckAt { row: *r as u16, col: *c as u16, bit: 0, value: true });
+    }
+    let (fap_params, masks, frep) = apply_fap(&a, &baseline, &known);
+    let fap_acc = ev.accuracy(&a, &fap_params, &test)?;
+    let fcfg = FaptConfig { max_epochs: 4, lr: 0.01, seed: 77, snapshot_epochs: vec![] };
+    let res = fapt_retrain(&rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
+    let fapt_acc = ev.accuracy(&a, &res.params, &test)?;
+    println!(
+        "pruned {} weights ({:.1}%); FAP {:.2}% -> FAP+T {:.2}% ({:.2}s/epoch)",
+        frep.pruned_weights,
+        frep.pruned_fraction() * 100.0,
+        fap_acc * 100.0,
+        fapt_acc * 100.0,
+        res.secs_per_epoch
+    );
+
+    // 5. deploy: batched serving on the faulty chip's quantized datapath
+    println!("\n=== 5. serving on the faulty chip (bypass live) ===");
+    let calib = calibrate_mlp(&a, &res.params, &train.x[..64 * 784], 64);
+    let t0 = Instant::now();
+    let chip_acc = ev.accuracy_faulty(&a, &res.params, &masks, &calib, &test, false)?;
+    let elapsed = t0.elapsed();
+    let batches = test.len().div_ceil(a.eval_batch);
+    println!(
+        "served {} samples in {} batches: accuracy {:.2}%, {:.1} ms/batch, {:.0} samples/s",
+        test.len(),
+        batches,
+        chip_acc * 100.0,
+        elapsed.as_secs_f64() * 1e3 / batches as f64,
+        test.len() as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "\nsummary: golden {:.2}% | unmitigated chip would collapse | FAP {:.2}% | \
+         FAP+T on-chip {:.2}%",
+        base_acc * 100.0,
+        fap_acc * 100.0,
+        chip_acc * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! FAP vs FAP+T across fault rates (Fig 4 style) on TIMIT — the paper's
+//! headline result: FAP alone holds to ~25% faulty MACs, FAP+T holds to
+//! 50% with close-to-baseline accuracy.
+//!
+//! ```text
+//! cargo run --release --example fap_vs_fapt [-- <model>]
+//! ```
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fap::apply_fap;
+use repro::coordinator::fapt::{fapt_retrain, FaptConfig};
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::model::arch;
+use repro::runtime::Runtime;
+use repro::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "timit".into());
+    let rt = Runtime::new("artifacts")?;
+    let a = arch::by_name(&model).expect("mnist | timit | alexnet32");
+    let (train, test) = data::for_arch(&model, 183 * 16, 183 * 4, 3)
+        .or_else(|| data::for_arch(&model, 2000, 500, 3))
+        .unwrap();
+    let tcfg = TrainConfig { steps: 500, lr: 0.04, seed: 3, log_every: 200, ..Default::default() };
+    let (baseline, _) = train_baseline(&rt, &a, &train, &tcfg)?;
+    let ev = Evaluator::new(&rt);
+    let base = ev.accuracy(&a, &baseline, &test)?;
+    println!("\n{model}: baseline accuracy {:.2}%\n", base * 100.0);
+    println!("{:>10} {:>10} {:>10} {:>10}", "fault %", "FAP %", "FAP+T %", "pruned %");
+
+    let n = 256;
+    for rate in [0.0625, 0.125, 0.25, 0.5] {
+        let k = (rate * (n * n) as f64).round() as usize;
+        let fm = inject_uniform(FaultSpec::new(n), k, &mut Rng::new(50 + (rate * 1e3) as u64));
+        let (fap_params, masks, report) = apply_fap(&a, &baseline, &fm);
+        let fap_acc = ev.accuracy(&a, &fap_params, &test)?;
+        let fcfg = FaptConfig { max_epochs: 3, lr: 0.01, seed: 3, snapshot_epochs: vec![] };
+        let res = fapt_retrain(&rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
+        let fapt_acc = ev.accuracy(&a, &res.params, &test)?;
+        println!(
+            "{:>9.2}% {:>9.2}% {:>9.2}% {:>9.2}%",
+            rate * 100.0,
+            fap_acc * 100.0,
+            fapt_acc * 100.0,
+            report.pruned_fraction() * 100.0
+        );
+    }
+    Ok(())
+}

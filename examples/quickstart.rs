@@ -1,0 +1,62 @@
+//! Quickstart: the whole FAP / FAP+T story in ~60 lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Trains the paper's MNIST MLP (784-256-256-256-10) on the procedural
+//! digit dataset via the AOT-compiled training graph, breaks a 64x64
+//! systolic array with 25% permanent faults, and shows the accuracy of:
+//! no mitigation → FAP (prune) → FAP+T (prune + retrain).
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fap::apply_fap;
+use repro::coordinator::fapt::{fapt_retrain, FaptConfig};
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::mapping::{LayerMasks, MaskKind};
+use repro::model::arch;
+use repro::model::quant::calibrate_mlp;
+use repro::runtime::Runtime;
+use repro::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. runtime over the AOT artifacts (built once by `make artifacts`)
+    let rt = Runtime::new("artifacts")?;
+    let a = arch::by_name("mnist").unwrap();
+
+    // 2. data + baseline training (all rust; python never runs here)
+    let (train, test) = data::for_arch("mnist", 3000, 800, 42).unwrap();
+    let tcfg = TrainConfig { steps: 300, lr: 0.05, seed: 42, log_every: 100, ..Default::default() };
+    let (baseline, _) = train_baseline(&rt, &a, &train, &tcfg)?;
+    let ev = Evaluator::new(&rt);
+    let base_acc = ev.accuracy(&a, &baseline, &test)?;
+
+    // 3. a chip comes back from the fab with 25% of its MACs broken
+    let n = 64;
+    let fm = inject_uniform(FaultSpec::new(n), n * n / 4, &mut Rng::new(7));
+    println!("chip: {n}x{n} array, {} faulty MACs ({:.0}%)", fm.faulty_mac_count(),
+        fm.fault_rate() * 100.0);
+
+    // 4. unmitigated: run the quantized faulty datapath as-is
+    let calib = calibrate_mlp(&a, &baseline, &train.x[..64 * 784], 64);
+    let unmit = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+    let faulty_acc = ev.accuracy_faulty(&a, &baseline, &unmit, &calib, &test, false)?;
+
+    // 5. FAP: bypass faulty MACs == prune their weights
+    let (fap_params, masks, report) = apply_fap(&a, &baseline, &fm);
+    let fap_acc = ev.accuracy(&a, &fap_params, &test)?;
+
+    // 6. FAP+T: Algorithm 1 — retrain the surviving weights
+    let fcfg = FaptConfig { max_epochs: 3, lr: 0.01, seed: 42, snapshot_epochs: vec![] };
+    let res = fapt_retrain(&rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
+    let fapt_acc = ev.accuracy(&a, &res.params, &test)?;
+
+    println!("\n  baseline (fault-free) : {:>6.2}%", base_acc * 100.0);
+    println!("  unmitigated faults    : {:>6.2}%", faulty_acc * 100.0);
+    println!("  FAP   ({:>6} pruned)  : {:>6.2}%", report.pruned_weights, fap_acc * 100.0);
+    println!("  FAP+T ({} epochs)      : {:>6.2}%  ({:.1}s/epoch)",
+        fcfg.max_epochs, fapt_acc * 100.0, res.secs_per_epoch);
+    Ok(())
+}

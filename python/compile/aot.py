@@ -1,0 +1,438 @@
+"""AOT lowering driver: JAX graphs -> HLO text artifacts + manifest.
+
+Emits HLO *text* (never serialized HloModuleProto): jax >= 0.5 writes protos
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs under --out (default ../artifacts):
+  *.hlo.txt        one per artifact (lowered with return_tuple=True)
+  manifest.txt     line-based manifest the rust runtime parses:
+                     artifact <name>
+                     file <relpath>
+                     meta <key> <value>
+                     in <name> <dtype> <dim0>x<dim1>x...   (scalar: "scalar")
+                     out <name> <dtype> <dims>
+                     end
+  archs.txt        architecture descriptions (cross-checked by rust tests)
+  testvectors/*.txt  cross-language golden vectors (rust integration tests)
+
+Python runs once, at build time; the rust binary is self-contained after.
+"""
+
+import argparse
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import faulty, model
+from .archs import ALL_ARCHS, Arch, ConvLayer, FcLayer, PoolLayer, get_arch
+from .kernels import quant, ref
+
+SCAN_STEPS = 8  # fused steps in the *_train_scan artifacts
+TEST_ARRAY_ROWS = 8  # tiny crosscheck artifact's array height
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "s32", "uint32": "u32"}[jnp.dtype(dt).name]
+
+
+def _shape_str(shape) -> str:
+    if len(shape) == 0:
+        return "scalar"
+    return "x".join(str(d) for d in shape)
+
+
+class ManifestWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.lines: List[str] = []
+
+    def add(self, name, fn, example_args, in_names, out_names, meta=None):
+        """Lower fn(*example_args), write HLO text, record manifest entry.
+
+        in_names must list the *flattened* argument order (the order jax
+        flattens the example_args pytree), which is the HLO parameter order.
+        """
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        rel = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, rel), "w") as f:
+            f.write(text)
+
+        flat_in, _ = jax.tree_util.tree_flatten(example_args)
+        assert len(flat_in) == len(in_names), (
+            f"{name}: {len(flat_in)} flattened inputs but {len(in_names)} names"
+        )
+        out_avals = jax.tree_util.tree_flatten(
+            jax.eval_shape(fn, *example_args)
+        )[0]
+        assert len(out_avals) == len(out_names), (
+            f"{name}: {len(out_avals)} outputs but {len(out_names)} names"
+        )
+
+        self.lines.append(f"artifact {name}")
+        self.lines.append(f"file {rel}")
+        for k, v in (meta or {}).items():
+            self.lines.append(f"meta {k} {v}")
+        for nm, a in zip(in_names, flat_in):
+            self.lines.append(f"in {nm} {_dtype_str(a.dtype)} {_shape_str(a.shape)}")
+        for nm, a in zip(out_names, out_avals):
+            self.lines.append(f"out {nm} {_dtype_str(a.dtype)} {_shape_str(a.shape)}")
+        self.lines.append("end")
+        print(f"  wrote {rel} ({len(text)} chars)")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+# ----------------------------------------------------------------------------
+# Shape/name helpers
+# ----------------------------------------------------------------------------
+
+def _sds(shape, dt=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def param_specs(arch: Arch):
+    specs, names = [], []
+    for i, layer in enumerate(arch.weighted_layers()):
+        if isinstance(layer, FcLayer):
+            wshape = (layer.din, layer.dout)
+        else:
+            wshape = (layer.kh, layer.kw, layer.din, layer.dout)
+        specs.append((_sds(wshape), _sds((wshape[-1],))))
+        names.extend([f"w{i}", f"b{i}"])
+    return specs, names
+
+
+def mask_specs(arch: Arch, prefix="m", dt=jnp.float32):
+    specs, names = [], []
+    for i, layer in enumerate(arch.weighted_layers()):
+        if isinstance(layer, FcLayer):
+            wshape = (layer.din, layer.dout)
+        else:
+            wshape = (layer.kh, layer.kw, layer.din, layer.dout)
+        specs.append(_sds(wshape, dt))
+        names.append(f"{prefix}{i}")
+    return specs, names
+
+
+def x_spec(arch: Arch, batch: int):
+    return _sds((batch,) + tuple(arch.input_shape))
+
+
+# ----------------------------------------------------------------------------
+# Artifact builders
+# ----------------------------------------------------------------------------
+
+def build_model_artifacts(mw: ManifestWriter, arch: Arch, fast: bool):
+    name = arch.name
+    L = len(arch.weighted_layers())
+    p_specs, p_names = param_specs(arch)
+    v_names = [n.replace("w", "vw").replace("b", "vb") for n in p_names]
+    m_specs, m_names = mask_specs(arch)
+
+    # init: seed -> params
+    mw.add(
+        f"{name}_init",
+        lambda seed: tuple(jax.tree_util.tree_leaves(model.init_params(arch, seed))),
+        (_sds((), jnp.int32),),
+        ["seed"],
+        p_names,
+        meta={"arch": name, "kind": "init"},
+    )
+
+    # fwd: params, x -> logits (weights pre-masked on the host for FAP)
+    mw.add(
+        f"{name}_fwd",
+        lambda params, x: (model.forward(arch, params, x),),
+        (p_specs, x_spec(arch, arch.eval_batch)),
+        p_names + ["x"],
+        ["logits"],
+        meta={"arch": name, "kind": "fwd", "batch": arch.eval_batch},
+    )
+
+    # train: one masked SGD+momentum step (Algorithm 1 inner loop)
+    train_args = (
+        p_specs,
+        p_specs,  # velocities, same shapes
+        m_specs,
+        x_spec(arch, arch.train_batch),
+        _sds((arch.train_batch,), jnp.int32),
+        _sds((), jnp.float32),
+    )
+    mw.add(
+        f"{name}_train",
+        lambda p, v, m, x, y, lr: _flat_train(arch, p, v, m, x, y, lr),
+        train_args,
+        p_names + v_names + m_names + ["x", "y", "lr"],
+        p_names + v_names + ["loss"],
+        meta={"arch": name, "kind": "train", "batch": arch.train_batch},
+    )
+
+    if not fast:
+        # train_scan: SCAN_STEPS fused steps (perf artifact)
+        scan_args = (
+            p_specs,
+            p_specs,
+            m_specs,
+            _sds((SCAN_STEPS, arch.train_batch) + tuple(arch.input_shape)),
+            _sds((SCAN_STEPS, arch.train_batch), jnp.int32),
+            _sds((), jnp.float32),
+        )
+        mw.add(
+            f"{name}_train_scan",
+            lambda p, v, m, xs, ys, lr: _flat_train_scan(arch, p, v, m, xs, ys, lr),
+            scan_args,
+            p_names + v_names + m_names + ["xs", "ys", "lr"],
+            p_names + v_names + ["losses"],
+            meta={
+                "arch": name,
+                "kind": "train_scan",
+                "batch": arch.train_batch,
+                "steps": SCAN_STEPS,
+            },
+        )
+
+
+def _flat_train(arch, p, v, m, x, y, lr):
+    ps, vs, loss = model.train_step(arch, p, v, m, x, y, lr)
+    return tuple(jax.tree_util.tree_leaves(ps)) + tuple(
+        jax.tree_util.tree_leaves(vs)
+    ) + (loss,)
+
+
+def _flat_train_scan(arch, p, v, m, xs, ys, lr):
+    ps, vs, losses = model.train_steps_scanned(arch, p, v, m, xs, ys, lr)
+    return tuple(jax.tree_util.tree_leaves(ps)) + tuple(
+        jax.tree_util.tree_leaves(vs)
+    ) + (losses,)
+
+
+def build_faulty_artifacts(mw: ManifestWriter, arch: Arch, array_rows: int, fast: bool):
+    """Quantized faulty-fwd artifacts (MLPs only; Fig 2a/2b)."""
+    name = arch.name
+    L = len(arch.fc_layers)
+    p_specs, p_names = param_specs(arch)
+    and_specs, and_names = mask_specs(arch, "and", jnp.int32)
+    or_specs, or_names = mask_specs(arch, "or", jnp.int32)
+    byp_specs, byp_names = mask_specs(arch, "byp", jnp.int32)
+    scale_specs = [_sds((), jnp.float32) for _ in range(L)]
+    a_scale_names = [f"ascale{i}" for i in range(L)]
+    w_scale_names = [f"wscale{i}" for i in range(L)]
+
+    args = (
+        p_specs,
+        and_specs,
+        or_specs,
+        byp_specs,
+        scale_specs,
+        scale_specs,
+        x_spec(arch, arch.eval_batch),
+    )
+    in_names = (
+        p_names + and_names + or_names + byp_names
+        + a_scale_names + w_scale_names + ["x"]
+    )
+
+    mw.add(
+        f"{name}_faulty_fwd",
+        lambda p, am, om, bm, asc, wsc, x: (
+            faulty.faulty_forward(
+                arch, p, am, om, bm, asc, wsc, x, array_rows=array_rows, impl="scan"
+            ),
+        ),
+        args,
+        in_names,
+        ["logits"],
+        meta={
+            "arch": name,
+            "kind": "faulty_fwd",
+            "batch": arch.eval_batch,
+            "array_rows": array_rows,
+        },
+    )
+
+    # Per-layer pre-activations for the Fig 2b scatter.
+    mw.add(
+        f"{name}_faulty_acts",
+        lambda p, am, om, bm, asc, wsc, x: faulty.faulty_forward_activations(
+            arch, p, am, om, bm, asc, wsc, x, array_rows=array_rows
+        ),
+        args,
+        in_names,
+        [f"act{i}" for i in range(L)],
+        meta={
+            "arch": name,
+            "kind": "faulty_acts",
+            "batch": arch.eval_batch,
+            "array_rows": array_rows,
+        },
+    )
+
+    if name == "mnist" and not fast:
+        # Pallas-kernel variant: the L1 kernel lowered into a real model HLO.
+        mw.add(
+            f"{name}_faulty_fwd_pallas",
+            lambda p, am, om, bm, asc, wsc, x: (
+                faulty.faulty_forward(
+                    arch, p, am, om, bm, asc, wsc, x,
+                    array_rows=array_rows, impl="pallas",
+                ),
+            ),
+            args,
+            in_names,
+            ["logits"],
+            meta={
+                "arch": name,
+                "kind": "faulty_fwd_pallas",
+                "batch": arch.eval_batch,
+                "array_rows": array_rows,
+            },
+        )
+
+
+def build_test_artifacts(mw: ManifestWriter):
+    """Tiny faulty-matmul artifact for the rust sim <-> HLO crosscheck."""
+    B, K, N = 8, 24, 16
+    args = tuple(
+        _sds(s, jnp.int32)
+        for s in [(B, K), (K, N), (K, N), (K, N), (K, N)]
+    )
+    mw.add(
+        "faulty_matmul_test",
+        lambda a, w, am, om, bm: (
+            faulty.faulty_matmul_scan(a, w, am, om, bm, TEST_ARRAY_ROWS),
+        ),
+        args,
+        ["a_q", "w_q", "and", "or", "byp"],
+        ["acc"],
+        meta={"kind": "test", "array_rows": TEST_ARRAY_ROWS},
+    )
+
+
+# ----------------------------------------------------------------------------
+# Golden test vectors (cross-language checks for the rust side)
+# ----------------------------------------------------------------------------
+
+def write_testvectors(out_dir: str):
+    tv_dir = os.path.join(out_dir, "testvectors")
+    os.makedirs(tv_dir, exist_ok=True)
+    rng = np.random.RandomState(0)
+
+    # 1) faulty matmul bit-exact vector (matches faulty_matmul_test artifact)
+    B, K, N, AR = 8, 24, 16, TEST_ARRAY_ROWS
+    a_q = rng.randint(-127, 128, size=(B, K)).astype(np.int32)
+    w_q = rng.randint(-127, 128, size=(K, N)).astype(np.int32)
+    and_m = np.full((K, N), -1, dtype=np.int32)
+    or_m = np.zeros((K, N), dtype=np.int32)
+    byp = np.zeros((K, N), dtype=np.int32)
+    # sprinkle faults: stuck-at-0 and stuck-at-1 at assorted bits, one bypass
+    for (r, c, bit, val) in [(3, 5, 30, 1), (7, 2, 14, 0), (10, 5, 3, 1),
+                             (15, 9, 31, 0), (20, 11, 22, 1)]:
+        if val == 1:
+            or_m[r, c] |= np.int32(1) << bit
+        else:
+            and_m[r, c] &= ~(np.int32(1) << bit)
+    byp[12, 7] = 1
+    expected = np.asarray(
+        ref.faulty_systolic_matmul_chunked_ref(
+            jnp.asarray(a_q), jnp.asarray(w_q), jnp.asarray(and_m),
+            jnp.asarray(or_m), jnp.asarray(byp), AR,
+        )
+    )
+    with open(os.path.join(tv_dir, "faulty_matmul.txt"), "w") as f:
+        f.write(f"{B} {K} {N} {AR}\n")
+        for arr in [a_q, w_q, and_m, or_m, byp, expected]:
+            f.write(" ".join(str(v) for v in arr.reshape(-1)) + "\n")
+    print("  wrote testvectors/faulty_matmul.txt")
+
+    # 2) quantization vector (rust fixed.rs must match bit-for-bit)
+    xs = rng.randn(256).astype(np.float32) * 3.0
+    xs[:5] = [0.0, 1e-9, -1e-9, 500.0, -500.0]
+    scale = np.float32(np.max(np.abs(xs)) / 127.0)
+    q = np.asarray(quant.quantize(jnp.asarray(xs), scale))
+    with open(os.path.join(tv_dir, "quant.txt"), "w") as f:
+        f.write(f"{len(xs)} {float(scale)!r}\n")
+        f.write(" ".join(repr(float(v)) for v in xs) + "\n")
+        f.write(" ".join(str(int(v)) for v in q) + "\n")
+    print("  wrote testvectors/quant.txt")
+
+    # 3) mnist forward golden (float, tolerance-checked in rust)
+    arch = get_arch("mnist")
+    params = jax.jit(lambda s: model.init_params(arch, s))(jnp.int32(42))
+    x = jnp.asarray(rng.randn(arch.eval_batch, 784).astype(np.float32))
+    logits = np.asarray(jax.jit(lambda p, x: model.forward(arch, p, x))(params, x))
+    with open(os.path.join(tv_dir, "mnist_fwd.txt"), "w") as f:
+        f.write(f"42 {arch.eval_batch} 784 {arch.num_classes}\n")
+        f.write(" ".join(repr(float(v)) for v in np.asarray(x).reshape(-1)) + "\n")
+        f.write(" ".join(repr(float(v)) for v in logits.reshape(-1)) + "\n")
+    print("  wrote testvectors/mnist_fwd.txt")
+
+
+def write_archs(out_dir: str):
+    """Architecture dump, cross-checked against rust/src/model/arch.rs."""
+    with open(os.path.join(out_dir, "archs.txt"), "w") as f:
+        for name in ALL_ARCHS:
+            arch = get_arch(name)
+            f.write(
+                f"arch {arch.name} in={_shape_str(arch.input_shape)} "
+                f"classes={arch.num_classes} eval_batch={arch.eval_batch} "
+                f"train_batch={arch.train_batch} params={arch.param_count()}\n"
+            )
+            for layer in arch.layers:
+                if isinstance(layer, FcLayer):
+                    f.write(f"  fc {layer.din} {layer.dout} relu={int(layer.relu)}\n")
+                elif isinstance(layer, ConvLayer):
+                    f.write(
+                        f"  conv {layer.kh} {layer.kw} {layer.din} {layer.dout} "
+                        f"stride={layer.stride} pad={layer.padding} "
+                        f"relu={int(layer.relu)}\n"
+                    )
+                else:
+                    f.write(f"  pool {layer.k} {layer.s}\n")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip alexnet32, scan and pallas-model artifacts")
+    ap.add_argument("--array-rows", type=int,
+                    default=faulty.DEFAULT_ARRAY_ROWS,
+                    help="physical systolic array height baked into the "
+                         "faulty-fwd artifacts (paper: 256)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    mw = ManifestWriter(args.out)
+    archs = ["mnist", "timit"] + ([] if args.fast else ["alexnet32"])
+    for name in archs:
+        arch = get_arch(name)
+        print(f"[{name}] params={arch.param_count():,}")
+        build_model_artifacts(mw, arch, fast=args.fast)
+        if not arch.conv_layers:
+            build_faulty_artifacts(mw, arch, args.array_rows, fast=args.fast)
+    build_test_artifacts(mw)
+    mw.finish()
+    write_archs(args.out)
+    write_testvectors(args.out)
+    print(f"manifest: {len(mw.lines)} lines -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

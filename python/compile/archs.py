@@ -1,0 +1,143 @@
+"""Benchmark DNN architectures (paper Table 1), shared by model/faulty/aot.
+
+Three benchmarks:
+
+* ``mnist``     — 784-256-256-256-10 MLP (paper's exact MNIST network).
+* ``timit``     — the paper's TIMIT MLP is 1845-2000-2000-2000-183; this
+                  testbed is a single CPU core, so the default build scales
+                  the hidden width to 512 (``AOT_FULL=1`` builds the paper's
+                  full width).  Input/output dims and depth are preserved.
+* ``alexnet32`` — AlexNet's 5-conv + 3-fc topology scaled to 32x32 RGB
+                  inputs (PASCAL VOC + 227x227 AlexNet does not fit the
+                  compute budget; the conv fault-mapping pathology the paper
+                  reports depends only on the conv structure).
+
+See DESIGN.md "Paper -> build substitutions".
+"""
+
+import os
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class FcLayer:
+    """Fully-connected layer: weight [din, dout] + bias [dout]."""
+
+    din: int
+    dout: int
+    relu: bool = True
+
+
+@dataclass(frozen=True)
+class ConvLayer:
+    """Conv layer, HWIO weights [kh, kw, din, dout], SAME/VALID padding."""
+
+    kh: int
+    kw: int
+    din: int
+    dout: int
+    stride: int = 1
+    padding: str = "SAME"
+    relu: bool = True
+
+
+@dataclass(frozen=True)
+class PoolLayer:
+    """Max pool, window k x k, stride s."""
+
+    k: int
+    s: int
+
+
+@dataclass(frozen=True)
+class Arch:
+    name: str
+    layers: Tuple[object, ...]
+    input_shape: Tuple[int, ...]  # per-sample shape (e.g. (784,) or (32,32,3))
+    num_classes: int
+    eval_batch: int
+    train_batch: int
+
+    @property
+    def fc_layers(self) -> List[FcLayer]:
+        return [l for l in self.layers if isinstance(l, FcLayer)]
+
+    @property
+    def conv_layers(self) -> List[ConvLayer]:
+        return [l for l in self.layers if isinstance(l, ConvLayer)]
+
+    def weighted_layers(self) -> List[object]:
+        """Layers that carry weights (conv + fc), in order."""
+        return [l for l in self.layers if isinstance(l, (FcLayer, ConvLayer))]
+
+    def param_count(self) -> int:
+        n = 0
+        for l in self.weighted_layers():
+            if isinstance(l, FcLayer):
+                n += l.din * l.dout + l.dout
+            else:
+                n += l.kh * l.kw * l.din * l.dout + l.dout
+        return n
+
+
+def mlp(name: str, dims: List[int], eval_batch: int, train_batch: int) -> Arch:
+    layers = []
+    for i in range(len(dims) - 1):
+        layers.append(FcLayer(dims[i], dims[i + 1], relu=(i < len(dims) - 2)))
+    return Arch(
+        name=name,
+        layers=tuple(layers),
+        input_shape=(dims[0],),
+        num_classes=dims[-1],
+        eval_batch=eval_batch,
+        train_batch=train_batch,
+    )
+
+
+def mnist_arch() -> Arch:
+    return mlp("mnist", [784, 256, 256, 256, 10], eval_batch=256, train_batch=128)
+
+
+def timit_arch(full: bool = False) -> Arch:
+    h = 2000 if full else 512
+    return mlp("timit", [1845, h, h, h, 183], eval_batch=256, train_batch=128)
+
+
+def alexnet32_arch() -> Arch:
+    """AlexNet topology (5 conv + 3 pool + 3 fc) scaled to 32x32x3 inputs."""
+    layers = (
+        ConvLayer(5, 5, 3, 48, stride=1, padding="SAME"),     # conv1
+        PoolLayer(2, 2),                                       # pool1 -> 16
+        ConvLayer(5, 5, 48, 96, stride=1, padding="SAME"),     # conv2
+        PoolLayer(2, 2),                                       # pool2 -> 8
+        ConvLayer(3, 3, 96, 128, stride=1, padding="SAME"),    # conv3
+        ConvLayer(3, 3, 128, 128, stride=1, padding="SAME"),   # conv4
+        ConvLayer(3, 3, 128, 96, stride=1, padding="SAME"),    # conv5
+        PoolLayer(2, 2),                                       # pool5 -> 4
+        FcLayer(96 * 4 * 4, 512, relu=True),                   # fc6
+        FcLayer(512, 256, relu=True),                          # fc7
+        FcLayer(256, 10, relu=False),                          # fc8
+    )
+    return Arch(
+        name="alexnet32",
+        layers=layers,
+        input_shape=(32, 32, 3),
+        num_classes=10,
+        eval_batch=64,
+        train_batch=32,
+    )
+
+
+def get_arch(name: str) -> Arch:
+    full = os.environ.get("AOT_FULL", "0") == "1"
+    if name == "mnist":
+        return mnist_arch()
+    if name == "timit":
+        return timit_arch(full=full)
+    if name == "alexnet32":
+        return alexnet32_arch()
+    raise ValueError(f"unknown arch {name!r}")
+
+
+ALL_ARCHS = ("mnist", "timit", "alexnet32")

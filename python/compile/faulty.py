@@ -1,0 +1,126 @@
+"""L2: quantized fault-emulating forward pass (the unmitigated baseline).
+
+This is the graph behind Fig 2a/2b: the DNN executed on a systolic array
+whose MACs carry permanent stuck-at faults, with *no* mitigation.  The rust
+coordinator computes per-layer fault masks from the chip's fault map and the
+weight->MAC mapping functions (rust/src/mapping/) and feeds them in as
+runtime inputs, so one compiled artifact serves any fault map.
+
+Two interchangeable implementations of the faulty systolic pass:
+
+* `impl="scan"` — lax.scan over row steps, full [B, N] vector width.  This
+  is what the large accuracy sweeps use on the CPU testbed (XLA fuses the
+  scan body well).
+* `impl="pallas"` — the L1 Pallas kernel (kernels/systolic_fault.py), tiled
+  the way a real TPU kernel would be.  Bit-identical to the scan path and
+  to ref.py (pytest enforces it); lowered into the mnist artifact so the
+  kernel rides the same HLO the rust runtime executes.
+
+Both share the chunked-pass semantics: weight matrices taller than the
+array run in passes of <= array_rows rows, accumulated fault-free outside
+the array.
+"""
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .archs import Arch, FcLayer
+from .kernels import quant
+from .kernels.systolic_fault import faulty_systolic_matmul
+
+DEFAULT_ARRAY_ROWS = 256  # the paper's 256x256 TPU
+
+
+def faulty_pass_scan(a_q, w_q, and_mask, or_mask, bypass):
+    """Single systolic pass (K <= array rows) via lax.scan over row steps.
+
+    Semantically identical to ref.faulty_systolic_matmul_ref and to the
+    Pallas kernel; vectorized over the full [B, N] tile per step.
+    """
+    B = a_q.shape[0]
+    N = w_q.shape[1]
+    acc0 = jnp.zeros((B, N), dtype=jnp.int32)
+
+    def step(acc, row):
+        w_r, and_r, or_r, byp_r, a_r = row  # [N],[N],[N],[N],[B]
+        upd = (acc + a_r[:, None] * w_r[None, :]) & and_r[None, :] | or_r[None, :]
+        acc = jnp.where(byp_r[None, :] != 0, acc, upd)
+        return acc, None
+
+    rows = (w_q, and_mask, or_mask, bypass, a_q.T)
+    acc, _ = jax.lax.scan(step, acc0, rows)
+    return acc
+
+
+def faulty_matmul_scan(a_q, w_q, and_mask, or_mask, bypass, array_rows):
+    """Chunked multi-pass faulty matmul (scan implementation)."""
+    B, K = a_q.shape
+    N = w_q.shape[1]
+    out = jnp.zeros((B, N), dtype=jnp.int32)
+    for k0 in range(0, K, array_rows):
+        k1 = min(k0 + array_rows, K)
+        out = out + faulty_pass_scan(
+            a_q[:, k0:k1], w_q[k0:k1], and_mask[k0:k1], or_mask[k0:k1], bypass[k0:k1]
+        )
+    return out
+
+
+def faulty_forward(
+    arch: Arch,
+    params,
+    and_masks: Sequence[jnp.ndarray],
+    or_masks: Sequence[jnp.ndarray],
+    bypasses: Sequence[jnp.ndarray],
+    a_scales: Sequence[jnp.ndarray],
+    w_scales: Sequence[jnp.ndarray],
+    x,
+    array_rows: int = DEFAULT_ARRAY_ROWS,
+    impl: str = "scan",
+):
+    """Quantized faulty forward for MLP archs -> logits.
+
+    Per layer: quantize activations/weights to int8 range with the given
+    scales, run the faulty systolic matmul in int32, dequantize, add bias,
+    ReLU (except last layer).  The masks are per logical weight element
+    [din, dout], already expanded from the [N, N] physical fault map by the
+    caller (rust/src/mapping/mask.rs or python tests).
+    """
+    assert not arch.conv_layers, "faulty path models the MLP benchmarks"
+    fm = faulty_matmul_scan if impl == "scan" else faulty_systolic_matmul
+    a = x
+    L = len(arch.fc_layers)
+    for l in range(L):
+        w, b = params[l]
+        a_q = quant.quantize(a, a_scales[l])
+        w_q = quant.quantize(w, w_scales[l])
+        acc = fm(a_q, w_q, and_masks[l], or_masks[l], bypasses[l], array_rows)
+        y = quant.dequantize(acc, a_scales[l], w_scales[l]) + b
+        a = jnp.maximum(y, 0.0) if arch.fc_layers[l].relu else y
+    return a
+
+
+def faulty_forward_activations(
+    arch, params, and_masks, or_masks, bypasses, a_scales, w_scales, x,
+    array_rows: int = DEFAULT_ARRAY_ROWS,
+):
+    """Like faulty_forward but returns every layer's pre-activation output.
+
+    Used by the Fig 2b harness (golden vs faulty activation scatter).
+    """
+    assert not arch.conv_layers
+    a = x
+    outs = []
+    L = len(arch.fc_layers)
+    for l in range(L):
+        w, b = params[l]
+        a_q = quant.quantize(a, a_scales[l])
+        w_q = quant.quantize(w, w_scales[l])
+        acc = faulty_matmul_scan(
+            a_q, w_q, and_masks[l], or_masks[l], bypasses[l], array_rows
+        )
+        y = quant.dequantize(acc, a_scales[l], w_scales[l]) + b
+        outs.append(y)
+        a = jnp.maximum(y, 0.0) if arch.fc_layers[l].relu else y
+    return tuple(outs)

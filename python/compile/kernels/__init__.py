@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the systolic-array datapath (build-time only).
+
+* systolic_fault — fault-emulating quantized systolic matmul (the hot-spot).
+* masked_matmul  — FAP/bypass masked float matmul.
+* ref            — pure-jnp oracles defining the exact semantics.
+* quant          — int8/int32 fixed-point conventions.
+"""
+
+from . import quant, ref  # noqa: F401
+from .masked_matmul import masked_matmul  # noqa: F401
+from .systolic_fault import faulty_systolic_matmul, faulty_systolic_pass  # noqa: F401

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: masked (FAP / bypass) float matmul.
+
+FAP's algorithmic effect is exactly ``y = a @ (w * mask)``: every weight
+mapped to a faulty MAC is pruned to zero (the hardware bypass skips the MAC,
+which contributes nothing to the column sum).  This kernel is the float
+inference hot-spot; the mask multiply rides along in VMEM so pruning costs
+zero extra passes over HBM.
+
+TPU mapping: classic (i, j, k) matmul grid with a VMEM f32 accumulator;
+block sizes default to MXU-friendly 128x128 tiles.  interpret=True for CPU
+execution (see systolic_fault.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_matmul_kernel(a_ref, w_ref, m_ref, o_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    w = w_ref[...] * m_ref[...]  # bypass = prune: zero contribution
+    o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x, mult, axis):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k"))
+def masked_matmul(a, w, mask, block_b=128, block_n=128, block_k=128):
+    """y = a @ (w * mask) with [B,K] @ [K,N] f32 operands."""
+    B, K = a.shape
+    N = w.shape[1]
+    block_b = min(block_b, max(B, 1))
+    block_n = min(block_n, max(N, 1))
+    block_k = min(block_k, max(K, 1))
+
+    a_p = _pad_to(_pad_to(a, block_b, 0), block_k, 1)
+    w_p = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+    m_p = _pad_to(_pad_to(mask, block_k, 0), block_n, 1)
+    Bp, Kp = a_p.shape
+    Np = w_p.shape[1]
+
+    grid = (Bp // block_b, Np // block_n, Kp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_masked_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.float32),
+        interpret=True,
+    )(a_p, w_p, m_p)
+    return out[:B, :N]

@@ -1,0 +1,38 @@
+"""Fixed-point quantization helpers for the systolic datapath.
+
+The modelled accelerator (TPU-v1-style) computes with int8 weights and
+activations and a 32-bit accumulator; permanent stuck-at faults act on the
+two's-complement bits of each PE's accumulator output.  These helpers define
+the *exact* quantization semantics shared by the JAX graphs, the Pallas
+kernel, the jnp oracle, and the rust cycle-level simulator
+(rust/src/systolic/fixed.rs) — all four must agree bit-for-bit.
+
+Conventions (mirrored in rust):
+
+* symmetric per-tensor scale ``s = maxabs / 127`` (``s = 1`` if maxabs == 0);
+* ``q(x) = clip(floor(x / s + 0.5), -127, 127)`` — floor(+0.5) rounding, NOT
+  banker's rounding, so rust can match with integer-exact code;
+* products accumulate in int32 with wraparound (two's complement), matching
+  both XLA int32 arithmetic and rust ``wrapping_add``/``wrapping_mul``.
+"""
+
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+def scale_for(x) -> jnp.ndarray:
+    """Symmetric per-tensor quantization scale (scalar, float32)."""
+    maxabs = jnp.max(jnp.abs(x))
+    return jnp.where(maxabs > 0, maxabs / QMAX, jnp.float32(1.0)).astype(jnp.float32)
+
+
+def quantize(x, scale) -> jnp.ndarray:
+    """Quantize float -> int8-range values held in int32 (for bitwise ops)."""
+    q = jnp.floor(x / scale + 0.5)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int32)
+
+
+def dequantize(acc, a_scale, w_scale) -> jnp.ndarray:
+    """int32 accumulator -> float, given the two input scales."""
+    return acc.astype(jnp.float32) * (a_scale * w_scale)

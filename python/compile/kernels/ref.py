@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the *semantic definition* of the systolic datapath: maximally
+simple, unrolled-python-loop implementations that the Pallas kernels
+(systolic_fault.py, masked_matmul.py) and the rust cycle-level simulator
+(rust/src/systolic/) are both tested against.
+
+Systolic column-sum semantics with stuck-at faults
+--------------------------------------------------
+
+A weight-stationary N x N array computes ``y[b, c] = sum_r a[b, r] * w[r, c]``
+with the partial sum flowing *down* each column through one MAC per row step.
+A permanent stuck-at fault in MAC (r, c)'s output register corrupts the
+partial sum at row step r, every cycle:
+
+    acc <- ((acc + a[b, r] * w[r, c]) & and_mask[r, c]) | or_mask[r, c]
+
+where ``and_mask`` has 0s at stuck-at-0 bits (else 1s) and ``or_mask`` has 1s
+at stuck-at-1 bits.  A *bypassed* MAC (the FAP hardware fix) forwards its
+south input unchanged: ``acc <- acc`` — note this is NOT the same as loading
+a zero weight into a faulty MAC, where the stuck bits still corrupt the
+passing sum (the paper makes this exact point in §5.1).
+
+Weight matrices taller than the array are executed in passes of at most N
+rows; each pass's partial result is accumulated *outside* the array in
+fault-free accumulators, so the fault recursion resets every pass.  That
+chunked accumulation lives in the wrappers (see systolic_fault.py and
+model-level code); the oracle here models a single pass.
+"""
+
+import jax.numpy as jnp
+
+NO_FAULT_AND = jnp.int32(-1)  # all ones
+NO_FAULT_OR = jnp.int32(0)
+
+
+def matmul_ref(a, w):
+    """Plain float matmul oracle: [B,K] @ [K,N]."""
+    return jnp.matmul(a, w)
+
+
+def masked_matmul_ref(a, w, mask):
+    """FAP semantics at the algorithm level: pruned weights are zero."""
+    return jnp.matmul(a, w * mask)
+
+
+def faulty_systolic_matmul_ref(a_q, w_q, and_mask, or_mask, bypass):
+    """Bit-exact single-pass faulty systolic matmul oracle.
+
+    Args:
+      a_q:      int32 [B, K]  quantized activations (int8 range).
+      w_q:      int32 [K, N]  quantized weights (int8 range).
+      and_mask: int32 [K, N]  per-MAC AND mask (-1 where no stuck-at-0).
+      or_mask:  int32 [K, N]  per-MAC OR mask (0 where no stuck-at-1).
+      bypass:   int32 [K, N]  1 where the MAC is bypassed (FAP), else 0.
+
+    Returns: int32 [B, N] accumulator outputs (wraparound arithmetic).
+
+    Requires K <= array rows (single pass); callers chunk longer K.
+    """
+    B, K = a_q.shape
+    N = w_q.shape[1]
+    acc = jnp.zeros((B, N), dtype=jnp.int32)
+    for r in range(K):  # unrolled python loop: this is the oracle, keep it dumb
+        prod = a_q[:, r : r + 1] * w_q[r, :][None, :]  # [B, N] int32
+        upd = (acc + prod) & and_mask[r, :][None, :] | or_mask[r, :][None, :]
+        acc = jnp.where(bypass[r, :][None, :] != 0, acc, upd)
+    return acc
+
+
+def faulty_systolic_matmul_chunked_ref(a_q, w_q, and_mask, or_mask, bypass, array_rows):
+    """Multi-pass oracle: chunk K into passes of <= array_rows, sum outside."""
+    B, K = a_q.shape
+    N = w_q.shape[1]
+    out = jnp.zeros((B, N), dtype=jnp.int32)
+    for k0 in range(0, K, array_rows):
+        k1 = min(k0 + array_rows, K)
+        out = out + faulty_systolic_matmul_ref(
+            a_q[:, k0:k1],
+            w_q[k0:k1],
+            and_mask[k0:k1],
+            or_mask[k0:k1],
+            bypass[k0:k1],
+        )
+    return out

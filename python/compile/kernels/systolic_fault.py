@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: fault-emulating quantized systolic matmul.
+
+This is the compute hot-spot of the reproduction: it executes a
+weight-stationary systolic pass over int8-range operands with per-MAC
+stuck-at bit corruption applied to the int32 partial sums, exactly matching
+``ref.faulty_systolic_matmul_ref`` (bit-for-bit) and the rust cycle-level
+simulator.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles (batch, column)
+blocks; each program holds a (block_b x K) activation tile, a (K x block_n)
+weight+mask tile and the int32 accumulator in VMEM, and walks the K row
+steps with ``lax.fori_loop`` — the in-VMEM analogue of the array's row
+pipeline.  VMEM footprint per program (defaults block_b=64, block_n=128,
+K<=256): 64*256*4 + 3*256*128*4 + 64*128*4 ≈ 480 KiB, comfortably inside a
+16 MiB VMEM budget.  On CPU we must run interpret=True (Mosaic custom-calls
+cannot execute on the CPU PJRT plugin), so wallclock here is NOT a TPU
+proxy; see DESIGN.md §Perf for the structural analysis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fault_pass_kernel(a_ref, w_ref, and_ref, or_ref, byp_ref, o_ref):
+    """One systolic pass over a (block_b, K) x (K, block_n) tile."""
+    a = a_ref[...]  # [bB, K] int32
+    w = w_ref[...]  # [K, bN] int32
+    and_m = and_ref[...]
+    or_m = or_ref[...]
+    byp = byp_ref[...]
+    bB = a.shape[0]
+    bN = w.shape[1]
+    K = a.shape[1]
+
+    def row_step(r, acc):
+        a_r = jax.lax.dynamic_slice_in_dim(a, r, 1, axis=1)  # [bB, 1]
+        w_r = jax.lax.dynamic_slice_in_dim(w, r, 1, axis=0)  # [1, bN]
+        and_r = jax.lax.dynamic_slice_in_dim(and_m, r, 1, axis=0)
+        or_r = jax.lax.dynamic_slice_in_dim(or_m, r, 1, axis=0)
+        byp_r = jax.lax.dynamic_slice_in_dim(byp, r, 1, axis=0)
+        upd = (acc + a_r * w_r) & and_r | or_r
+        return jnp.where(byp_r != 0, acc, upd)
+
+    acc0 = jnp.zeros((bB, bN), dtype=jnp.int32)
+    o_ref[...] = jax.lax.fori_loop(0, K, row_step, acc0)
+
+
+def _pad_to(x, mult, axis, fill=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def faulty_systolic_pass(a_q, w_q, and_mask, or_mask, bypass, block_b=64, block_n=128):
+    """Single systolic pass (K <= array rows) via the Pallas kernel.
+
+    Shapes: a_q [B,K] int32, w_q/and_mask/or_mask/bypass [K,N] int32.
+    Returns int32 [B,N].  Inputs are padded to block multiples; padding rows
+    are fault-free with zero weights so they do not perturb the sum, and
+    padded columns are sliced away.
+    """
+    B, K = a_q.shape
+    N = w_q.shape[1]
+    block_b = min(block_b, B) if B > 0 else block_b
+    block_n = min(block_n, N) if N > 0 else block_n
+
+    a_p = _pad_to(a_q, block_b, axis=0)
+    w_p = _pad_to(w_q, block_n, axis=1)
+    and_p = _pad_to(and_mask, block_n, axis=1, fill=-1)
+    or_p = _pad_to(or_mask, block_n, axis=1, fill=0)
+    byp_p = _pad_to(bypass, block_n, axis=1, fill=0)
+    Bp, Np = a_p.shape[0], w_p.shape[1]
+
+    grid = (Bp // block_b, Np // block_n)
+    out = pl.pallas_call(
+        _fault_pass_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((K, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_p, w_p, and_p, or_p, byp_p)
+    return out[:B, :N]
+
+
+def faulty_systolic_matmul(a_q, w_q, and_mask, or_mask, bypass, array_rows):
+    """Full blocked faulty matmul: chunk K into passes of <= array_rows.
+
+    Pass results are summed *outside* the array (fault-free accumulators),
+    matching the hardware's tiled execution of weight matrices taller than
+    the physical array.  Mirrors ref.faulty_systolic_matmul_chunked_ref.
+    """
+    B, K = a_q.shape
+    N = w_q.shape[1]
+    out = jnp.zeros((B, N), dtype=jnp.int32)
+    for k0 in range(0, K, array_rows):
+        k1 = min(k0 + array_rows, K)
+        out = out + faulty_systolic_pass(
+            a_q[:, k0:k1],
+            w_q[k0:k1],
+            and_mask[k0:k1],
+            or_mask[k0:k1],
+            bypass[k0:k1],
+        )
+    return out

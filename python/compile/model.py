@@ -1,0 +1,153 @@
+"""L2: JAX model graphs (fwd / masked train step) for the benchmark DNNs.
+
+Everything here is build-time only: `aot.py` lowers these functions once to
+HLO text and the rust coordinator executes them via PJRT forever after.
+
+Parameter convention (mirrored in rust/src/runtime/params.rs):
+  * params = [(w_1, b_1), ..., (w_L, b_L)] for the weighted layers in order;
+  * FC weights are [din, dout] (row-major), conv weights are HWIO
+    [kh, kw, din, dout]; biases are [dout];
+  * the HLO entry's parameters appear in pytree flatten order, which for the
+    tuples used here is w_1, b_1, w_2, b_2, ..., then any later arguments.
+    aot.py records the exact order in artifacts/manifest.txt.
+
+Training implements the paper's Algorithm 1 inner loop: masked forward,
+SGD+momentum update, then pruned weights forced back to zero (line 7).
+"""
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .archs import Arch, ConvLayer, FcLayer, PoolLayer
+from .kernels.masked_matmul import masked_matmul
+
+MOMENTUM = 0.9
+
+
+# ----------------------------------------------------------------------------
+# Initialization
+# ----------------------------------------------------------------------------
+
+def init_params(arch: Arch, seed) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """He-normal weights, zero biases. `seed` may be a traced uint32 scalar."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for layer in arch.weighted_layers():
+        key, sub = jax.random.split(key)
+        if isinstance(layer, FcLayer):
+            shape = (layer.din, layer.dout)
+            fan_in = layer.din
+        else:
+            shape = (layer.kh, layer.kw, layer.din, layer.dout)
+            fan_in = layer.kh * layer.kw * layer.din
+        w = jax.random.normal(sub, shape, dtype=jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in).astype(jnp.float32)
+        b = jnp.zeros((shape[-1],), dtype=jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def zero_velocities(params):
+    return [(jnp.zeros_like(w), jnp.zeros_like(b)) for (w, b) in params]
+
+
+# ----------------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------------
+
+def _maxpool(x, k, s):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+    )
+
+
+def forward(arch: Arch, params, x, masks=None, use_pallas: bool = False):
+    """Forward pass -> logits.
+
+    If `masks` is given (one per weighted layer, same shape as the weight),
+    weights are multiplied by the mask — the FAP pruning semantics.  If
+    `use_pallas` is set, FC layers go through the L1 masked-matmul Pallas
+    kernel so it lowers into the same HLO the rust runtime executes.
+    """
+    a = x
+    li = 0
+    for layer in arch.layers:
+        if isinstance(layer, PoolLayer):
+            a = _maxpool(a, layer.k, layer.s)
+            continue
+        w, b = params[li]
+        m = masks[li] if masks is not None else None
+        if isinstance(layer, FcLayer):
+            if a.ndim > 2:
+                a = a.reshape(a.shape[0], -1)
+            if use_pallas:
+                mm = m if m is not None else jnp.ones_like(w)
+                y = masked_matmul(a, w, mm) + b
+            else:
+                wm = w * m if m is not None else w
+                y = jnp.matmul(a, wm) + b
+        else:  # conv, NHWC x HWIO
+            wm = w * m if m is not None else w
+            y = jax.lax.conv_general_dilated(
+                a,
+                wm,
+                window_strides=(layer.stride, layer.stride),
+                padding=layer.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + b
+        a = jnp.maximum(y, 0.0) if layer.relu else y
+        li += 1
+    return a
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids [B]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(picked)
+
+
+# ----------------------------------------------------------------------------
+# FAP+T training step (Algorithm 1, lines 5-8)
+# ----------------------------------------------------------------------------
+
+def train_step(arch: Arch, params, vels, masks, x, y, lr):
+    """One masked SGD+momentum step; pruned weights re-zeroed after update.
+
+    Returns (new_params, new_vels, loss).  Biases are never pruned (they do
+    not map to MAC units).
+    """
+
+    def loss_fn(ps):
+        logits = forward(arch, ps, x, masks=masks)
+        return cross_entropy(logits, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params, new_vels = [], []
+    for (w, b), (vw, vb), (gw, gb), m in zip(params, vels, grads, masks):
+        vw = MOMENTUM * vw - lr * gw
+        vb = MOMENTUM * vb - lr * gb
+        w = (w + vw) * m  # Algorithm 1 line 7: pruned weights stay zero
+        b = b + vb
+        new_params.append((w, b))
+        new_vels.append((vw, vb))
+    return new_params, new_vels, loss
+
+
+def train_steps_scanned(arch: Arch, params, vels, masks, xs, ys, lr):
+    """S fused train steps via lax.scan (xs: [S,B,...], ys: [S,B]).
+
+    Amortizes the host<->device parameter round-trip over S steps — the L2
+    perf optimization recorded in EXPERIMENTS.md §Perf.
+    """
+
+    def step(carry, batch):
+        ps, vs = carry
+        x, y = batch
+        ps, vs, loss = train_step(arch, ps, vs, masks, x, y, lr)
+        return (ps, vs), loss
+
+    (params, vels), losses = jax.lax.scan(step, (params, vels), (xs, ys))
+    return params, vels, losses

@@ -1,0 +1,85 @@
+"""AOT lowering tests: manifest consistency and HLO-text validity."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.archs import get_arch
+
+
+def test_to_hlo_text_produces_parseable_entry():
+    arch = get_arch("mnist")
+    p_specs, _ = aot.param_specs(arch)
+    lowered = jax.jit(lambda p, x: (model.forward(arch, p, x),)).lower(
+        p_specs, jax.ShapeDtypeStruct((4, 784), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    # parameters in flatten order: 8 params + x
+    assert text.count("parameter(") == 9
+
+
+def test_manifest_writer_counts(tmp_path):
+    mw = aot.ManifestWriter(str(tmp_path))
+    mw.add(
+        "t",
+        lambda a, b: (a + b, a * b),
+        (jax.ShapeDtypeStruct((2, 3), jnp.float32),) * 2,
+        ["a", "b"],
+        ["sum", "prod"],
+        meta={"kind": "test"},
+    )
+    mw.finish()
+    text = (tmp_path / "manifest.txt").read_text()
+    assert "artifact t" in text
+    assert "in a f32 2x3" in text
+    assert "out prod f32 2x3" in text
+    assert (tmp_path / "t.hlo.txt").exists()
+
+
+def test_manifest_writer_rejects_bad_names(tmp_path):
+    mw = aot.ManifestWriter(str(tmp_path))
+    with pytest.raises(AssertionError):
+        mw.add(
+            "bad",
+            lambda a: (a,),
+            (jax.ShapeDtypeStruct((1,), jnp.float32),),
+            ["a", "extra"],
+            ["out"],
+        )
+
+
+def test_fast_aot_end_to_end(tmp_path):
+    """Run the full --fast pipeline into a temp dir and sanity-check it."""
+    env = dict(os.environ)
+    repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path), "--fast",
+         "--array-rows", "64"],
+        cwd=repo_py,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    names = os.listdir(tmp_path)
+    for required in [
+        "manifest.txt", "archs.txt", "mnist_init.hlo.txt", "mnist_fwd.hlo.txt",
+        "mnist_train.hlo.txt", "mnist_faulty_fwd.hlo.txt",
+        "timit_faulty_acts.hlo.txt", "faulty_matmul_test.hlo.txt",
+    ]:
+        assert required in names, f"missing {required}"
+    tv = os.listdir(tmp_path / "testvectors")
+    assert {"faulty_matmul.txt", "quant.txt", "mnist_fwd.txt"} <= set(tv)
+    # every artifact block in the manifest references an existing file
+    manifest = (tmp_path / "manifest.txt").read_text().splitlines()
+    files = [l.split()[1] for l in manifest if l.startswith("file ")]
+    assert files and all((tmp_path / f).exists() for f in files)
+    # faulty artifacts must record the array geometry
+    assert any("meta array_rows 64" in l for l in manifest)

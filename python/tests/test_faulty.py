@@ -1,0 +1,119 @@
+"""Quantized faulty-forward graph tests (the Fig 2 baseline path)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import faulty, model
+from compile.archs import get_arch, mlp
+from compile.kernels import quant
+
+
+def tiny_arch():
+    return mlp("tiny", [20, 16, 5], eval_batch=8, train_batch=8)
+
+
+def setup(seed=0, arch=None):
+    arch = arch or tiny_arch()
+    rng = np.random.RandomState(seed)
+    params = model.init_params(arch, seed)
+    x = jnp.asarray(rng.randn(8, arch.input_shape[0]).astype(np.float32))
+    L = len(arch.fc_layers)
+    and_ms = [jnp.full(w.shape, -1, jnp.int32) for w, _ in params]
+    or_ms = [jnp.zeros(w.shape, jnp.int32) for w, _ in params]
+    byps = [jnp.zeros(w.shape, jnp.int32) for w, _ in params]
+    # activation scales from a calibration forward pass
+    a_scales, a = [], x
+    for l, (w, b) in enumerate(params):
+        a_scales.append(quant.scale_for(a))
+        y = a @ w + b
+        a = jnp.maximum(y, 0.0) if arch.fc_layers[l].relu else y
+    w_scales = [quant.scale_for(w) for w, _ in params]
+    return arch, params, x, and_ms, or_ms, byps, a_scales, w_scales
+
+
+def test_fault_free_close_to_float_forward():
+    arch, params, x, am, om, byp, ascl, wscl = setup()
+    got = faulty.faulty_forward(arch, params, am, om, byp, ascl, wscl, x, array_rows=16)
+    want = model.forward(arch, params, x)
+    # int8 quantization noise only
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    rel = float(jnp.max(jnp.abs(got - want))) / scale
+    assert rel < 0.15, f"quantization-only path too far from float: rel={rel}"
+
+
+def test_high_bit_fault_blows_up_logits():
+    """Fig 2b mechanism: a high-order stuck bit yields activations orders of
+    magnitude beyond the golden range (at the faulty layer's output; deeper
+    layers re-quantize and clip, which is also what the hardware does)."""
+    arch, params, x, am, om, byp, ascl, wscl = setup()
+    om = [m.copy() for m in om]
+    om[-1] = om[-1].at[3, 2].set(1 << 30)
+    got = faulty.faulty_forward(arch, params, am, om, byp, ascl, wscl, x, array_rows=32)
+    clean = model.forward(arch, params, x)
+    assert float(jnp.max(jnp.abs(got))) > 10 * float(jnp.max(jnp.abs(clean)))
+
+
+def test_bypass_matches_pruned_float_forward():
+    """FAP on faulty hardware == pruned-weight float model (mod quantization)."""
+    arch, params, x, am, om, byp, ascl, wscl = setup(seed=1)
+    rng = np.random.RandomState(9)
+    om = [m.copy() for m in om]
+    byps = []
+    masks = []
+    for l, (w, _) in enumerate(params):
+        b = np.zeros(w.shape, np.int32)
+        m = np.ones(w.shape, np.float32)
+        for _ in range(4):
+            r, c = rng.randint(w.shape[0]), rng.randint(w.shape[1])
+            om[l] = om[l].at[r, c].set(1 << 29)  # faulty...
+            b[r, c] = 1  # ...and bypassed
+            m[r, c] = 0.0
+        byps.append(jnp.asarray(b))
+        masks.append(jnp.asarray(m))
+    got = faulty.faulty_forward(arch, params, am, om, byps, ascl, wscl, x, array_rows=16)
+    pruned = [(w * m, bias) for (w, bias), m in zip(params, masks)]
+    want = model.forward(arch, pruned, x)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-6
+    rel = float(jnp.max(jnp.abs(got - want))) / scale
+    assert rel < 0.2, f"bypassed faulty path should track pruned float model: {rel}"
+
+
+def test_activations_output_matches_forward_layers():
+    arch, params, x, am, om, byp, ascl, wscl = setup(seed=2)
+    acts = faulty.faulty_forward_activations(
+        arch, params, am, om, byp, ascl, wscl, x, array_rows=16
+    )
+    logits = faulty.faulty_forward(arch, params, am, om, byp, ascl, wscl, x, array_rows=16)
+    assert len(acts) == len(arch.fc_layers)
+    np.testing.assert_array_equal(np.asarray(acts[-1]), np.asarray(logits))
+
+
+def test_pallas_impl_matches_scan_impl():
+    arch, params, x, am, om, byp, ascl, wscl = setup(seed=3)
+    om = [m.copy() for m in om]
+    om[0] = om[0].at[1, 1].set(1 << 20)
+    am = [m.copy() for m in am]
+    am[1] = am[1].at[2, 3].set(~(1 << 27))
+    a = faulty.faulty_forward(
+        arch, params, am, om, byp, ascl, wscl, x, array_rows=16, impl="scan"
+    )
+    b = faulty.faulty_forward(
+        arch, params, am, om, byp, ascl, wscl, x, array_rows=16, impl="pallas"
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ["mnist", "timit"])
+def test_real_arch_faulty_forward_runs(name):
+    arch = get_arch(name)
+    rng = np.random.RandomState(4)
+    params = model.init_params(arch, 4)
+    x = jnp.asarray(rng.randn(2, arch.input_shape[0]).astype(np.float32))
+    L = len(arch.fc_layers)
+    am = [jnp.full(w.shape, -1, jnp.int32) for w, _ in params]
+    om = [jnp.zeros(w.shape, jnp.int32) for w, _ in params]
+    byp = [jnp.zeros(w.shape, jnp.int32) for w, _ in params]
+    scl = [jnp.float32(0.05)] * L
+    out = faulty.faulty_forward(arch, params, am, om, byp, scl, scl, x, array_rows=256)
+    assert out.shape == (2, arch.num_classes)

@@ -1,0 +1,183 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+The hypothesis sweeps are the core correctness signal for the kernel layer:
+shapes, block sizes, fault placements and dtypes are randomized and every
+case must match the oracle bit-for-bit (int path) or allclose (float path).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.masked_matmul import masked_matmul
+from compile.kernels.quant import dequantize, quantize, scale_for
+from compile.kernels.systolic_fault import faulty_systolic_matmul, faulty_systolic_pass
+from compile.faulty import faulty_matmul_scan
+
+
+def rand_case(rng, B, K, N, n_faults, n_bypass):
+    a = rng.randint(-127, 128, size=(B, K)).astype(np.int32)
+    w = rng.randint(-127, 128, size=(K, N)).astype(np.int32)
+    and_m = np.full((K, N), -1, dtype=np.int32)
+    or_m = np.zeros((K, N), dtype=np.int32)
+    byp = np.zeros((K, N), dtype=np.int32)
+    for _ in range(n_faults):
+        r, c, bit = rng.randint(K), rng.randint(N), rng.randint(32)
+        if rng.randint(2):
+            or_m[r, c] |= np.int32(1) << np.int32(bit)
+        else:
+            and_m[r, c] &= ~(np.int32(1) << np.int32(bit))
+    for _ in range(n_bypass):
+        byp[rng.randint(K), rng.randint(N)] = 1
+    return tuple(jnp.asarray(x) for x in (a, w, and_m, or_m, byp))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    B=st.integers(1, 9),
+    K=st.integers(1, 40),
+    N=st.integers(1, 24),
+    n_faults=st.integers(0, 12),
+    n_bypass=st.integers(0, 6),
+    array_rows=st.sampled_from([4, 8, 16, 256]),
+)
+def test_pallas_faulty_matmul_matches_ref(seed, B, K, N, n_faults, n_bypass, array_rows):
+    rng = np.random.RandomState(seed)
+    a, w, am, om, byp = rand_case(rng, B, K, N, n_faults, n_bypass)
+    got = faulty_systolic_matmul(a, w, am, om, byp, array_rows)
+    want = ref.faulty_systolic_matmul_chunked_ref(a, w, am, om, byp, array_rows)
+    assert jnp.array_equal(got, want), "pallas kernel diverged from oracle"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    B=st.integers(1, 9),
+    K=st.integers(1, 40),
+    N=st.integers(1, 24),
+    n_faults=st.integers(0, 12),
+    array_rows=st.sampled_from([4, 8, 256]),
+)
+def test_scan_impl_matches_ref(seed, B, K, N, n_faults, array_rows):
+    rng = np.random.RandomState(seed)
+    a, w, am, om, byp = rand_case(rng, B, K, N, n_faults, 2)
+    got = faulty_matmul_scan(a, w, am, om, byp, array_rows)
+    want = ref.faulty_systolic_matmul_chunked_ref(a, w, am, om, byp, array_rows)
+    assert jnp.array_equal(got, want), "scan impl diverged from oracle"
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    B=st.integers(1, 20),
+    K=st.integers(1, 50),
+    N=st.integers(1, 40),
+    block=st.sampled_from([(8, 8, 8), (16, 32, 16), (128, 128, 128)]),
+)
+def test_masked_matmul_matches_ref(seed, B, K, N, block):
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.randn(B, K).astype(np.float32))
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32))
+    m = jnp.asarray((rng.rand(K, N) > 0.4).astype(np.float32))
+    bb, bk, bn = block
+    got = masked_matmul(a, w, m, block_b=bb, block_n=bn, block_k=bk)
+    want = ref.masked_matmul_ref(a, w, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_fault_free_equals_plain_matmul():
+    rng = np.random.RandomState(3)
+    a, w, am, om, byp = rand_case(rng, 6, 32, 16, 0, 0)
+    got = faulty_systolic_matmul(a, w, am, om, byp, 8)
+    want = jnp.matmul(a, w)
+    assert jnp.array_equal(got, want)
+
+
+def test_bypass_equals_zero_weight_algebraically():
+    """A bypassed MAC contributes nothing — same result as w=0 on a HEALTHY MAC."""
+    rng = np.random.RandomState(4)
+    a, w, am, om, _ = rand_case(rng, 5, 16, 8, 0, 0)
+    byp = np.zeros((16, 8), np.int32)
+    byp[7, 3] = 1
+    w0 = np.asarray(w).copy()
+    w0[7, 3] = 0
+    got = faulty_systolic_matmul(a, w, am, om, jnp.asarray(byp), 16)
+    want = jnp.matmul(a, jnp.asarray(w0))
+    assert jnp.array_equal(got, want)
+
+
+def test_zero_weight_on_faulty_mac_is_not_bypass():
+    """Paper §5.1: loading w=0 into a faulty MAC still corrupts the sum;
+    only the bypass path is equivalent to pruning."""
+    rng = np.random.RandomState(5)
+    a, w, _, _, _ = rand_case(rng, 4, 12, 6, 0, 0)
+    K, N = 12, 6
+    om = np.zeros((K, N), np.int32)
+    om[5, 2] |= 1 << 30  # stuck-at-1 high bit in MAC (5,2)
+    am = jnp.asarray(np.full((K, N), -1, np.int32))
+    om = jnp.asarray(om)
+    w0 = np.asarray(w).copy()
+    w0[5, 2] = 0  # "prune" by loading zero weight — NOT a fix
+    no_byp = jnp.zeros((K, N), jnp.int32)
+    byp = np.zeros((K, N), np.int32)
+    byp[5, 2] = 1
+
+    zero_weight = faulty_systolic_matmul(a, jnp.asarray(w0), am, om, no_byp, K)
+    bypassed = faulty_systolic_matmul(a, w, am, om, jnp.asarray(byp), K)
+    healthy_pruned = jnp.matmul(a, jnp.asarray(w0))
+
+    assert jnp.array_equal(bypassed, healthy_pruned)
+    assert not jnp.array_equal(zero_weight, healthy_pruned), (
+        "stuck-at-1 must corrupt the pass-through even with w=0"
+    )
+
+
+def test_high_order_stuck_bit_causes_large_error():
+    """The paper's Fig 2b mechanism: high-order stuck bits -> huge errors."""
+    rng = np.random.RandomState(6)
+    a, w, am, om, byp = rand_case(rng, 8, 32, 16, 0, 0)
+    om_hi = np.zeros((32, 16), np.int32)
+    om_hi[0, 0] |= 1 << 30
+    got = faulty_systolic_matmul(a, w, am, jnp.asarray(om_hi), byp, 32)
+    want = jnp.matmul(a, w)
+    err = np.abs(np.asarray(got) - np.asarray(want))[:, 0]
+    assert err.max() >= 2**29, f"expected high-bit corruption, max err {err.max()}"
+
+
+def test_fault_only_affects_its_pass():
+    """Chunked execution: a fault in pass-2 rows must not corrupt pass 1."""
+    rng = np.random.RandomState(7)
+    B, K, N, AR = 4, 16, 8, 8
+    a, w, am, om, byp = rand_case(rng, B, K, N, 0, 0)
+    om2 = np.zeros((K, N), np.int32)
+    om2[12, 1] |= 1 << 28  # row 12 -> second pass
+    got = faulty_systolic_matmul(a, w, am, jnp.asarray(om2), byp, AR)
+    # first-pass contribution must be intact: recompute with only rows 0..8
+    clean_p1 = jnp.matmul(a[:, :AR], w[:AR])
+    faulty_p2 = ref.faulty_systolic_matmul_ref(
+        a[:, AR:], w[AR:], am[AR:], jnp.asarray(om2)[AR:], byp[AR:]
+    )
+    assert jnp.array_equal(got, clean_p1 + faulty_p2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300))
+def test_quantize_roundtrip_bounds(seed, n):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(n).astype(np.float32) * rng.uniform(0.01, 100))
+    s = scale_for(x)
+    q = quantize(x, s)
+    assert int(jnp.max(q)) <= 127 and int(jnp.min(q)) >= -127
+    back = dequantize(q, s, jnp.float32(1.0))
+    maxerr = float(jnp.max(jnp.abs(back - x)))
+    assert maxerr <= float(s) * 0.5 + 1e-6
+
+
+def test_quantize_zero_and_scale_guard():
+    x = jnp.zeros(4, jnp.float32)
+    s = scale_for(x)
+    assert float(s) == 1.0
+    assert jnp.array_equal(quantize(x, s), jnp.zeros(4, jnp.int32))

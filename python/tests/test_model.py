@@ -1,0 +1,152 @@
+"""L2 model graph tests: shapes, masking invariants, training behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.archs import ALL_ARCHS, get_arch, mlp
+
+
+def make_batch(arch, rng, batch):
+    x = jnp.asarray(rng.randn(batch, *arch.input_shape).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, arch.num_classes, size=batch).astype(np.int32))
+    return x, y
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes(name):
+    arch = get_arch(name)
+    rng = np.random.RandomState(0)
+    params = model.init_params(arch, 0)
+    x, _ = make_batch(arch, rng, 3)
+    logits = model.forward(arch, params, x)
+    assert logits.shape == (3, arch.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_param_count_matches_arch(name):
+    arch = get_arch(name)
+    params = model.init_params(arch, 0)
+    n = sum(int(np.prod(w.shape)) + int(np.prod(b.shape)) for w, b in params)
+    assert n == arch.param_count()
+
+
+def test_init_deterministic_in_seed():
+    arch = get_arch("mnist")
+    p1 = model.init_params(arch, 7)
+    p2 = model.init_params(arch, 7)
+    p3 = model.init_params(arch, 8)
+    assert all(jnp.array_equal(a, b) for (a, _), (b, _) in zip(p1, p2))
+    assert not all(jnp.array_equal(a, b) for (a, _), (b, _) in zip(p1, p3))
+
+
+def test_masked_forward_equals_pruned_weights():
+    arch = get_arch("mnist")
+    rng = np.random.RandomState(1)
+    params = model.init_params(arch, 1)
+    masks = [jnp.asarray((rng.rand(*w.shape) > 0.5).astype(np.float32)) for w, _ in params]
+    x, _ = make_batch(arch, rng, 4)
+    got = model.forward(arch, params, x, masks=masks)
+    pruned = [(w * m, b) for (w, b), m in zip(params, masks)]
+    want = model.forward(arch, pruned, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_forward_matches_plain():
+    arch = get_arch("mnist")
+    rng = np.random.RandomState(2)
+    params = model.init_params(arch, 2)
+    masks = [jnp.asarray((rng.rand(*w.shape) > 0.3).astype(np.float32)) for w, _ in params]
+    x, _ = make_batch(arch, rng, 4)
+    got = model.forward(arch, params, x, masks=masks, use_pallas=True)
+    want = model.forward(arch, params, x, masks=masks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), prune=st.floats(0.0, 0.9))
+def test_train_step_keeps_pruned_weights_zero(seed, prune):
+    """Algorithm 1 line 7: pruned weights must stay exactly zero."""
+    arch = mlp("tiny", [12, 8, 5], eval_batch=4, train_batch=4)
+    rng = np.random.RandomState(seed)
+    params = model.init_params(arch, seed % 1000)
+    masks = [jnp.asarray((rng.rand(*w.shape) >= prune).astype(np.float32)) for w, _ in params]
+    params = [(w * m, b) for (w, b), m in zip(params, masks)]
+    vels = model.zero_velocities(params)
+    x, y = make_batch(arch, rng, 4)
+    for _ in range(3):
+        params, vels, loss = model.train_step(
+            arch, params, vels, masks, x, y, jnp.float32(0.05)
+        )
+    for (w, _), m in zip(params, masks):
+        assert bool(jnp.all(jnp.where(m == 0, w == 0, True))), "pruned weight drifted"
+    assert bool(jnp.isfinite(loss))
+
+
+def test_training_reduces_loss():
+    arch = mlp("tiny", [16, 32, 4], eval_batch=8, train_batch=32)
+    rng = np.random.RandomState(3)
+    params = model.init_params(arch, 3)
+    vels = model.zero_velocities(params)
+    masks = [jnp.ones_like(w) for w, _ in params]
+    # learnable synthetic task: class = argmax of 4 fixed projections
+    proj = rng.randn(16, 4).astype(np.float32)
+    x = rng.randn(32, 16).astype(np.float32)
+    y = np.argmax(x @ proj, axis=1).astype(np.int32)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    first = None
+    for i in range(60):
+        params, vels, loss = model.train_step(arch, params, vels, masks, x, y, jnp.float32(0.05))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.5, f"loss {first} -> {float(loss)}: no learning"
+
+
+def test_scan_matches_sequential_steps():
+    arch = mlp("tiny", [10, 12, 3], eval_batch=4, train_batch=6)
+    rng = np.random.RandomState(4)
+    params = model.init_params(arch, 4)
+    vels = model.zero_velocities(params)
+    masks = [jnp.ones_like(w) for w, _ in params]
+    S = 5
+    xs = jnp.asarray(rng.randn(S, 6, 10).astype(np.float32))
+    ys = jnp.asarray(rng.randint(0, 3, size=(S, 6)).astype(np.int32))
+    ps, vs = params, vels
+    seq_losses = []
+    for s in range(S):
+        ps, vs, loss = model.train_step(arch, ps, vs, masks, xs[s], ys[s], jnp.float32(0.01))
+        seq_losses.append(float(loss))
+    ps2, vs2, losses = model.train_steps_scanned(
+        arch, params, vels, masks, xs, ys, jnp.float32(0.01)
+    )
+    np.testing.assert_allclose(np.asarray(losses), np.asarray(seq_losses), rtol=1e-5, atol=1e-6)
+    for (a, _), (b, _) in zip(ps, ps2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 1.0, 0.0]], jnp.float32)
+    labels = jnp.asarray([0, 2], jnp.int32)
+    got = float(model.cross_entropy(logits, labels))
+    p = np.exp(np.asarray(logits))
+    p /= p.sum(axis=1, keepdims=True)
+    want = float(-(np.log(p[0, 0]) + np.log(p[1, 2])) / 2)
+    assert abs(got - want) < 1e-6
+
+
+def test_bias_never_masked():
+    arch = mlp("tiny", [6, 4, 2], eval_batch=2, train_batch=4)
+    rng = np.random.RandomState(5)
+    params = model.init_params(arch, 5)
+    masks = [jnp.zeros_like(w) for w, _ in params]  # prune EVERYTHING
+    params = [(w * m, b) for (w, b), m in zip(params, masks)]
+    vels = model.zero_velocities(params)
+    x, y = make_batch(arch, rng, 4)
+    params, vels, _ = model.train_step(arch, params, vels, masks, x, y, jnp.float32(0.1))
+    assert any(float(jnp.max(jnp.abs(b))) > 0 for _, b in params), (
+        "biases should still learn when all weights are pruned"
+    )

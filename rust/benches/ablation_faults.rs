@@ -1,0 +1,119 @@
+//! Ablation bench: design choices DESIGN.md calls out for the fault model.
+//!
+//! 1. **Spatial distribution** — the paper samples faulty MACs uniformly;
+//!    real defects cluster. How much does FAP's pruned-weight fraction
+//!    (the quantity that drives accuracy) care?
+//! 2. **Faults per MAC** — one stuck bit vs several per faulty MAC changes
+//!    nothing for FAP (any fault ⇒ bypass) but changes unmitigated
+//!    corruption strength.
+//! 3. **Stuck-bit position** — high-order vs low-order stuck bits: the
+//!    Fig 2b mechanism in isolation.
+
+use repro::coordinator::baselines::ColumnBypass;
+use repro::faults::aging::{AgingChip, AgingModel};
+use repro::faults::{inject_clustered, inject_uniform, FaultMap, FaultSpec, StuckAt};
+use repro::mapping::fc_prune_mask;
+use repro::systolic::TiledMatmul;
+use repro::util::Rng;
+
+fn pruned_fraction(fm: &FaultMap, din: usize, dout: usize) -> f64 {
+    let m = fc_prune_mask(fm, din, dout);
+    m.iter().filter(|&&v| v == 0.0).count() as f64 / m.len() as f64
+}
+
+fn main() {
+    println!("## bench ablation_faults\n");
+    let n = 64;
+    let spec = FaultSpec::new(n);
+
+    println!("# 1. uniform vs clustered injection (FAP pruned fraction, 784x256 layer)");
+    println!("{:>10} {:>12} {:>12}", "faulty %", "uniform", "clustered(r=3)");
+    for rate in [0.05, 0.15, 0.30] {
+        let k = (rate * (n * n) as f64) as usize;
+        let (mut u_acc, mut c_acc) = (0.0, 0.0);
+        let reps = 5;
+        for rep in 0..reps {
+            let mut rng = Rng::new(rep as u64 * 31 + (rate * 1e3) as u64);
+            u_acc += pruned_fraction(&inject_uniform(spec, k, &mut rng), 784, 256);
+            c_acc += pruned_fraction(&inject_clustered(spec, k, 3, &mut rng), 784, 256);
+        }
+        println!(
+            "{:>9.1}% {:>11.2}% {:>11.2}%",
+            rate * 100.0,
+            u_acc / reps as f64 * 100.0,
+            c_acc / reps as f64 * 100.0
+        );
+    }
+    println!("(clustering leaves the pruned fraction ~unchanged — FAP is insensitive");
+    println!(" to the spatial defect model, only the count matters)\n");
+
+    println!("# 2. faults per MAC: unmitigated max |error| on a zero matmul");
+    let mut rng = Rng::new(99);
+    for fpm in [1usize, 2, 4] {
+        let s = FaultSpec { n, faults_per_mac: fpm };
+        let fm = inject_uniform(s, 64, &mut rng);
+        let mut tm = TiledMatmul::new(&fm, false);
+        let a = vec![0i32; 8 * n];
+        let w = vec![0i32; n * n];
+        let out = tm.matmul(&a, &w, 8, n, n);
+        let maxabs = out.iter().map(|v| (*v as i64).abs()).max().unwrap();
+        println!("  {fpm} fault(s)/MAC: max |acc| = {maxabs}");
+    }
+
+    println!("\n# 3. stuck-bit position vs corruption magnitude (single fault)");
+    for bit in [2u8, 10, 18, 26, 30] {
+        let fm = FaultMap::from_faults(
+            n,
+            [StuckAt { row: 5, col: 5, bit, value: true }],
+        );
+        let mut tm = TiledMatmul::new(&fm, false);
+        let a = vec![1i32; n];
+        let w = vec![1i32; n * n];
+        let out = tm.matmul(&a, &w, 1, n, n);
+        let err: i64 = out[5] as i64 - n as i64;
+        println!("  stuck-at-1 bit {bit:>2}: output error {err:>12}");
+    }
+    println!("(error scales as 2^bit — the paper's Fig 2b mechanism)");
+
+    println!("\n# 4. prior-work baseline (§2/§4): column bypass vs FAP");
+    println!("   (256x256 array, timit fc1 1845x512, batch 256)");
+    println!("{:>10} {:>14} {:>14} {:>12}", "faulty %", "healthy cols", "slowdown", "FAP slowdown");
+    for rate in [0.001, 0.01, 0.05, 0.25] {
+        let k = (rate * 65536.0) as usize;
+        let fm = inject_uniform(FaultSpec::new(256), k, &mut Rng::new(7 + k as u64));
+        let cb = ColumnBypass::from_map(&fm);
+        let slow = cb
+            .slowdown(256, 1845, 512)
+            .map(|s| format!("{s:.1}x"))
+            .unwrap_or_else(|| "unusable".into());
+        println!(
+            "{:>9.1}% {:>14} {:>14} {:>12}",
+            rate * 100.0,
+            cb.healthy_cols,
+            slow,
+            "1.0x" // FAP never shrinks the array
+        );
+    }
+    println!("(the §4 argument: even at 1% faults nearly every column dies — FAP");
+    println!(" keeps full throughput at every rate)");
+
+    println!("\n# 5. aging faults (paper future work): lifetime fault accrual");
+    let model = AgingModel {
+        tau_hours: 100_000.0,
+        beta: 2.0,
+        spec: FaultSpec::new(256),
+    };
+    let mut chip = AgingChip::new(model, 30, 0xA6E);
+    println!("{:>10} {:>14} {:>12}", "years", "faulty MACs", "fault rate");
+    for _ in 0..6 {
+        println!(
+            "{:>10.1} {:>14} {:>11.2}%",
+            chip.hours() / 8760.0,
+            chip.fault_map().faulty_mac_count(),
+            chip.fault_map().fault_rate() * 100.0
+        );
+        chip.advance(2.0 * 8760.0);
+    }
+    println!("(each re-provisioning step re-runs FAP+T on the grown map — the");
+    println!(" fault maps are supersets, so masks only ever shrink)");
+}

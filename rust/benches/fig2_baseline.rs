@@ -1,0 +1,57 @@
+//! Bench: Fig 2 regeneration cost + a small-scale rendition of the series.
+//!
+//! Times each stage of the unmitigated-fault evaluation pipeline (inject →
+//! mask synthesis → quantized faulty eval) and prints a reduced Fig 2a
+//! series so the bench doubles as a fast sanity check of the figure's
+//! shape. Full-scale figures: `repro experiment --id fig2a`.
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::mapping::{LayerMasks, MaskKind};
+use repro::model::arch;
+use repro::model::quant::calibrate_mlp;
+use repro::runtime::Runtime;
+use repro::util::bench;
+use repro::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("## bench fig2_baseline (MNIST unmitigated-fault pipeline)\n");
+    let rt = Runtime::new("artifacts")?;
+    let a = arch::by_name("mnist").unwrap();
+    let (train, test) = data::for_arch("mnist", 1500, 512, 5).unwrap();
+    let tcfg = TrainConfig { steps: 150, lr: 0.05, seed: 5, log_every: 0, ..Default::default() };
+    let (params, _) = train_baseline(&rt, &a, &train, &tcfg)?;
+    let calib = calibrate_mlp(&a, &params, &train.x[..64 * 784], 64);
+    let ev = Evaluator::new(&rt);
+
+    let n = 256;
+    let mut rng = Rng::new(17);
+
+    bench::run("inject_uniform(256x256, k=64)", 20, || {
+        bench::black_box(inject_uniform(FaultSpec::new(n), 64, &mut rng));
+    });
+
+    let fm = inject_uniform(FaultSpec::new(n), 64, &mut Rng::new(17));
+    bench::run("LayerMasks::build(mnist, unmitigated)", 10, || {
+        bench::black_box(LayerMasks::build(&a, &fm, MaskKind::Unmitigated));
+    });
+
+    let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+    let r = bench::bench("faulty eval (512 samples, quantized path)", 1, 3, || {
+        bench::black_box(
+            ev.accuracy_faulty(&a, &params, &masks, &calib, &test, false).unwrap(),
+        );
+    });
+    r.report_throughput(test.len() as u64, "samples");
+
+    println!("\n# reduced Fig 2a series (shape check)");
+    for k in [0usize, 4, 16, 64] {
+        let fm = inject_uniform(FaultSpec::new(n), k, &mut Rng::new(23 + k as u64));
+        let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+        let acc = ev.accuracy_faulty(&a, &params, &masks, &calib, &test, false)?;
+        println!("  {k:>3} faulty MACs -> {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Bench: Fig 4 regeneration cost — FAP mask synthesis / pruning and the
+//! FAP+T retraining inner loop, plus a reduced rendition of the series.
+//! Full-scale figures: `repro experiment --id fig4a` / `fig4b`.
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fap::apply_fap;
+use repro::coordinator::fapt::{fapt_retrain, FaptConfig};
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::model::arch;
+use repro::runtime::Runtime;
+use repro::util::bench;
+use repro::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("## bench fig4_fap_fapt (MNIST FAP / FAP+T pipeline)\n");
+    let rt = Runtime::new("artifacts")?;
+    let a = arch::by_name("mnist").unwrap();
+    let (train, test) = data::for_arch("mnist", 1500, 512, 6).unwrap();
+    let tcfg = TrainConfig { steps: 150, lr: 0.05, seed: 6, log_every: 0, ..Default::default() };
+    let (baseline, _) = train_baseline(&rt, &a, &train, &tcfg)?;
+    let ev = Evaluator::new(&rt);
+
+    let n = 256;
+    let fm = inject_uniform(FaultSpec::new(n), n * n / 4, &mut Rng::new(31));
+
+    bench::run("apply_fap(mnist, 25% of 256x256)", 10, || {
+        bench::black_box(apply_fap(&a, &baseline, &fm));
+    });
+
+    let (fap_params, masks, _) = apply_fap(&a, &baseline, &fm);
+    let r = bench::bench("fapt_retrain (1 epoch, 1500 samples)", 1, 3, || {
+        let cfg = FaptConfig { max_epochs: 1, lr: 0.01, seed: 6, snapshot_epochs: vec![] };
+        bench::black_box(
+            fapt_retrain(&rt, &a, &fap_params, &masks.prune, &train, &cfg).unwrap(),
+        );
+    });
+    r.report_throughput(train.len() as u64, "samples");
+
+    println!("\n# reduced Fig 4 series (shape check, mnist)");
+    let base_acc = ev.accuracy(&a, &baseline, &test)?;
+    println!("  baseline: {:.2}%", base_acc * 100.0);
+    for rate in [0.25, 0.5] {
+        let k = (rate * (n * n) as f64) as usize;
+        let fm = inject_uniform(FaultSpec::new(n), k, &mut Rng::new(37 + k as u64));
+        let (fp, masks, _) = apply_fap(&a, &baseline, &fm);
+        let fap_acc = ev.accuracy(&a, &fp, &test)?;
+        let cfg = FaptConfig { max_epochs: 2, lr: 0.01, seed: 6, snapshot_epochs: vec![] };
+        let res = fapt_retrain(&rt, &a, &fp, &masks.prune, &train, &cfg)?;
+        let fapt_acc = ev.accuracy(&a, &res.params, &test)?;
+        println!(
+            "  rate {:>4.1}%: FAP {:.2}%  FAP+T {:.2}%",
+            rate * 100.0,
+            fap_acc * 100.0,
+            fapt_acc * 100.0
+        );
+    }
+    Ok(())
+}

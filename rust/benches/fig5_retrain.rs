@@ -1,0 +1,59 @@
+//! Bench: Fig 5 — the retraining-time claim. The paper reports ~1 hour
+//! for 25 AlexNet epochs and shows 5 epochs (~12 minutes) suffice. Here
+//! we measure seconds/epoch for each benchmark on this testbed and print
+//! the projected MAX_EPOCHS=5 vs 25 wall-clock, plus the accuracy-vs-
+//! epoch knee on mnist. Full figure: `repro experiment --id fig5a/b`.
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fap::apply_fap;
+use repro::coordinator::fapt::{fapt_retrain, FaptConfig};
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::model::arch;
+use repro::runtime::Runtime;
+use repro::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("## bench fig5_retrain (FAP+T epoch cost & knee)\n");
+    let rt = Runtime::new("artifacts")?;
+
+    for name in ["mnist", "timit"] {
+        let a = arch::by_name(name).unwrap();
+        let (train, _) = data::for_arch(name, 1024, 64, 8).unwrap();
+        let tcfg =
+            TrainConfig { steps: 60, lr: 0.04, seed: 8, log_every: 0, ..Default::default() };
+        let (baseline, _) = train_baseline(&rt, &a, &train, &tcfg)?;
+        let fm = inject_uniform(FaultSpec::new(256), 256 * 64, &mut Rng::new(41));
+        let (fp, masks, _) = apply_fap(&a, &baseline, &fm);
+        let cfg = FaptConfig { max_epochs: 2, lr: 0.01, seed: 8, snapshot_epochs: vec![] };
+        let res = fapt_retrain(&rt, &a, &fp, &masks.prune, &train, &cfg)?;
+        println!(
+            "{name:<10} {:>8.2} s/epoch (1024 samples)  -> 5 epochs {:>6.1}s, 25 epochs {:>6.1}s",
+            res.secs_per_epoch,
+            5.0 * res.secs_per_epoch,
+            25.0 * res.secs_per_epoch
+        );
+    }
+
+    println!("\n# accuracy-vs-epoch knee (mnist @ 25% faults)");
+    let a = arch::by_name("mnist").unwrap();
+    let (train, test) = data::for_arch("mnist", 1500, 512, 9).unwrap();
+    let tcfg = TrainConfig { steps: 150, lr: 0.05, seed: 9, log_every: 0, ..Default::default() };
+    let (baseline, _) = train_baseline(&rt, &a, &train, &tcfg)?;
+    let ev = Evaluator::new(&rt);
+    let fm = inject_uniform(FaultSpec::new(256), 256 * 256 / 4, &mut Rng::new(43));
+    let (fp, masks, _) = apply_fap(&a, &baseline, &fm);
+    let cfg = FaptConfig {
+        max_epochs: 5,
+        lr: 0.01,
+        seed: 9,
+        snapshot_epochs: vec![1, 2, 3, 4, 5],
+    };
+    let res = fapt_retrain(&rt, &a, &fp, &masks.prune, &train, &cfg)?;
+    println!("  epoch 0 (FAP): {:.2}%", ev.accuracy(&a, &fp, &test)? * 100.0);
+    for (e, p) in &res.snapshots {
+        println!("  epoch {e}: {:.2}%", ev.accuracy(&a, p, &test)? * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Bench: the performance-critical paths across all three layers, tracked
+//! by EXPERIMENTS.md §Perf.
+//!
+//! * L3 sim: functional systolic matmul (MAC/s) — target ≥100M MAC/s/core.
+//! * L3 masks: LayerMasks synthesis for the TIMIT model on a 256 grid.
+//! * RT: PJRT fwd latency/throughput (mnist + timit), train-step latency,
+//!   and the scan-fused multi-step training artifact vs N single steps.
+
+use repro::coordinator::trainer::{ones_masks, train_step, TrainState};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::mapping::{LayerMasks, MaskKind};
+use repro::model::arch;
+use repro::runtime::{lit_f32, lit_i32, scalar_f32, Runtime};
+use repro::systolic::{timing, TiledMatmul};
+use repro::util::bench;
+use repro::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("## bench perf_hotpath\n");
+    let rt = Runtime::new("artifacts")?;
+    let mut rng = Rng::new(51);
+
+    // ---- L3: cycle-level simulator hot loop -------------------------------
+    println!("# L3 simulator");
+    let n = 64;
+    let (b, k, m) = (32, 512, 256);
+    let fm = inject_uniform(FaultSpec::new(n), 200, &mut rng);
+    let a: Vec<i32> = (0..b * k).map(|_| rng.below(255) as i32 - 127).collect();
+    let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+    let macs = timing::mac_ops(b, k, m);
+
+    let mut tm = TiledMatmul::new(&repro::faults::FaultMap::healthy(n), false);
+    let r = bench::bench("tiled matmul (healthy, 512x256 b32)", 2, 8, || {
+        bench::black_box(tm.matmul(&a, &w, b, k, m));
+    });
+    r.report_throughput(macs, "MAC");
+
+    let mut tmf = TiledMatmul::new(&fm, true);
+    let r = bench::bench("tiled matmul (200 faults, FAP bypass)", 2, 8, || {
+        bench::black_box(tmf.matmul(&a, &w, b, k, m));
+    });
+    r.report_throughput(macs, "MAC");
+
+    // ---- L3: mask synthesis ------------------------------------------------
+    println!("\n# L3 mask synthesis");
+    let timit = arch::by_name("timit").unwrap();
+    let fm256 = inject_uniform(FaultSpec::new(256), 16384, &mut rng);
+    let r = bench::bench("LayerMasks::build(timit, 25% of 256x256)", 1, 5, || {
+        bench::black_box(LayerMasks::build(&timit, &fm256, MaskKind::FapBypass));
+    });
+    let weights: usize = timit.weighted_layers().iter().map(|l| l.weight_len()).sum();
+    r.report_throughput(weights as u64, "weight");
+
+    // ---- RT: PJRT inference ------------------------------------------------
+    println!("\n# PJRT runtime");
+    for name in ["mnist", "timit"] {
+        let a = arch::by_name(name).unwrap();
+        let exe = rt.load(&format!("{name}_fwd"))?;
+        let init = rt.load(&format!("{name}_init"))?;
+        let params = init.run(&[repro::runtime::scalar_i32(1)])?;
+        let x: Vec<f32> = (0..a.eval_batch * a.input_len()).map(|_| rng.normal()).collect();
+        let xlit = lit_f32(&x, &[a.eval_batch, a.input_len()])?;
+        let mut inputs = params.clone();
+        inputs.push(xlit);
+        let r = bench::bench(&format!("{name}_fwd (batch {})", a.eval_batch), 2, 10, || {
+            bench::black_box(exe.run(&inputs).unwrap());
+        });
+        r.report_throughput(a.eval_batch as u64, "samples");
+    }
+
+    // ---- RT: train step vs fused scan --------------------------------------
+    println!("\n# train step vs fused {}-step scan (mnist)", 8);
+    let a = arch::by_name("mnist").unwrap();
+    let train_exe = rt.load("mnist_train")?;
+    let masks = ones_masks(&a)?;
+    let (ds, _) = data::for_arch("mnist", 128 * 9, 16, 52).unwrap();
+    let x_dims = [a.train_batch, a.input_len()];
+
+    let mut state = TrainState::init(&rt, &a, 1)?;
+    let batch: Vec<f32> = ds.x[..a.train_batch * 784].to_vec();
+    let ys: Vec<i32> = ds.y[..a.train_batch].to_vec();
+    let r = bench::bench("mnist_train single step", 2, 10, || {
+        bench::black_box(
+            train_step(&train_exe, &mut state, &masks, &batch, &ys, &x_dims, 0.01).unwrap(),
+        );
+    });
+    r.report_throughput(a.train_batch as u64, "samples");
+
+    if rt.has("mnist_train_scan") {
+        let scan_exe = rt.load("mnist_train_scan")?;
+        let steps = scan_exe.spec.meta_usize("steps").unwrap_or(8);
+        let state2 = TrainState::init(&rt, &a, 1)?;
+        let xs: Vec<f32> = ds.x[..steps * a.train_batch * 784].to_vec();
+        let ys: Vec<i32> = ds.y[..steps * a.train_batch].to_vec();
+        let mut inputs: Vec<xla::Literal> = Vec::new();
+        inputs.extend(state2.params.iter().cloned());
+        inputs.extend(state2.vels.iter().cloned());
+        inputs.extend(masks.iter().cloned());
+        inputs.push(lit_f32(&xs, &[steps, a.train_batch, a.input_len()])?);
+        inputs.push(lit_i32(&ys, &[steps, a.train_batch])?);
+        inputs.push(scalar_f32(0.01));
+        let r = bench::bench(&format!("mnist_train_scan ({steps} fused steps)"), 2, 10, || {
+            bench::black_box(scan_exe.run(&inputs).unwrap());
+        });
+        r.report_throughput((steps * a.train_batch) as u64, "samples");
+    }
+    Ok(())
+}

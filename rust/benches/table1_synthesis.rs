@@ -1,0 +1,78 @@
+//! Bench: Table 1 + §6.1 synthesis claims — per-model systolic schedule
+//! cost (cycles, utilization, projected latency at the paper's 658 MHz)
+//! and the synthesis/yield model tables.
+
+use repro::model::{arch, Layer};
+use repro::systolic::synthesis::{self, SynthesisModel};
+use repro::systolic::timing;
+
+fn main() {
+    println!("## bench table1_synthesis\n");
+    let m = SynthesisModel::paper_baseline();
+    println!(
+        "paper design point: {}x{} MACs @ {:.0} MHz, {:.1} W, {:.1} TOPS peak",
+        m.n,
+        m.n,
+        m.freq_hz / 1e6,
+        m.dynamic_power_w(),
+        m.peak_tops()
+    );
+    println!(
+        "FAP bypass area overhead: {:.0}% (paper: 9%)\n",
+        (SynthesisModel::paper_fap().area_factor() - 1.0) * 100.0
+    );
+
+    println!(
+        "{:<10} {:>6} {:>14} {:>12} {:>12} {:>10}",
+        "model", "batch", "MAC ops", "cycles", "util %", "µs @658MHz"
+    );
+    for name in ["mnist", "timit", "alexnet32"] {
+        let a = arch::by_name(name).unwrap();
+        let batch = a.eval_batch;
+        let n = 256;
+        let (mut cycles, mut macs) = (0u64, 0u64);
+        for l in a.weighted_layers() {
+            match l {
+                Layer::Fc(f) => {
+                    cycles += timing::tiled_cycles(n, batch, f.din, f.dout);
+                    macs += timing::mac_ops(batch, f.din, f.dout);
+                }
+                Layer::Conv(c) => {
+                    // conv as the paper maps it: rows = input channels,
+                    // cols = output channels, one pass per spatial output
+                    // position per kernel tap
+                    let positions = (32 * 32 / (c.stride * c.stride)) as u64;
+                    let taps = (c.kh * c.kw) as u64;
+                    cycles += timing::tiled_cycles(n, batch, c.din, c.dout)
+                        * positions
+                        * taps
+                        / (n as u64) // row-reuse across taps amortized
+                        ;
+                    macs += batch as u64 * positions * taps * (c.din * c.dout) as u64;
+                }
+                Layer::Pool(_) => {}
+            }
+        }
+        let util = macs as f64 / (cycles as f64 * (n * n) as f64);
+        println!(
+            "{:<10} {:>6} {:>14} {:>12} {:>12.2} {:>10.1}",
+            name,
+            batch,
+            macs,
+            cycles,
+            util * 100.0,
+            cycles as f64 / synthesis::PAPER_FREQ_HZ * 1e6
+        );
+    }
+
+    println!("\n# yield model (motivation: discarding faulty chips kills yield)");
+    println!("{:>14} {:>14} {:>12}", "defect rate", "discard yield", "FAP yield");
+    for p in [1e-5, 1e-4, 1e-3, 0.01, 0.1, 0.25] {
+        println!(
+            "{:>13.3}% {:>13.2}% {:>11.2}%",
+            p * 100.0,
+            synthesis::yield_discard(256, p) * 100.0,
+            synthesis::yield_fap(256, p, 0.5) * 100.0
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench: the §3.2 timing claim (an N x N matmul of batch B takes 2N + B
+//! cycles) — validated against the cycle-accurate simulator, plus the
+//! simulator's own wall-clock cost at several array sizes.
+
+use repro::faults::FaultMap;
+use repro::systolic::{timing, SystolicArray};
+use repro::util::bench;
+use repro::util::Rng;
+
+fn main() {
+    println!("## bench timing_model\n");
+
+    println!("# 2N+B validation (cycle-accurate sim vs paper formula)");
+    println!("{:>6} {:>6} {:>12} {:>12} {:>8}", "N", "B", "sim cycles", "paper 2N+B", "delta");
+    for (n, b) in [(8usize, 16usize), (16, 32), (32, 64), (64, 128)] {
+        let arr = SystolicArray::healthy(n);
+        let a = vec![1i32; n * b];
+        let (_, cycles) = arr.matmul_cycle_accurate(&a, b, n, n);
+        let paper = timing::paper_pass_cycles(n, b);
+        println!(
+            "{n:>6} {b:>6} {cycles:>12} {paper:>12} {:>8}",
+            cycles as i64 - paper as i64
+        );
+    }
+
+    println!("\n# simulator wall-clock (functional vs cycle-accurate)");
+    let mut rng = Rng::new(3);
+    for n in [16usize, 32, 64] {
+        let b = 32;
+        let mut arr = SystolicArray::with_faults(&FaultMap::healthy(n));
+        let w: Vec<i32> = (0..n * n).map(|_| rng.below(255) as i32 - 127).collect();
+        arr.load_weights(&w, n, n);
+        let a: Vec<i32> = (0..b * n).map(|_| rng.below(255) as i32 - 127).collect();
+        let macs = timing::mac_ops(b, n, n);
+
+        let rf = bench::bench(&format!("functional {n}x{n} b{b}"), 2, 10, || {
+            bench::black_box(arr.matmul(&a, b, n, n));
+        });
+        rf.report_throughput(macs, "MAC");
+        let rc = bench::bench(&format!("cycle-accurate {n}x{n} b{b}"), 1, 3, || {
+            bench::black_box(arr.matmul_cycle_accurate(&a, b, n, n));
+        });
+        rc.report_throughput(macs, "MAC");
+    }
+
+    println!("\n# utilization model across layer shapes (batch 256, N=256)");
+    for (k, m) in [(784usize, 256usize), (1845, 512), (512, 512), (256, 10)] {
+        println!(
+            "  {k:>5} x {m:<5}: {:>5.1}% utilization, {} passes",
+            timing::utilization(256, 256, k, m) * 100.0,
+            timing::tile_passes(256, k, m)
+        );
+    }
+}

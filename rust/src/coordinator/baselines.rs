@@ -1,0 +1,112 @@
+//! Application-agnostic fault-tolerance baselines the paper argues
+//! against (§2, §4): bypassing entire rows/columns that contain faulty
+//! MACs (Kung-style "view the faulty array as a smaller array").
+//!
+//! These preserve exact numerics (no pruning, no accuracy loss) but
+//! shrink the effective array, multiplying the number of tile passes —
+//! the "unacceptable performance penalty" of §4 that motivates FAP.
+
+use crate::faults::FaultMap;
+use crate::systolic::timing;
+
+/// Effective array after disabling every column with ≥1 faulty MAC.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ColumnBypass {
+    pub n: usize,
+    pub healthy_cols: usize,
+}
+
+impl ColumnBypass {
+    pub fn from_map(fm: &FaultMap) -> ColumnBypass {
+        let n = fm.n();
+        let healthy = (0..n)
+            .filter(|&c| (0..n).all(|r| !fm.is_faulty(r, c)))
+            .count();
+        ColumnBypass { n, healthy_cols: healthy }
+    }
+
+    /// Probability-free survival count: expected healthy columns under a
+    /// uniform fault rate `p` is `n * (1-p)^n` — collapses fast.
+    pub fn expected_healthy_cols(n: usize, p: f64) -> f64 {
+        n as f64 * (1.0 - p).powi(n as i32)
+    }
+
+    /// Cycles for a K x M batch-B matmul on the shrunken array (the row
+    /// dimension keeps all N rows: faulty MACs in surviving columns don't
+    /// exist by construction).
+    pub fn schedule_cycles(&self, batch: usize, k: usize, m: usize) -> Option<u64> {
+        if self.healthy_cols == 0 {
+            return None; // chip unusable under this policy
+        }
+        let passes = (k.div_ceil(self.n) * m.div_ceil(self.healthy_cols)) as u64;
+        Some(passes * (timing::paper_pass_cycles(self.n, batch) + self.n as u64))
+    }
+
+    /// Throughput slowdown factor vs the fault-free array (>= 1).
+    pub fn slowdown(&self, batch: usize, k: usize, m: usize) -> Option<f64> {
+        let full = ColumnBypass { n: self.n, healthy_cols: self.n }
+            .schedule_cycles(batch, k, m)? as f64;
+        Some(self.schedule_cycles(batch, k, m)? as f64 / full)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{inject_uniform, FaultSpec, StuckAt};
+    use crate::util::Rng;
+
+    #[test]
+    fn healthy_map_keeps_all_columns() {
+        let cb = ColumnBypass::from_map(&FaultMap::healthy(8));
+        assert_eq!(cb.healthy_cols, 8);
+        assert_eq!(cb.slowdown(16, 8, 8), Some(1.0));
+    }
+
+    #[test]
+    fn one_fault_kills_one_column() {
+        let fm = FaultMap::from_faults(
+            8,
+            [StuckAt { row: 3, col: 5, bit: 2, value: true }],
+        );
+        let cb = ColumnBypass::from_map(&fm);
+        assert_eq!(cb.healthy_cols, 7);
+        assert!(cb.slowdown(16, 8, 64).unwrap() > 1.0);
+    }
+
+    #[test]
+    fn moderate_fault_rate_destroys_throughput() {
+        // the paper's §4 point: at even a few % faulty MACs almost every
+        // column contains a fault and the policy collapses
+        let fm = inject_uniform(FaultSpec::new(64), 64 * 64 / 20, &mut Rng::new(1)); // 5%
+        let cb = ColumnBypass::from_map(&fm);
+        // E[healthy cols] = 64 * 0.95^64 ≈ 2.4
+        assert!(cb.healthy_cols < 10, "healthy cols {}", cb.healthy_cols);
+        let slow = cb.slowdown(256, 256, 256);
+        assert!(slow.is_none() || slow.unwrap() > 5.0);
+    }
+
+    #[test]
+    fn expectation_formula_matches_simulation() {
+        let n = 32;
+        let p = 0.02;
+        let mut total = 0usize;
+        let reps = 40;
+        for s in 0..reps {
+            let k = ((n * n) as f64 * p).round() as usize;
+            let fm = inject_uniform(FaultSpec::new(n), k, &mut Rng::new(s));
+            total += ColumnBypass::from_map(&fm).healthy_cols;
+        }
+        let got = total as f64 / reps as f64;
+        let want = ColumnBypass::expected_healthy_cols(n, p);
+        assert!((got - want).abs() < 3.0, "sim {got} vs formula {want}");
+    }
+
+    #[test]
+    fn fifty_percent_faults_unusable() {
+        let fm = inject_uniform(FaultSpec::new(32), 512, &mut Rng::new(2));
+        let cb = ColumnBypass::from_map(&fm);
+        assert_eq!(cb.healthy_cols, 0);
+        assert_eq!(cb.schedule_cycles(8, 32, 32), None);
+    }
+}

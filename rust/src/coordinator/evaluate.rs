@@ -1,0 +1,197 @@
+//! Accuracy evaluation over the AOT forward artifacts.
+//!
+//! Three paths:
+//! * [`Evaluator::accuracy`] — float `{arch}_fwd` (baseline / FAP / FAP+T;
+//!   weights are pre-masked on the host for FAP).
+//! * [`Evaluator::accuracy_faulty`] — quantized `{arch}_faulty_fwd` with
+//!   the chip's fault masks live (Fig 2 unmitigated baseline, MLPs only).
+//! * [`Evaluator::faulty_activations`] — per-layer pre-activations of the
+//!   faulty path (Fig 2b scatter).
+
+use crate::data::Dataset;
+use crate::mapping::LayerMasks;
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Params};
+use crate::runtime::{lit_f32, scalar_f32, Runtime};
+use anyhow::{bail, Result};
+
+pub struct Evaluator<'rt> {
+    rt: &'rt Runtime,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Evaluator { rt }
+    }
+
+    fn param_literals(&self, arch: &Arch, params: &Params) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::new();
+        for (l, (w, b)) in arch.weighted_layers().iter().zip(&params.layers) {
+            lits.push(lit_f32(w, &l.weight_dims())?);
+            lits.push(lit_f32(b, &[l.bias_len()])?);
+        }
+        Ok(lits)
+    }
+
+    /// Top-1 accuracy of the float forward artifact on `data`.
+    pub fn accuracy(&self, arch: &Arch, params: &Params, data: &Dataset) -> Result<f64> {
+        let exe = self.rt.load(&format!("{}_fwd", arch.name))?;
+        let mut inputs = self.param_literals(arch, params)?;
+        let b = arch.eval_batch;
+        let mut x_dims = vec![b];
+        x_dims.extend(&arch.input_shape);
+        let classes = arch.num_classes;
+        let x_slot = inputs.len(); // swap the batch literal in place
+
+        let (mut correct, mut total) = (0usize, 0usize);
+        for batch in data.batches(b) {
+            let x_lit = lit_f32(&batch.x, &x_dims)?;
+            if inputs.len() == x_slot {
+                inputs.push(x_lit);
+            } else {
+                inputs[x_slot] = x_lit;
+            }
+            let outs = exe.run(&inputs)?;
+            let logits = exe.f32_out(&outs, 0)?;
+            correct += count_correct(&logits, &batch.y, classes, batch.valid);
+            total += batch.valid;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Inputs to the faulty artifacts: params, and/or/byp masks, scales, x.
+    fn faulty_inputs(
+        &self,
+        arch: &Arch,
+        params: &Params,
+        masks: &LayerMasks,
+        calib: &Calibration,
+    ) -> Result<Vec<xla::Literal>> {
+        if !arch.is_mlp() {
+            bail!("faulty path artifacts exist only for MLP archs (got {})", arch.name);
+        }
+        let mut inputs = self.param_literals(arch, params)?;
+        let wl = arch.weighted_layers();
+        for (l, m) in wl.iter().zip(&masks.and_m) {
+            inputs.push(crate::runtime::lit_i32(m, &l.weight_dims())?);
+        }
+        for (l, m) in wl.iter().zip(&masks.or_m) {
+            inputs.push(crate::runtime::lit_i32(m, &l.weight_dims())?);
+        }
+        for (l, m) in wl.iter().zip(&masks.bypass) {
+            inputs.push(crate::runtime::lit_i32(m, &l.weight_dims())?);
+        }
+        for &s in &calib.a_scales {
+            inputs.push(scalar_f32(s));
+        }
+        for &s in &calib.w_scales {
+            inputs.push(scalar_f32(s));
+        }
+        Ok(inputs)
+    }
+
+    /// Top-1 accuracy of the quantized faulty systolic path.
+    ///
+    /// `masks` decides the scenario: `MaskKind::Unmitigated` (Fig 2) or
+    /// `MaskKind::FapBypass` (FAP executing on the faulty chip itself).
+    pub fn accuracy_faulty(
+        &self,
+        arch: &Arch,
+        params: &Params,
+        masks: &LayerMasks,
+        calib: &Calibration,
+        data: &Dataset,
+        use_pallas_artifact: bool,
+    ) -> Result<f64> {
+        let suffix = if use_pallas_artifact { "_faulty_fwd_pallas" } else { "_faulty_fwd" };
+        let exe = self.rt.load(&format!("{}{}", arch.name, suffix))?;
+        // Build the (large) param + mask literal set once and swap only the
+        // per-batch x literal in place: cloning ~45 MB of mask literals per
+        // batch dominated this path before (EXPERIMENTS.md §Perf).
+        let mut inputs = self.faulty_inputs(arch, params, masks, calib)?;
+        let b = arch.eval_batch;
+        let x_dims = [b, arch.input_len()];
+        let classes = arch.num_classes;
+        let x_slot = inputs.len();
+
+        let (mut correct, mut total) = (0usize, 0usize);
+        for batch in data.batches(b) {
+            let x_lit = lit_f32(&batch.x, &x_dims)?;
+            if inputs.len() == x_slot {
+                inputs.push(x_lit);
+            } else {
+                inputs[x_slot] = x_lit;
+            }
+            let outs = exe.run(&inputs)?;
+            let logits = exe.f32_out(&outs, 0)?;
+            correct += count_correct(&logits, &batch.y, classes, batch.valid);
+            total += batch.valid;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Per-layer pre-activations of the faulty path on one batch
+    /// (Fig 2b). Returns one `[valid * dout]` buffer per weighted layer.
+    pub fn faulty_activations(
+        &self,
+        arch: &Arch,
+        params: &Params,
+        masks: &LayerMasks,
+        calib: &Calibration,
+        x: &[f32],
+        valid: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.rt.load(&format!("{}_faulty_acts", arch.name))?;
+        let b = arch.eval_batch;
+        assert_eq!(x.len(), b * arch.input_len());
+        let mut inputs = self.faulty_inputs(arch, params, masks, calib)?;
+        inputs.push(lit_f32(x, &[b, arch.input_len()])?);
+        let outs = exe.run(&inputs)?;
+        let mut acts = Vec::new();
+        for (i, l) in arch.weighted_layers().iter().enumerate() {
+            let full = exe.f32_out(&outs, i)?;
+            acts.push(full[..valid * l.bias_len()].to_vec());
+        }
+        Ok(acts)
+    }
+}
+
+/// Count argmax hits over the first `valid` rows.
+pub fn count_correct(logits: &[f32], labels: &[i32], classes: usize, valid: usize) -> usize {
+    let mut correct = 0;
+    for i in 0..valid {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct
+}
+
+#[cfg(test)]
+mod tests {
+    use super::count_correct;
+
+    #[test]
+    fn count_correct_basic() {
+        let logits = [0.1, 0.9, 0.5, 0.2, 2.0, -1.0];
+        let labels = [1, 0, 9];
+        assert_eq!(count_correct(&logits, &labels, 2, 3), 2);
+        // only first `valid` rows count
+        assert_eq!(count_correct(&logits, &labels, 2, 2), 2);
+        assert_eq!(count_correct(&logits, &labels, 2, 1), 1);
+    }
+
+    #[test]
+    fn ties_pick_first() {
+        let logits = [0.5, 0.5];
+        assert_eq!(count_correct(&logits, &[0], 2, 1), 1);
+        assert_eq!(count_correct(&logits, &[1], 2, 1), 0);
+    }
+}

@@ -1,0 +1,558 @@
+//! The figure/table harness: regenerates every table and figure of the
+//! paper's evaluation (see DESIGN.md per-experiment index).
+//!
+//! Scaled defaults: the paper's full campaign (10 seeds x 64K-MAC
+//! gate-level sim x 25 retrain epochs) is far beyond a single CPU core;
+//! the harness defaults reproduce every curve's *shape* at reduced
+//! repeats/sets (EXPERIMENTS.md records the exact parameters of each
+//! recorded run). `--paper-scale` lifts the reductions.
+
+use super::evaluate::Evaluator;
+use super::fap::apply_fap;
+use super::fapt::{fapt_retrain, FaptConfig};
+use super::report::{mean_std, print_table, write_csv, write_json};
+use super::trainer::{train_baseline, TrainConfig};
+use crate::data;
+use crate::faults::{inject_uniform, FaultSpec};
+use crate::mapping::{LayerMasks, MaskKind};
+use crate::model::quant::{calibrate_mlp, Calibration};
+use crate::model::{arch, Arch, Params};
+use crate::runtime::Runtime;
+use crate::systolic::synthesis;
+use crate::util::json::Json;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct HarnessConfig {
+    pub out_dir: String,
+    pub seed: u64,
+    /// Random fault placements per point (paper: 10).
+    pub repeats: usize,
+    /// Physical array dimension for fault experiments (paper: 256).
+    pub array_n: usize,
+    /// Scale factor profile: quick (CI-sized), default, or paper-scale.
+    pub profile: Profile,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    Quick,
+    Default,
+    Paper,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            out_dir: "results".into(),
+            seed: 42,
+            repeats: 3,
+            array_n: 256,
+            profile: Profile::Default,
+        }
+    }
+}
+
+struct ModelBundle {
+    arch: Arch,
+    train: data::Dataset,
+    test: data::Dataset,
+    baseline: Params,
+    baseline_acc: f64,
+    calib: Option<Calibration>,
+}
+
+pub struct Harness<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: HarnessConfig,
+    bundles: HashMap<String, ModelBundle>,
+}
+
+impl<'rt> Harness<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: HarnessConfig) -> Self {
+        Harness { rt, cfg, bundles: HashMap::new() }
+    }
+
+    fn train_config(&self, name: &str) -> (usize, usize, TrainConfig) {
+        // (train_n, test_n, cfg) per model, scaled by profile
+        let (train_n, test_n, steps, lr) = match name {
+            "mnist" => (4000, 1000, 700, 0.05),
+            "timit" => (183 * 24, 183 * 6, 700, 0.04),
+            "alexnet32" => (2000, 500, 450, 0.03),
+            _ => (2000, 500, 400, 0.05),
+        };
+        let (div_n, div_s) = match self.cfg.profile {
+            Profile::Quick => (4, 4),
+            Profile::Default => (1, 1),
+            Profile::Paper => (1, 1),
+        };
+        let cfg = TrainConfig {
+            steps: steps / div_s,
+            lr,
+            end_lr_frac: 0.2,
+            seed: self.cfg.seed,
+            log_every: 200,
+        };
+        (train_n / div_n, test_n / div_n, cfg)
+    }
+
+    /// Train (once per process) and cache the baseline for a model.
+    fn bundle(&mut self, name: &str) -> Result<&ModelBundle> {
+        if !self.bundles.contains_key(name) {
+            let a = arch::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown arch {name}"))?;
+            let (train_n, test_n, tcfg) = self.train_config(name);
+            eprintln!("[{name}] generating data (train {train_n}, test {test_n})");
+            let (train, test) =
+                data::for_arch(name, train_n, test_n, self.cfg.seed).unwrap();
+            eprintln!("[{name}] training baseline ({} steps)", tcfg.steps);
+            let (baseline, _losses) = train_baseline(self.rt, &a, &train, &tcfg)?;
+            let ev = Evaluator::new(self.rt);
+            let baseline_acc = ev.accuracy(&a, &baseline, &test)?;
+            eprintln!("[{name}] baseline accuracy {:.2}%", baseline_acc * 100.0);
+            let calib = if a.is_mlp() {
+                let cal_batch = 64.min(train.len());
+                Some(calibrate_mlp(&a, &baseline, &train.x[..cal_batch * a.input_len()], cal_batch))
+            } else {
+                None
+            };
+            self.bundles.insert(
+                name.to_string(),
+                ModelBundle { arch: a, train, test, baseline, baseline_acc, calib },
+            );
+        }
+        Ok(&self.bundles[name])
+    }
+
+    // ------------------------------------------------------------------
+    // Table 1
+    // ------------------------------------------------------------------
+
+    pub fn table1(&mut self) -> Result<()> {
+        let mut rows = Vec::new();
+        for name in ["mnist", "timit", "alexnet32"] {
+            let a = arch::by_name(name).unwrap();
+            let desc: Vec<String> = a
+                .layers
+                .iter()
+                .map(|l| match l {
+                    crate::model::Layer::Fc(f) => format!("fc{}x{}", f.din, f.dout),
+                    crate::model::Layer::Conv(c) => {
+                        format!("conv{}x{}x{}x{}", c.kh, c.kw, c.din, c.dout)
+                    }
+                    crate::model::Layer::Pool(p) => format!("pool{}s{}", p.k, p.s),
+                })
+                .collect();
+            rows.push(vec![
+                a.name.to_string(),
+                format!("{:?}", a.input_shape),
+                a.num_classes.to_string(),
+                a.param_count().to_string(),
+                desc.join("-"),
+            ]);
+        }
+        print_table(
+            "Table 1: benchmark DNN architectures",
+            &["model", "input", "classes", "params", "layers"],
+            &rows,
+        );
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 2a: unmitigated accuracy vs #faulty MACs (MNIST, TIMIT)
+    // ------------------------------------------------------------------
+
+    pub fn fig2a(&mut self) -> Result<Json> {
+        let counts: Vec<usize> = match self.cfg.profile {
+            Profile::Quick => vec![0, 4, 16, 64],
+            _ => vec![0, 1, 2, 4, 8, 16, 32, 64],
+        };
+        let repeats = self.cfg.repeats;
+        let n = self.cfg.array_n;
+        let mut out = Json::obj()
+            .field("figure", Json::str("fig2a"))
+            .field("array_n", Json::num(n as f64))
+            .field("seed", Json::num(self.cfg.seed as f64));
+        let mut rows = Vec::new();
+
+        for name in ["mnist", "timit"] {
+            self.bundle(name)?;
+            let b = &self.bundles[name];
+            let (a, params, calib) =
+                (b.arch.clone(), b.baseline.clone(), b.calib.clone().unwrap());
+            let test = b.test.clone();
+            let float_acc = b.baseline_acc;
+            let ev = Evaluator::new(self.rt);
+
+            let mut series = Vec::new();
+            for &k in &counts {
+                let mut accs = Vec::new();
+                for rep in 0..repeats {
+                    let mut rng =
+                        Rng::new(self.cfg.seed ^ (k as u64) << 16 ^ rep as u64);
+                    let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
+                    let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+                    let acc =
+                        ev.accuracy_faulty(&a, &params, &masks, &calib, &test, false)?;
+                    accs.push(acc);
+                    if k == 0 {
+                        break; // no randomness at zero faults
+                    }
+                }
+                let (m, s) = mean_std(&accs);
+                eprintln!("[fig2a:{name}] {k} faulty MACs -> {:.2}% ± {:.2}", m * 100.0, s * 100.0);
+                rows.push(vec![
+                    name.to_string(),
+                    k.to_string(),
+                    format!("{:.2}", m * 100.0),
+                    format!("{:.2}", s * 100.0),
+                ]);
+                series.push(
+                    Json::obj()
+                        .field("faulty_macs", Json::num(k as f64))
+                        .field("acc_mean", Json::num(m))
+                        .field("acc_std", Json::num(s)),
+                );
+            }
+            out = out.field(
+                name,
+                Json::obj()
+                    .field("float_baseline_acc", Json::num(float_acc))
+                    .field("points", Json::Arr(series)),
+            );
+        }
+        print_table(
+            "Fig 2a: unmitigated accuracy vs #faulty MACs",
+            &["model", "faulty MACs", "acc %", "± %"],
+            &rows,
+        );
+        write_json(&self.cfg.out_dir, "fig2a", &out)?;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 2b: golden vs faulty activations (TIMIT, 8 faulty MACs)
+    // ------------------------------------------------------------------
+
+    pub fn fig2b(&mut self) -> Result<Json> {
+        let n = self.cfg.array_n;
+        self.bundle("timit")?;
+        let b = &self.bundles["timit"];
+        let (a, params, calib) =
+            (b.arch.clone(), b.baseline.clone(), b.calib.clone().unwrap());
+        let test = b.test.clone();
+        let ev = Evaluator::new(self.rt);
+
+        let batch = test.batches(a.eval_batch).next().unwrap();
+        let valid = batch.valid.min(64); // paper scatters a sample subset
+
+        let healthy = crate::faults::FaultMap::healthy(n);
+        let golden_masks = LayerMasks::build(&a, &healthy, MaskKind::Unmitigated);
+        let golden =
+            ev.faulty_activations(&a, &params, &golden_masks, &calib, &batch.x, valid)?;
+
+        let mut rng = Rng::new(self.cfg.seed ^ 0xF16_2B);
+        let fm = inject_uniform(FaultSpec::new(n), 8, &mut rng);
+        let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+        let faulty =
+            ev.faulty_activations(&a, &params, &masks, &calib, &batch.x, valid)?;
+
+        // paper plots layer 3 (the last hidden layer) of the TIMIT MLP
+        let layer = 2usize;
+        let g = &golden[layer];
+        let f = &faulty[layer];
+        let gmax = g.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let fmax = f.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scatter: Vec<Vec<f64>> = g
+            .iter()
+            .zip(f)
+            .take(4000)
+            .map(|(&gv, &fv)| vec![gv as f64, fv as f64])
+            .collect();
+        write_csv(&self.cfg.out_dir, "fig2b_scatter", "golden,faulty", &scatter)?;
+
+        let out = Json::obj()
+            .field("figure", Json::str("fig2b"))
+            .field("faulty_macs", Json::num(8))
+            .field("layer", Json::num(layer as f64 + 1.0))
+            .field("golden_max_abs", Json::num(gmax as f64))
+            .field("faulty_max_abs", Json::num(fmax as f64))
+            .field("blowup_factor", Json::num((fmax / gmax.max(1e-9)) as f64));
+        println!(
+            "\n== Fig 2b: TIMIT layer-3 activations, 8 faulty MACs ==\n\
+             golden max |act| = {gmax:.2}, faulty max |act| = {fmax:.2} \
+             (x{:.1} blow-up)",
+            fmax / gmax.max(1e-9)
+        );
+        write_json(&self.cfg.out_dir, "fig2b", &out)?;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 4: FAP & FAP+T accuracy vs fault rate
+    // ------------------------------------------------------------------
+
+    pub fn fig4(&mut self, models: &[&str]) -> Result<Json> {
+        let name = if models == ["alexnet32"] { "fig4b" } else { "fig4a" };
+        self.fig4_named(models, name)
+    }
+
+    fn fig4_named(&mut self, models: &[&str], out_name: &str) -> Result<Json> {
+        let rates: Vec<f64> = match self.cfg.profile {
+            Profile::Quick => vec![0.125, 0.5],
+            _ => vec![0.0625, 0.125, 0.25, 0.5],
+        };
+        let retrain_epochs = match self.cfg.profile {
+            Profile::Quick => 2,
+            Profile::Default => 4,
+            Profile::Paper => 25,
+        };
+        let n = self.cfg.array_n;
+        let repeats = self.cfg.repeats;
+        let mut out = Json::obj()
+            .field("figure", Json::str("fig4"))
+            .field("array_n", Json::num(n as f64))
+            .field("retrain_epochs", Json::num(retrain_epochs as f64));
+        let mut rows = Vec::new();
+
+        for &name in models {
+            self.bundle(name)?;
+            let b = &self.bundles[name];
+            let (a, baseline) = (b.arch.clone(), b.baseline.clone());
+            let (train, test) = (b.train.clone(), b.test.clone());
+            let base_acc = b.baseline_acc;
+            let ev = Evaluator::new(self.rt);
+
+            let mut series = Vec::new();
+            for &rate in &rates {
+                let (mut fap_accs, mut fapt_accs) = (Vec::new(), Vec::new());
+                for rep in 0..repeats {
+                    let mut rng = Rng::new(
+                        self.cfg.seed ^ ((rate * 1e4) as u64) << 20 ^ rep as u64,
+                    );
+                    let k = (rate * (n * n) as f64).round() as usize;
+                    let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
+                    let (fap_params, masks, _rep) = apply_fap(&a, &baseline, &fm);
+                    fap_accs.push(ev.accuracy(&a, &fap_params, &test)?);
+                    let fcfg = FaptConfig {
+                        max_epochs: retrain_epochs,
+                        lr: 0.01,
+                        seed: self.cfg.seed ^ rep as u64,
+                        snapshot_epochs: vec![],
+                    };
+                    let res = fapt_retrain(self.rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
+                    fapt_accs.push(ev.accuracy(&a, &res.params, &test)?);
+                }
+                let (fm_, fs_) = mean_std(&fap_accs);
+                let (tm_, ts_) = mean_std(&fapt_accs);
+                eprintln!(
+                    "[fig4:{name}] rate {:.1}% FAP {:.2}% FAP+T {:.2}%",
+                    rate * 100.0,
+                    fm_ * 100.0,
+                    tm_ * 100.0
+                );
+                rows.push(vec![
+                    name.to_string(),
+                    format!("{:.2}", rate * 100.0),
+                    format!("{:.2}", base_acc * 100.0),
+                    format!("{:.2} ± {:.2}", fm_ * 100.0, fs_ * 100.0),
+                    format!("{:.2} ± {:.2}", tm_ * 100.0, ts_ * 100.0),
+                ]);
+                series.push(
+                    Json::obj()
+                        .field("fault_rate", Json::num(rate))
+                        .field("fap_acc_mean", Json::num(fm_))
+                        .field("fap_acc_std", Json::num(fs_))
+                        .field("fapt_acc_mean", Json::num(tm_))
+                        .field("fapt_acc_std", Json::num(ts_)),
+                );
+            }
+            out = out.field(
+                name,
+                Json::obj()
+                    .field("baseline_acc", Json::num(base_acc))
+                    .field("points", Json::Arr(series)),
+            );
+        }
+        print_table(
+            "Fig 4: accuracy vs fault rate (FAP / FAP+T)",
+            &["model", "fault %", "baseline %", "FAP %", "FAP+T %"],
+            &rows,
+        );
+        write_json(&self.cfg.out_dir, out_name, &out)?;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Fig 5: accuracy vs MAX_EPOCHS at 25% faults
+    // ------------------------------------------------------------------
+
+    pub fn fig5(&mut self, models: &[&str]) -> Result<Json> {
+        let name = if models == ["alexnet32"] { "fig5b" } else { "fig5a" };
+        self.fig5_named(models, name)
+    }
+
+    fn fig5_named(&mut self, models: &[&str], out_name: &str) -> Result<Json> {
+        let max_epochs = match self.cfg.profile {
+            Profile::Quick => 4,
+            Profile::Default => 10,
+            Profile::Paper => 25,
+        };
+        let rate = 0.25;
+        let n = self.cfg.array_n;
+        let mut out = Json::obj()
+            .field("figure", Json::str("fig5"))
+            .field("fault_rate", Json::num(rate))
+            .field("max_epochs", Json::num(max_epochs as f64));
+        let mut rows = Vec::new();
+
+        for &name in models {
+            self.bundle(name)?;
+            let b = &self.bundles[name];
+            let (a, baseline) = (b.arch.clone(), b.baseline.clone());
+            let (train, test) = (b.train.clone(), b.test.clone());
+            let base_acc = b.baseline_acc;
+            let ev = Evaluator::new(self.rt);
+
+            let mut rng = Rng::new(self.cfg.seed ^ 0xF165);
+            let k = (rate * (n * n) as f64).round() as usize;
+            let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
+            let (fap_params, masks, _) = apply_fap(&a, &baseline, &fm);
+            let fap_acc = ev.accuracy(&a, &fap_params, &test)?;
+
+            let fcfg = FaptConfig {
+                max_epochs,
+                lr: 0.01,
+                seed: self.cfg.seed,
+                snapshot_epochs: (1..=max_epochs).collect(),
+            };
+            let res = fapt_retrain(self.rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
+
+            let mut series = vec![Json::obj()
+                .field("epoch", Json::num(0))
+                .field("acc", Json::num(fap_acc))];
+            rows.push(vec![
+                name.to_string(),
+                "0".into(),
+                format!("{:.2}", fap_acc * 100.0),
+                format!("{:.2}", base_acc * 100.0),
+            ]);
+            for (epoch, p) in &res.snapshots {
+                let acc = ev.accuracy(&a, p, &test)?;
+                rows.push(vec![
+                    name.to_string(),
+                    epoch.to_string(),
+                    format!("{:.2}", acc * 100.0),
+                    format!("{:.2}", base_acc * 100.0),
+                ]);
+                series.push(
+                    Json::obj()
+                        .field("epoch", Json::num(*epoch as f64))
+                        .field("acc", Json::num(acc)),
+                );
+            }
+            out = out.field(
+                name,
+                Json::obj()
+                    .field("baseline_acc", Json::num(base_acc))
+                    .field("secs_per_epoch", Json::num(res.secs_per_epoch))
+                    .field("points", Json::Arr(series)),
+            );
+            eprintln!("[fig5:{name}] {:.1}s / epoch", res.secs_per_epoch);
+        }
+        print_table(
+            "Fig 5: FAP+T accuracy vs MAX_EPOCHS (25% faulty MACs)",
+            &["model", "epoch", "acc %", "baseline %"],
+            &rows,
+        );
+        write_json(&self.cfg.out_dir, out_name, &out)?;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Synthesis claims (§5.1 / §6.1)
+    // ------------------------------------------------------------------
+
+    pub fn synthesis_table(&self) -> Result<()> {
+        let base = synthesis::SynthesisModel::paper_baseline();
+        let fap = synthesis::SynthesisModel::paper_fap();
+        let rows = vec![
+            vec![
+                "baseline 256x256".into(),
+                format!("{:.0} MHz", base.freq_hz / 1e6),
+                format!("{:.1} W", base.dynamic_power_w()),
+                format!("{:.1} TOPS", base.peak_tops()),
+                format!("{:.2}x", base.area_factor()),
+            ],
+            vec![
+                "FAP bypass".into(),
+                format!("{:.0} MHz", fap.freq_hz / 1e6),
+                format!("{:.1} W", fap.dynamic_power_w()),
+                format!("{:.1} TOPS", fap.peak_tops()),
+                format!("{:.2}x (paper: 1.09x)", fap.area_factor()),
+            ],
+        ];
+        print_table(
+            "Synthesis model (45nm, paper §6.1)",
+            &["design", "freq", "dyn power", "peak", "area"],
+            &rows,
+        );
+
+        let mut yrows = Vec::new();
+        for p in [1e-5, 1e-4, 1e-3, 0.01, 0.1, 0.25, 0.5] {
+            yrows.push(vec![
+                format!("{:.3}%", p * 100.0),
+                format!("{:.2}%", synthesis::yield_discard(256, p) * 100.0),
+                format!("{:.2}%", synthesis::yield_fap(256, p, 0.5) * 100.0),
+            ]);
+        }
+        print_table(
+            "Effective yield: discard-on-defect vs FAP (tolerate <=50%)",
+            &["MAC defect rate", "discard yield", "FAP yield"],
+            &yrows,
+        );
+        Ok(())
+    }
+
+    /// Dispatch by experiment id.
+    pub fn run(&mut self, id: &str) -> Result<()> {
+        match id {
+            "table1" => self.table1()?,
+            "fig2a" => {
+                self.fig2a()?;
+            }
+            "fig2b" => {
+                self.fig2b()?;
+            }
+            "fig4a" => {
+                self.fig4(&["mnist", "timit"])?;
+            }
+            "fig4b" => {
+                self.fig4(&["alexnet32"])?;
+            }
+            "fig5a" => {
+                self.fig5(&["mnist", "timit"])?;
+            }
+            "fig5b" => {
+                self.fig5(&["alexnet32"])?;
+            }
+            "synthesis" => self.synthesis_table()?,
+            "all" => {
+                self.table1()?;
+                self.fig2a()?;
+                self.fig2b()?;
+                self.fig4(&["mnist", "timit"])?;
+                self.fig4(&["alexnet32"])?;
+                self.fig5(&["mnist", "timit"])?;
+                self.fig5(&["alexnet32"])?;
+                self.synthesis_table()?;
+            }
+            other => bail!("unknown experiment id {other:?} \
+                (use table1|fig2a|fig2b|fig4a|fig4b|fig5a|fig5b|synthesis|all)"),
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,99 @@
+//! FAP — fault-aware pruning (paper §5.1).
+//!
+//! Given the chip's fault map, every weight whose MAC is faulty is pruned
+//! to zero; in hardware the bypass path makes the faulty MAC contribute
+//! nothing, and at the algorithm level that is exactly a zero weight. No
+//! retraining, no run-time overhead.
+
+use crate::faults::FaultMap;
+use crate::mapping::{LayerMasks, MaskKind};
+use crate::model::{Arch, Params};
+
+/// Statistics of one FAP application.
+#[derive(Clone, Debug)]
+pub struct FapReport {
+    pub faulty_macs: usize,
+    pub fault_rate: f64,
+    pub pruned_weights: usize,
+    pub total_weights: usize,
+}
+
+impl FapReport {
+    pub fn pruned_fraction(&self) -> f64 {
+        self.pruned_weights as f64 / self.total_weights.max(1) as f64
+    }
+}
+
+/// Apply FAP: returns the pruned parameters, the masks used (for FAP+T or
+/// the faulty-path artifacts), and a report.
+pub fn apply_fap(arch: &Arch, params: &Params, fm: &FaultMap) -> (Params, LayerMasks, FapReport) {
+    let masks = LayerMasks::build(arch, fm, MaskKind::FapBypass);
+    let mut pruned = params.clone();
+    pruned.apply_masks(&masks.prune);
+
+    let total_weights: usize = masks.prune.iter().map(|m| m.len()).sum();
+    let pruned_weights: usize = masks
+        .prune
+        .iter()
+        .map(|m| m.iter().filter(|&&v| v == 0.0).count())
+        .sum();
+    let report = FapReport {
+        faulty_macs: fm.faulty_mac_count(),
+        fault_rate: fm.fault_rate(),
+        pruned_weights,
+        total_weights,
+    };
+    (pruned, masks, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{inject_uniform, FaultSpec};
+    use crate::model::arch::mnist;
+    use crate::util::Rng;
+
+    fn unit_params(arch: &Arch) -> Params {
+        let mut p = Params::zeros_like(arch);
+        for (w, _) in &mut p.layers {
+            w.iter_mut().for_each(|v| *v = 1.0);
+        }
+        p
+    }
+
+    #[test]
+    fn healthy_chip_prunes_nothing() {
+        let arch = mnist();
+        let p = unit_params(&arch);
+        let (pruned, _, rep) = apply_fap(&arch, &p, &FaultMap::healthy(256));
+        assert_eq!(rep.pruned_weights, 0);
+        assert_eq!(pruned.zero_weight_fraction(), 0.0);
+    }
+
+    #[test]
+    fn pruned_fraction_tracks_fault_rate() {
+        let arch = mnist();
+        let p = unit_params(&arch);
+        // aligned dims (784, 256 are multiples of 16) => fractions match
+        let fm = inject_uniform(FaultSpec::new(16), 64, &mut Rng::new(1));
+        let (pruned, masks, rep) = apply_fap(&arch, &p, &fm);
+        assert_eq!(rep.faulty_macs, 64);
+        assert!((rep.fault_rate - 0.25).abs() < 1e-12);
+        // last layer dout=10 isn't aligned, so fractions only approximate
+        assert!((rep.pruned_fraction() - 0.25).abs() < 0.02, "{}", rep.pruned_fraction());
+        assert!((pruned.zero_weight_fraction() - rep.pruned_fraction()).abs() < 1e-9);
+        assert_eq!(masks.prune.len(), 4);
+    }
+
+    #[test]
+    fn pruning_is_idempotent() {
+        let arch = mnist();
+        let p = unit_params(&arch);
+        let fm = inject_uniform(FaultSpec::new(16), 32, &mut Rng::new(2));
+        let (p1, _, _) = apply_fap(&arch, &p, &fm);
+        let (p2, _, _) = apply_fap(&arch, &p1, &fm);
+        for ((w1, _), (w2, _)) in p1.layers.iter().zip(&p2.layers) {
+            assert_eq!(w1, w2);
+        }
+    }
+}

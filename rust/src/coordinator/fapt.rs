@@ -1,0 +1,133 @@
+//! FAP+T — fault-aware pruning plus per-chip retraining (paper §5.2,
+//! Algorithm 1).
+//!
+//! ```text
+//! 1  Load the pre-trained DNN weights and TPU fault map
+//! 2  Determine indices of pruned weights from the fault map
+//! 3  Set all pruned weights to zero
+//! 4  for epochs <= MAX_EPOCHS:
+//! 5      update weights using back-prop
+//! 6      set all pruned weights to zero
+//! 7  return retrained model
+//! ```
+//!
+//! Lines 5–6 execute inside the AOT `{arch}_train` graph (masked forward,
+//! SGD+momentum update, pruned weights re-zeroed in-graph); this module
+//! drives the epoch loop and snapshots intermediate models for the Fig 5
+//! accuracy-vs-MAX_EPOCHS sweep.
+
+use super::trainer::{mask_literals, train_step, TrainState};
+use crate::data::Dataset;
+use crate::faults::FaultMap;
+use crate::model::{Arch, Params};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct FaptConfig {
+    /// MAX_EPOCHS of Algorithm 1.
+    pub max_epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Epochs at which to snapshot the model (for Fig 5); always includes
+    /// epoch 0 (= plain FAP) implicitly via the caller's FAP params.
+    pub snapshot_epochs: Vec<usize>,
+}
+
+impl Default for FaptConfig {
+    fn default() -> Self {
+        FaptConfig { max_epochs: 5, lr: 0.02, seed: 7, snapshot_epochs: vec![] }
+    }
+}
+
+/// Retraining outcome.
+pub struct FaptResult {
+    /// The retrained model (pruned weights exactly zero).
+    pub params: Params,
+    /// Mean loss per epoch.
+    pub epoch_losses: Vec<f32>,
+    /// Requested (epoch, snapshot) pairs.
+    pub snapshots: Vec<(usize, Params)>,
+    /// Wall-clock seconds per epoch (the paper's 1h → 12min claim analog).
+    pub secs_per_epoch: f64,
+}
+
+/// Run Algorithm 1 starting from `fap_params` (already pruned by
+/// [`super::fap::apply_fap`]) with the matching prune masks.
+pub fn fapt_retrain(
+    rt: &Runtime,
+    arch: &Arch,
+    fap_params: &Params,
+    prune_masks: &[Vec<f32>],
+    train: &Dataset,
+    cfg: &FaptConfig,
+) -> Result<FaptResult> {
+    let exe = rt.load(&format!("{}_train", arch.name))?;
+    let mut state = TrainState::from_params(arch, fap_params)?;
+    let masks = mask_literals(arch, prune_masks)?;
+
+    let b = arch.train_batch;
+    let mut x_dims = vec![b];
+    x_dims.extend(&arch.input_shape);
+    let mut rng = Rng::new(cfg.seed);
+    let mut data = train.clone();
+
+    let mut epoch_losses = Vec::with_capacity(cfg.max_epochs);
+    let mut snapshots = Vec::new();
+    let t0 = Instant::now();
+
+    for epoch in 1..=cfg.max_epochs {
+        data.shuffle(&mut rng);
+        let (mut sum, mut count) = (0.0f32, 0usize);
+        for batch in data.batches(b) {
+            let loss = train_step(&exe, &mut state, &masks, &batch.x, &batch.y, &x_dims, cfg.lr)?;
+            sum += loss;
+            count += 1;
+        }
+        epoch_losses.push(sum / count.max(1) as f32);
+        if cfg.snapshot_epochs.contains(&epoch) {
+            snapshots.push((epoch, state.to_params(arch)?));
+        }
+    }
+
+    let secs_per_epoch = if cfg.max_epochs > 0 {
+        t0.elapsed().as_secs_f64() / cfg.max_epochs as f64
+    } else {
+        0.0
+    };
+    let params = state.to_params(arch).context("downloading retrained params")?;
+    Ok(FaptResult { params, epoch_losses, snapshots, secs_per_epoch })
+}
+
+/// Full per-chip provisioning flow (what a fab-line host would run):
+/// localize faults → FAP → FAP+T → return deployable model.
+pub struct ProvisionOutcome {
+    pub fault_map: FaultMap,
+    pub detected: usize,
+    pub fap_report: super::fap::FapReport,
+    pub result: FaptResult,
+}
+
+pub fn provision_chip(
+    rt: &Runtime,
+    arch: &Arch,
+    baseline: &Params,
+    fm: &FaultMap,
+    train: &Dataset,
+    cfg: &FaptConfig,
+) -> Result<ProvisionOutcome> {
+    // post-fab test: localize the faults (the paper assumes this step)
+    let det = crate::faults::detect::localize_from_map(fm, Default::default());
+    // build the fault map the controller will actually use: MAC granularity
+    let mut known = FaultMap::healthy(fm.n());
+    for (r, c) in &det.faulty {
+        // polarity/bit don't matter for FAP — any fault ⇒ bypass; record a
+        // canonical marker fault
+        known.add(crate::faults::StuckAt { row: *r as u16, col: *c as u16, bit: 0, value: true });
+    }
+    let (fap_params, masks, fap_report) = super::fap::apply_fap(arch, baseline, &known);
+    let result = fapt_retrain(rt, arch, &fap_params, &masks.prune, train, cfg)?;
+    Ok(ProvisionOutcome { fault_map: known, detected: det.faulty.len(), fap_report, result })
+}

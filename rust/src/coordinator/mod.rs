@@ -1,0 +1,17 @@
+//! The paper's system contribution: baseline training, fault-injection
+//! campaigns, FAP pruning, the per-chip FAP+T retraining loop
+//! (Algorithm 1), accuracy evaluation, and the experiment harness that
+//! regenerates every table and figure.
+
+pub mod baselines;
+pub mod evaluate;
+pub mod experiment;
+pub mod fap;
+pub mod fapt;
+pub mod report;
+pub mod trainer;
+
+pub use evaluate::Evaluator;
+pub use fap::apply_fap;
+pub use fapt::{fapt_retrain, FaptConfig};
+pub use trainer::{train_baseline, TrainConfig};

@@ -1,0 +1,172 @@
+//! Baseline (fault-free) training driver.
+//!
+//! Runs the AOT-compiled `{arch}_train` step (masked SGD + momentum; the
+//! same graph FAP+T uses, with all-ones masks) against a procedural
+//! dataset. Parameters and velocities stay device-side as literals across
+//! steps; only the scalar loss crosses the host boundary per step.
+
+use crate::data::Dataset;
+use crate::model::{Arch, Params};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, Executable, Runtime};
+use crate::util::Rng;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Linear LR decay to `lr * end_lr_frac` at the last step.
+    pub end_lr_frac: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 400, lr: 0.05, end_lr_frac: 0.2, seed: 42, log_every: 100 }
+    }
+}
+
+/// Device-side training state (parameter + velocity literals, artifact
+/// argument order).
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub vels: Vec<xla::Literal>,
+}
+
+impl TrainState {
+    /// Initialize from the `{arch}_init` artifact (He init, zero velocity).
+    pub fn init(rt: &Runtime, arch: &Arch, seed: i32) -> Result<TrainState> {
+        let init = rt.load(&format!("{}_init", arch.name))?;
+        let params = init.run(&[scalar_i32(seed)])?;
+        let mut vels = Vec::with_capacity(params.len());
+        for l in arch.weighted_layers() {
+            vels.push(lit_f32(&vec![0.0; l.weight_len()], &l.weight_dims())?);
+            vels.push(lit_f32(&vec![0.0; l.bias_len()], &[l.bias_len()])?);
+        }
+        Ok(TrainState { params, vels })
+    }
+
+    /// Start from existing host parameters (FAP+T retraining).
+    pub fn from_params(arch: &Arch, p: &Params) -> Result<TrainState> {
+        let mut params = Vec::new();
+        let mut vels = Vec::new();
+        for (l, (w, b)) in arch.weighted_layers().iter().zip(&p.layers) {
+            params.push(lit_f32(w, &l.weight_dims())?);
+            params.push(lit_f32(b, &[l.bias_len()])?);
+            vels.push(lit_f32(&vec![0.0; w.len()], &l.weight_dims())?);
+            vels.push(lit_f32(&vec![0.0; b.len()], &[b.len()])?);
+        }
+        Ok(TrainState { params, vels })
+    }
+
+    /// Download parameters to the host.
+    pub fn to_params(&self, arch: &Arch) -> Result<Params> {
+        let flat: Result<Vec<Vec<f32>>> =
+            self.params.iter().map(|l| Ok(l.to_vec::<f32>()?)).collect();
+        Params::from_flat(arch, flat?)
+    }
+}
+
+/// Build the all-ones mask literal set (no pruning).
+pub fn ones_masks(arch: &Arch) -> Result<Vec<xla::Literal>> {
+    arch.weighted_layers()
+        .iter()
+        .map(|l| lit_f32(&vec![1.0; l.weight_len()], &l.weight_dims()))
+        .collect()
+}
+
+/// Build mask literals from host prune masks.
+pub fn mask_literals(arch: &Arch, masks: &[Vec<f32>]) -> Result<Vec<xla::Literal>> {
+    arch.weighted_layers()
+        .iter()
+        .zip(masks)
+        .map(|(l, m)| lit_f32(m, &l.weight_dims()))
+        .collect()
+}
+
+/// One train step. `masks` has one literal per weighted layer.
+pub fn train_step(
+    exe: &Executable,
+    state: &mut TrainState,
+    masks: &[xla::Literal],
+    x: &[f32],
+    y: &[i32],
+    x_dims: &[usize],
+    lr: f32,
+) -> Result<f32> {
+    let np = state.params.len();
+    let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * np + masks.len() + 3);
+    inputs.extend(state.params.drain(..));
+    inputs.extend(state.vels.drain(..));
+    inputs.extend(masks.iter().cloned());
+    inputs.push(lit_f32(x, x_dims)?);
+    inputs.push(lit_i32(y, &[y.len()])?);
+    inputs.push(scalar_f32(lr));
+
+    let mut outs = exe.run(&inputs)?;
+    let loss = outs
+        .pop()
+        .context("train artifact returned no outputs")?
+        .get_first_element::<f32>()?;
+    let vels = outs.split_off(np);
+    state.params = outs;
+    state.vels = vels;
+    Ok(loss)
+}
+
+/// Train a fresh baseline model on `train` data; returns host parameters
+/// and the per-step loss curve.
+pub fn train_baseline(
+    rt: &Runtime,
+    arch: &Arch,
+    train: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<(Params, Vec<f32>)> {
+    let exe = rt.load(&format!("{}_train", arch.name))?;
+    let mut state = TrainState::init(rt, arch, cfg.seed as i32)?;
+    let masks = ones_masks(arch)?;
+    let losses = run_steps(&exe, &mut state, &masks, arch, train, cfg)?;
+    Ok((state.to_params(arch)?, losses))
+}
+
+/// Shared step loop (baseline and FAP+T reuse it).
+pub fn run_steps(
+    exe: &Rc<Executable>,
+    state: &mut TrainState,
+    masks: &[xla::Literal],
+    arch: &Arch,
+    train: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<Vec<f32>> {
+    let b = arch.train_batch;
+    let mut x_dims = vec![b];
+    x_dims.extend(&arch.input_shape);
+    let mut rng = Rng::new(cfg.seed);
+    let mut data = train.clone();
+    data.shuffle(&mut rng);
+    let mut batches = Vec::new(); // materialized batch index ranges
+    let mut losses = Vec::with_capacity(cfg.steps);
+
+    let mut batch_iter = data.batches(b);
+    for step in 0..cfg.steps {
+        let batch = match batch_iter.next() {
+            Some(bt) => bt,
+            None => {
+                data.shuffle(&mut rng); // new epoch
+                batch_iter = data.batches(b);
+                batch_iter.next().context("empty dataset")?
+            }
+        };
+        batches.push(batch.valid);
+        let frac = if cfg.steps > 1 { step as f32 / (cfg.steps - 1) as f32 } else { 0.0 };
+        let lr = cfg.lr * (1.0 - frac * (1.0 - cfg.end_lr_frac));
+        let loss = train_step(exe, state, masks, &batch.x, &batch.y, &x_dims, lr)?;
+        losses.push(loss);
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            eprintln!("  [{}] step {step}/{} loss {loss:.4} lr {lr:.4}", arch.name, cfg.steps);
+        }
+    }
+    Ok(losses)
+}

@@ -1,0 +1,156 @@
+//! In-memory dataset container and fixed-size batch iteration with final
+//! padding (the AOT artifacts have static batch shapes).
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major `[n][sample_dim]`.
+    pub x: Vec<f32>,
+    /// Class ids `[n]`.
+    pub y: Vec<i32>,
+    pub sample_dim: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<i32>, sample_dim: usize, num_classes: usize) -> Dataset {
+        assert_eq!(x.len(), y.len() * sample_dim);
+        Dataset { x, y, sample_dim, num_classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], i32) {
+        (&self.x[i * self.sample_dim..(i + 1) * self.sample_dim], self.y[i])
+    }
+
+    /// Shuffle samples in place (epoch reshuffling for training).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let n = self.len();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            self.y.swap(i, j);
+            for d in 0..self.sample_dim {
+                self.x.swap(i * self.sample_dim + d, j * self.sample_dim + d);
+            }
+        }
+    }
+
+    /// Iterate fixed-size batches; the last batch is padded by repeating
+    /// sample 0 and reports `valid < batch`.
+    pub fn batches(&self, batch: usize) -> Batches<'_> {
+        assert!(batch > 0);
+        Batches { ds: self, batch, pos: 0 }
+    }
+
+    /// Class distribution (diagnostics / balance tests).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &y in &self.y {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// One padded batch.
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    /// Number of real (non-padding) samples at the front.
+    pub valid: usize,
+}
+
+pub struct Batches<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Iterator for Batches<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos >= self.ds.len() {
+            return None;
+        }
+        let take = (self.ds.len() - self.pos).min(self.batch);
+        let dim = self.ds.sample_dim;
+        let mut x = Vec::with_capacity(self.batch * dim);
+        let mut y = Vec::with_capacity(self.batch);
+        x.extend_from_slice(&self.ds.x[self.pos * dim..(self.pos + take) * dim]);
+        y.extend_from_slice(&self.ds.y[self.pos..self.pos + take]);
+        for _ in take..self.batch {
+            x.extend_from_slice(&self.ds.x[..dim]); // pad with sample 0
+            y.push(self.ds.y[0]);
+        }
+        self.pos += take;
+        Some(Batch { x, y, valid: take })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = (0..10 * 3).map(|v| v as f32).collect();
+        let y = (0..10).map(|v| (v % 4) as i32).collect();
+        Dataset::new(x, y, 3, 4)
+    }
+
+    #[test]
+    fn batch_iteration_covers_all_samples() {
+        let ds = tiny();
+        let batches: Vec<_> = ds.batches(4).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].valid, 4);
+        assert_eq!(batches[1].valid, 4);
+        assert_eq!(batches[2].valid, 2);
+        assert_eq!(batches[2].x.len(), 4 * 3);
+        // padding repeats sample 0
+        assert_eq!(&batches[2].x[2 * 3..3 * 3], &ds.x[..3]);
+    }
+
+    #[test]
+    fn exact_division_has_no_padding() {
+        let ds = tiny();
+        let batches: Vec<_> = ds.batches(5).collect();
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.valid == 5));
+    }
+
+    #[test]
+    fn shuffle_preserves_pairs() {
+        let mut ds = tiny();
+        let before: Vec<(Vec<f32>, i32)> = (0..ds.len())
+            .map(|i| (ds.sample(i).0.to_vec(), ds.sample(i).1))
+            .collect();
+        ds.shuffle(&mut Rng::new(1));
+        let mut after: Vec<(Vec<f32>, i32)> = (0..ds.len())
+            .map(|i| (ds.sample(i).0.to_vec(), ds.sample(i).1))
+            .collect();
+        assert_ne!(before, after, "shuffle should move things");
+        // same multiset
+        let key = |v: &(Vec<f32>, i32)| (v.0.iter().map(|f| f.to_bits()).collect::<Vec<_>>(), v.1);
+        let mut a: Vec<_> = before.iter().map(key).collect();
+        let mut b: Vec<_> = after.iter().map(key).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+        after.sort_by_key(|v| v.1);
+    }
+
+    #[test]
+    fn class_counts_sum_to_len() {
+        let ds = tiny();
+        assert_eq!(ds.class_counts().iter().sum::<usize>(), ds.len());
+    }
+}

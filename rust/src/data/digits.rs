@@ -1,0 +1,162 @@
+//! Procedural 28x28 digit renderer — the MNIST stand-in.
+//!
+//! Each class is a fixed stroke program (seven-segment-style segments plus
+//! distinguishing diagonals) rasterized with per-sample random affine
+//! jitter (translation, scale, rotation), stroke thickness and additive
+//! noise. The task is learnable to >95% by the paper's 784-256³-10 MLP
+//! while remaining non-trivial, which is what the accuracy-vs-fault-rate
+//! curves need (relative degradation, not absolute SOTA).
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// Line segments per digit in a [0,1]² glyph box: (x0, y0, x1, y1).
+/// Roughly seven-segment shapes with diagonals for 2, 4, 7.
+fn strokes(digit: usize) -> &'static [(f32, f32, f32, f32)] {
+    const T: (f32, f32, f32, f32) = (0.2, 0.15, 0.8, 0.15); // top
+    const M: (f32, f32, f32, f32) = (0.2, 0.5, 0.8, 0.5); // middle
+    const B: (f32, f32, f32, f32) = (0.2, 0.85, 0.8, 0.85); // bottom
+    const TL: (f32, f32, f32, f32) = (0.2, 0.15, 0.2, 0.5); // top-left
+    const TR: (f32, f32, f32, f32) = (0.8, 0.15, 0.8, 0.5); // top-right
+    const BL: (f32, f32, f32, f32) = (0.2, 0.5, 0.2, 0.85); // bottom-left
+    const BR: (f32, f32, f32, f32) = (0.8, 0.5, 0.8, 0.85); // bottom-right
+    match digit {
+        0 => &[T, B, TL, TR, BL, BR, (0.2, 0.15, 0.8, 0.85)],
+        1 => &[(0.5, 0.15, 0.5, 0.85), (0.35, 0.3, 0.5, 0.15)],
+        2 => &[T, TR, (0.8, 0.5, 0.2, 0.85), B],
+        3 => &[T, M, B, TR, BR],
+        4 => &[TL, M, (0.65, 0.15, 0.65, 0.85)],
+        5 => &[T, TL, M, BR, B],
+        6 => &[T, TL, BL, B, BR, M],
+        7 => &[T, (0.8, 0.15, 0.4, 0.85)],
+        8 => &[T, M, B, TL, TR, BL, BR],
+        9 => &[T, M, TL, TR, BR, B],
+        _ => unreachable!(),
+    }
+}
+
+/// Render one digit with random jitter into a DIM-length buffer in [0,1].
+pub fn render(digit: usize, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(out.len(), DIM);
+    out.fill(0.0);
+
+    // per-sample affine jitter
+    let scale = rng.range_f32(0.75, 1.0) * (SIDE as f32 - 6.0);
+    let theta = rng.range_f32(-0.18, 0.18);
+    let (sin, cos) = (theta.sin(), theta.cos());
+    let cx = SIDE as f32 / 2.0 + rng.range_f32(-2.0, 2.0);
+    let cy = SIDE as f32 / 2.0 + rng.range_f32(-2.0, 2.0);
+    let thick = rng.range_f32(0.8, 1.6);
+
+    for &(x0, y0, x1, y1) in strokes(digit) {
+        // sample points along the stroke, splat a soft disc at each
+        let steps = 24;
+        for s in 0..=steps {
+            let t = s as f32 / steps as f32;
+            let gx = x0 + (x1 - x0) * t - 0.5;
+            let gy = y0 + (y1 - y0) * t - 0.5;
+            let px = cx + scale * (cos * gx - sin * gy);
+            let py = cy + scale * (sin * gx + cos * gy);
+            splat(out, px, py, thick);
+        }
+    }
+
+    // additive noise + clamp
+    for v in out.iter_mut() {
+        *v += rng.normal() * 0.05;
+        *v = v.clamp(0.0, 1.0);
+    }
+}
+
+fn splat(img: &mut [f32], px: f32, py: f32, radius: f32) {
+    let r = radius.ceil() as isize + 1;
+    let (ix, iy) = (px.round() as isize, py.round() as isize);
+    for dy in -r..=r {
+        for dx in -r..=r {
+            let (x, y) = (ix + dx, iy + dy);
+            if x < 0 || y < 0 || x >= SIDE as isize || y >= SIDE as isize {
+                continue;
+            }
+            let d2 = (x as f32 - px).powi(2) + (y as f32 - py).powi(2);
+            let v = (-d2 / (radius * radius)).exp();
+            let cell = &mut img[y as usize * SIDE + x as usize];
+            *cell = cell.max(v);
+        }
+    }
+}
+
+/// Generate a balanced dataset of `n` jittered digits.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; n * DIM];
+    let mut y = vec![0i32; n];
+    let mut order: Vec<usize> = (0..n).map(|i| i % CLASSES).collect();
+    rng.shuffle(&mut order);
+    for (i, &digit) in order.iter().enumerate() {
+        render(digit, &mut rng, &mut x[i * DIM..(i + 1) * DIM]);
+        y[i] = digit as i32;
+    }
+    Dataset::new(x, y, DIM, CLASSES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_in_unit_range() {
+        let mut rng = Rng::new(1);
+        let mut buf = vec![0.0f32; DIM];
+        for d in 0..10 {
+            render(d, &mut rng, &mut buf);
+            assert!(buf.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ink: f32 = buf.iter().sum();
+            assert!(ink > 5.0, "digit {d} rendered empty (ink {ink})");
+        }
+    }
+
+    #[test]
+    fn digits_are_distinguishable() {
+        // average image per class should differ clearly between classes
+        let mut rng = Rng::new(2);
+        let mut means = vec![vec![0.0f32; DIM]; 10];
+        let reps = 20;
+        let mut buf = vec![0.0f32; DIM];
+        for d in 0..10 {
+            for _ in 0..reps {
+                render(d, &mut rng, &mut buf);
+                for (m, &v) in means[d].iter_mut().zip(&buf) {
+                    *m += v / reps as f32;
+                }
+            }
+        }
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let dist: f32 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y).powi(2))
+                    .sum();
+                assert!(dist > 1.0, "classes {a} and {b} too similar ({dist})");
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_balanced_and_deterministic() {
+        let ds = generate(200, 7);
+        assert_eq!(ds.len(), 200);
+        for (c, &count) in ds.class_counts().iter().enumerate() {
+            assert_eq!(count, 20, "class {c}");
+        }
+        let ds2 = generate(200, 7);
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.y, ds2.y);
+        let ds3 = generate(200, 8);
+        assert_ne!(ds.x, ds3.x);
+    }
+}

@@ -1,0 +1,136 @@
+//! Synthetic acoustic-frame classification — the TIMIT stand-in.
+//!
+//! TIMIT phone classification feeds stacked MFCC context windows (here
+//! 1845 dims ≈ 15 frames x 123 coefficients) into an MLP over 183 phone
+//! targets (61 phones x 3 states). TIMIT itself is LDC-licensed, so we
+//! synthesize a task with the same geometry: each class is a smooth
+//! spectral prototype (random sinusoidal mixture over the coefficient
+//! axis); samples add AR(1)-smooth noise plus class-independent
+//! distractor structure so that nearest-prototype is imperfect and the
+//! MLP's capacity matters.
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+pub const DIM: usize = 1845;
+pub const CLASSES: usize = 183;
+
+struct Prototypes {
+    /// [CLASSES][DIM]
+    protos: Vec<f32>,
+}
+
+fn build_prototypes(seed: u64) -> Prototypes {
+    let mut rng = Rng::new(seed);
+    let mut protos = vec![0.0f32; CLASSES * DIM];
+    for c in 0..CLASSES {
+        // smooth sinusoidal mixture: low-frequency structure along the dim
+        let k = 3 + rng.below(4);
+        let row = &mut protos[c * DIM..(c + 1) * DIM];
+        for _ in 0..k {
+            let freq = rng.range_f32(0.5, 8.0);
+            let phase = rng.range_f32(0.0, std::f32::consts::TAU);
+            let amp = rng.range_f32(0.4, 1.0);
+            for (d, v) in row.iter_mut().enumerate() {
+                let t = d as f32 / DIM as f32;
+                *v += amp * (std::f32::consts::TAU * freq * t + phase).sin();
+            }
+        }
+    }
+    Prototypes { protos }
+}
+
+/// Generate `n` frames. Prototypes are derived from a fixed global seed so
+/// the *task* is the same across train/test splits; sample noise uses
+/// `seed`.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let protos = build_prototypes(0x71A17_u64);
+    generate_with_protos(&protos, n, seed)
+}
+
+fn generate_with_protos(p: &Prototypes, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; n * DIM];
+    let mut y = vec![0i32; n];
+    let noise_sigma = 1.25f32;
+    for i in 0..n {
+        let c = i % CLASSES;
+        y[i] = c as i32;
+        let row = &mut x[i * DIM..(i + 1) * DIM];
+        row.copy_from_slice(&p.protos[c * DIM..(c + 1) * DIM]);
+        // AR(1)-smooth noise: correlated along the coefficient axis
+        let rho = 0.9f32;
+        let mut e = 0.0f32;
+        for v in row.iter_mut() {
+            e = rho * e + (1.0 - rho * rho).sqrt() * rng.normal();
+            *v += noise_sigma * e;
+        }
+        // class-independent distractor: global loudness + offset
+        let gain = rng.range_f32(0.8, 1.2);
+        let offset = rng.range_f32(-0.2, 0.2);
+        for v in row.iter_mut() {
+            *v = *v * gain + offset;
+        }
+    }
+    // shuffle sample order (labels ride along)
+    let mut ds = Dataset::new(x, y, DIM, CLASSES);
+    ds.shuffle(&mut rng);
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_timit() {
+        let ds = generate(CLASSES * 2, 1);
+        assert_eq!(ds.sample_dim, 1845);
+        assert_eq!(ds.num_classes, 183);
+        assert_eq!(ds.len(), 366);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate(50, 3);
+        let b = generate(50, 3);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn train_and_test_share_prototypes() {
+        // class means across two splits must be closer within-class than
+        // across classes (the task must transfer from train to test)
+        let train = generate(CLASSES * 8, 10);
+        let test = generate(CLASSES * 8, 11);
+        let class_mean = |ds: &Dataset, c: i32| -> Vec<f32> {
+            let mut mean = vec![0.0f32; DIM];
+            let mut n = 0;
+            for i in 0..ds.len() {
+                if ds.y[i] == c {
+                    for (m, &v) in mean.iter_mut().zip(ds.sample(i).0) {
+                        *m += v;
+                    }
+                    n += 1;
+                }
+            }
+            mean.iter_mut().for_each(|m| *m /= n as f32);
+            mean
+        };
+        let d = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let (a0, b0, b1) = (class_mean(&train, 0), class_mean(&test, 0), class_mean(&test, 1));
+        assert!(
+            d(&a0, &b0) < d(&a0, &b1),
+            "same-class cross-split distance should be smaller"
+        );
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let ds = generate(CLASSES * 3, 4);
+        assert!(ds.class_counts().iter().all(|&c| c == 3));
+    }
+}

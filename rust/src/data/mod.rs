@@ -1,0 +1,37 @@
+//! Procedural datasets standing in for the paper's benchmarks (no dataset
+//! downloads in this environment — DESIGN.md "substitutions"):
+//!
+//! * [`digits`] — 28x28 grayscale procedural digits (MNIST stand-in);
+//! * [`frames`] — 1845-dim, 183-class synthetic acoustic-frame task
+//!   (TIMIT stand-in);
+//! * [`shapes`] — 32x32x3 colored-shape classification (VOC/AlexNet
+//!   stand-in).
+//!
+//! All are deterministic in the seed and generated in milliseconds, so the
+//! rust binary is fully self-contained.
+
+pub mod dataset;
+pub mod digits;
+pub mod frames;
+pub mod shapes;
+
+pub use dataset::{Batches, Dataset};
+
+/// Build the train/test datasets for a benchmark by name.
+pub fn for_arch(name: &str, train_n: usize, test_n: usize, seed: u64) -> Option<(Dataset, Dataset)> {
+    match name {
+        "mnist" => Some((
+            digits::generate(train_n, seed),
+            digits::generate(test_n, seed ^ 0x5EED_7E57),
+        )),
+        "timit" | "timit_full" => Some((
+            frames::generate(train_n, seed),
+            frames::generate(test_n, seed ^ 0x5EED_7E57),
+        )),
+        "alexnet32" => Some((
+            shapes::generate(train_n, seed),
+            shapes::generate(test_n, seed ^ 0x5EED_7E57),
+        )),
+        _ => None,
+    }
+}

@@ -1,0 +1,130 @@
+//! Procedural 32x32 RGB shape classification — the VOC/AlexNet stand-in.
+//!
+//! Ten classes of geometric figures (circle, square, triangle, cross,
+//! ring, h-bar, v-bar, diamond, checker, dot-grid) drawn with random
+//! position, scale, hue and background noise. Exercises the conv feature
+//! extractor the way small-object classification does, which is all the
+//! Fig 4b conv-mapping experiment needs.
+
+use super::dataset::Dataset;
+use crate::util::Rng;
+
+pub const SIDE: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const DIM: usize = SIDE * SIDE * CHANNELS;
+pub const CLASSES: usize = 10;
+
+/// Signed distance-ish membership test for each shape class, in unit
+/// coordinates centered on the shape.
+fn inside(class: usize, x: f32, y: f32) -> bool {
+    let r = (x * x + y * y).sqrt();
+    match class {
+        0 => r < 0.8,                                      // circle
+        1 => x.abs() < 0.7 && y.abs() < 0.7,               // square
+        2 => y > -0.6 && y < 0.7 && x.abs() < (0.7 - y) * 0.6, // triangle
+        3 => x.abs() < 0.25 || y.abs() < 0.25,             // cross
+        4 => r < 0.8 && r > 0.45,                          // ring
+        5 => y.abs() < 0.3,                                // horizontal bar
+        6 => x.abs() < 0.3,                                // vertical bar
+        7 => x.abs() + y.abs() < 0.85,                     // diamond
+        8 => ((x * 3.0).floor() as i32 + (y * 3.0).floor() as i32).rem_euclid(2) == 0
+            && x.abs() < 1.0 && y.abs() < 1.0,             // checker
+        9 => ((x * 4.0).fract() - 0.5).abs() < 0.22
+            && ((y * 4.0).fract() - 0.5).abs() < 0.22
+            && x.abs() < 1.0 && y.abs() < 1.0,             // dot grid
+        _ => unreachable!(),
+    }
+}
+
+/// Render one sample into `out` (NHWC layout, values in [0,1]).
+pub fn render(class: usize, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(out.len(), DIM);
+    // background: dim noise with a random tint
+    let bg = [rng.range_f32(0.0, 0.25), rng.range_f32(0.0, 0.25), rng.range_f32(0.0, 0.25)];
+    // foreground color: bright, saturated-ish, away from background
+    let fg = [rng.range_f32(0.6, 1.0), rng.range_f32(0.6, 1.0), rng.range_f32(0.6, 1.0)];
+    let cx = rng.range_f32(10.0, 22.0);
+    let cy = rng.range_f32(10.0, 22.0);
+    let scale = rng.range_f32(6.0, 10.0);
+    let theta = rng.range_f32(-0.4, 0.4);
+    let (sin, cos) = (theta.sin(), theta.cos());
+
+    for py in 0..SIDE {
+        for px in 0..SIDE {
+            let ux = (px as f32 - cx) / scale;
+            let uy = (py as f32 - cy) / scale;
+            let (rx, ry) = (cos * ux + sin * uy, -sin * ux + cos * uy);
+            let is_fg = inside(class, rx, ry);
+            let base = if is_fg { fg } else { bg };
+            for ch in 0..CHANNELS {
+                let noise = rng.normal() * 0.04;
+                out[(py * SIDE + px) * CHANNELS + ch] = (base[ch] + noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Generate a balanced dataset of `n` shape images.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0f32; n * DIM];
+    let mut y = vec![0i32; n];
+    let mut order: Vec<usize> = (0..n).map(|i| i % CLASSES).collect();
+    rng.shuffle(&mut order);
+    for (i, &c) in order.iter().enumerate() {
+        render(c, &mut rng, &mut x[i * DIM..(i + 1) * DIM]);
+        y[i] = c as i32;
+    }
+    Dataset::new(x, y, DIM, CLASSES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_unit_range_with_foreground() {
+        let mut rng = Rng::new(1);
+        let mut buf = vec![0.0f32; DIM];
+        for c in 0..CLASSES {
+            render(c, &mut rng, &mut buf);
+            assert!(buf.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let bright = buf.iter().filter(|&&v| v > 0.5).count();
+            assert!(bright > 30, "class {c}: only {bright} bright px");
+        }
+    }
+
+    #[test]
+    fn balanced_and_deterministic() {
+        let a = generate(100, 5);
+        assert!(a.class_counts().iter().all(|&c| c == 10));
+        let b = generate(100, 5);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn classes_visually_distinct_on_average() {
+        let mut rng = Rng::new(2);
+        let mut buf = vec![0.0f32; DIM];
+        // grayscale silhouette means per class (color is randomized)
+        let mut means = vec![vec![0.0f32; SIDE * SIDE]; CLASSES];
+        let reps = 12;
+        for c in 0..CLASSES {
+            for _ in 0..reps {
+                render(c, &mut rng, &mut buf);
+                for p in 0..SIDE * SIDE {
+                    let gray = (buf[p * 3] + buf[p * 3 + 1] + buf[p * 3 + 2]) / 3.0;
+                    means[c][p] += gray / reps as f32;
+                }
+            }
+        }
+        let mut min_dist = f32::MAX;
+        for a in 0..CLASSES {
+            for b in (a + 1)..CLASSES {
+                let d: f32 = means[a].iter().zip(&means[b]).map(|(x, y)| (x - y).powi(2)).sum();
+                min_dist = min_dist.min(d);
+            }
+        }
+        assert!(min_dist > 0.5, "closest class pair distance {min_dist}");
+    }
+}

@@ -1,0 +1,159 @@
+//! Aging-related permanent faults — the paper's stated future work
+//! ("we plan to address the impact of aging-related faults on DNN
+//! accelerators").
+//!
+//! Model: wear-out faults accrue over deployment time as a Poisson-like
+//! process with an increasing hazard rate (electromigration / NBTI-style
+//! bathtub tail): the expected cumulative faulty-MAC count after `t`
+//! hours is `n² · (1 - exp(-(t/τ)^β))` with shape β ≥ 1. Each aging step
+//! yields a *superset* fault map (permanent faults never heal), which is
+//! exactly the property FAP+T re-provisioning relies on.
+
+use super::inject::FaultSpec;
+use super::model::{FaultMap, StuckAt};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AgingModel {
+    /// Characteristic life τ in hours (63% of MACs failed at t = τ).
+    pub tau_hours: f64,
+    /// Weibull shape β: 1 = constant hazard, >1 = wear-out dominated.
+    pub beta: f64,
+    pub spec: FaultSpec,
+}
+
+impl AgingModel {
+    /// Expected fraction of faulty MACs after `hours` of operation.
+    pub fn expected_fault_rate(&self, hours: f64) -> f64 {
+        1.0 - (-(hours / self.tau_hours).powf(self.beta)).exp()
+    }
+
+    /// Expected count of faulty MACs after `hours`.
+    pub fn expected_faulty_macs(&self, hours: f64) -> usize {
+        let n2 = (self.spec.n * self.spec.n) as f64;
+        (self.expected_fault_rate(hours) * n2).round() as usize
+    }
+}
+
+/// A chip aging over its deployed lifetime: monotonically accumulates
+/// faults according to the model.
+pub struct AgingChip {
+    model: AgingModel,
+    map: FaultMap,
+    hours: f64,
+    rng: Rng,
+}
+
+impl AgingChip {
+    /// A chip fresh out of the fab with `initial` manufacturing defects.
+    pub fn new(model: AgingModel, initial: usize, seed: u64) -> AgingChip {
+        let mut rng = Rng::new(seed);
+        let map = super::inject::inject_uniform(model.spec, initial, &mut rng);
+        AgingChip { model, map, hours: 0.0, rng }
+    }
+
+    pub fn fault_map(&self) -> &FaultMap {
+        &self.map
+    }
+
+    pub fn hours(&self) -> f64 {
+        self.hours
+    }
+
+    /// Advance the clock; new wear-out faults strike MACs uniformly at
+    /// random (healthy or already-faulty — a MAC can accrue several stuck
+    /// bits over life). Returns the number of *newly faulty* MACs.
+    pub fn advance(&mut self, hours: f64) -> usize {
+        let before_rate = self.model.expected_fault_rate(self.hours);
+        self.hours += hours;
+        let after_rate = self.model.expected_fault_rate(self.hours);
+        let n2 = self.model.spec.n * self.model.spec.n;
+        // new faults strike the still-healthy population
+        let healthy = n2 - self.map.faulty_mac_count();
+        let p_new = if before_rate < 1.0 {
+            (after_rate - before_rate) / (1.0 - before_rate)
+        } else {
+            0.0
+        };
+        let strikes = (healthy as f64 * p_new).round() as usize;
+        let mut newly = 0;
+        let n = self.model.spec.n;
+        let mut attempts = 0;
+        while newly < strikes && attempts < strikes * 50 + 100 {
+            attempts += 1;
+            let (r, c) = (self.rng.below(n), self.rng.below(n));
+            if self.map.is_faulty(r, c) {
+                continue; // strike the healthy population
+            }
+            for _ in 0..self.model.spec.faults_per_mac {
+                self.map.add(StuckAt {
+                    row: r as u16,
+                    col: c as u16,
+                    bit: self.rng.below(32) as u8,
+                    value: self.rng.bool(0.5),
+                });
+            }
+            newly += 1;
+        }
+        newly
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(n: usize) -> AgingModel {
+        AgingModel { tau_hours: 50_000.0, beta: 2.0, spec: FaultSpec::new(n) }
+    }
+
+    #[test]
+    fn expected_rate_monotone_and_bounded() {
+        let m = model(16);
+        let mut prev = -1.0;
+        for t in [0.0, 1e3, 1e4, 5e4, 2e5] {
+            let r = m.expected_fault_rate(t);
+            assert!((0.0..=1.0).contains(&r));
+            assert!(r >= prev);
+            prev = r;
+        }
+        assert_eq!(m.expected_fault_rate(0.0), 0.0);
+        assert!((m.expected_fault_rate(50_000.0) - 0.632).abs() < 0.01);
+    }
+
+    #[test]
+    fn faults_never_heal() {
+        let mut chip = AgingChip::new(model(16), 3, 1);
+        let mut count = chip.fault_map().faulty_mac_count();
+        assert_eq!(count, 3);
+        for _ in 0..10 {
+            chip.advance(5_000.0);
+            let now = chip.fault_map().faulty_mac_count();
+            assert!(now >= count, "faults healed: {count} -> {now}");
+            count = now;
+        }
+        assert!(count > 3, "no wear-out after 50k hours");
+    }
+
+    #[test]
+    fn tracks_expected_count_roughly() {
+        let m = model(32);
+        let mut chip = AgingChip::new(m, 0, 2);
+        for _ in 0..20 {
+            chip.advance(2_500.0);
+        }
+        let got = chip.fault_map().faulty_mac_count();
+        let want = m.expected_faulty_macs(50_000.0);
+        let err = (got as f64 - want as f64).abs() / want as f64;
+        assert!(err < 0.15, "got {got}, expected ~{want}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = AgingChip::new(model(16), 2, 9);
+        let mut b = AgingChip::new(model(16), 2, 9);
+        a.advance(10_000.0);
+        b.advance(10_000.0);
+        assert_eq!(a.fault_map().faults(), b.fault_map().faults());
+    }
+}

@@ -1,0 +1,194 @@
+//! Post-fabrication fault localization (the capability the paper assumes:
+//! "standard post-fabrication tests are used on each TPU chip to determine
+//! the location of faulty MACs", §5.1).
+//!
+//! The test controller exploits the FAP bypass latches as design-for-test
+//! hooks: bypassing all rows outside a range `[lo, hi)` confines any
+//! observed corruption to MACs in that range, so each column can be
+//! binary-searched. All columns are tested in parallel per array run, so a
+//! full localization costs `O(patterns * (1 + F log N))` runs for F faulty
+//! MACs.
+//!
+//! Detection is probabilistic per pattern: a stuck-at bit is observable
+//! only when the correct partial sum differs at that bit. With `p` random
+//! int8 patterns (plus structured all-positive / all-negative patterns to
+//! exercise the low bits and the sign-extension region), the per-fault
+//! escape probability is ~2^-p.
+
+use super::model::FaultMap;
+use crate::systolic::SystolicArray;
+use crate::util::Rng;
+
+/// Test-pattern configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TestPatterns {
+    /// Random activation patterns per range probe.
+    pub random_patterns: usize,
+    /// RNG seed for pattern generation.
+    pub seed: u64,
+}
+
+impl Default for TestPatterns {
+    fn default() -> Self {
+        TestPatterns { random_patterns: 8, seed: 0xD1A6 }
+    }
+}
+
+/// Localization result.
+#[derive(Clone, Debug)]
+pub struct DetectReport {
+    /// Detected faulty MACs, (row, col), sorted row-major.
+    pub faulty: Vec<(usize, usize)>,
+    /// Total array runs (test cost).
+    pub array_runs: usize,
+}
+
+/// Localize faulty MACs on the device under test.
+///
+/// The DUT is handed over as a `SystolicArray` whose fault masks are the
+/// chip's physical (unknown to the algorithm) faults; the controller only
+/// uses the public test interface: weight load, bypass-range control, run,
+/// observe outputs.
+pub fn localize_faults(dut: &mut SystolicArray, cfg: TestPatterns) -> DetectReport {
+    let n = dut.n();
+    let mut rng = Rng::new(cfg.seed);
+
+    // Pattern set: structured extremes + random int8 vectors.
+    let mut patterns: Vec<Vec<i32>> = vec![
+        vec![127; n],             // large positive sums: exercises high bits
+        vec![-127; n],            // large negative sums: exercises sign region
+        vec![1; n],               // small sums: exercises low bits
+        (0..n).map(|i| if i % 2 == 0 { 85 } else { -86 }).collect(), // alternating
+    ];
+    for _ in 0..cfg.random_patterns {
+        patterns.push((0..n).map(|_| rng.below(255) as i32 - 127).collect());
+    }
+
+    // All-ones weights everywhere: expected column sum is just the sum of
+    // activations over the active range (identical for every column).
+    dut.load_weights(&vec![1i32; n * n], n, n);
+
+    let mut runs = 0usize;
+    // probe(lo, hi) -> per-column "corrupted?" flags over the row range
+    let mut probe = |dut: &mut SystolicArray, lo: usize, hi: usize| -> Vec<bool> {
+        dut.bypass_outside_rows(lo, hi);
+        let mut bad = vec![false; n];
+        for pat in &patterns {
+            runs += 1;
+            let expected: i32 = pat[lo..hi].iter().sum();
+            let out = dut.matvec(pat, n, n);
+            for c in 0..n {
+                if out[c] != expected {
+                    bad[c] = true;
+                }
+            }
+        }
+        bad
+    };
+
+    // Binary search rows per column, testing all columns in parallel:
+    // work queue of (lo, hi, columns-with-fault-in-range).
+    let mut faulty = Vec::new();
+    let all_cols: Vec<usize> = (0..n).collect();
+    let mut queue: Vec<(usize, usize, Vec<usize>)> = Vec::new();
+
+    let root_bad = probe(dut, 0, n);
+    let root_cols: Vec<usize> = all_cols.iter().copied().filter(|&c| root_bad[c]).collect();
+    if !root_cols.is_empty() {
+        queue.push((0, n, root_cols));
+    }
+    while let Some((lo, hi, cols)) = queue.pop() {
+        if hi - lo == 1 {
+            for c in cols {
+                faulty.push((lo, c));
+            }
+            continue;
+        }
+        let mid = (lo + hi) / 2;
+        for (a, b) in [(lo, mid), (mid, hi)] {
+            let bad = probe(dut, a, b);
+            let sub: Vec<usize> = cols.iter().copied().filter(|&c| bad[c]).collect();
+            if !sub.is_empty() {
+                queue.push((a, b, sub));
+            }
+        }
+    }
+
+    // restore mission mode
+    dut.clear_bypass();
+    faulty.sort_unstable();
+    DetectReport { faulty, array_runs: runs }
+}
+
+/// Convenience: localize directly from a fault map (builds the DUT).
+pub fn localize_from_map(fm: &FaultMap, cfg: TestPatterns) -> DetectReport {
+    let mut dut = SystolicArray::with_faults(fm);
+    localize_faults(&mut dut, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::inject::{inject_uniform, FaultSpec};
+    use crate::faults::model::StuckAt;
+
+    #[test]
+    fn healthy_chip_reports_nothing() {
+        let rep = localize_from_map(&FaultMap::healthy(16), TestPatterns::default());
+        assert!(rep.faulty.is_empty());
+        assert!(rep.array_runs > 0);
+    }
+
+    #[test]
+    fn single_fault_localized_exactly() {
+        let fm = FaultMap::from_faults(
+            16,
+            [StuckAt { row: 9, col: 3, bit: 17, value: true }],
+        );
+        let rep = localize_from_map(&fm, TestPatterns::default());
+        assert_eq!(rep.faulty, vec![(9, 3)]);
+    }
+
+    #[test]
+    fn multiple_faults_same_column() {
+        let fm = FaultMap::from_faults(
+            8,
+            [
+                StuckAt { row: 1, col: 5, bit: 30, value: true },
+                StuckAt { row: 6, col: 5, bit: 2, value: false },
+                StuckAt { row: 3, col: 0, bit: 12, value: true },
+            ],
+        );
+        let rep = localize_from_map(&fm, TestPatterns::default());
+        assert_eq!(rep.faulty, vec![(1, 5), (3, 0), (6, 5)]);
+    }
+
+    #[test]
+    fn random_campaign_full_recall() {
+        // 60 random faults on a 32x32 array; the default pattern set should
+        // find all of them (escape probability ~2^-12 per fault), and must
+        // never report a false positive.
+        let fm = inject_uniform(FaultSpec::new(32), 60, &mut Rng::new(99));
+        let truth: Vec<(usize, usize)> = fm.faulty_macs();
+        let rep = localize_from_map(&fm, TestPatterns::default());
+        for f in &rep.faulty {
+            assert!(truth.contains(f), "false positive at {f:?}");
+        }
+        assert_eq!(rep.faulty, truth, "missed faults");
+    }
+
+    #[test]
+    fn test_cost_scales_logarithmically() {
+        let fm1 = FaultMap::from_faults(
+            64,
+            [StuckAt { row: 10, col: 10, bit: 20, value: true }],
+        );
+        let rep1 = localize_from_map(&fm1, TestPatterns::default());
+        // 1 root + 2 probes per level, log2(64)=6 levels, 12 patterns each
+        assert!(
+            rep1.array_runs <= 13 * 12 + 12,
+            "single-fault cost too high: {}",
+            rep1.array_runs
+        );
+    }
+}

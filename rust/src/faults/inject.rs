@@ -1,0 +1,165 @@
+//! Random permanent-fault injection, mirroring the paper's methodology:
+//! faulty MACs picked uniformly at random over the grid, each carrying
+//! stuck-at faults at uniformly random bit positions and polarities
+//! (paper §4 / §6.1: "faults injected in different locations, picked
+//! uniformly at random", repeated per seed).
+
+use super::model::{FaultMap, StuckAt};
+use crate::util::Rng;
+
+/// Injection campaign parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// Array dimension (paper: 256).
+    pub n: usize,
+    /// Stuck-at faults per faulty MAC (paper's gate-level injection yields
+    /// one observable datapath fault per defect; default 1).
+    pub faults_per_mac: usize,
+}
+
+impl FaultSpec {
+    pub fn new(n: usize) -> Self {
+        FaultSpec { n, faults_per_mac: 1 }
+    }
+}
+
+/// Uniformly inject exactly `faulty_macs` distinct faulty MACs.
+pub fn inject_uniform(spec: FaultSpec, faulty_macs: usize, rng: &mut Rng) -> FaultMap {
+    let total = spec.n * spec.n;
+    assert!(
+        faulty_macs <= total,
+        "cannot make {faulty_macs} of {total} MACs faulty"
+    );
+    let mut fm = FaultMap::healthy(spec.n);
+    for idx in rng.sample_distinct(total, faulty_macs) {
+        let (row, col) = ((idx / spec.n) as u16, (idx % spec.n) as u16);
+        for _ in 0..spec.faults_per_mac {
+            fm.add(StuckAt {
+                row,
+                col,
+                bit: rng.below(32) as u8,
+                value: rng.bool(0.5),
+            });
+        }
+    }
+    fm
+}
+
+/// Inject by fault *rate* (fraction of the grid), rounding to the nearest
+/// whole MAC — the x-axis of the paper's Fig 4.
+pub fn inject_rate(spec: FaultSpec, rate: f64, rng: &mut Rng) -> FaultMap {
+    let total = spec.n * spec.n;
+    let k = (rate * total as f64).round() as usize;
+    inject_uniform(spec, k.min(total), rng)
+}
+
+/// Clustered injection: manufacturing defects cluster spatially; this
+/// drops `clusters` seeds and marks MACs faulty within a radius, a common
+/// defect model (extension beyond the paper's uniform model — used by the
+/// ablation benches).
+pub fn inject_clustered(
+    spec: FaultSpec,
+    faulty_macs: usize,
+    cluster_radius: usize,
+    rng: &mut Rng,
+) -> FaultMap {
+    let total = spec.n * spec.n;
+    assert!(faulty_macs <= total);
+    let mut fm = FaultMap::healthy(spec.n);
+    let mut marked = vec![false; total];
+    let mut count = 0;
+    while count < faulty_macs {
+        // drop a cluster seed, then walk outward marking cells until the
+        // cluster budget (or the global budget) is spent
+        let cr = rng.below(spec.n);
+        let cc = rng.below(spec.n);
+        let budget = (faulty_macs - count).min(1 + rng.below(2 * cluster_radius + 1));
+        let mut placed = 0;
+        let mut attempts = 0;
+        while placed < budget && attempts < 100 {
+            attempts += 1;
+            let dr = rng.below(2 * cluster_radius + 1) as isize - cluster_radius as isize;
+            let dc = rng.below(2 * cluster_radius + 1) as isize - cluster_radius as isize;
+            let r = cr as isize + dr;
+            let c = cc as isize + dc;
+            if r < 0 || c < 0 || r >= spec.n as isize || c >= spec.n as isize {
+                continue;
+            }
+            let idx = r as usize * spec.n + c as usize;
+            if marked[idx] {
+                continue;
+            }
+            marked[idx] = true;
+            for _ in 0..spec.faults_per_mac {
+                fm.add(StuckAt {
+                    row: r as u16,
+                    col: c as u16,
+                    bit: rng.below(32) as u8,
+                    value: rng.bool(0.5),
+                });
+            }
+            placed += 1;
+            count += 1;
+        }
+    }
+    fm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_injects_exact_count() {
+        let mut rng = Rng::new(1);
+        for k in [0usize, 1, 4, 64, 256] {
+            let fm = inject_uniform(FaultSpec::new(16), k, &mut rng);
+            assert_eq!(fm.faulty_mac_count(), k, "k={k}");
+        }
+    }
+
+    #[test]
+    fn rate_rounds_to_macs() {
+        let mut rng = Rng::new(2);
+        let fm = inject_rate(FaultSpec::new(16), 0.5, &mut rng);
+        assert_eq!(fm.faulty_mac_count(), 128);
+        let fm = inject_rate(FaultSpec::new(16), 0.0, &mut rng);
+        assert_eq!(fm.faulty_mac_count(), 0);
+    }
+
+    #[test]
+    fn injection_is_seed_deterministic() {
+        let a = inject_uniform(FaultSpec::new(32), 40, &mut Rng::new(7));
+        let b = inject_uniform(FaultSpec::new(32), 40, &mut Rng::new(7));
+        assert_eq!(a.faults(), b.faults());
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = inject_uniform(FaultSpec::new(32), 40, &mut Rng::new(7));
+        let b = inject_uniform(FaultSpec::new(32), 40, &mut Rng::new(8));
+        assert_ne!(a.faults(), b.faults());
+    }
+
+    #[test]
+    fn faults_per_mac_respected() {
+        let spec = FaultSpec { n: 8, faults_per_mac: 3 };
+        let fm = inject_uniform(spec, 5, &mut Rng::new(3));
+        assert_eq!(fm.faulty_mac_count(), 5);
+        assert_eq!(fm.faults().len(), 15);
+    }
+
+    #[test]
+    fn clustered_injects_exact_count() {
+        let mut rng = Rng::new(4);
+        let fm = inject_clustered(FaultSpec::new(32), 50, 3, &mut rng);
+        assert_eq!(fm.faulty_mac_count(), 50);
+    }
+
+    #[test]
+    fn full_grid_injection() {
+        let fm = inject_uniform(FaultSpec::new(8), 64, &mut Rng::new(5));
+        assert_eq!(fm.faulty_mac_count(), 64);
+        assert_eq!(fm.fault_rate(), 1.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Permanent-fault substrate: stuck-at fault maps over the MAC grid,
+//! random defect injection, and post-fabrication test localization.
+//!
+//! The paper's methodology (§4, §6.1) injects stuck-at faults at gate-level
+//! nodes of the MAC datapath; we model them bit-accurately at the MAC
+//! output register (see DESIGN.md "Fault model"): a fault is a bit of the
+//! PE's int32 accumulator output stuck at 0 or 1.
+
+pub mod aging;
+pub mod detect;
+pub mod inject;
+pub mod model;
+
+pub use detect::{localize_faults, DetectReport, TestPatterns};
+pub use inject::{inject_clustered, inject_uniform, FaultSpec};
+pub use model::{FaultMap, StuckAt};

@@ -1,0 +1,199 @@
+//! Stuck-at fault representation and the per-chip fault map.
+
+/// A single permanent stuck-at fault on one bit of one MAC's accumulator
+/// output register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StuckAt {
+    pub row: u16,
+    pub col: u16,
+    /// Bit position in the int32 accumulator output, 0 (LSB) .. 31 (sign).
+    pub bit: u8,
+    /// `true` = stuck-at-1, `false` = stuck-at-0.
+    pub value: bool,
+}
+
+/// Per-chip fault map over an `n x n` MAC grid.
+///
+/// Stored densely as per-MAC AND/OR masks — exactly the form the datapath
+/// applies every cycle (`out = (acc + w*a) & and | or`) and the form the
+/// AOT faulty-forward artifacts take as inputs:
+/// * `and_mask[i] == -1` and `or_mask[i] == 0`  ⇒  MAC `i` is healthy.
+/// * a stuck-at-0 at bit b clears bit b of `and_mask`;
+/// * a stuck-at-1 at bit b sets bit b of `or_mask`.
+#[derive(Clone, Debug)]
+pub struct FaultMap {
+    n: usize,
+    and_mask: Vec<i32>,
+    or_mask: Vec<i32>,
+    faults: Vec<StuckAt>,
+}
+
+impl FaultMap {
+    /// A defect-free chip with an `n x n` array.
+    pub fn healthy(n: usize) -> Self {
+        assert!(n > 0 && n <= u16::MAX as usize);
+        FaultMap {
+            n,
+            and_mask: vec![-1; n * n],
+            or_mask: vec![0; n * n],
+            faults: Vec::new(),
+        }
+    }
+
+    pub fn from_faults(n: usize, faults: impl IntoIterator<Item = StuckAt>) -> Self {
+        let mut fm = FaultMap::healthy(n);
+        for f in faults {
+            fm.add(f);
+        }
+        fm
+    }
+
+    pub fn add(&mut self, f: StuckAt) {
+        assert!((f.row as usize) < self.n && (f.col as usize) < self.n);
+        assert!(f.bit < 32);
+        let idx = f.row as usize * self.n + f.col as usize;
+        if f.value {
+            self.or_mask[idx] |= 1i32 << f.bit;
+        } else {
+            self.and_mask[idx] &= !(1i32 << f.bit);
+        }
+        self.faults.push(f);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn faults(&self) -> &[StuckAt] {
+        &self.faults
+    }
+
+    #[inline]
+    pub fn and_at(&self, row: usize, col: usize) -> i32 {
+        self.and_mask[row * self.n + col]
+    }
+
+    #[inline]
+    pub fn or_at(&self, row: usize, col: usize) -> i32 {
+        self.or_mask[row * self.n + col]
+    }
+
+    #[inline]
+    pub fn is_faulty(&self, row: usize, col: usize) -> bool {
+        let idx = row * self.n + col;
+        self.and_mask[idx] != -1 || self.or_mask[idx] != 0
+    }
+
+    /// Number of distinct faulty MACs (several faults may share a MAC).
+    pub fn faulty_mac_count(&self) -> usize {
+        (0..self.n * self.n)
+            .filter(|&i| self.and_mask[i] != -1 || self.or_mask[i] != 0)
+            .count()
+    }
+
+    /// Fraction of faulty MACs in the grid.
+    pub fn fault_rate(&self) -> f64 {
+        self.faulty_mac_count() as f64 / (self.n * self.n) as f64
+    }
+
+    /// Coordinates of every faulty MAC, row-major order.
+    pub fn faulty_macs(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for r in 0..self.n {
+            for c in 0..self.n {
+                if self.is_faulty(r, c) {
+                    out.push((r, c));
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply the fault to an accumulator value passing through MAC (r, c).
+    #[inline]
+    pub fn corrupt(&self, row: usize, col: usize, acc: i32) -> i32 {
+        let idx = row * self.n + col;
+        (acc & self.and_mask[idx]) | self.or_mask[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_map_is_identity() {
+        let fm = FaultMap::healthy(4);
+        assert_eq!(fm.faulty_mac_count(), 0);
+        assert_eq!(fm.fault_rate(), 0.0);
+        for v in [0i32, -1, 12345, i32::MIN, i32::MAX] {
+            assert_eq!(fm.corrupt(2, 3, v), v);
+        }
+    }
+
+    #[test]
+    fn stuck_at_1_sets_bit() {
+        let fm = FaultMap::from_faults(
+            8,
+            [StuckAt { row: 1, col: 2, bit: 30, value: true }],
+        );
+        assert!(fm.is_faulty(1, 2));
+        assert_eq!(fm.faulty_mac_count(), 1);
+        assert_eq!(fm.corrupt(1, 2, 0), 1 << 30);
+        assert_eq!(fm.corrupt(1, 2, -1), -1); // bit already set
+        assert_eq!(fm.corrupt(0, 0, 0), 0); // other MACs untouched
+    }
+
+    #[test]
+    fn stuck_at_0_clears_bit() {
+        let fm = FaultMap::from_faults(
+            8,
+            [StuckAt { row: 0, col: 0, bit: 0, value: false }],
+        );
+        assert_eq!(fm.corrupt(0, 0, 1), 0);
+        assert_eq!(fm.corrupt(0, 0, 3), 2);
+        assert_eq!(fm.corrupt(0, 0, 2), 2);
+    }
+
+    #[test]
+    fn multiple_faults_one_mac_compose() {
+        let fm = FaultMap::from_faults(
+            4,
+            [
+                StuckAt { row: 3, col: 3, bit: 0, value: true },
+                StuckAt { row: 3, col: 3, bit: 4, value: false },
+            ],
+        );
+        assert_eq!(fm.faulty_mac_count(), 1);
+        assert_eq!(fm.faults().len(), 2);
+        assert_eq!(fm.corrupt(3, 3, 0b10000), 0b00001);
+    }
+
+    #[test]
+    fn sign_bit_fault() {
+        let fm = FaultMap::from_faults(
+            2,
+            [StuckAt { row: 0, col: 1, bit: 31, value: true }],
+        );
+        assert_eq!(fm.corrupt(0, 1, 0), i32::MIN);
+        assert!(fm.corrupt(0, 1, 100) < 0);
+    }
+
+    #[test]
+    fn faulty_macs_enumeration() {
+        let fm = FaultMap::from_faults(
+            4,
+            [
+                StuckAt { row: 2, col: 1, bit: 5, value: true },
+                StuckAt { row: 0, col: 3, bit: 9, value: false },
+            ],
+        );
+        assert_eq!(fm.faulty_macs(), vec![(0, 3), (2, 1)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_fault_rejected() {
+        FaultMap::from_faults(2, [StuckAt { row: 2, col: 0, bit: 0, value: true }]);
+    }
+}

@@ -1,0 +1,39 @@
+//! # repro — fault-tolerant systolic-array DNN accelerator (FAP / FAP+T)
+//!
+//! Library reproduction of Zhang, Gu, Basu & Garg, *"Analyzing and Mitigating
+//! the Impact of Permanent Faults on a Systolic Array Based Neural Network
+//! Accelerator"* (2018).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * [`systolic`] — bit-accurate, cycle-level weight-stationary systolic
+//!   array with per-MAC stuck-at faults and FAP bypass circuitry, plus the
+//!   45 nm synthesis (area/power/frequency) model.
+//! * [`faults`] — permanent-fault substrate: stuck-at fault maps, random
+//!   defect injection, and post-fabrication test-pattern localization.
+//! * [`mapping`] — the paper's static weight↔MAC mapping functions
+//!   (`r(i,j) = i mod N`, `c(i,j) = j mod N` for FC; channel mapping for
+//!   conv) and the fault-map → weight-mask expansion they induce.
+//! * [`model`] — benchmark DNN architectures (paper Table 1), host-side
+//!   parameter store and int8 quantization calibration.
+//! * [`data`] — procedural datasets standing in for MNIST / TIMIT / VOC
+//!   (see DESIGN.md "substitutions").
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs at request time.
+//! * [`coordinator`] — the paper's contribution: baseline training, fault
+//!   injection campaigns, FAP pruning, the FAP+T per-chip retraining loop
+//!   (Algorithm 1), accuracy evaluation and the figure/table harness.
+//! * [`util`] — deterministic RNG, JSON emission, micro-bench + property
+//!   harnesses (the vendored registry has no criterion/proptest — see
+//!   Cargo.toml).
+
+pub mod coordinator;
+pub mod data;
+pub mod faults;
+pub mod mapping;
+pub mod model;
+pub mod runtime;
+pub mod systolic;
+pub mod util;
+
+pub use anyhow::{Context, Result};

@@ -1,0 +1,224 @@
+//! `repro` — CLI for the fault-tolerant systolic-array accelerator.
+//!
+//! ```text
+//! repro table1                               print Table 1
+//! repro experiment --id fig4a [opts]         regenerate a figure
+//! repro train --model mnist [--steps N]      train + eval a baseline
+//! repro provision --model mnist --faults K   full per-chip flow:
+//!                                            inject -> detect -> FAP+T
+//! repro detect --faults K [--n N]            fault localization demo
+//! repro synthesis                            synthesis + yield model
+//! repro smoke                                artifact round-trip checks
+//! ```
+//!
+//! Common options: `--artifacts DIR` (default artifacts/), `--out DIR`
+//! (default results/), `--seed S`, `--repeats R`, `--array-n N`,
+//! `--profile quick|default|paper`.
+
+use anyhow::{bail, Context, Result};
+use repro::coordinator::experiment::{Harness, HarnessConfig, Profile};
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fapt::{provision_chip, FaptConfig};
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{detect, inject_uniform, FaultSpec};
+use repro::model::arch;
+use repro::runtime::Runtime;
+use repro::systolic::SystolicArray;
+use repro::util::Rng;
+use std::collections::HashMap;
+
+/// Minimal `--key value` argument parser (offline registry has no clap).
+struct Args {
+    cmd: String,
+    opts: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut opts = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected --option, got {k:?}"))?
+                .to_string();
+            let val = it.next().with_context(|| format!("--{key} needs a value"))?;
+            opts.insert(key, val);
+        }
+        Ok(Args { cmd, opts })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn harness_config(args: &Args) -> Result<HarnessConfig> {
+    let profile = match args.get("profile").unwrap_or("default") {
+        "quick" => Profile::Quick,
+        "default" => Profile::Default,
+        "paper" => Profile::Paper,
+        other => bail!("unknown profile {other:?}"),
+    };
+    Ok(HarnessConfig {
+        out_dir: args.get("out").unwrap_or("results").to_string(),
+        seed: args.u64("seed", 42)?,
+        repeats: args.usize("repeats", 3)?,
+        array_n: args.usize("array-n", 256)?,
+        profile,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let artifacts_dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+        }
+        "table1" => {
+            let rt = Runtime::new(&artifacts_dir)?;
+            Harness::new(&rt, harness_config(&args)?).table1()?;
+        }
+        "synthesis" => {
+            let rt = Runtime::new(&artifacts_dir)?;
+            Harness::new(&rt, harness_config(&args)?).synthesis_table()?;
+        }
+        "experiment" => {
+            let id = args.get("id").context("--id required (e.g. fig4a)")?;
+            let rt = Runtime::new(&artifacts_dir)?;
+            let mut h = Harness::new(&rt, harness_config(&args)?);
+            h.run(id)?;
+            eprintln!("(XLA compile time: {:?})", rt.compile_time());
+        }
+        "train" => {
+            let model = args.get("model").context("--model required")?;
+            let a = arch::by_name(model).context("unknown model")?;
+            let rt = Runtime::new(&artifacts_dir)?;
+            let steps = args.usize("steps", 400)?;
+            let (train, test) = data::for_arch(model, args.usize("train-n", 2000)?,
+                args.usize("test-n", 500)?, args.u64("seed", 42)?).unwrap();
+            let cfg = TrainConfig { steps, seed: args.u64("seed", 42)?, ..Default::default() };
+            let (params, losses) = train_baseline(&rt, &a, &train, &cfg)?;
+            let acc = Evaluator::new(&rt).accuracy(&a, &params, &test)?;
+            println!(
+                "{model}: {} steps, final loss {:.4}, test accuracy {:.2}%",
+                steps,
+                losses.last().unwrap_or(&f32::NAN),
+                acc * 100.0
+            );
+        }
+        "provision" => {
+            let model = args.get("model").context("--model required")?;
+            let a = arch::by_name(model).context("unknown model")?;
+            let rt = Runtime::new(&artifacts_dir)?;
+            let n = args.usize("array-n", 64)?;
+            let faults = args.usize("faults", 100)?;
+            let seed = args.u64("seed", 42)?;
+            let (train, test) = data::for_arch(model, args.usize("train-n", 2000)?,
+                args.usize("test-n", 500)?, seed).unwrap();
+            let cfg = TrainConfig { steps: args.usize("steps", 400)?, seed, ..Default::default() };
+            eprintln!("training golden model...");
+            let (baseline, _) = train_baseline(&rt, &a, &train, &cfg)?;
+            let ev = Evaluator::new(&rt);
+            let base_acc = ev.accuracy(&a, &baseline, &test)?;
+            eprintln!("golden accuracy {:.2}%", base_acc * 100.0);
+
+            let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(seed ^ 0xC41F));
+            let fcfg = FaptConfig {
+                max_epochs: args.usize("epochs", 4)?,
+                lr: 0.01,
+                seed,
+                snapshot_epochs: vec![],
+            };
+            let out = provision_chip(&rt, &a, &baseline, &fm, &train, &fcfg)?;
+            let fap_acc = {
+                let (p, _, _) = repro::coordinator::fap::apply_fap(&a, &baseline, &out.fault_map);
+                ev.accuracy(&a, &p, &test)?
+            };
+            let fapt_acc = ev.accuracy(&a, &out.result.params, &test)?;
+            println!("chip provisioning ({model}, {n}x{n} array, {faults} faulty MACs):");
+            println!("  detected faulty MACs : {} / {}", out.detected, fm.faulty_mac_count());
+            println!("  pruned weights       : {} ({:.2}%)", out.fap_report.pruned_weights,
+                out.fap_report.pruned_fraction() * 100.0);
+            println!("  golden accuracy      : {:.2}%", base_acc * 100.0);
+            println!("  FAP accuracy         : {:.2}%", fap_acc * 100.0);
+            println!("  FAP+T accuracy       : {:.2}%  ({:.1}s/epoch)",
+                fapt_acc * 100.0, out.result.secs_per_epoch);
+        }
+        "detect" => {
+            let n = args.usize("n", 64)?;
+            let faults = args.usize("faults", 20)?;
+            let seed = args.u64("seed", 42)?;
+            let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(seed));
+            let mut dut = SystolicArray::with_faults(&fm);
+            let rep = detect::localize_faults(&mut dut, Default::default());
+            let truth = fm.faulty_macs();
+            let hits = rep.faulty.iter().filter(|f| truth.contains(f)).count();
+            println!(
+                "detect: {}x{n} array, {} injected, {} reported, {} correct, {} array runs",
+                n, truth.len(), rep.faulty.len(), hits, rep.array_runs
+            );
+        }
+        "smoke" => {
+            let rt = Runtime::new(&artifacts_dir)?;
+            println!("platform: {}", rt.platform());
+            for name in ["mnist_fwd", "mnist_train", "mnist_faulty_fwd", "faulty_matmul_test"] {
+                let exe = rt.load(name)?;
+                println!(
+                    "  {name}: {} inputs, {} outputs — compiled OK",
+                    exe.spec.inputs.len(),
+                    exe.spec.outputs.len()
+                );
+            }
+            println!("smoke OK ({:?} XLA compile)", rt.compile_time());
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+repro — fault-tolerant systolic-array DNN accelerator (FAP / FAP+T)
+
+USAGE: repro <command> [--option value]...
+
+COMMANDS:
+  table1                      print the benchmark architecture table
+  experiment --id <ID>        regenerate a paper figure/table
+                              (table1|fig2a|fig2b|fig4a|fig4b|fig5a|fig5b|synthesis|all)
+  train --model <M>           train + evaluate a fault-free baseline
+  provision --model <M>       full chip flow: inject -> detect -> FAP -> FAP+T
+  detect                      post-fab fault localization demo
+  synthesis                   45nm synthesis + yield model tables
+  smoke                       compile key artifacts, verify the runtime
+
+OPTIONS:
+  --artifacts DIR   artifacts directory (default: artifacts)
+  --out DIR         results directory (default: results)
+  --seed S          RNG seed (default: 42)
+  --repeats R       fault placements per point (default: 3)
+  --array-n N       physical array dimension (default: 256)
+  --profile P       quick | default | paper
+  --model M         mnist | timit | alexnet32
+";

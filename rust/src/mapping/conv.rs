@@ -1,0 +1,102 @@
+//! Convolutional layer mapping (paper §5): input channels sum along the
+//! array rows, each column computes one output channel, so weight
+//! `w[ky][kx][din][dout]` (HWIO) maps to MAC `(din mod N, dout mod N)` for
+//! *every* kernel tap (ky, kx).
+//!
+//! Consequence (paper §6.2): "one permanent faulty MAC would lead to a
+//! whole channel of the filter to be pruned" — FAP removes the entire
+//! (din, dout) channel pair, which is why AlexNet degrades faster under
+//! FAP than the MLPs (Fig 4b).
+
+use crate::faults::FaultMap;
+
+/// The MAC executing conv weight `w[ky][kx][din][dout]` — independent of
+/// the tap position.
+#[inline]
+pub fn conv_mac_of(din: usize, dout: usize, n: usize) -> (usize, usize) {
+    (din % n, dout % n)
+}
+
+/// FAP prune mask for an HWIO conv weight `[kh][kw][din][dout]`, flattened
+/// row-major in the same order the artifacts use.
+pub fn conv_prune_mask(
+    fm: &FaultMap,
+    kh: usize,
+    kw: usize,
+    din: usize,
+    dout: usize,
+) -> Vec<f32> {
+    let n = fm.n();
+    // channel-pair stencil [din][dout], stamped across all taps
+    let mut stencil = vec![1.0f32; din * dout];
+    for di in 0..din {
+        for do_ in 0..dout {
+            if fm.is_faulty(di % n, do_ % n) {
+                stencil[di * dout + do_] = 0.0;
+            }
+        }
+    }
+    let mut mask = Vec::with_capacity(kh * kw * din * dout);
+    for _ in 0..kh * kw {
+        mask.extend_from_slice(&stencil);
+    }
+    mask
+}
+
+/// Fraction of conv weights pruned by FAP.
+pub fn conv_pruned_fraction(fm: &FaultMap, kh: usize, kw: usize, din: usize, dout: usize) -> f64 {
+    let mask = conv_prune_mask(fm, kh, kw, din, dout);
+    mask.iter().filter(|&&m| m == 0.0).count() as f64 / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultMap, StuckAt};
+
+    #[test]
+    fn tap_independence() {
+        assert_eq!(conv_mac_of(5, 7, 4), (1, 3));
+    }
+
+    #[test]
+    fn one_fault_prunes_whole_channel_pair() {
+        let fm = FaultMap::from_faults(
+            4,
+            [StuckAt { row: 2, col: 1, bit: 3, value: false }],
+        );
+        let (kh, kw, din, dout) = (3, 3, 8, 6);
+        let mask = conv_prune_mask(&fm, kh, kw, din, dout);
+        for t in 0..kh * kw {
+            for di in 0..din {
+                for do_ in 0..dout {
+                    let idx = t * din * dout + di * dout + do_;
+                    let expect = if di % 4 == 2 && do_ % 4 == 1 { 0.0 } else { 1.0 };
+                    assert_eq!(mask[idx], expect, "tap {t} ({di},{do_})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_prunes_more_than_fc_per_fault() {
+        // the Fig 4b pathology: one fault kills kh*kw taps at once
+        let fm = FaultMap::from_faults(
+            4,
+            [StuckAt { row: 0, col: 0, bit: 1, value: true }],
+        );
+        let conv_frac = conv_pruned_fraction(&fm, 3, 3, 4, 4);
+        let fc_frac = super::super::fc::fc_pruned_fraction(&fm, 4, 4);
+        assert!((conv_frac - fc_frac).abs() < 1e-12,
+            "fractions equal, but absolute counts differ by kh*kw");
+        // absolute count: conv loses 9 weights, fc loses 1
+        let conv_lost = conv_prune_mask(&fm, 3, 3, 4, 4).iter().filter(|&&m| m == 0.0).count();
+        assert_eq!(conv_lost, 9);
+    }
+
+    #[test]
+    fn healthy_prunes_nothing() {
+        let mask = conv_prune_mask(&FaultMap::healthy(8), 3, 3, 8, 8);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+}

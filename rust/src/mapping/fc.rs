@@ -1,0 +1,86 @@
+//! Fully-connected layer mapping: `r(k,j) = k mod N`, `c(k,j) = j mod N`.
+//!
+//! (The paper writes `r(i,j) = j % N, c(i,j) = i % N` for weight `w_{i,j}`
+//! where i indexes the *output* neuron; our weights are stored `[din,
+//! dout]` = `w[k][j]`, so the input index k rides the rows — the same
+//! mapping in the storage order the artifacts use.)
+
+use crate::faults::FaultMap;
+
+/// The MAC (row, col) that weight `w[k][j]` executes on.
+#[inline]
+pub fn fc_mac_of(k: usize, j: usize, n: usize) -> (usize, usize) {
+    (k % n, j % n)
+}
+
+/// FAP prune mask for a `din x dout` FC weight matrix: 0.0 where the weight
+/// maps to a faulty MAC, 1.0 elsewhere. Row-major `[din][dout]`.
+pub fn fc_prune_mask(fm: &FaultMap, din: usize, dout: usize) -> Vec<f32> {
+    let n = fm.n();
+    let mut mask = vec![1.0f32; din * dout];
+    // The mask tiles with period n in both axes; compute the n x n stencil
+    // once and stamp it (hot for 1845 x 2000 layers on a 256-grid).
+    for k in 0..din {
+        let r = k % n;
+        let row = &mut mask[k * dout..(k + 1) * dout];
+        for (j, m) in row.iter_mut().enumerate() {
+            if fm.is_faulty(r, j % n) {
+                *m = 0.0;
+            }
+        }
+    }
+    mask
+}
+
+/// Fraction of weights pruned by FAP for a `din x dout` layer.
+pub fn fc_pruned_fraction(fm: &FaultMap, din: usize, dout: usize) -> f64 {
+    let mask = fc_prune_mask(fm, din, dout);
+    mask.iter().filter(|&&m| m == 0.0).count() as f64 / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultMap, StuckAt};
+
+    #[test]
+    fn mac_of_wraps_modulo() {
+        assert_eq!(fc_mac_of(0, 0, 4), (0, 0));
+        assert_eq!(fc_mac_of(5, 7, 4), (1, 3));
+        assert_eq!(fc_mac_of(4, 4, 4), (0, 0));
+    }
+
+    #[test]
+    fn healthy_map_prunes_nothing() {
+        let fm = FaultMap::healthy(4);
+        let mask = fc_prune_mask(&fm, 10, 6);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn single_fault_prunes_every_congruent_weight() {
+        let fm = FaultMap::from_faults(
+            4,
+            [StuckAt { row: 1, col: 2, bit: 9, value: true }],
+        );
+        let (din, dout) = (10, 7);
+        let mask = fc_prune_mask(&fm, din, dout);
+        for k in 0..din {
+            for j in 0..dout {
+                let expect = if k % 4 == 1 && j % 4 == 2 { 0.0 } else { 1.0 };
+                assert_eq!(mask[k * dout + j], expect, "({k},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_fraction_tracks_fault_rate_for_aligned_dims() {
+        // when din, dout are multiples of n, pruned fraction == fault rate
+        let mut fm = FaultMap::healthy(4);
+        for (r, c) in [(0usize, 0usize), (1, 3), (2, 2), (3, 1)] {
+            fm.add(StuckAt { row: r as u16, col: c as u16, bit: 5, value: true });
+        }
+        let frac = fc_pruned_fraction(&fm, 8, 12);
+        assert!((frac - 4.0 / 16.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,232 @@
+//! Per-layer mask synthesis: expand a chip's physical fault map into the
+//! logical per-weight masks the AOT artifacts consume.
+//!
+//! Three mask kinds, all in weight layout:
+//! * **Prune** (f32, 0/1) — FAP: zero every weight on a faulty MAC. Fed to
+//!   the `*_train` artifacts and applied host-side before `*_fwd`.
+//! * **Fault** (i32 AND/OR pairs) — the unmitigated datapath corruption,
+//!   fed to the `*_faulty_fwd` artifacts (Fig 2).
+//! * **Bypass** (i32 0/1) — which MACs the FAP hardware bypasses, also fed
+//!   to `*_faulty_fwd` to model FAP running on the faulty chip itself.
+
+use super::{conv, fc};
+use crate::faults::FaultMap;
+use crate::model::{Arch, Layer};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskKind {
+    /// No mitigation: faults active, nothing bypassed.
+    Unmitigated,
+    /// FAP: every faulty MAC bypassed.
+    FapBypass,
+}
+
+/// All per-layer masks for one (arch, fault map) pair.
+#[derive(Clone, Debug)]
+pub struct LayerMasks {
+    /// f32 0/1 prune mask per weighted layer (FAP semantics).
+    pub prune: Vec<Vec<f32>>,
+    /// i32 AND mask per weighted layer (-1 = healthy).
+    pub and_m: Vec<Vec<i32>>,
+    /// i32 OR mask per weighted layer (0 = healthy).
+    pub or_m: Vec<Vec<i32>>,
+    /// i32 bypass per weighted layer (1 = bypassed).
+    pub bypass: Vec<Vec<i32>>,
+}
+
+impl LayerMasks {
+    pub fn build(arch: &Arch, fm: &FaultMap, kind: MaskKind) -> LayerMasks {
+        let n = fm.n();
+        let mut prune = Vec::new();
+        let mut and_m = Vec::new();
+        let mut or_m = Vec::new();
+        let mut bypass = Vec::new();
+
+        for layer in arch.weighted_layers() {
+            match layer {
+                Layer::Fc(f) => {
+                    // The masks tile with period n in both axes; build one
+                    // dout-wide template row per physical row r and stamp it
+                    // with memcpy per logical row (perf: ~8x over the naive
+                    // per-element walk — EXPERIMENTS.md §Perf).
+                    let mut prune_rows = vec![0.0f32; n * f.dout];
+                    let mut am_rows = vec![-1i32; n * f.dout];
+                    let mut om_rows = vec![0i32; n * f.dout];
+                    let mut bp_rows = vec![0i32; n * f.dout];
+                    for r in 0..n {
+                        for j in 0..f.dout {
+                            let c = j % n;
+                            let idx = r * f.dout + j;
+                            let faulty = fm.is_faulty(r, c);
+                            prune_rows[idx] = if faulty { 0.0 } else { 1.0 };
+                            am_rows[idx] = fm.and_at(r, c);
+                            om_rows[idx] = fm.or_at(r, c);
+                            bp_rows[idx] =
+                                (kind == MaskKind::FapBypass && faulty) as i32;
+                        }
+                    }
+                    let len = f.din * f.dout;
+                    let mut pr = vec![0.0f32; len];
+                    let mut am = vec![0i32; len];
+                    let mut om = vec![0i32; len];
+                    let mut bp = vec![0i32; len];
+                    for k in 0..f.din {
+                        let r = k % n;
+                        let dst = k * f.dout..(k + 1) * f.dout;
+                        let src = r * f.dout..(r + 1) * f.dout;
+                        pr[dst.clone()].copy_from_slice(&prune_rows[src.clone()]);
+                        am[dst.clone()].copy_from_slice(&am_rows[src.clone()]);
+                        om[dst.clone()].copy_from_slice(&om_rows[src.clone()]);
+                        bp[dst].copy_from_slice(&bp_rows[src]);
+                    }
+                    prune.push(pr);
+                    and_m.push(am);
+                    or_m.push(om);
+                    bypass.push(bp);
+                }
+                Layer::Conv(cv) => {
+                    // int masks for conv are consumed by the rust simulator
+                    // only (no conv faulty-fwd artifact; see DESIGN.md):
+                    // build one channel-pair stencil, stamp across taps.
+                    let cs = cv.din * cv.dout;
+                    let mut pr_s = vec![0.0f32; cs];
+                    let mut am_s = vec![-1i32; cs];
+                    let mut om_s = vec![0i32; cs];
+                    let mut bp_s = vec![0i32; cs];
+                    for di in 0..cv.din {
+                        for do_ in 0..cv.dout {
+                            let (r, c) = conv::conv_mac_of(di, do_, n);
+                            let idx = di * cv.dout + do_;
+                            let faulty = fm.is_faulty(r, c);
+                            pr_s[idx] = if faulty { 0.0 } else { 1.0 };
+                            am_s[idx] = fm.and_at(r, c);
+                            om_s[idx] = fm.or_at(r, c);
+                            bp_s[idx] = (kind == MaskKind::FapBypass && faulty) as i32;
+                        }
+                    }
+                    let taps = cv.kh * cv.kw;
+                    let stamp_f = |s: &[f32]| -> Vec<f32> {
+                        let mut v = Vec::with_capacity(taps * cs);
+                        for _ in 0..taps {
+                            v.extend_from_slice(s);
+                        }
+                        v
+                    };
+                    let stamp_i = |s: &[i32]| -> Vec<i32> {
+                        let mut v = Vec::with_capacity(taps * cs);
+                        for _ in 0..taps {
+                            v.extend_from_slice(s);
+                        }
+                        v
+                    };
+                    prune.push(stamp_f(&pr_s));
+                    and_m.push(stamp_i(&am_s));
+                    or_m.push(stamp_i(&om_s));
+                    bypass.push(stamp_i(&bp_s));
+                }
+                Layer::Pool(_) => {}
+            }
+        }
+        LayerMasks { prune, and_m, or_m, bypass }
+    }
+
+    /// Fraction of weights pruned across the whole network.
+    pub fn pruned_fraction(&self) -> f64 {
+        let (mut z, mut t) = (0usize, 0usize);
+        for m in &self.prune {
+            z += m.iter().filter(|&&v| v == 0.0).count();
+            t += m.len();
+        }
+        if t == 0 {
+            0.0
+        } else {
+            z as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{inject_uniform, FaultSpec, StuckAt};
+    use crate::model::arch::{alexnet32, mnist};
+    use crate::util::Rng;
+
+    #[test]
+    fn healthy_masks_are_identity() {
+        let arch = mnist();
+        let fm = FaultMap::healthy(16);
+        let m = LayerMasks::build(&arch, &fm, MaskKind::Unmitigated);
+        assert_eq!(m.prune.len(), 4);
+        assert!(m.prune.iter().all(|l| l.iter().all(|&v| v == 1.0)));
+        assert!(m.and_m.iter().all(|l| l.iter().all(|&v| v == -1)));
+        assert!(m.or_m.iter().all(|l| l.iter().all(|&v| v == 0)));
+        assert!(m.bypass.iter().all(|l| l.iter().all(|&v| v == 0)));
+        assert_eq!(m.pruned_fraction(), 0.0);
+    }
+
+    #[test]
+    fn prune_and_bypass_align() {
+        let arch = mnist();
+        let fm = inject_uniform(FaultSpec::new(16), 20, &mut Rng::new(1));
+        let m = LayerMasks::build(&arch, &fm, MaskKind::FapBypass);
+        for (p, b) in m.prune.iter().zip(&m.bypass) {
+            for (&pv, &bv) in p.iter().zip(b) {
+                assert_eq!(pv == 0.0, bv == 1, "prune and bypass must agree");
+            }
+        }
+    }
+
+    #[test]
+    fn unmitigated_never_bypasses() {
+        let arch = mnist();
+        let fm = inject_uniform(FaultSpec::new(16), 20, &mut Rng::new(2));
+        let m = LayerMasks::build(&arch, &fm, MaskKind::Unmitigated);
+        assert!(m.bypass.iter().all(|l| l.iter().all(|&v| v == 0)));
+        // but the fault masks are live
+        assert!(m.and_m.iter().any(|l| l.iter().any(|&v| v != -1))
+            || m.or_m.iter().any(|l| l.iter().any(|&v| v != 0)));
+    }
+
+    #[test]
+    fn conv_masks_cover_all_taps() {
+        let arch = alexnet32();
+        let fm = FaultMap::from_faults(
+            16,
+            [StuckAt { row: 1, col: 2, bit: 8, value: true }],
+        );
+        let m = LayerMasks::build(&arch, &fm, MaskKind::FapBypass);
+        // conv1: 5x5x3x48: din=3 -> rows {1} hit only if di%16==1, i.e. di=1
+        let conv1 = &m.prune[0];
+        let (kh, kw, din, dout) = (5, 5, 3, 48);
+        let mut pruned = 0;
+        for t in 0..kh * kw {
+            for di in 0..din {
+                for do_ in 0..dout {
+                    if conv1[t * din * dout + di * dout + do_] == 0.0 {
+                        pruned += 1;
+                        assert_eq!(di % 16, 1);
+                        assert_eq!(do_ % 16, 2);
+                    }
+                }
+            }
+        }
+        assert_eq!(pruned, kh * kw * 1 * 3); // dout in {2, 18, 34}
+    }
+
+    #[test]
+    fn pruned_fraction_grows_with_fault_rate() {
+        let arch = mnist();
+        let lo = LayerMasks::build(
+            &arch,
+            &inject_uniform(FaultSpec::new(16), 8, &mut Rng::new(3)),
+            MaskKind::FapBypass,
+        );
+        let hi = LayerMasks::build(
+            &arch,
+            &inject_uniform(FaultSpec::new(16), 128, &mut Rng::new(3)),
+            MaskKind::FapBypass,
+        );
+        assert!(hi.pruned_fraction() > lo.pruned_fraction());
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's static weight↔MAC mapping (§5) and the fault-map →
+//! weight-mask expansion it induces.
+//!
+//! "Each weight in the DNN maps to exactly one MAC unit" — the mapping is
+//! static, so once post-fab testing locates the faulty MACs, the exact set
+//! of weights to prune is known in closed form:
+//!
+//! * FC layer, weight `w[k][j]` (input k → output j): row `r = k mod N`,
+//!   column `c = j mod N`.
+//! * Conv layer, weight `w[ky][kx][din][dout]` (HWIO): row `r = din mod N`,
+//!   column `c = dout mod N` — input channels sum along rows, each column
+//!   computes one output channel. A single faulty MAC therefore prunes an
+//!   entire (din, dout) channel pair across all kernel taps, the Fig 4b
+//!   pathology.
+
+pub mod conv;
+pub mod fc;
+pub mod mask;
+
+pub use conv::{conv_mac_of, conv_prune_mask};
+pub use fc::{fc_mac_of, fc_prune_mask};
+pub use mask::{LayerMasks, MaskKind};

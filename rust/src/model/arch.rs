@@ -1,0 +1,146 @@
+//! The three benchmark architectures (paper Table 1; substitutions per
+//! DESIGN.md). Must stay in lockstep with `python/compile/archs.py` —
+//! `rust/tests/integration_runtime.rs` cross-checks against
+//! `artifacts/archs.txt`.
+
+use super::layer::Layer;
+
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+    /// Per-sample input shape (e.g. [784] or [32, 32, 3]).
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+}
+
+impl Arch {
+    pub fn weighted_layers(&self) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.is_weighted()).collect()
+    }
+
+    pub fn num_weighted(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_weighted()).count()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_len() + l.bias_len()).sum()
+    }
+
+    /// FC-only (MLP) architecture? (the faulty-fwd artifacts exist only
+    /// for these).
+    pub fn is_mlp(&self) -> bool {
+        self.layers.iter().all(|l| matches!(l, Layer::Fc(_)))
+    }
+}
+
+fn mlp(name: &'static str, dims: &[usize], eval_batch: usize, train_batch: usize) -> Arch {
+    let layers = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| Layer::fc(w[0], w[1], i + 2 < dims.len()))
+        .collect();
+    Arch {
+        name,
+        layers,
+        input_shape: vec![dims[0]],
+        num_classes: *dims.last().unwrap(),
+        eval_batch,
+        train_batch,
+    }
+}
+
+/// MNIST MLP: 784-256-256-256-10 (paper's exact architecture).
+pub fn mnist() -> Arch {
+    mlp("mnist", &[784, 256, 256, 256, 10], 256, 128)
+}
+
+/// TIMIT MLP. Paper: 1845-2000-2000-2000-183; default build scales hidden
+/// width to 512 for the 1-core testbed (`full` restores the paper's).
+pub fn timit(full: bool) -> Arch {
+    let h = if full { 2000 } else { 512 };
+    mlp("timit", &[1845, h, h, h, 183], 256, 128)
+}
+
+/// AlexNet's 5-conv + 3-fc topology scaled to 32x32x3 inputs.
+pub fn alexnet32() -> Arch {
+    Arch {
+        name: "alexnet32",
+        layers: vec![
+            Layer::conv(5, 5, 3, 48, 1, true),
+            Layer::pool(2, 2),
+            Layer::conv(5, 5, 48, 96, 1, true),
+            Layer::pool(2, 2),
+            Layer::conv(3, 3, 96, 128, 1, true),
+            Layer::conv(3, 3, 128, 128, 1, true),
+            Layer::conv(3, 3, 128, 96, 1, true),
+            Layer::pool(2, 2),
+            Layer::fc(96 * 4 * 4, 512, true),
+            Layer::fc(512, 256, true),
+            Layer::fc(256, 10, false),
+        ],
+        input_shape: vec![32, 32, 3],
+        num_classes: 10,
+        eval_batch: 64,
+        train_batch: 32,
+    }
+}
+
+/// Look up an architecture by name (timit defaults to the scaled build).
+pub fn by_name(name: &str) -> Option<Arch> {
+    match name {
+        "mnist" => Some(mnist()),
+        "timit" => Some(timit(false)),
+        "timit_full" => Some(timit(true)),
+        "alexnet32" => Some(alexnet32()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_matches_paper_table1() {
+        let a = mnist();
+        assert_eq!(a.num_weighted(), 4);
+        assert_eq!(a.param_count(), 335_114);
+        assert_eq!(a.input_len(), 784);
+        assert!(a.is_mlp());
+    }
+
+    #[test]
+    fn timit_shapes() {
+        let a = timit(false);
+        assert_eq!(a.input_len(), 1845);
+        assert_eq!(a.num_classes, 183);
+        let full = timit(true);
+        assert!(full.param_count() > a.param_count());
+        // paper's full width: 1845*2000 + 2000 + 2*(2000*2000+2000) + 2000*183+183
+        let expect = 1845 * 2000 + 2000 + 2 * (2000 * 2000 + 2000) + 2000 * 183 + 183;
+        assert_eq!(full.param_count(), expect);
+    }
+
+    #[test]
+    fn alexnet32_structure() {
+        let a = alexnet32();
+        assert_eq!(a.num_weighted(), 8); // 5 conv + 3 fc
+        assert!(!a.is_mlp());
+        assert_eq!(a.param_count(), 1_408_778); // matches python test
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["mnist", "timit", "alexnet32"] {
+            assert_eq!(by_name(n).unwrap().name, n);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,97 @@
+//! Layer descriptors. Weight layouts match the artifacts: FC `[din][dout]`
+//! row-major; conv HWIO `[kh][kw][din][dout]`.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FcSpec {
+    pub din: usize,
+    pub dout: usize,
+    pub relu: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub kh: usize,
+    pub kw: usize,
+    pub din: usize,
+    pub dout: usize,
+    pub stride: usize,
+    /// true = SAME, false = VALID (matches the python `padding` strings).
+    pub same_pad: bool,
+    pub relu: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolSpec {
+    pub k: usize,
+    pub s: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    Fc(FcSpec),
+    Conv(ConvSpec),
+    Pool(PoolSpec),
+}
+
+impl Layer {
+    pub fn fc(din: usize, dout: usize, relu: bool) -> Layer {
+        Layer::Fc(FcSpec { din, dout, relu })
+    }
+
+    pub fn conv(kh: usize, kw: usize, din: usize, dout: usize, stride: usize, relu: bool) -> Layer {
+        Layer::Conv(ConvSpec { kh, kw, din, dout, stride, same_pad: true, relu })
+    }
+
+    pub fn pool(k: usize, s: usize) -> Layer {
+        Layer::Pool(PoolSpec { k, s })
+    }
+
+    /// Does this layer carry weights (i.e. occupy MACs)?
+    pub fn is_weighted(&self) -> bool {
+        !matches!(self, Layer::Pool(_))
+    }
+
+    /// Weight element count (0 for pools).
+    pub fn weight_len(&self) -> usize {
+        match self {
+            Layer::Fc(f) => f.din * f.dout,
+            Layer::Conv(c) => c.kh * c.kw * c.din * c.dout,
+            Layer::Pool(_) => 0,
+        }
+    }
+
+    /// Bias element count (0 for pools).
+    pub fn bias_len(&self) -> usize {
+        match self {
+            Layer::Fc(f) => f.dout,
+            Layer::Conv(c) => c.dout,
+            Layer::Pool(_) => 0,
+        }
+    }
+
+    /// Weight tensor dims in artifact order.
+    pub fn weight_dims(&self) -> Vec<usize> {
+        match self {
+            Layer::Fc(f) => vec![f.din, f.dout],
+            Layer::Conv(c) => vec![c.kh, c.kw, c.din, c.dout],
+            Layer::Pool(_) => vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        let fc = Layer::fc(784, 256, true);
+        assert_eq!(fc.weight_len(), 784 * 256);
+        assert_eq!(fc.bias_len(), 256);
+        let cv = Layer::conv(5, 5, 3, 48, 1, true);
+        assert_eq!(cv.weight_len(), 5 * 5 * 3 * 48);
+        assert_eq!(cv.bias_len(), 48);
+        assert_eq!(Layer::pool(2, 2).weight_len(), 0);
+        assert!(!Layer::pool(2, 2).is_weighted());
+    }
+}

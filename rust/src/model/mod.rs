@@ -1,0 +1,12 @@
+//! Benchmark DNN architectures (paper Table 1), host-side parameters and
+//! quantization calibration — the rust mirror of `python/compile/archs.py`
+//! (cross-checked against `artifacts/archs.txt` by integration tests).
+
+pub mod arch;
+pub mod layer;
+pub mod params;
+pub mod quant;
+
+pub use arch::{alexnet32, mnist, timit, Arch};
+pub use layer::{ConvSpec, FcSpec, Layer, PoolSpec};
+pub use params::Params;

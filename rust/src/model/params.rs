@@ -1,0 +1,151 @@
+//! Host-side parameter store: one `(weights, biases)` pair per weighted
+//! layer, flat `f32` buffers in artifact layout (FC row-major `[din][dout]`,
+//! conv HWIO). The runtime moves these in and out of PJRT literals.
+
+use super::arch::Arch;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct Params {
+    /// (weight, bias) per weighted layer, artifact order.
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl Params {
+    /// All-zero parameters shaped for `arch` (used for velocity state).
+    pub fn zeros_like(arch: &Arch) -> Params {
+        let layers = arch
+            .weighted_layers()
+            .iter()
+            .map(|l| (vec![0.0; l.weight_len()], vec![0.0; l.bias_len()]))
+            .collect();
+        Params { layers }
+    }
+
+    /// Build from a flat list of buffers `w0, b0, w1, b1, ...` (the order
+    /// artifacts return parameters in).
+    pub fn from_flat(arch: &Arch, flat: Vec<Vec<f32>>) -> Result<Params> {
+        let weighted = arch.weighted_layers();
+        if flat.len() != weighted.len() * 2 {
+            bail!(
+                "expected {} buffers for {}, got {}",
+                weighted.len() * 2,
+                arch.name,
+                flat.len()
+            );
+        }
+        let mut layers = Vec::with_capacity(weighted.len());
+        let mut it = flat.into_iter();
+        for l in &weighted {
+            let w = it.next().unwrap();
+            let b = it.next().unwrap();
+            if w.len() != l.weight_len() || b.len() != l.bias_len() {
+                bail!(
+                    "layer buffer mismatch: got w={} b={}, want w={} b={}",
+                    w.len(),
+                    b.len(),
+                    l.weight_len(),
+                    l.bias_len()
+                );
+            }
+            layers.push((w, b));
+        }
+        Ok(Params { layers })
+    }
+
+    /// Flatten back to artifact argument order.
+    pub fn to_flat(&self) -> Vec<&[f32]> {
+        let mut out = Vec::with_capacity(self.layers.len() * 2);
+        for (w, b) in &self.layers {
+            out.push(w.as_slice());
+            out.push(b.as_slice());
+        }
+        out
+    }
+
+    /// Apply FAP prune masks in place: `w *= mask` per layer.
+    pub fn apply_masks(&mut self, masks: &[Vec<f32>]) {
+        assert_eq!(masks.len(), self.layers.len());
+        for ((w, _), m) in self.layers.iter_mut().zip(masks) {
+            assert_eq!(w.len(), m.len());
+            for (wi, &mi) in w.iter_mut().zip(m) {
+                *wi *= mi;
+            }
+        }
+    }
+
+    /// Total parameter count.
+    pub fn count(&self) -> usize {
+        self.layers.iter().map(|(w, b)| w.len() + b.len()).sum()
+    }
+
+    /// Fraction of exactly-zero weights (pruning diagnostics).
+    pub fn zero_weight_fraction(&self) -> f64 {
+        let (mut z, mut t) = (0usize, 0usize);
+        for (w, _) in &self.layers {
+            z += w.iter().filter(|&&v| v == 0.0).count();
+            t += w.len();
+        }
+        if t == 0 {
+            0.0
+        } else {
+            z as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::mnist;
+
+    #[test]
+    fn zeros_shape() {
+        let p = Params::zeros_like(&mnist());
+        assert_eq!(p.count(), 335_114);
+        assert_eq!(p.layers.len(), 4);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let arch = mnist();
+        let z = Params::zeros_like(&arch);
+        let flat: Vec<Vec<f32>> = z.to_flat().iter().map(|s| s.to_vec()).collect();
+        let p = Params::from_flat(&arch, flat).unwrap();
+        assert_eq!(p.count(), z.count());
+    }
+
+    #[test]
+    fn from_flat_rejects_bad_shapes() {
+        let arch = mnist();
+        assert!(Params::from_flat(&arch, vec![vec![0.0; 3]]).is_err());
+        let mut flat: Vec<Vec<f32>> =
+            Params::zeros_like(&arch).to_flat().iter().map(|s| s.to_vec()).collect();
+        flat[0].pop();
+        assert!(Params::from_flat(&arch, flat).is_err());
+    }
+
+    #[test]
+    fn masking_zeroes_weights() {
+        let arch = mnist();
+        let mut p = Params::zeros_like(&arch);
+        for (w, _) in &mut p.layers {
+            w.iter_mut().for_each(|v| *v = 1.0);
+        }
+        let masks: Vec<Vec<f32>> = p
+            .layers
+            .iter()
+            .map(|(w, _)| {
+                let mut m = vec![1.0f32; w.len()];
+                m[0] = 0.0;
+                m
+            })
+            .collect();
+        p.apply_masks(&masks);
+        for (w, _) in &p.layers {
+            assert_eq!(w[0], 0.0);
+            assert_eq!(w[1], 1.0);
+        }
+        assert!(p.zero_weight_fraction() > 0.0);
+    }
+}

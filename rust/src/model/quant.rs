@@ -1,0 +1,162 @@
+//! Quantization calibration and a host-side float forward pass for MLPs.
+//!
+//! The faulty-fwd artifacts take per-layer activation/weight scales as
+//! runtime inputs; this module computes them the standard post-training
+//! way — max-abs over a calibration batch — using a host float forward
+//! pass (which doubles as a reference implementation of the MLP, checked
+//! against the `*_fwd` artifacts by integration tests).
+
+use super::arch::Arch;
+use super::layer::Layer;
+use super::params::Params;
+use crate::systolic::fixed;
+
+/// Host float forward for MLP archs. `x` row-major `[batch][din]`.
+/// Returns logits `[batch][classes]`.
+pub fn mlp_forward(arch: &Arch, params: &Params, x: &[f32], batch: usize) -> Vec<f32> {
+    assert!(arch.is_mlp(), "{} is not an MLP", arch.name);
+    assert_eq!(x.len(), batch * arch.input_len());
+    let mut act = x.to_vec();
+    let mut dim = arch.input_len();
+    for (li, layer) in arch.weighted_layers().iter().enumerate() {
+        let Layer::Fc(fc) = layer else { unreachable!() };
+        let (w, b) = &params.layers[li];
+        let mut next = vec![0.0f32; batch * fc.dout];
+        for bi in 0..batch {
+            let row = &act[bi * dim..(bi + 1) * dim];
+            let out = &mut next[bi * fc.dout..(bi + 1) * fc.dout];
+            out.copy_from_slice(b);
+            for (k, &a) in row.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // post-ReLU activations are sparse
+                }
+                let wrow = &w[k * fc.dout..(k + 1) * fc.dout];
+                for (o, &wv) in out.iter_mut().zip(wrow) {
+                    *o += a * wv;
+                }
+            }
+            if fc.relu {
+                for o in out.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+        act = next;
+        dim = fc.dout;
+    }
+    act
+}
+
+/// Per-layer quantization scales from a calibration batch.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Activation scale entering each weighted layer.
+    pub a_scales: Vec<f32>,
+    /// Weight scale of each weighted layer.
+    pub w_scales: Vec<f32>,
+}
+
+/// Calibrate an MLP: run the float forward on `x` and record max-abs
+/// activation scales per layer plus per-layer weight scales.
+pub fn calibrate_mlp(arch: &Arch, params: &Params, x: &[f32], batch: usize) -> Calibration {
+    assert!(arch.is_mlp());
+    let mut a_scales = Vec::new();
+    let mut act = x.to_vec();
+    let mut dim = arch.input_len();
+    for (li, layer) in arch.weighted_layers().iter().enumerate() {
+        let Layer::Fc(fc) = layer else { unreachable!() };
+        a_scales.push(fixed::scale_for(&act));
+        let (w, b) = &params.layers[li];
+        let mut next = vec![0.0f32; batch * fc.dout];
+        for bi in 0..batch {
+            let row = &act[bi * dim..(bi + 1) * dim];
+            let out = &mut next[bi * fc.dout..(bi + 1) * fc.dout];
+            out.copy_from_slice(b);
+            for (k, &a) in row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let wrow = &w[k * fc.dout..(k + 1) * fc.dout];
+                for (o, &wv) in out.iter_mut().zip(wrow) {
+                    *o += a * wv;
+                }
+            }
+            if fc.relu {
+                for o in out.iter_mut() {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+        act = next;
+        dim = fc.dout;
+    }
+    let w_scales = params
+        .layers
+        .iter()
+        .map(|(w, _)| fixed::scale_for(w))
+        .collect();
+    Calibration { a_scales, w_scales }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::mnist;
+    use crate::util::Rng;
+
+    fn rand_params(arch: &Arch, rng: &mut Rng) -> Params {
+        let mut p = Params::zeros_like(arch);
+        for (w, b) in &mut p.layers {
+            w.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
+            b.iter_mut().for_each(|v| *v = rng.normal() * 0.01);
+        }
+        p
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let arch = mnist();
+        let mut rng = Rng::new(1);
+        let p = rand_params(&arch, &mut rng);
+        let x: Vec<f32> = (0..3 * 784).map(|_| rng.normal()).collect();
+        let y = mlp_forward(&arch, &p, &x, 3);
+        assert_eq!(y.len(), 30);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn relu_applied_to_hidden_not_logits() {
+        let arch = mnist();
+        let mut rng = Rng::new(2);
+        let p = rand_params(&arch, &mut rng);
+        let x: Vec<f32> = (0..784).map(|_| rng.normal()).collect();
+        let y = mlp_forward(&arch, &p, &x, 1);
+        assert!(y.iter().any(|&v| v < 0.0), "logits should go negative");
+    }
+
+    #[test]
+    fn calibration_scales_positive_and_per_layer() {
+        let arch = mnist();
+        let mut rng = Rng::new(3);
+        let p = rand_params(&arch, &mut rng);
+        let x: Vec<f32> = (0..4 * 784).map(|_| rng.normal()).collect();
+        let cal = calibrate_mlp(&arch, &p, &x, 4);
+        assert_eq!(cal.a_scales.len(), 4);
+        assert_eq!(cal.w_scales.len(), 4);
+        assert!(cal.a_scales.iter().all(|&s| s > 0.0));
+        assert!(cal.w_scales.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn zero_input_uses_guard_scale() {
+        let arch = mnist();
+        let p = Params::zeros_like(&arch);
+        let x = vec![0.0f32; 784];
+        let cal = calibrate_mlp(&arch, &p, &x, 1);
+        assert_eq!(cal.a_scales[0], 1.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! `artifacts/manifest.txt` parser.
+//!
+//! The manifest is a deliberately trivial line format (the offline registry
+//! has no serde); it is emitted by `python/compile/aot.py`:
+//!
+//! ```text
+//! artifact mnist_fwd
+//! file mnist_fwd.hlo.txt
+//! meta arch mnist
+//! in w0 f32 784x256
+//! in x f32 256x784
+//! out logits f32 256x10
+//! end
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "s32" => DType::S32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    /// Empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.dims.is_empty()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Path relative to the artifacts directory.
+    pub file: String,
+    pub meta: HashMap<String, String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+fn parse_tensor(rest: &str) -> Result<TensorSpec> {
+    let mut parts = rest.split_whitespace();
+    let name = parts.next().context("tensor name")?.to_string();
+    let dtype = DType::parse(parts.next().context("tensor dtype")?)?;
+    let shape = parts.next().context("tensor shape")?;
+    let dims = if shape == "scalar" {
+        vec![]
+    } else {
+        shape
+            .split('x')
+            .map(|d| d.parse::<usize>().context("dim"))
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok(TensorSpec { name, dtype, dims })
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut artifacts = HashMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (kw, rest) = line.split_once(' ').unwrap_or((line, ""));
+            match kw {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("line {}: nested artifact block", lineno + 1);
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: rest.to_string(),
+                        file: String::new(),
+                        meta: HashMap::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "file" => {
+                    cur.as_mut().context("file outside artifact")?.file = rest.to_string();
+                }
+                "meta" => {
+                    let (k, v) = rest.split_once(' ').context("meta key value")?;
+                    cur.as_mut()
+                        .context("meta outside artifact")?
+                        .meta
+                        .insert(k.to_string(), v.to_string());
+                }
+                "in" => cur
+                    .as_mut()
+                    .context("in outside artifact")?
+                    .inputs
+                    .push(parse_tensor(rest)?),
+                "out" => cur
+                    .as_mut()
+                    .context("out outside artifact")?
+                    .outputs
+                    .push(parse_tensor(rest)?),
+                "end" => {
+                    let a = cur.take().context("end outside artifact")?;
+                    if a.file.is_empty() {
+                        bail!("artifact {} has no file", a.name);
+                    }
+                    artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("line {}: unknown keyword {other:?}", lineno + 1),
+            }
+        }
+        if cur.is_some() {
+            bail!("unterminated artifact block");
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact t
+file t.hlo.txt
+meta kind test
+meta batch 8
+in a f32 2x3
+in s s32 scalar
+out y f32 2x3
+end
+artifact u
+file u.hlo.txt
+out z u32 4
+end
+";
+
+    #[test]
+    fn parses_blocks() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let t = m.get("t").unwrap();
+        assert_eq!(t.file, "t.hlo.txt");
+        assert_eq!(t.meta["kind"], "test");
+        assert_eq!(t.meta_usize("batch"), Some(8));
+        assert_eq!(t.inputs.len(), 2);
+        assert_eq!(t.inputs[0].dims, vec![2, 3]);
+        assert_eq!(t.inputs[0].dtype, DType::F32);
+        assert!(t.inputs[1].is_scalar());
+        assert_eq!(t.outputs[0].element_count(), 6);
+        let u = m.get("u").unwrap();
+        assert_eq!(u.outputs[0].dtype, DType::U32);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line", PathBuf::new()).is_err());
+        assert!(Manifest::parse("artifact a\nfile f\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("artifact a\nend\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("in x f32 2", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_helpful() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"));
+    }
+}

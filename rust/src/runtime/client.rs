@@ -1,0 +1,76 @@
+//! The [`Runtime`]: PJRT CPU client + per-artifact compile cache.
+//!
+//! HLO *text* is the interchange format (`HloModuleProto::from_text_file`):
+//! jax >= 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids.
+
+use super::artifacts::Manifest;
+use super::executable::Executable;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative XLA compile time (reported by the CLI for transparency).
+    compile_time: RefCell<std::time::Duration>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (default: `artifacts/`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_time: RefCell::new(std::time::Duration::ZERO),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn compile_time(&self) -> std::time::Duration {
+        *self.compile_time.borrow()
+    }
+
+    /// Load (or fetch from cache) a compiled artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling artifact {name}"))?;
+        *self.compile_time.borrow_mut() += t0.elapsed();
+        let exe = Rc::new(Executable::new(spec, exe));
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Does the manifest contain this artifact?
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+}

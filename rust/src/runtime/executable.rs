@@ -1,0 +1,138 @@
+//! Typed execution wrapper around `PjRtLoadedExecutable` with manifest
+//! shape validation and literal conversion helpers.
+
+use super::artifacts::{ArtifactSpec, DType};
+use anyhow::{bail, Context, Result};
+
+/// Build an f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        bail!("lit_f32: {} values for dims {dims:?}", data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        bail!("lit_i32: {} values for dims {dims:?}", data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn new(spec: ArtifactSpec, exe: xla::PjRtLoadedExecutable) -> Self {
+        Executable { spec, exe }
+    }
+
+    /// Execute with positional literal inputs; returns the flattened tuple
+    /// outputs (all artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{}: fetching result", self.spec.name))?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Extract output `idx` as f32 values (validated against the spec).
+    pub fn f32_out(&self, outs: &[xla::Literal], idx: usize) -> Result<Vec<f32>> {
+        let spec = &self.spec.outputs[idx];
+        if spec.dtype != DType::F32 {
+            bail!("{}: output {idx} ({}) is not f32", self.spec.name, spec.name);
+        }
+        let v = outs[idx].to_vec::<f32>()?;
+        if v.len() != spec.element_count().max(1) {
+            bail!(
+                "{}: output {} has {} elements, manifest says {}",
+                self.spec.name,
+                spec.name,
+                v.len(),
+                spec.element_count()
+            );
+        }
+        Ok(v)
+    }
+
+    /// Extract output `idx` as i32 values.
+    pub fn i32_out(&self, outs: &[xla::Literal], idx: usize) -> Result<Vec<i32>> {
+        let spec = &self.spec.outputs[idx];
+        if spec.dtype != DType::S32 {
+            bail!("{}: output {idx} ({}) is not s32", self.spec.name, spec.name);
+        }
+        Ok(outs[idx].to_vec::<i32>()?)
+    }
+
+    /// Index of a named input (panics on unknown name — programmer error).
+    pub fn input_index(&self, name: &str) -> usize {
+        self.spec
+            .inputs
+            .iter()
+            .position(|t| t.name == name)
+            .unwrap_or_else(|| panic!("{}: no input named {name}", self.spec.name))
+    }
+
+    /// Index of a named output.
+    pub fn output_index(&self, name: &str) -> usize {
+        self.spec
+            .outputs
+            .iter()
+            .position(|t| t.name == name)
+            .unwrap_or_else(|| panic!("{}: no output named {name}", self.spec.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_validate_length() {
+        assert!(lit_f32(&[1.0, 2.0], &[2, 2]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let l = lit_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(scalar_f32(2.5).get_first_element::<f32>().unwrap(), 2.5);
+        assert_eq!(scalar_i32(-3).get_first_element::<i32>().unwrap(), -3);
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them
+//! from the coordinator hot path. Python never runs here — the artifacts
+//! were lowered once by `python/compile/aot.py` (`make artifacts`).
+//!
+//! * [`artifacts`] — the line-based `manifest.txt` parser and artifact
+//!   specs (input/output names, dtypes, shapes).
+//! * [`client`] — the [`Runtime`]: a PJRT CPU client plus a compile cache,
+//!   one `PjRtLoadedExecutable` per artifact.
+//! * [`executable`] — typed execution wrapper with shape validation and
+//!   literal conversion helpers.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+
+pub use artifacts::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use client::Runtime;
+pub use executable::{lit_f32, lit_i32, scalar_f32, scalar_i32, Executable};

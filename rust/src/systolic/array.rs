@@ -1,0 +1,330 @@
+//! The N x N weight-stationary systolic array.
+//!
+//! Two execution modes over the same PE grid:
+//!
+//! * **functional** (`matvec` / `matmul`): walks each column's MAC chain in
+//!   order — the value-exact result of the pipeline without modelling time.
+//!   This is the experiment hot path.
+//! * **cycle-accurate** (`matmul_cycle_accurate`): explicit skewed
+//!   wavefront, one register transfer per cycle, returning the cycle count
+//!   (validates the paper's `2N + B` claim; see [`super::timing`]).
+//!
+//! Partial-height passes: when a weight tile occupies K < N rows, the
+//! controller clock-gates the unused rows and results exit with the last
+//! active row's wavefront, so faults in inactive rows do not corrupt the
+//! sum. This matches the AOT faulty-forward artifacts, which apply fault
+//! masks only to active logical rows (DESIGN.md "Fault model").
+
+use super::pe::Pe;
+use crate::faults::FaultMap;
+
+#[derive(Clone, Debug)]
+pub struct SystolicArray {
+    n: usize,
+    /// Row-major PE grid: `pes[row * n + col]`.
+    pes: Vec<Pe>,
+}
+
+impl SystolicArray {
+    /// A defect-free array.
+    pub fn healthy(n: usize) -> Self {
+        assert!(n > 0);
+        SystolicArray { n, pes: vec![Pe::default(); n * n] }
+    }
+
+    /// An array afflicted by `fault_map` (dimension must match).
+    pub fn with_faults(fault_map: &FaultMap) -> Self {
+        let n = fault_map.n();
+        let mut arr = Self::healthy(n);
+        for r in 0..n {
+            for c in 0..n {
+                let pe = &mut arr.pes[r * n + c];
+                pe.and_mask = fault_map.and_at(r, c);
+                pe.or_mask = fault_map.or_at(r, c);
+            }
+        }
+        arr
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn pe(&self, row: usize, col: usize) -> &Pe {
+        &self.pes[row * self.n + col]
+    }
+
+    #[inline]
+    pub fn pe_mut(&mut self, row: usize, col: usize) -> &mut Pe {
+        &mut self.pes[row * self.n + col]
+    }
+
+    /// Load a K x C weight tile (K, C <= N) anchored at the top-left; the
+    /// rest of the grid keeps its previous weights but is inactive for
+    /// partial passes.
+    pub fn load_weights(&mut self, tile: &[i32], rows: usize, cols: usize) {
+        assert!(rows <= self.n && cols <= self.n);
+        assert_eq!(tile.len(), rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                self.pes[r * self.n + c].weight = tile[r * cols + c];
+            }
+        }
+    }
+
+    /// Set the FAP bypass latch on every faulty MAC (paper §5.1).
+    pub fn bypass_faulty(&mut self) {
+        for pe in &mut self.pes {
+            if pe.is_faulty() {
+                pe.bypass = true;
+            }
+        }
+    }
+
+    /// Clear all bypass latches (test-mode control).
+    pub fn clear_bypass(&mut self) {
+        for pe in &mut self.pes {
+            pe.bypass = false;
+        }
+    }
+
+    /// Set bypass on an explicit row range `[lo, hi)` across all columns,
+    /// clearing it elsewhere — the DFT control used by fault localization.
+    pub fn bypass_outside_rows(&mut self, lo: usize, hi: usize) {
+        for r in 0..self.n {
+            let byp = !(lo..hi).contains(&r);
+            for c in 0..self.n {
+                self.pes[r * self.n + c].bypass = byp;
+            }
+        }
+    }
+
+    /// Functional single-vector pass: `activations[r]` enters row r,
+    /// outputs one value per column `0..cols`, using rows `0..active_rows`.
+    pub fn matvec(&self, activations: &[i32], active_rows: usize, cols: usize) -> Vec<i32> {
+        assert!(active_rows <= self.n && cols <= self.n);
+        assert!(activations.len() >= active_rows);
+        let mut out = vec![0i32; cols];
+        for c in 0..cols {
+            let mut acc = 0i32;
+            for r in 0..active_rows {
+                acc = self.pes[r * self.n + c].step(acc, activations[r]);
+            }
+            out[c] = acc;
+        }
+        out
+    }
+
+    /// Functional batch pass: `a` is row-major `[batch][active_rows]`.
+    /// Returns row-major `[batch][cols]`.
+    pub fn matmul(&self, a: &[i32], batch: usize, active_rows: usize, cols: usize) -> Vec<i32> {
+        assert_eq!(a.len(), batch * active_rows);
+        let mut out = vec![0i32; batch * cols];
+        // column-outer loop keeps each column's PE chain hot in cache
+        for c in 0..cols {
+            let col_pes: Vec<Pe> = (0..active_rows)
+                .map(|r| self.pes[r * self.n + c])
+                .collect();
+            for b in 0..batch {
+                let row = &a[b * active_rows..(b + 1) * active_rows];
+                let mut acc = 0i32;
+                for (pe, &act) in col_pes.iter().zip(row) {
+                    acc = pe.step(acc, act);
+                }
+                out[b * cols + c] = acc;
+            }
+        }
+        out
+    }
+
+    /// Cycle-accurate skewed-wavefront execution.
+    ///
+    /// Models the real dataflow: activation `a[b][r]` enters row r at cycle
+    /// `b + r`, moves one column right per cycle; partial sums move one row
+    /// down per cycle; output `y[b][c]` exits the bottom of column c at
+    /// cycle `b + (active_rows - 1) + c`. Returns `(outputs, cycles)` where
+    /// `cycles` is the drain cycle of the last output + 1.
+    pub fn matmul_cycle_accurate(
+        &self,
+        a: &[i32],
+        batch: usize,
+        active_rows: usize,
+        cols: usize,
+    ) -> (Vec<i32>, u64) {
+        assert_eq!(a.len(), batch * active_rows);
+        assert!(active_rows <= self.n && cols <= self.n);
+        let k = active_rows;
+        let mut out = vec![0i32; batch * cols];
+        if batch == 0 || k == 0 || cols == 0 {
+            return (out, 0);
+        }
+
+        // register state between cycles
+        let mut act = vec![0i32; k * cols]; // activation register in PE (r,c)
+        let mut acc = vec![0i32; k * cols]; // partial-sum register out of PE (r,c)
+        let total_cycles = (k - 1) + (cols - 1) + batch; // last exit cycle + 1
+
+        for t in 0..total_cycles {
+            // move right-to-left / bottom-to-top so reads see last cycle's state
+            for r in (0..k).rev() {
+                for c in (0..cols).rev() {
+                    let a_in = if c == 0 {
+                        // batch item b enters row r at cycle b + r
+                        let b = t as isize - r as isize;
+                        if b >= 0 && (b as usize) < batch {
+                            a[b as usize * k + r]
+                        } else {
+                            0
+                        }
+                    } else {
+                        act[r * cols + (c - 1)]
+                    };
+                    let acc_in = if r == 0 { 0 } else { acc[(r - 1) * cols + c] };
+                    let idx = r * cols + c;
+                    acc[idx] = self.pes[r * self.n + c].step(acc_in, a_in);
+                    act[idx] = a_in;
+                }
+            }
+            // outputs exit below the last active row: y[b][c] at t = b + (k-1) + c
+            for c in 0..cols {
+                let b = t as isize - (k - 1) as isize - c as isize;
+                if b >= 0 && (b as usize) < batch {
+                    out[b as usize * cols + c] = acc[(k - 1) * cols + c];
+                }
+            }
+        }
+        (out, total_cycles as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultMap, StuckAt};
+    use crate::util::Rng;
+
+    fn rand_array_case(
+        rng: &mut Rng,
+        n: usize,
+        k: usize,
+        cols: usize,
+        batch: usize,
+        n_faults: usize,
+    ) -> (SystolicArray, Vec<i32>, Vec<i32>) {
+        let mut fm = FaultMap::healthy(n);
+        for _ in 0..n_faults {
+            fm.add(StuckAt {
+                row: rng.below(n) as u16,
+                col: rng.below(n) as u16,
+                bit: rng.below(32) as u8,
+                value: rng.bool(0.5),
+            });
+        }
+        let mut arr = SystolicArray::with_faults(&fm);
+        let w: Vec<i32> = (0..k * cols).map(|_| rng.below(255) as i32 - 127).collect();
+        arr.load_weights(&w, k, cols);
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        (arr, w, a)
+    }
+
+    #[test]
+    fn healthy_matvec_is_matmul() {
+        let mut rng = Rng::new(1);
+        let (n, k, cols) = (8, 8, 8);
+        let (arr, w, a) = rand_array_case(&mut rng, n, k, cols, 1, 0);
+        let got = arr.matvec(&a, k, cols);
+        for c in 0..cols {
+            let want: i32 = (0..k).map(|r| w[r * cols + c] * a[r]).sum();
+            assert_eq!(got[c], want, "col {c}");
+        }
+    }
+
+    #[test]
+    fn partial_tile_ignores_inactive_rows() {
+        let mut fm = FaultMap::healthy(8);
+        // fault in row 6 — outside the active range of a K=4 pass
+        fm.add(StuckAt { row: 6, col: 0, bit: 30, value: true });
+        let mut arr = SystolicArray::with_faults(&fm);
+        arr.load_weights(&vec![1; 4 * 2], 4, 2);
+        let out = arr.matvec(&[1, 2, 3, 4], 4, 2);
+        assert_eq!(out, vec![10, 10]);
+    }
+
+    #[test]
+    fn fault_corrupts_functional_output() {
+        let mut fm = FaultMap::healthy(4);
+        fm.add(StuckAt { row: 2, col: 1, bit: 28, value: true });
+        let mut arr = SystolicArray::with_faults(&fm);
+        arr.load_weights(&vec![0; 16], 4, 4);
+        let out = arr.matvec(&[0, 0, 0, 0], 4, 4);
+        assert_eq!(out[1], 1 << 28);
+        assert_eq!(out[0], 0);
+    }
+
+    #[test]
+    fn bypass_faulty_restores_pruned_semantics() {
+        let mut fm = FaultMap::healthy(4);
+        fm.add(StuckAt { row: 1, col: 2, bit: 27, value: true });
+        let mut arr = SystolicArray::with_faults(&fm);
+        let w: Vec<i32> = (0..16).map(|i| i as i32).collect();
+        arr.load_weights(&w, 4, 4);
+        arr.bypass_faulty();
+        let a = [1i32, 1, 1, 1];
+        let got = arr.matvec(&a, 4, 4);
+        for c in 0..4 {
+            let want: i32 = (0..4)
+                .filter(|&r| !(r == 1 && c == 2))
+                .map(|r| w[r * 4 + c])
+                .sum();
+            assert_eq!(got[c], want, "col {c}");
+        }
+    }
+
+    #[test]
+    fn cycle_accurate_matches_functional() {
+        let mut rng = Rng::new(2);
+        for case in 0..20 {
+            let n = 2 + rng.below(7);
+            let k = 1 + rng.below(n);
+            let cols = 1 + rng.below(n);
+            let batch = 1 + rng.below(6);
+            let (arr, _, a) = rand_array_case(&mut rng, n, k, cols, batch, case % 4);
+            let f = arr.matmul(&a, batch, k, cols);
+            let (c, _) = arr.matmul_cycle_accurate(&a, batch, k, cols);
+            assert_eq!(f, c, "case {case}: n={n} k={k} cols={cols} b={batch}");
+        }
+    }
+
+    #[test]
+    fn cycle_count_matches_paper_formula() {
+        // paper §3.2: an N x N matmul with batch B takes 2N + B cycles
+        let arr = SystolicArray::healthy(16);
+        let a = vec![1i32; 16 * 32];
+        let (_, cycles) = arr.matmul_cycle_accurate(&a, 32, 16, 16);
+        let exact = (16 - 1) + (16 - 1) + 32; // = 2N + B - 2
+        assert_eq!(cycles, exact as u64);
+        let paper = 2 * 16 + 32;
+        assert!((cycles as i64 - paper as i64).abs() <= 2);
+    }
+
+    #[test]
+    fn batch_matmul_matches_matvec() {
+        let mut rng = Rng::new(3);
+        let (arr, _, a) = rand_array_case(&mut rng, 8, 6, 5, 4, 3);
+        let got = arr.matmul(&a, 4, 6, 5);
+        for b in 0..4 {
+            let want = arr.matvec(&a[b * 6..(b + 1) * 6], 6, 5);
+            assert_eq!(&got[b * 5..(b + 1) * 5], want.as_slice(), "batch {b}");
+        }
+    }
+
+    #[test]
+    fn bypass_outside_rows_gates_correctly() {
+        let mut arr = SystolicArray::healthy(4);
+        arr.load_weights(&vec![1; 16], 4, 4);
+        arr.bypass_outside_rows(1, 3);
+        let out = arr.matvec(&[10, 20, 30, 40], 4, 4);
+        assert_eq!(out, vec![50; 4]); // only rows 1,2 contribute
+    }
+}

@@ -1,0 +1,91 @@
+//! int8/int32 fixed-point conventions of the modelled datapath.
+//!
+//! Must match `python/compile/kernels/quant.py` bit-for-bit (the golden
+//! vector `artifacts/testvectors/quant.txt` pins this): symmetric
+//! per-tensor scale `s = maxabs / 127`, `q(x) = clip(floor(x/s + 0.5),
+//! -127, 127)` computed in f32, int32 accumulation with wraparound.
+
+pub const QMAX: f32 = 127.0;
+
+/// Symmetric per-tensor quantization scale; 1.0 for an all-zero tensor.
+pub fn scale_for(xs: &[f32]) -> f32 {
+    let maxabs = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if maxabs > 0.0 {
+        maxabs / QMAX
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value. f32 arithmetic order matches the JAX graph exactly:
+/// divide, add 0.5, floor, clip.
+#[inline]
+pub fn quantize(x: f32, scale: f32) -> i32 {
+    let q = (x / scale + 0.5).floor();
+    q.clamp(-QMAX, QMAX) as i32
+}
+
+pub fn quantize_vec(xs: &[f32], scale: f32) -> Vec<i32> {
+    xs.iter().map(|&x| quantize(x, scale)).collect()
+}
+
+/// Dequantize an int32 accumulator given both input scales.
+#[inline]
+pub fn dequantize(acc: i32, a_scale: f32, w_scale: f32) -> f32 {
+    acc as f32 * (a_scale * w_scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_tensor_scale_guard() {
+        assert_eq!(scale_for(&[0.0, 0.0]), 1.0);
+        assert_eq!(quantize(0.0, 1.0), 0);
+    }
+
+    #[test]
+    fn scale_covers_max() {
+        let xs = [1.0f32, -3.5, 2.0];
+        let s = scale_for(&xs);
+        assert!((s - 3.5 / 127.0).abs() < 1e-7);
+        assert_eq!(quantize(-3.5, s), -127);
+        assert_eq!(quantize(3.5, s), 127);
+    }
+
+    #[test]
+    fn rounding_is_floor_plus_half() {
+        // 2.5 / 1.0 + 0.5 = 3.0 -> floor 3 (NOT banker's rounding to 2)
+        assert_eq!(quantize(2.5, 1.0), 3);
+        assert_eq!(quantize(-2.5, 1.0), -2); // floor(-2.0) = -2
+        assert_eq!(quantize(2.49, 1.0), 2);
+    }
+
+    #[test]
+    fn clipping() {
+        assert_eq!(quantize(1e9, 1.0), 127);
+        assert_eq!(quantize(-1e9, 1.0), -127);
+    }
+
+    #[test]
+    fn dequantize_roundtrip_within_half_step() {
+        let xs = [0.3f32, -0.7, 0.11, 0.99, -0.98];
+        let s = scale_for(&xs);
+        for &x in &xs {
+            let back = dequantize(quantize(x, s), s, 1.0) * 1.0;
+            assert!((back - x).abs() <= s * 0.5 + 1e-6, "{x} -> {back}");
+        }
+    }
+
+    /// Golden cross-check against python (artifacts/testvectors/quant.txt)
+    /// lives in rust/tests/integration_runtime.rs since it needs artifacts.
+    #[test]
+    fn matches_python_semantics_spot() {
+        let s = 4.0f32 / 127.0; // 0.031496063
+        // 1.0/s = 31.75; +0.5 = 32.25; floor = 32
+        assert_eq!(quantize(1.0, s), 32);
+        // -1.0/s = -31.75; +0.5 = -31.25; floor = -32
+        assert_eq!(quantize(-1.0, s), -32);
+    }
+}

@@ -1,0 +1,25 @@
+//! Bit-accurate, cycle-level weight-stationary systolic array (the paper's
+//! baseline TPU datapath), with per-MAC stuck-at faults and the FAP bypass
+//! circuitry of §5.1.
+//!
+//! Two execution modes, verified equal by property tests:
+//! * [`array::SystolicArray::matvec`] / `matmul` — functional column-sum
+//!   order (the hot path used by experiments);
+//! * [`array::SystolicArray::matmul_cycle_accurate`] — explicit skewed
+//!   wavefront with a cycle counter, validating the paper's `2N + B`
+//!   timing claim (§3.2).
+//!
+//! [`tile`] blocks arbitrary weight matrices onto the physical array;
+//! [`synthesis`] models the 45 nm synthesis numbers the paper reports.
+
+pub mod array;
+pub mod fixed;
+pub mod pe;
+pub mod synthesis;
+pub mod tile;
+pub mod timing;
+
+pub use array::SystolicArray;
+pub use fixed::{dequantize, quantize, quantize_vec, scale_for, QMAX};
+pub use pe::Pe;
+pub use tile::TiledMatmul;

@@ -1,0 +1,105 @@
+//! Processing element: int8 x int8 multiplier, int32 accumulate-adder,
+//! stuck-at fault masks on the accumulator output register, and the FAP
+//! bypass path of paper §5.1 (Figure 3).
+
+/// One MAC unit of the weight-stationary array.
+#[derive(Clone, Copy, Debug)]
+pub struct Pe {
+    /// Stationary weight (int8 range, held as i32).
+    pub weight: i32,
+    /// AND mask: bit cleared ⇒ that accumulator bit is stuck at 0.
+    pub and_mask: i32,
+    /// OR mask: bit set ⇒ that accumulator bit is stuck at 1.
+    pub or_mask: i32,
+    /// FAP bypass: when set, the PE forwards its south input unchanged.
+    pub bypass: bool,
+}
+
+impl Default for Pe {
+    fn default() -> Self {
+        Pe { weight: 0, and_mask: -1, or_mask: 0, bypass: false }
+    }
+}
+
+impl Pe {
+    #[inline]
+    pub fn healthy(weight: i32) -> Self {
+        Pe { weight, ..Default::default() }
+    }
+
+    pub fn is_faulty(&self) -> bool {
+        self.and_mask != -1 || self.or_mask != 0
+    }
+
+    /// One MAC step: consume the incoming partial sum and activation,
+    /// produce the outgoing partial sum.
+    ///
+    /// *Bypass wins over the fault*: the bypass mux routes around the whole
+    /// MAC including its corrupted output register (Figure 3). Without
+    /// bypass the stuck bits corrupt the result even when `weight == 0` —
+    /// the paper's "loading a zero weight is NOT equivalent" observation.
+    #[inline(always)]
+    pub fn step(&self, acc_in: i32, activation: i32) -> i32 {
+        if self.bypass {
+            return acc_in;
+        }
+        let sum = acc_in.wrapping_add(self.weight.wrapping_mul(activation));
+        (sum & self.and_mask) | self.or_mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_pe_is_plain_mac() {
+        let pe = Pe::healthy(3);
+        assert_eq!(pe.step(10, 4), 22);
+        assert!(!pe.is_faulty());
+    }
+
+    #[test]
+    fn wraparound_arithmetic() {
+        let pe = Pe::healthy(127);
+        // accumulate near i32::MAX must wrap, not panic
+        let out = pe.step(i32::MAX, 127);
+        assert_eq!(out, i32::MAX.wrapping_add(127 * 127));
+    }
+
+    #[test]
+    fn stuck_at_1_corrupts() {
+        let pe = Pe { weight: 0, and_mask: -1, or_mask: 1 << 30, bypass: false };
+        assert_eq!(pe.step(0, 55), 1 << 30);
+        assert!(pe.is_faulty());
+    }
+
+    #[test]
+    fn stuck_at_0_corrupts() {
+        let pe = Pe { weight: 1, and_mask: !(1 << 2), or_mask: 0, bypass: false };
+        assert_eq!(pe.step(0, 7), 3); // 7 = 0b111 -> bit2 cleared -> 0b011
+    }
+
+    #[test]
+    fn zero_weight_on_faulty_mac_still_corrupts() {
+        let pe = Pe { weight: 0, and_mask: -1, or_mask: 1 << 20, bypass: false };
+        assert_eq!(pe.step(5, 99), 5 | (1 << 20));
+    }
+
+    #[test]
+    fn bypass_beats_fault() {
+        let pe = Pe { weight: 77, and_mask: 0, or_mask: 1 << 30, bypass: true };
+        for acc in [0i32, -5, i32::MAX, i32::MIN] {
+            assert_eq!(pe.step(acc, 123), acc);
+        }
+    }
+
+    #[test]
+    fn bypass_equals_pruned_weight_on_healthy_mac() {
+        let byp = Pe { weight: 9, bypass: true, ..Default::default() };
+        let zero = Pe::healthy(0);
+        for acc in [-100i32, 0, 31337] {
+            assert_eq!(byp.step(acc, 12), zero.step(acc, 12));
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Analytic synthesis model parameterized by the paper's published 45 nm
+//! numbers (§6.1): a 256 x 256 MAC array synthesized with the OSU FreePDK
+//! 45 nm library runs at 658 MHz / 1.1 V and consumes 19.7 W of dynamic
+//! power; the FAP bypass path adds ~9% area (§5.1).
+//!
+//! We do not re-run synthesis (no EDA tools in this environment —
+//! DESIGN.md "substitutions"); the model scales the published numbers to
+//! other array sizes and derives the throughput, power, and yield claims
+//! the paper makes from them.
+
+/// Paper-published reference point.
+pub const PAPER_N: usize = 256;
+pub const PAPER_FREQ_HZ: f64 = 658.0e6;
+pub const PAPER_DYN_POWER_W: f64 = 19.7;
+pub const PAPER_BYPASS_AREA_OVERHEAD: f64 = 0.09;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SynthesisModel {
+    /// Array dimension.
+    pub n: usize,
+    /// Clock frequency (Hz). Defaults to the paper's 658 MHz.
+    pub freq_hz: f64,
+    /// With FAP bypass circuitry (+9% MAC area).
+    pub fap_bypass: bool,
+}
+
+impl SynthesisModel {
+    pub fn paper_baseline() -> Self {
+        SynthesisModel { n: PAPER_N, freq_hz: PAPER_FREQ_HZ, fap_bypass: false }
+    }
+
+    pub fn paper_fap() -> Self {
+        SynthesisModel { fap_bypass: true, ..Self::paper_baseline() }
+    }
+
+    pub fn mac_count(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// Dynamic power, scaled from the paper's 19.7 W @ 64K MACs linearly in
+    /// MAC count and frequency (activity factor held constant).
+    pub fn dynamic_power_w(&self) -> f64 {
+        PAPER_DYN_POWER_W
+            * (self.mac_count() as f64 / (PAPER_N * PAPER_N) as f64)
+            * (self.freq_hz / PAPER_FREQ_HZ)
+    }
+
+    /// Peak MAC throughput (ops/s) — every MAC fires every cycle.
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        self.mac_count() as f64 * self.freq_hz
+    }
+
+    /// Peak arithmetic throughput in TOPS (1 MAC = 2 ops).
+    pub fn peak_tops(&self) -> f64 {
+        2.0 * self.peak_macs_per_sec() / 1e12
+    }
+
+    /// Relative area vs the no-bypass baseline of the same N.
+    pub fn area_factor(&self) -> f64 {
+        if self.fap_bypass {
+            1.0 + PAPER_BYPASS_AREA_OVERHEAD
+        } else {
+            1.0
+        }
+    }
+
+    /// Energy per MAC operation (J) at peak utilization.
+    pub fn energy_per_mac_j(&self) -> f64 {
+        self.dynamic_power_w() / self.peak_macs_per_sec()
+    }
+}
+
+/// Manufacturing-yield model (the paper's motivation: "discarding every
+/// chip with a permanent fault reduces yield").
+///
+/// With per-MAC defect probability `p`:
+/// * a **discard** policy only ships defect-free chips:
+///   `yield = (1-p)^(N^2)`;
+/// * **FAP/FAP+T** ships every chip whose fault rate stays under the
+///   accuracy-tolerable threshold `max_rate` (paper: up to 50%).
+pub fn yield_discard(n: usize, p: f64) -> f64 {
+    ((1.0 - p).ln() * (n * n) as f64).exp()
+}
+
+/// P(fault_rate <= max_rate) under Binomial(N^2, p), normal approximation
+/// (exact enough for N^2 = 65536).
+pub fn yield_fap(n: usize, p: f64, max_rate: f64) -> f64 {
+    let total = (n * n) as f64;
+    let mean = total * p;
+    let sd = (total * p * (1.0 - p)).sqrt();
+    if sd == 0.0 {
+        return if p <= max_rate { 1.0 } else { 0.0 };
+    }
+    let z = (max_rate * total - mean) / sd;
+    normal_cdf(z)
+}
+
+fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Abramowitz–Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_point_reproduced() {
+        let m = SynthesisModel::paper_baseline();
+        assert_eq!(m.mac_count(), 65536);
+        assert!((m.dynamic_power_w() - 19.7).abs() < 1e-9);
+        // 64K MACs @ 658 MHz = 43.1 TMAC/s = 86.2 TOPS
+        assert!((m.peak_tops() - 86.2).abs() < 0.2);
+    }
+
+    #[test]
+    fn fap_area_overhead_is_nine_percent() {
+        assert!((SynthesisModel::paper_fap().area_factor() - 1.09).abs() < 1e-12);
+        assert_eq!(SynthesisModel::paper_baseline().area_factor(), 1.0);
+    }
+
+    #[test]
+    fn power_scales_with_macs_and_freq() {
+        let half = SynthesisModel { n: 128, ..SynthesisModel::paper_baseline() };
+        assert!((half.dynamic_power_w() - 19.7 / 4.0).abs() < 1e-9);
+        let slow = SynthesisModel { freq_hz: PAPER_FREQ_HZ / 2.0, ..SynthesisModel::paper_baseline() };
+        assert!((slow.dynamic_power_w() - 19.7 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn yield_discard_collapses_at_tiny_defect_rates() {
+        // the paper's point: even 0.006% faulty MACs ~ 4 faults in 64K;
+        // a discard policy then throws away almost every chip
+        let y = yield_discard(256, 6e-5);
+        assert!(y < 0.02, "discard yield at 0.006%: {y}");
+        assert!(yield_discard(256, 0.0) == 1.0);
+    }
+
+    #[test]
+    fn yield_fap_ships_nearly_everything_below_threshold() {
+        let y = yield_fap(256, 0.25, 0.5);
+        assert!(y > 0.999, "FAP yield at p=25%, threshold 50%: {y}");
+        let y_hi = yield_fap(256, 0.6, 0.5);
+        assert!(y_hi < 1e-3, "FAP yield above threshold: {y_hi}");
+    }
+
+    #[test]
+    fn erf_sane() {
+        assert!((erf(0.0)).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427).abs() < 1e-3);
+        assert!((erf(-1.0) + 0.8427).abs() < 1e-3);
+    }
+}

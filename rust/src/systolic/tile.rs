@@ -1,0 +1,169 @@
+//! Blocking of arbitrary weight matrices onto the physical array.
+//!
+//! A `K x M` weight matrix is blocked into `ceil(K/N) x ceil(M/N)` tiles
+//! (paper §5: "weight matrices that do not fit fully in the systolic array
+//! are first blocked into smaller N x N sub-matrices"). Row-tile partial
+//! results accumulate *outside* the array in fault-free accumulators, so a
+//! stuck-at fault only corrupts the pass its MAC participates in.
+
+use super::array::SystolicArray;
+use crate::faults::FaultMap;
+
+/// A full matmul schedule over the physical array.
+pub struct TiledMatmul {
+    array: SystolicArray,
+    /// Apply FAP: bypass every faulty MAC.
+    pub fap_bypass: bool,
+}
+
+impl TiledMatmul {
+    pub fn new(fault_map: &FaultMap, fap_bypass: bool) -> Self {
+        let mut array = SystolicArray::with_faults(fault_map);
+        if fap_bypass {
+            array.bypass_faulty();
+        }
+        TiledMatmul { array, fap_bypass }
+    }
+
+    pub fn array(&self) -> &SystolicArray {
+        &self.array
+    }
+
+    /// Mutable access to the underlying array (test-mode control: custom
+    /// bypass patterns, DFT hooks).
+    pub fn array_mut(&mut self) -> &mut SystolicArray {
+        &mut self.array
+    }
+
+    pub fn n(&self) -> usize {
+        self.array.n()
+    }
+
+    /// `a`: row-major `[batch][k]`, `w`: row-major `[k][m]`.
+    /// Returns row-major `[batch][m]` int32 accumulator outputs.
+    pub fn matmul(&mut self, a: &[i32], w: &[i32], batch: usize, k: usize, m: usize) -> Vec<i32> {
+        assert_eq!(a.len(), batch * k);
+        assert_eq!(w.len(), k * m);
+        let n = self.array.n();
+        let mut out = vec![0i32; batch * m];
+        let mut tile_buf = vec![0i32; n * n];
+        let mut act_buf = vec![0i32; batch * n];
+
+        for k0 in (0..k).step_by(n) {
+            let kh = (k - k0).min(n);
+            // gather this row-chunk's activations once per chunk
+            for b in 0..batch {
+                act_buf[b * kh..(b + 1) * kh].copy_from_slice(&a[b * k + k0..b * k + k0 + kh]);
+            }
+            for m0 in (0..m).step_by(n) {
+                let mw = (m - m0).min(n);
+                for r in 0..kh {
+                    for c in 0..mw {
+                        tile_buf[r * mw + c] = w[(k0 + r) * m + m0 + c];
+                    }
+                }
+                self.array.load_weights(&tile_buf[..kh * mw], kh, mw);
+                let part = self.array.matmul(&act_buf[..batch * kh], batch, kh, mw);
+                for b in 0..batch {
+                    for c in 0..mw {
+                        let o = &mut out[b * m + m0 + c];
+                        *o = o.wrapping_add(part[b * mw + c]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total cycles for the schedule per the paper's timing model:
+    /// each of the `ceil(K/N) * ceil(M/N)` passes costs `2N + B` cycles
+    /// (§3.2), plus `N` weight-load cycles per pass (not overlapped in the
+    /// baseline design). See [`super::timing`] for the derivation.
+    pub fn schedule_cycles(&self, batch: usize, k: usize, m: usize) -> u64 {
+        super::timing::tiled_cycles(self.array.n(), batch, k, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultMap, StuckAt};
+    use crate::util::Rng;
+
+    fn plain_matmul(a: &[i32], w: &[i32], batch: usize, k: usize, m: usize) -> Vec<i32> {
+        let mut out = vec![0i32; batch * m];
+        for b in 0..batch {
+            for j in 0..m {
+                let mut acc = 0i64;
+                for r in 0..k {
+                    acc += a[b * k + r] as i64 * w[r * m + j] as i64;
+                }
+                out[b * m + j] = acc as i32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn healthy_tiled_matches_plain() {
+        let mut rng = Rng::new(1);
+        for &(n, k, m, batch) in &[(4usize, 4usize, 4usize, 2usize), (4, 10, 7, 3), (8, 20, 17, 5), (3, 1, 1, 1)] {
+            let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+            let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+            let mut tm = TiledMatmul::new(&FaultMap::healthy(n), false);
+            let got = tm.matmul(&a, &w, batch, k, m);
+            assert_eq!(got, plain_matmul(&a, &w, batch, k, m), "n={n} k={k} m={m}");
+        }
+    }
+
+    #[test]
+    fn fap_bypass_equals_pruned_weights() {
+        let mut rng = Rng::new(2);
+        let (n, k, m, batch) = (4, 10, 9, 3);
+        let mut fm = FaultMap::healthy(n);
+        fm.add(StuckAt { row: 1, col: 2, bit: 29, value: true });
+        fm.add(StuckAt { row: 3, col: 0, bit: 13, value: false });
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+        // prune every logical weight mapping to a faulty MAC: (r%n, c%n)
+        let mut wp = w.clone();
+        for r in 0..k {
+            for c in 0..m {
+                if fm.is_faulty(r % n, c % n) {
+                    wp[r * m + c] = 0;
+                }
+            }
+        }
+        let mut tm = TiledMatmul::new(&fm, true);
+        let got = tm.matmul(&a, &w, batch, k, m);
+        assert_eq!(got, plain_matmul(&a, &wp, batch, k, m));
+    }
+
+    #[test]
+    fn fault_corrupts_only_its_tiles() {
+        // fault at physical row 1: logical rows {1, 5, 9, ...} (n=4)
+        let (n, k, m, batch) = (4, 8, 4, 1);
+        let mut fm = FaultMap::healthy(n);
+        fm.add(StuckAt { row: 1, col: 0, bit: 26, value: true });
+        let a = vec![1i32; k];
+        let mut w = vec![0i32; k * m];
+        for r in 0..k {
+            w[r * m] = 1; // only column 0 carries weight
+        }
+        let mut tm = TiledMatmul::new(&fm, false);
+        let got = tm.matmul(&a, &w, batch, k, m);
+        // two passes (rows 0-3, 4-7), each passes through faulty (1,0):
+        // pass acc after row1 gets bit26 set; subsequent adds keep it large
+        assert!(got[0] > 2 * (1 << 26) - 100, "both passes corrupted: {}", got[0]);
+        // healthy columns untouched
+        assert_eq!(&got[1..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn schedule_cycles_counts_passes() {
+        let tm = TiledMatmul::new(&FaultMap::healthy(4), false);
+        // k=10 -> 3 row tiles, m=9 -> 3 col tiles, 9 passes
+        let c = tm.schedule_cycles(2, 10, 9);
+        assert_eq!(c, 9 * (2 * 4 + 2 + 4));
+    }
+}

@@ -1,0 +1,94 @@
+//! Timing model of the weight-stationary array (paper §3.2).
+//!
+//! Exact pipeline timing (validated cycle-by-cycle by
+//! `SystolicArray::matmul_cycle_accurate`): output `y[b][c]` exits column c
+//! at cycle `b + (K-1) + c`, so a single K-row, C-column, B-batch pass
+//! drains in `(K-1) + (C-1) + B` cycles — the paper rounds this to
+//! `2N + B` for a full N x N pass.
+//!
+//! The tiled schedule adds an `N`-cycle weight-load per pass (the baseline
+//! TPU double-buffers weights, but the paper's formula excludes the load;
+//! we include it explicitly and keep the two terms separate so benches can
+//! report both).
+
+/// Exact drain cycles of one pass (no weight load).
+pub fn pass_cycles(active_rows: usize, cols: usize, batch: usize) -> u64 {
+    if batch == 0 || active_rows == 0 || cols == 0 {
+        return 0;
+    }
+    (active_rows - 1) as u64 + (cols - 1) as u64 + batch as u64
+}
+
+/// The paper's approximation for a full N x N pass with batch B.
+pub fn paper_pass_cycles(n: usize, batch: usize) -> u64 {
+    (2 * n + batch) as u64
+}
+
+/// Weight-load cycles for one pass (one row per cycle, top to bottom).
+pub fn weight_load_cycles(n: usize) -> u64 {
+    n as u64
+}
+
+/// Number of tile passes for a K x M weight matrix on an N x N array.
+pub fn tile_passes(n: usize, k: usize, m: usize) -> u64 {
+    (k.div_ceil(n) * m.div_ceil(n)) as u64
+}
+
+/// Total cycles of the tiled schedule, paper timing + explicit weight load.
+pub fn tiled_cycles(n: usize, batch: usize, k: usize, m: usize) -> u64 {
+    tile_passes(n, k, m) * (paper_pass_cycles(n, batch) + weight_load_cycles(n) - n as u64)
+        + tile_passes(n, k, m) * weight_load_cycles(n)
+}
+
+/// MAC operations performed by a K x M x B matmul.
+pub fn mac_ops(batch: usize, k: usize, m: usize) -> u64 {
+    batch as u64 * k as u64 * m as u64
+}
+
+/// Array utilization of the tiled schedule: useful MACs / (cycles * N^2).
+pub fn utilization(n: usize, batch: usize, k: usize, m: usize) -> f64 {
+    let cycles = tiled_cycles(n, batch, k, m);
+    if cycles == 0 {
+        return 0.0;
+    }
+    mac_ops(batch, k, m) as f64 / (cycles as f64 * (n * n) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_cycles_formula() {
+        assert_eq!(pass_cycles(16, 16, 32), 15 + 15 + 32);
+        assert_eq!(pass_cycles(1, 1, 1), 1);
+        assert_eq!(pass_cycles(0, 4, 4), 0);
+    }
+
+    #[test]
+    fn paper_formula_within_two_cycles() {
+        for n in [8usize, 16, 64, 256] {
+            for b in [1usize, 8, 256] {
+                let exact = pass_cycles(n, n, b) as i64;
+                let paper = paper_pass_cycles(n, b) as i64;
+                assert!((exact - paper).abs() <= 2, "n={n} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_pass_counts() {
+        assert_eq!(tile_passes(256, 784, 256), 4);
+        assert_eq!(tile_passes(256, 256, 256), 1);
+        assert_eq!(tile_passes(4, 10, 9), 9);
+    }
+
+    #[test]
+    fn utilization_peaks_at_full_tiles_large_batch() {
+        let low = utilization(256, 8, 256, 256);
+        let high = utilization(256, 4096, 256, 256);
+        assert!(high > low);
+        assert!(high > 0.8, "large-batch full-tile utilization {high}");
+        assert!(utilization(256, 256, 10, 10) < 0.01);
+    }
+}

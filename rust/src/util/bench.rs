@@ -1,0 +1,82 @@
+//! Micro-benchmark harness (criterion is unavailable offline; this provides
+//! the subset we need: warmup, repeated timed runs, median/mean/min report,
+//! and a throughput line). All `rust/benches/*.rs` use this.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} iters={:<4} min={:>12?} median={:>12?} mean={:>12?}",
+            self.name, self.iters, self.min, self.median, self.mean
+        );
+    }
+
+    /// Report with an items/second throughput derived from the median.
+    pub fn report_throughput(&self, items: u64, unit: &str) {
+        let per_sec = items as f64 / self.median.as_secs_f64();
+        println!(
+            "{:<44} median={:>12?}  {:>14.3e} {unit}/s",
+            self.name, self.median, per_sec
+        );
+    }
+}
+
+/// Time `f` `iters` times after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / iters;
+    BenchResult { name: name.to_string(), iters, min, median, mean }
+}
+
+/// Convenience: bench and print a standard line, returning the result.
+pub fn run<F: FnMut()>(name: &str, iters: u32, f: F) -> BenchResult {
+    let r = bench(name, 1.min(iters), iters, f);
+    r.report();
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.min > Duration::ZERO);
+        assert!(r.median >= r.min);
+        assert_eq!(r.iters, 5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities (the offline registry has no serde /
+//! criterion / proptest — these fill the gaps).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,71 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` seeded random inputs; on failure
+//! it reports the failing case seed so the case can be replayed exactly by
+//! constructing `Rng::new(seed)`. Shrinking is intentionally out of scope —
+//! the generators used in this repo produce small cases directly.
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` random cases derived from `seed`.
+///
+/// `prop` receives a fresh `Rng` per case and returns `Err(msg)` to fail.
+/// Panics with the case seed on the first failure.
+pub fn check<F>(name: &str, seed: u64, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with Rng::new({case_seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 1, 25, |rng| {
+            n += 1;
+            let v = rng.below(10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 10, |rng| {
+            if rng.below(4) == 3 {
+                Err("hit 3".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,89 @@
+//! End-to-end FAP pipeline on a real trained model (mnist):
+//! train -> inject -> prune -> evaluate, checking the paper's ordering:
+//! unmitigated faulty accuracy << FAP accuracy ≈ baseline accuracy.
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fap::apply_fap;
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::mapping::{LayerMasks, MaskKind};
+use repro::model::arch;
+use repro::model::quant::calibrate_mlp;
+use repro::runtime::Runtime;
+use repro::util::Rng;
+
+fn artifacts_dir() -> String {
+    std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[test]
+fn fap_pipeline_end_to_end() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let a = arch::by_name("mnist").unwrap();
+    let (train, test) = data::for_arch("mnist", 1500, 500, 11).unwrap();
+    let cfg = TrainConfig { steps: 140, lr: 0.05, seed: 11, log_every: 0, ..Default::default() };
+    let (baseline, losses) = train_baseline(&rt, &a, &train, &cfg).unwrap();
+    assert!(
+        losses.last().unwrap() < &0.5,
+        "baseline failed to learn: final loss {}",
+        losses.last().unwrap()
+    );
+
+    let ev = Evaluator::new(&rt);
+    let base_acc = ev.accuracy(&a, &baseline, &test).unwrap();
+    assert!(base_acc > 0.9, "baseline accuracy {base_acc}");
+
+    // moderate fault rate: 10% of a 64x64 grid
+    let n = 64;
+    let fm = inject_uniform(FaultSpec::new(n), 410, &mut Rng::new(5));
+    let calib = calibrate_mlp(&a, &baseline, &train.x[..64 * 784], 64);
+
+    // (1) unmitigated: accuracy collapses
+    let unmit = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+    let faulty_acc = ev
+        .accuracy_faulty(&a, &baseline, &unmit, &calib, &test, false)
+        .unwrap();
+
+    // (2) FAP: prune + healthy float path
+    let (fap_params, masks, report) = apply_fap(&a, &baseline, &fm);
+    let fap_acc = ev.accuracy(&a, &fap_params, &test).unwrap();
+
+    // (3) FAP running on the faulty chip itself (bypass masks live)
+    let fap_on_chip = ev
+        .accuracy_faulty(&a, &fap_params, &masks, &calib, &test, false)
+        .unwrap();
+
+    eprintln!(
+        "baseline {base_acc:.3} | unmitigated {faulty_acc:.3} | FAP {fap_acc:.3} | FAP-on-chip {fap_on_chip:.3}"
+    );
+    assert!(
+        faulty_acc < base_acc - 0.15,
+        "unmitigated faults should hurt: {faulty_acc} vs {base_acc}"
+    );
+    assert!(fap_acc > faulty_acc + 0.1, "FAP should recover accuracy");
+    assert!(fap_acc > base_acc - 0.1, "FAP should stay near baseline at 10% faults");
+    // bypassing on the faulty chip must track the pruned float model
+    // closely (quantization noise only)
+    assert!(
+        (fap_on_chip - fap_acc).abs() < 0.05,
+        "FAP-on-chip {fap_on_chip} vs pruned-float {fap_acc}"
+    );
+    assert!(report.pruned_weights > 0);
+    assert!((report.fault_rate - 0.1).abs() < 0.01);
+}
+
+#[test]
+fn fap_with_zero_faults_is_identity() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let a = arch::by_name("mnist").unwrap();
+    let (train, test) = data::for_arch("mnist", 800, 256, 12).unwrap();
+    let cfg = TrainConfig { steps: 80, lr: 0.05, seed: 12, log_every: 0, ..Default::default() };
+    let (baseline, _) = train_baseline(&rt, &a, &train, &cfg).unwrap();
+    let (fap_params, _, report) = apply_fap(&a, &baseline, &repro::faults::FaultMap::healthy(64));
+    assert_eq!(report.pruned_weights, 0);
+    let ev = Evaluator::new(&rt);
+    let b = ev.accuracy(&a, &baseline, &test).unwrap();
+    let f = ev.accuracy(&a, &fap_params, &test).unwrap();
+    assert_eq!(b, f, "healthy FAP must not change the model");
+}

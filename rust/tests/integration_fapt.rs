@@ -1,0 +1,84 @@
+//! FAP+T (Algorithm 1) integration: retraining recovers accuracy lost to
+//! aggressive pruning, pruned weights stay exactly zero, and the full
+//! provisioning flow (detect -> FAP -> FAP+T) holds together.
+
+use repro::coordinator::evaluate::Evaluator;
+use repro::coordinator::fap::apply_fap;
+use repro::coordinator::fapt::{fapt_retrain, provision_chip, FaptConfig};
+use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::data;
+use repro::faults::{inject_uniform, FaultSpec};
+use repro::model::arch;
+use repro::runtime::Runtime;
+use repro::util::Rng;
+
+fn artifacts_dir() -> String {
+    std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[test]
+fn fapt_recovers_accuracy_at_high_fault_rate() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let a = arch::by_name("mnist").unwrap();
+    let (train, test) = data::for_arch("mnist", 1500, 500, 21).unwrap();
+    let cfg = TrainConfig { steps: 140, lr: 0.05, seed: 21, log_every: 0, ..Default::default() };
+    let (baseline, _) = train_baseline(&rt, &a, &train, &cfg).unwrap();
+    let ev = Evaluator::new(&rt);
+    let base_acc = ev.accuracy(&a, &baseline, &test).unwrap();
+
+    // 50% fault rate — the paper's extreme point where FAP alone degrades
+    let n = 32;
+    let fm = inject_uniform(FaultSpec::new(n), n * n / 2, &mut Rng::new(6));
+    let (fap_params, masks, _) = apply_fap(&a, &baseline, &fm);
+    let fap_acc = ev.accuracy(&a, &fap_params, &test).unwrap();
+
+    let fcfg = FaptConfig { max_epochs: 3, lr: 0.01, seed: 21, snapshot_epochs: vec![1] };
+    let res = fapt_retrain(&rt, &a, &fap_params, &masks.prune, &train, &fcfg).unwrap();
+    let fapt_acc = ev.accuracy(&a, &res.params, &test).unwrap();
+
+    eprintln!("base {base_acc:.3} | FAP@50% {fap_acc:.3} | FAP+T {fapt_acc:.3}");
+    assert!(fap_acc < base_acc - 0.02, "50% pruning should cost accuracy");
+    assert!(
+        fapt_acc > fap_acc + 0.02,
+        "retraining should recover: FAP {fap_acc} -> FAP+T {fapt_acc}"
+    );
+    assert!(res.epoch_losses.len() == 3);
+    assert!(
+        res.epoch_losses[2] < res.epoch_losses[0],
+        "retraining loss should fall: {:?}",
+        res.epoch_losses
+    );
+    assert_eq!(res.snapshots.len(), 1);
+
+    // Algorithm 1 line 7: pruned weights stay *exactly* zero
+    for ((w, _), m) in res.params.layers.iter().zip(&masks.prune) {
+        for (wi, &mi) in w.iter().zip(m) {
+            if mi == 0.0 {
+                assert_eq!(*wi, 0.0, "pruned weight drifted during retraining");
+            }
+        }
+    }
+}
+
+#[test]
+fn provision_chip_full_flow() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let a = arch::by_name("mnist").unwrap();
+    let (train, test) = data::for_arch("mnist", 1200, 400, 31).unwrap();
+    let cfg = TrainConfig { steps: 120, lr: 0.05, seed: 31, log_every: 0, ..Default::default() };
+    let (baseline, _) = train_baseline(&rt, &a, &train, &cfg).unwrap();
+
+    let n = 32;
+    let fm = inject_uniform(FaultSpec::new(n), 100, &mut Rng::new(7));
+    let fcfg = FaptConfig { max_epochs: 2, lr: 0.01, seed: 31, snapshot_epochs: vec![] };
+    let out = provision_chip(&rt, &a, &baseline, &fm, &train, &fcfg).unwrap();
+
+    // post-fab localization found every injected fault, no false positives
+    assert_eq!(out.detected, fm.faulty_mac_count());
+    assert_eq!(out.fault_map.faulty_macs(), fm.faulty_macs());
+
+    let ev = Evaluator::new(&rt);
+    let acc = ev.accuracy(&a, &out.result.params, &test).unwrap();
+    assert!(acc > 0.85, "provisioned chip accuracy {acc}");
+    assert!(out.result.secs_per_epoch > 0.0);
+}

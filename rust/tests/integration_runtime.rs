@@ -1,0 +1,157 @@
+//! Runtime integration: artifacts load, compile and agree with the python
+//! golden vectors (cross-language, cross-XLA-version checks).
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+
+use repro::model::arch;
+use repro::runtime::{lit_f32, lit_i32, scalar_i32, Runtime};
+use repro::systolic::fixed;
+
+fn artifacts_dir() -> String {
+    std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn read_lines(path: &str) -> Vec<String> {
+    let p = format!("{}/{}", artifacts_dir(), path);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("{p}: {e} — run `make artifacts`"))
+        .lines()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn parse_f32s(line: &str) -> Vec<f32> {
+    line.split_whitespace().map(|v| v.parse().unwrap()).collect()
+}
+
+fn parse_i32s(line: &str) -> Vec<i32> {
+    line.split_whitespace().map(|v| v.parse().unwrap()).collect()
+}
+
+#[test]
+fn manifest_covers_all_hlo_files() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let m = rt.manifest();
+    assert!(m.artifacts.len() >= 10, "expected a full artifact set");
+    for spec in m.artifacts.values() {
+        assert!(
+            m.hlo_path(spec).exists(),
+            "manifest references missing file {}",
+            spec.file
+        );
+        assert!(!spec.outputs.is_empty(), "{} has no outputs", spec.name);
+    }
+}
+
+#[test]
+fn quantization_matches_python_bit_for_bit() {
+    let lines = read_lines("testvectors/quant.txt");
+    let hdr: Vec<&str> = lines[0].split_whitespace().collect();
+    let scale: f32 = hdr[1].parse().unwrap();
+    let xs = parse_f32s(&lines[1]);
+    let want = parse_i32s(&lines[2]);
+    let got = fixed::quantize_vec(&xs, scale);
+    assert_eq!(got, want, "rust quantize diverged from python");
+}
+
+#[test]
+fn faulty_matmul_artifact_matches_python_golden() {
+    let lines = read_lines("testvectors/faulty_matmul.txt");
+    let hdr: Vec<usize> = lines[0].split_whitespace().map(|v| v.parse().unwrap()).collect();
+    let (b, k, n) = (hdr[0], hdr[1], hdr[2]);
+    let arrs: Vec<Vec<i32>> = lines[1..7].iter().map(|l| parse_i32s(l)).collect();
+
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let exe = rt.load("faulty_matmul_test").unwrap();
+    let inputs = vec![
+        lit_i32(&arrs[0], &[b, k]).unwrap(),
+        lit_i32(&arrs[1], &[k, n]).unwrap(),
+        lit_i32(&arrs[2], &[k, n]).unwrap(),
+        lit_i32(&arrs[3], &[k, n]).unwrap(),
+        lit_i32(&arrs[4], &[k, n]).unwrap(),
+    ];
+    let outs = exe.run(&inputs).unwrap();
+    let got = exe.i32_out(&outs, 0).unwrap();
+    assert_eq!(got, arrs[5], "HLO faulty matmul != python golden");
+}
+
+#[test]
+fn mnist_fwd_artifact_matches_python_logits() {
+    let lines = read_lines("testvectors/mnist_fwd.txt");
+    let hdr: Vec<usize> = lines[0].split_whitespace().map(|v| v.parse().unwrap()).collect();
+    let (seed, batch, din, classes) = (hdr[0], hdr[1], hdr[2], hdr[3]);
+    let x = parse_f32s(&lines[1]);
+    let want = parse_f32s(&lines[2]);
+
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let init = rt.load("mnist_init").unwrap();
+    let params = init.run(&[scalar_i32(seed as i32)]).unwrap();
+    let fwd = rt.load("mnist_fwd").unwrap();
+    let mut inputs = params;
+    inputs.push(lit_f32(&x, &[batch, din]).unwrap());
+    let outs = fwd.run(&inputs).unwrap();
+    let got = fwd.f32_out(&outs, 0).unwrap();
+
+    assert_eq!(got.len(), batch * classes);
+    let mut max_err = 0.0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs());
+    }
+    // float path across two XLA versions: tolerance, not bit-equality
+    assert!(max_err < 1e-3, "mnist fwd max err {max_err}");
+}
+
+#[test]
+fn archs_txt_matches_rust_mirror() {
+    let lines = read_lines("archs.txt");
+    for name in ["mnist", "timit", "alexnet32"] {
+        let a = arch::by_name(name).unwrap();
+        let hdr = lines
+            .iter()
+            .find(|l| l.starts_with(&format!("arch {name} ")))
+            .unwrap_or_else(|| panic!("{name} missing from archs.txt"));
+        let field = |key: &str| -> String {
+            hdr.split_whitespace()
+                .find_map(|t| t.strip_prefix(&format!("{key}=")))
+                .unwrap_or_else(|| panic!("{name}: no {key}"))
+                .to_string()
+        };
+        assert_eq!(field("classes"), a.num_classes.to_string(), "{name} classes");
+        assert_eq!(field("params"), a.param_count().to_string(), "{name} params");
+        assert_eq!(field("eval_batch"), a.eval_batch.to_string(), "{name} eval batch");
+        assert_eq!(field("train_batch"), a.train_batch.to_string(), "{name} train batch");
+    }
+}
+
+#[test]
+fn mnist_pallas_and_scan_faulty_artifacts_agree() {
+    // The L1 Pallas kernel lowered into a full model HLO must agree with
+    // the scan implementation bit-for-bit on the same inputs.
+    use repro::coordinator::evaluate::Evaluator;
+    use repro::data;
+    use repro::faults::{inject_uniform, FaultSpec};
+    use repro::mapping::{LayerMasks, MaskKind};
+    use repro::model::quant::calibrate_mlp;
+    use repro::model::Params;
+    use repro::util::Rng;
+
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    if !rt.has("mnist_faulty_fwd_pallas") {
+        eprintln!("skipping: pallas artifact not built (--fast artifacts)");
+        return;
+    }
+    let a = arch::by_name("mnist").unwrap();
+    let init = rt.load("mnist_init").unwrap();
+    let plits = init.run(&[scalar_i32(3)]).unwrap();
+    let flat: Vec<Vec<f32>> = plits.iter().map(|l| l.to_vec::<f32>().unwrap()).collect();
+    let params = Params::from_flat(&a, flat).unwrap();
+
+    let (_, test) = data::for_arch("mnist", 64, 256, 9).unwrap();
+    let calib = calibrate_mlp(&a, &params, &test.x[..64 * 784], 64);
+    let fm = inject_uniform(FaultSpec::new(256), 12, &mut Rng::new(4));
+    let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+    let ev = Evaluator::new(&rt);
+    let acc_scan = ev.accuracy_faulty(&a, &params, &masks, &calib, &test, false).unwrap();
+    let acc_pallas = ev.accuracy_faulty(&a, &params, &masks, &calib, &test, true).unwrap();
+    assert_eq!(acc_scan, acc_pallas, "pallas vs scan artifact accuracy differs");
+}

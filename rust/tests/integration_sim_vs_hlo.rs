@@ -1,0 +1,134 @@
+//! Cross-check: the rust cycle-level systolic simulator and the AOT HLO
+//! faulty-matmul artifact implement the *same* datapath, bit for bit.
+//!
+//! This is the keystone consistency test of the reproduction: the L1
+//! Pallas kernel, the pure-jnp oracle (pytest), the lax.scan graph and the
+//! rust PE-grid simulator must all agree on the stuck-at semantics.
+
+use repro::faults::{FaultMap, StuckAt};
+use repro::runtime::{lit_i32, Runtime};
+use repro::systolic::TiledMatmul;
+use repro::util::Rng;
+
+fn artifacts_dir() -> String {
+    std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// The faulty_matmul_test artifact has fixed geometry (see aot.py):
+/// a[8,24] x w[24,16], array_rows = 8. The physical array is the square
+/// 8x8 grid, so logical weight (k, n) maps to MAC (k % 8, n % 8) and the
+/// 16 output columns run as two column tiles.
+const B: usize = 8;
+const K: usize = 24;
+const N: usize = 16;
+const AN: usize = 8; // physical array dimension
+
+fn random_case(
+    seed: u64,
+    n_faults: usize,
+    n_bypass: usize,
+) -> (Vec<i32>, Vec<i32>, FaultMap, Vec<(usize, usize)>) {
+    let mut rng = Rng::new(seed);
+    let a: Vec<i32> = (0..B * K).map(|_| rng.below(255) as i32 - 127).collect();
+    let w: Vec<i32> = (0..K * N).map(|_| rng.below(255) as i32 - 127).collect();
+    let mut fm = FaultMap::healthy(AN);
+    for _ in 0..n_faults {
+        fm.add(StuckAt {
+            row: rng.below(AN) as u16,
+            col: rng.below(AN) as u16,
+            bit: rng.below(32) as u8,
+            value: rng.bool(0.5),
+        });
+    }
+    let mut bypass = Vec::new();
+    for _ in 0..n_bypass {
+        bypass.push((rng.below(AN), rng.below(AN)));
+    }
+    (a, w, fm, bypass)
+}
+
+/// Expand physical fault map + bypass list to logical [K][N] mask arrays
+/// (what the artifact takes as inputs), using the paper's mapping
+/// r = k mod AN, c = n mod AN.
+fn logical_masks(fm: &FaultMap, bypass: &[(usize, usize)]) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let mut and_m = vec![-1i32; K * N];
+    let mut or_m = vec![0i32; K * N];
+    let mut byp = vec![0i32; K * N];
+    for k in 0..K {
+        for n in 0..N {
+            let (r, c) = (k % AN, n % AN);
+            and_m[k * N + n] = fm.and_at(r, c);
+            or_m[k * N + n] = fm.or_at(r, c);
+            if bypass.contains(&(r, c)) {
+                byp[k * N + n] = 1;
+            }
+        }
+    }
+    (and_m, or_m, byp)
+}
+
+fn run_hlo(
+    exe: &repro::runtime::Executable,
+    a: &[i32],
+    w: &[i32],
+    masks: &(Vec<i32>, Vec<i32>, Vec<i32>),
+) -> Vec<i32> {
+    let inputs = vec![
+        lit_i32(a, &[B, K]).unwrap(),
+        lit_i32(w, &[K, N]).unwrap(),
+        lit_i32(&masks.0, &[K, N]).unwrap(),
+        lit_i32(&masks.1, &[K, N]).unwrap(),
+        lit_i32(&masks.2, &[K, N]).unwrap(),
+    ];
+    let outs = exe.run(&inputs).unwrap();
+    exe.i32_out(&outs, 0).unwrap()
+}
+
+#[test]
+fn simulator_matches_hlo_artifact_bit_for_bit() {
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let exe = rt.load("faulty_matmul_test").unwrap();
+
+    for case in 0..12u64 {
+        let n_faults = (case % 5) as usize * 2;
+        let n_bypass = (case % 3) as usize;
+        let (a, w, fm, bypass) = random_case(1000 + case, n_faults, n_bypass);
+        let masks = logical_masks(&fm, &bypass);
+        let hlo = run_hlo(&exe, &a, &w, &masks);
+
+        let mut tm = TiledMatmul::new(&fm, false);
+        for &(r, c) in &bypass {
+            tm.array_mut().pe_mut(r, c).bypass = true;
+        }
+        let sim = tm.matmul(&a, &w, B, K, N);
+        assert_eq!(sim, hlo, "case {case}: simulator != HLO artifact");
+    }
+}
+
+#[test]
+fn tiled_matmul_fap_matches_hlo_with_bypass_everywhere_faulty() {
+    // FAP scenario: every faulty MAC bypassed on both paths.
+    let rt = Runtime::new(artifacts_dir()).unwrap();
+    let exe = rt.load("faulty_matmul_test").unwrap();
+    let (a, w, fm, _) = random_case(77, 6, 0);
+    let bypass = fm.faulty_macs();
+    let masks = logical_masks(&fm, &bypass);
+    let hlo = run_hlo(&exe, &a, &w, &masks);
+
+    let mut tm = TiledMatmul::new(&fm, true); // FAP bypass on
+    let sim = tm.matmul(&a, &w, B, K, N);
+    assert_eq!(sim, hlo, "FAP bypass: simulator != HLO artifact");
+
+    // and both equal the pruned plain matmul (healthy-array semantics)
+    let mut wp = w.clone();
+    for k in 0..K {
+        for n in 0..N {
+            if fm.is_faulty(k % AN, n % AN) {
+                wp[k * N + n] = 0;
+            }
+        }
+    }
+    let mut healthy = TiledMatmul::new(&FaultMap::healthy(AN), false);
+    let pruned = healthy.matmul(&a, &wp, B, K, N);
+    assert_eq!(sim, pruned, "FAP != pruned weights on healthy array");
+}

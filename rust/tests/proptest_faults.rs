@@ -1,0 +1,79 @@
+//! Property tests over fault injection and post-fab localization.
+
+use repro::faults::{detect, inject_clustered, inject_uniform, FaultSpec};
+use repro::prop_assert;
+use repro::util::{prop, Rng};
+
+/// Localization never reports a false positive, and with the default
+/// pattern set recall is total for observable faults on these grids.
+#[test]
+fn prop_detect_sound_and_complete() {
+    prop::check("detect_sound_complete", 0xC1, 10, |rng| {
+        let n = 8 << rng.below(2); // 8 or 16
+        let k = rng.below(n * n / 4);
+        let fm = inject_uniform(FaultSpec::new(n), k, rng);
+        let rep = detect::localize_from_map(&fm, Default::default());
+        let truth = fm.faulty_macs();
+        for f in &rep.faulty {
+            prop_assert!(truth.contains(f), "false positive {f:?}");
+        }
+        prop_assert!(
+            rep.faulty.len() == truth.len(),
+            "missed {} of {} faults",
+            truth.len() - rep.faulty.len(),
+            truth.len()
+        );
+        Ok(())
+    });
+}
+
+/// Injection respects the requested count exactly for both spatial models.
+#[test]
+fn prop_injection_count_exact() {
+    prop::check("injection_count", 0xC2, 25, |rng| {
+        let n = 2 + rng.below(30);
+        let k = rng.below(n * n + 1);
+        let u = inject_uniform(FaultSpec::new(n), k, rng);
+        prop_assert!(u.faulty_mac_count() == k, "uniform: {} != {k}", u.faulty_mac_count());
+        let c = inject_clustered(FaultSpec::new(n), k, 1 + rng.below(4), rng);
+        prop_assert!(c.faulty_mac_count() == k, "clustered: {} != {k}", c.faulty_mac_count());
+        Ok(())
+    });
+}
+
+/// Uniform injection is spatially uniform-ish: across many draws every
+/// MAC position gets hit (no dead zones from the index arithmetic).
+#[test]
+fn prop_injection_covers_grid() {
+    let n = 8;
+    let mut hit = vec![false; n * n];
+    let mut rng = Rng::new(0xC3);
+    for _ in 0..120 {
+        let fm = inject_uniform(FaultSpec::new(n), 8, &mut rng);
+        for (r, c) in fm.faulty_macs() {
+            hit[r * n + c] = true;
+        }
+    }
+    let misses = hit.iter().filter(|&&h| !h).count();
+    assert!(misses == 0, "{misses} MAC positions never faulted in 120 draws");
+}
+
+/// Detection cost grows ~logarithmically with grid size for a single
+/// fault (binary search), not linearly.
+#[test]
+fn prop_detect_cost_sublinear() {
+    prop::check("detect_cost", 0xC4, 6, |rng| {
+        let small = inject_uniform(FaultSpec::new(8), 1, rng);
+        let big = inject_uniform(FaultSpec::new(64), 1, rng);
+        let rs = detect::localize_from_map(&small, Default::default());
+        let rb = detect::localize_from_map(&big, Default::default());
+        // 8x more rows but only ~2x the probes (log2 8=3 -> log2 64=6)
+        prop_assert!(
+            rb.array_runs <= rs.array_runs * 4,
+            "cost scaled poorly: {} -> {}",
+            rs.array_runs,
+            rb.array_runs
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,133 @@
+//! Property tests over the weight↔MAC mapping and mask synthesis.
+
+use repro::faults::{inject_uniform, FaultMap, FaultSpec, StuckAt};
+use repro::mapping::{conv_mac_of, fc_mac_of, LayerMasks, MaskKind};
+use repro::model::arch;
+use repro::prop_assert;
+use repro::util::{prop, Rng};
+
+fn random_fault_map(rng: &mut Rng, n: usize, max_faults: usize) -> FaultMap {
+    let k = rng.below(max_faults + 1).min(n * n);
+    inject_uniform(FaultSpec::new(n), k, rng)
+}
+
+/// Every pruned weight maps to a faulty MAC and vice versa (FC layers).
+#[test]
+fn prop_fc_prune_mask_iff_faulty() {
+    prop::check("fc_prune_iff_faulty", 0xB1, 30, |rng| {
+        let n = 2 + rng.below(16);
+        let fm = random_fault_map(rng, n, 12);
+        let din = 1 + rng.below(60);
+        let dout = 1 + rng.below(60);
+        let mask = repro::mapping::fc_prune_mask(&fm, din, dout);
+        for k in 0..din {
+            for j in 0..dout {
+                let (r, c) = fc_mac_of(k, j, n);
+                let pruned = mask[k * dout + j] == 0.0;
+                prop_assert!(
+                    pruned == fm.is_faulty(r, c),
+                    "({k},{j}) -> MAC ({r},{c}): pruned={pruned}, faulty={}",
+                    fm.is_faulty(r, c)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Conv masks are tap-uniform: mask value is identical across all (ky,kx)
+/// for a given channel pair — the paper's whole-channel pruning.
+#[test]
+fn prop_conv_mask_tap_uniform() {
+    prop::check("conv_mask_tap_uniform", 0xB2, 25, |rng| {
+        let n = 2 + rng.below(12);
+        let fm = random_fault_map(rng, n, 10);
+        let (kh, kw) = (1 + rng.below(5), 1 + rng.below(5));
+        let din = 1 + rng.below(24);
+        let dout = 1 + rng.below(24);
+        let mask = repro::mapping::conv_prune_mask(&fm, kh, kw, din, dout);
+        for di in 0..din {
+            for do_ in 0..dout {
+                let v0 = mask[di * dout + do_];
+                for t in 1..kh * kw {
+                    prop_assert!(
+                        mask[t * din * dout + di * dout + do_] == v0,
+                        "tap {t} differs at channel pair ({di},{do_})"
+                    );
+                }
+                let (r, c) = conv_mac_of(di, do_, n);
+                prop_assert!((v0 == 0.0) == fm.is_faulty(r, c), "channel ({di},{do_})");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// LayerMasks invariants across a whole architecture: prune ⟺ bypass
+/// (FAP), and the int fault masks agree with the physical map.
+#[test]
+fn prop_layer_masks_consistent() {
+    prop::check("layer_masks_consistent", 0xB3, 12, |rng| {
+        let n = 4 + rng.below(29);
+        let fm = random_fault_map(rng, n, 20);
+        let a = match rng.below(3) {
+            0 => arch::mnist(),
+            1 => arch::timit(false),
+            _ => arch::alexnet32(),
+        };
+        let m = LayerMasks::build(&a, &fm, MaskKind::FapBypass);
+        prop_assert!(m.prune.len() == a.num_weighted(), "mask count");
+        for l in 0..m.prune.len() {
+            for i in 0..m.prune[l].len() {
+                let pruned = m.prune[l][i] == 0.0;
+                let bypassed = m.bypass[l][i] == 1;
+                let faulty = m.and_m[l][i] != -1 || m.or_m[l][i] != 0;
+                prop_assert!(pruned == bypassed, "layer {l} idx {i}: prune vs bypass");
+                prop_assert!(pruned == faulty, "layer {l} idx {i}: prune vs fault mask");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pruned fraction for dimension-aligned layers equals the fault rate
+/// exactly; unaligned layers stay within a mask-period bound.
+#[test]
+fn prop_pruned_fraction_bounds() {
+    prop::check("pruned_fraction_bounds", 0xB4, 20, |rng| {
+        let n = 2 + rng.below(14);
+        let fm = random_fault_map(rng, n, n * n / 2);
+        let rate = fm.fault_rate();
+        // aligned: multiples of n
+        let din = n * (1 + rng.below(4));
+        let dout = n * (1 + rng.below(4));
+        let frac = repro::mapping::fc::fc_pruned_fraction(&fm, din, dout);
+        prop_assert!((frac - rate).abs() < 1e-9, "aligned frac {frac} != rate {rate}");
+        Ok(())
+    });
+}
+
+/// Masks are deterministic functions of the fault map.
+#[test]
+fn prop_masks_deterministic() {
+    prop::check("masks_deterministic", 0xB5, 10, |rng| {
+        let n = 2 + rng.below(12);
+        let mut faults = Vec::new();
+        for _ in 0..rng.below(8) {
+            faults.push(StuckAt {
+                row: rng.below(n) as u16,
+                col: rng.below(n) as u16,
+                bit: rng.below(32) as u8,
+                value: rng.bool(0.5),
+            });
+        }
+        let fm1 = FaultMap::from_faults(n, faults.clone());
+        let fm2 = FaultMap::from_faults(n, faults);
+        let a = arch::mnist();
+        let m1 = LayerMasks::build(&a, &fm1, MaskKind::FapBypass);
+        let m2 = LayerMasks::build(&a, &fm2, MaskKind::FapBypass);
+        prop_assert!(m1.prune == m2.prune, "prune masks differ");
+        prop_assert!(m1.and_m == m2.and_m && m1.or_m == m2.or_m, "fault masks differ");
+        Ok(())
+    });
+}

@@ -1,0 +1,168 @@
+//! Property tests over the systolic substrate (in-repo harness — the
+//! offline registry has no proptest; see rust/src/util/prop.rs).
+
+use repro::faults::{FaultMap, StuckAt};
+use repro::prop_assert;
+use repro::systolic::{SystolicArray, TiledMatmul};
+use repro::util::{prop, Rng};
+
+fn random_fault_map(rng: &mut Rng, n: usize, max_faults: usize) -> FaultMap {
+    let mut fm = FaultMap::healthy(n);
+    for _ in 0..rng.below(max_faults + 1) {
+        fm.add(StuckAt {
+            row: rng.below(n) as u16,
+            col: rng.below(n) as u16,
+            bit: rng.below(32) as u8,
+            value: rng.bool(0.5),
+        });
+    }
+    fm
+}
+
+/// Healthy array == exact integer matmul (wrapping).
+#[test]
+fn prop_healthy_array_is_matmul() {
+    prop::check("healthy_array_is_matmul", 0xA1, 40, |rng| {
+        let n = 1 + rng.below(10);
+        let k = 1 + rng.below(n);
+        let cols = 1 + rng.below(n);
+        let batch = 1 + rng.below(5);
+        let mut arr = SystolicArray::healthy(n);
+        let w: Vec<i32> = (0..k * cols).map(|_| rng.below(255) as i32 - 127).collect();
+        arr.load_weights(&w, k, cols);
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let got = arr.matmul(&a, batch, k, cols);
+        for b in 0..batch {
+            for c in 0..cols {
+                let want: i32 = (0..k)
+                    .map(|r| a[b * k + r].wrapping_mul(w[r * cols + c]))
+                    .fold(0i32, |acc, v| acc.wrapping_add(v));
+                prop_assert!(
+                    got[b * cols + c] == want,
+                    "({b},{c}): {} != {want}",
+                    got[b * cols + c]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cycle-accurate mode computes the same values as the functional mode,
+/// for any fault pattern, and drains in (K-1)+(C-1)+B cycles.
+#[test]
+fn prop_cycle_accurate_equals_functional() {
+    prop::check("cycle_accurate_equals_functional", 0xA2, 30, |rng| {
+        let n = 2 + rng.below(8);
+        let k = 1 + rng.below(n);
+        let cols = 1 + rng.below(n);
+        let batch = 1 + rng.below(6);
+        let fm = random_fault_map(rng, n, 6);
+        let mut arr = SystolicArray::with_faults(&fm);
+        if rng.bool(0.5) {
+            arr.bypass_faulty();
+        }
+        let w: Vec<i32> = (0..k * cols).map(|_| rng.below(255) as i32 - 127).collect();
+        arr.load_weights(&w, k, cols);
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let f = arr.matmul(&a, batch, k, cols);
+        let (c, cycles) = arr.matmul_cycle_accurate(&a, batch, k, cols);
+        prop_assert!(f == c, "values diverge (n={n} k={k} cols={cols} b={batch})");
+        let expect = (k - 1 + cols - 1 + batch) as u64;
+        prop_assert!(cycles == expect, "cycles {cycles} != {expect}");
+        Ok(())
+    });
+}
+
+/// FAP invariant (paper §5.1): bypassing every faulty MAC makes the faulty
+/// array compute exactly the pruned-weight matmul on a healthy array.
+#[test]
+fn prop_fap_bypass_equals_pruned_weights() {
+    prop::check("fap_bypass_equals_pruned", 0xA3, 30, |rng| {
+        let n = 2 + rng.below(6);
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        let batch = 1 + rng.below(4);
+        let fm = random_fault_map(rng, n, 8);
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+
+        let mut fap = TiledMatmul::new(&fm, true);
+        let got = fap.matmul(&a, &w, batch, k, m);
+
+        let mut wp = w.clone();
+        for r in 0..k {
+            for c in 0..m {
+                if fm.is_faulty(r % n, c % n) {
+                    wp[r * m + c] = 0;
+                }
+            }
+        }
+        let mut healthy = TiledMatmul::new(&FaultMap::healthy(n), false);
+        let want = healthy.matmul(&a, &wp, batch, k, m);
+        prop_assert!(got == want, "FAP != pruned (n={n} k={k} m={m})");
+        Ok(())
+    });
+}
+
+/// The paper's counter-claim: loading zero weights into faulty MACs (no
+/// bypass) is NOT equivalent to pruning whenever a stuck bit actually
+/// flips an accumulator bit on some input.
+#[test]
+fn prop_zero_weight_differs_from_bypass_for_stuck_at_1() {
+    prop::check("zero_weight_not_bypass", 0xA4, 25, |rng| {
+        let n = 2 + rng.below(6);
+        let r = rng.below(n);
+        let c = rng.below(n);
+        // stuck-at-1 on a high bit is always observable on a zero sum
+        let fm = FaultMap::from_faults(
+            n,
+            [StuckAt { row: r as u16, col: c as u16, bit: 28 + rng.below(3) as u8, value: true }],
+        );
+        let k = n; // single pass
+        let batch = 1 + rng.below(3);
+        // non-negative operands keep partial sums small and positive, so a
+        // high stuck-at-1 bit is guaranteed observable (with signed inputs
+        // a negative passing sum can already have the bit set — the fault
+        // is then silent on that input, which is fine for hardware but
+        // would make this property flaky)
+        let mut w = vec![0i32; k * n];
+        for i in 0..k {
+            for j in 0..n {
+                w[i * n + j] = rng.below(128) as i32;
+            }
+        }
+        w[r * n + c] = 0; // "prune" by zero weight
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(128) as i32).collect();
+
+        let mut no_byp = TiledMatmul::new(&fm, false);
+        let zero_weight = no_byp.matmul(&a, &w, batch, k, n);
+        let mut healthy = TiledMatmul::new(&FaultMap::healthy(n), false);
+        let pruned = healthy.matmul(&a, &w, batch, k, n);
+        prop_assert!(
+            zero_weight != pruned,
+            "stuck-at-1 bit {} at ({r},{c}) was silent with zero weight",
+            fm.faults()[0].bit
+        );
+        Ok(())
+    });
+}
+
+/// Tiling invariance for healthy arrays: any array size computes the same
+/// logical matmul.
+#[test]
+fn prop_tiling_invariant_for_healthy_arrays() {
+    prop::check("tiling_invariance", 0xA5, 25, |rng| {
+        let k = 1 + rng.below(30);
+        let m = 1 + rng.below(30);
+        let batch = 1 + rng.below(4);
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+        let n1 = 1 + rng.below(8);
+        let n2 = 1 + rng.below(16);
+        let r1 = TiledMatmul::new(&FaultMap::healthy(n1), false).matmul(&a, &w, batch, k, m);
+        let r2 = TiledMatmul::new(&FaultMap::healthy(n2), false).matmul(&a, &w, batch, k, m);
+        prop_assert!(r1 == r2, "n={n1} vs n={n2} differ on healthy arrays");
+        Ok(())
+    });
+}
