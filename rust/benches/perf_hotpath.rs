@@ -1,28 +1,132 @@
 //! Bench: the performance-critical paths across all three layers, tracked
-//! by EXPERIMENTS.md §Perf.
+//! by EXPERIMENTS.md §Perf and `BENCH_exec.json`.
 //!
+//! * Exec engine: compiled chip-plan executor vs the naive PE-chain
+//!   simulator on the paper's 256×256 array, across a fault-rate sweep,
+//!   single- and multi-threaded (MAC/s + speedup, emitted as
+//!   `BENCH_exec.json` so the perf trajectory is tracked PR over PR).
 //! * L3 sim: functional systolic matmul (MAC/s) — target ≥100M MAC/s/core.
 //! * L3 masks: LayerMasks synthesis for the TIMIT model on a 256 grid.
-//! * RT: PJRT fwd latency/throughput (mnist + timit), train-step latency,
-//!   and the scan-fused multi-step training artifact vs N single steps.
+//! * RT (needs `artifacts/`): PJRT fwd latency/throughput (mnist + timit),
+//!   train-step latency, and the scan-fused multi-step training artifact
+//!   vs N single steps. Skipped with a notice when artifacts are absent.
 
 use repro::coordinator::trainer::{ones_masks, train_step, TrainState};
 use repro::data;
+use repro::exec::{default_threads, MatmulPlan};
 use repro::faults::{inject_uniform, FaultSpec};
 use repro::mapping::{LayerMasks, MaskKind};
 use repro::model::arch;
 use repro::runtime::{lit_f32, lit_i32, scalar_f32, Runtime};
 use repro::systolic::{timing, TiledMatmul};
 use repro::util::bench;
+use repro::util::json::Json;
 use repro::util::Rng;
+
+/// Naive-vs-plan sweep on the paper's 256×256 array; records MAC/s and
+/// speedups (single- and multi-thread) in `BENCH_exec.json`.
+fn bench_exec_engine(rng: &mut Rng) -> anyhow::Result<()> {
+    println!("# exec engine: compiled plan vs naive PE-chain (n=256)");
+    let n = 256;
+    let (b, k, m) = (64usize, 512usize, 512usize);
+    let macs = timing::mac_ops(b, k, m);
+    let threads = default_threads().max(4);
+    let a: Vec<i32> = (0..b * k).map(|_| rng.below(255) as i32 - 127).collect();
+    let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+
+    let mut results = Vec::new();
+    // fault counts over the 65536-MAC grid: 0%, ~0.4%, 6.25%, 25%
+    for &faults in &[0usize, 256, 4096, 16384] {
+        let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(97 ^ faults as u64));
+        for (kind, label) in [
+            (MaskKind::Unmitigated, "unmitigated"),
+            (MaskKind::FapBypass, "fap-bypass"),
+        ] {
+            // the bypass scenario only differs once there are faults
+            if faults == 0 && kind == MaskKind::FapBypass {
+                continue;
+            }
+            let byp = kind == MaskKind::FapBypass;
+            let mut tm = TiledMatmul::new(&fm, byp);
+            let mut out = vec![0i32; b * m];
+            let naive = bench::bench(
+                &format!("naive chain ({faults} faults, {label})"),
+                1,
+                3,
+                || {
+                    tm.matmul_into(&a, &w, b, k, m, &mut out);
+                    bench::black_box(&mut out);
+                },
+            );
+            naive.report_throughput(macs, "MAC");
+
+            let plan = MatmulPlan::compile(&fm, kind, &w, k, m);
+            let single = bench::bench(
+                &format!("plan x1 thread ({faults} faults, {label})"),
+                2,
+                10,
+                || {
+                    plan.execute_into(&a, b, &mut out);
+                    bench::black_box(&mut out);
+                },
+            );
+            single.report_throughput(macs, "MAC");
+            let multi = bench::bench(
+                &format!("plan x{threads} threads ({faults} faults, {label})"),
+                2,
+                10,
+                || {
+                    plan.execute_threaded_into(&a, b, threads, &mut out);
+                    bench::black_box(&mut out);
+                },
+            );
+            multi.report_throughput(macs, "MAC");
+
+            let speedup_single =
+                naive.median.as_secs_f64() / single.median.as_secs_f64().max(1e-12);
+            let speedup_multi = naive.median.as_secs_f64() / multi.median.as_secs_f64().max(1e-12);
+            let stats = plan.stats();
+            println!(
+                "  -> speedup x1={speedup_single:.1} x{threads}={speedup_multi:.1} \
+                 (dense {} / folded {} / chain {} cols)",
+                stats.dense_cols, stats.folded_cols, stats.chain_cols
+            );
+            results.push(
+                Json::obj()
+                    .field("faulty_macs", Json::num(faults as f64))
+                    .field("mitigation", Json::str(label))
+                    .field("threads", Json::num(threads as f64))
+                    .field("macs", Json::num(macs as f64))
+                    .field("naive", naive.to_json())
+                    .field("plan_single", single.to_json())
+                    .field("plan_threaded", multi.to_json())
+                    .field("naive_macs_per_s", Json::num(naive.throughput(macs)))
+                    .field("plan_single_macs_per_s", Json::num(single.throughput(macs)))
+                    .field("plan_threaded_macs_per_s", Json::num(multi.throughput(macs)))
+                    .field("speedup_single", Json::num(speedup_single))
+                    .field("speedup_threaded", Json::num(speedup_multi)),
+            );
+        }
+    }
+    let meta = Json::obj()
+        .field("array_n", Json::num(n as f64))
+        .field("batch", Json::num(b as f64))
+        .field("k", Json::num(k as f64))
+        .field("m", Json::num(m as f64))
+        .field("threads", Json::num(threads as f64));
+    bench::write_bench_json("BENCH_exec.json", "exec_plan_vs_naive", meta, results)?;
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     println!("## bench perf_hotpath\n");
-    let rt = Runtime::new("artifacts")?;
     let mut rng = Rng::new(51);
 
+    // ---- exec engine: plan compiler + blocked GEMM core (no PJRT needed)
+    bench_exec_engine(&mut rng)?;
+
     // ---- L3: cycle-level simulator hot loop -------------------------------
-    println!("# L3 simulator");
+    println!("\n# L3 simulator");
     let n = 64;
     let (b, k, m) = (32, 512, 256);
     let fm = inject_uniform(FaultSpec::new(n), 200, &mut rng);
@@ -52,7 +156,15 @@ fn main() -> anyhow::Result<()> {
     let weights: usize = timit.weighted_layers().iter().map(|l| l.weight_len()).sum();
     r.report_throughput(weights as u64, "weight");
 
-    // ---- RT: PJRT inference ------------------------------------------------
+    // ---- RT: PJRT benches (need compiled artifacts) ------------------------
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\n(skipping PJRT runtime benches: {e})");
+            return Ok(());
+        }
+    };
+
     println!("\n# PJRT runtime");
     for name in ["mnist", "timit"] {
         let a = arch::by_name(name).unwrap();

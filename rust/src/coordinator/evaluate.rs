@@ -7,8 +7,13 @@
 //!   the chip's fault masks live (Fig 2 unmitigated baseline, MLPs only).
 //! * [`Evaluator::faulty_activations`] — per-layer pre-activations of the
 //!   faulty path (Fig 2b scatter).
+//!
+//! Campaign callers should prefer [`Evaluator::accuracy_planned`], which
+//! takes a compiled [`crate::exec::ChipPlan`] so the per-layer masks are
+//! synthesized once per chip instead of once per evaluation.
 
 use crate::data::Dataset;
+use crate::exec::ChipPlan;
 use crate::mapping::LayerMasks;
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Params};
@@ -128,6 +133,22 @@ impl<'rt> Evaluator<'rt> {
             total += batch.valid;
         }
         Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// [`Evaluator::accuracy_faulty`] driven by a compiled [`ChipPlan`]:
+    /// the masks were synthesized exactly once at plan-compile time, so a
+    /// campaign that revisits the chip (sweep points, seeds, retrain
+    /// epochs) pays no per-call mask expansion.
+    pub fn accuracy_planned(
+        &self,
+        arch: &Arch,
+        params: &Params,
+        plan: &ChipPlan,
+        calib: &Calibration,
+        data: &Dataset,
+        use_pallas_artifact: bool,
+    ) -> Result<f64> {
+        self.accuracy_faulty(arch, params, plan.masks(), calib, data, use_pallas_artifact)
     }
 
     /// Per-layer pre-activations of the faulty path on one batch

@@ -8,13 +8,14 @@
 //! recorded run). `--paper-scale` lifts the reductions.
 
 use super::evaluate::Evaluator;
-use super::fap::apply_fap;
+use super::fap::apply_fap_planned;
 use super::fapt::{fapt_retrain, FaptConfig};
 use super::report::{mean_std, print_table, write_csv, write_json};
 use super::trainer::{train_baseline, TrainConfig};
 use crate::data;
+use crate::exec::PlanCache;
 use crate::faults::{inject_uniform, FaultSpec};
-use crate::mapping::{LayerMasks, MaskKind};
+use crate::mapping::MaskKind;
 use crate::model::quant::{calibrate_mlp, Calibration};
 use crate::model::{arch, Arch, Params};
 use crate::runtime::Runtime;
@@ -68,11 +69,21 @@ pub struct Harness<'rt> {
     rt: &'rt Runtime,
     pub cfg: HarnessConfig,
     bundles: HashMap<String, ModelBundle>,
+    /// Compile-once chip-plan cache: each `(arch, fault map, mitigation)`
+    /// triple is lowered exactly once and reused across every sweep point,
+    /// seed and retrain epoch that touches the same chip.
+    plans: PlanCache,
 }
 
 impl<'rt> Harness<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: HarnessConfig) -> Self {
-        Harness { rt, cfg, bundles: HashMap::new() }
+        Harness { rt, cfg, bundles: HashMap::new(), plans: PlanCache::new() }
+    }
+
+    /// Plan-cache statistics `(cached plans, hits, misses)` — campaign
+    /// diagnostics surfaced after `run`.
+    pub fn plan_cache_stats(&self) -> (usize, usize, usize) {
+        (self.plans.len(), self.plans.hits(), self.plans.misses())
     }
 
     fn train_config(&self, name: &str) -> (usize, usize, TrainConfig) {
@@ -194,9 +205,11 @@ impl<'rt> Harness<'rt> {
                     let mut rng =
                         Rng::new(self.cfg.seed ^ (k as u64) << 16 ^ rep as u64);
                     let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
-                    let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+                    // compile the chip once; any later experiment touching
+                    // the same fault map reuses the plan from the cache
+                    let plan = self.plans.get_or_compile(&a, &fm, MaskKind::Unmitigated);
                     let acc =
-                        ev.accuracy_faulty(&a, &params, &masks, &calib, &test, false)?;
+                        ev.accuracy_planned(&a, &params, &plan, &calib, &test, false)?;
                     accs.push(acc);
                     if k == 0 {
                         break; // no randomness at zero faults
@@ -250,15 +263,15 @@ impl<'rt> Harness<'rt> {
         let valid = batch.valid.min(64); // paper scatters a sample subset
 
         let healthy = crate::faults::FaultMap::healthy(n);
-        let golden_masks = LayerMasks::build(&a, &healthy, MaskKind::Unmitigated);
+        let golden_plan = self.plans.get_or_compile(&a, &healthy, MaskKind::Unmitigated);
         let golden =
-            ev.faulty_activations(&a, &params, &golden_masks, &calib, &batch.x, valid)?;
+            ev.faulty_activations(&a, &params, golden_plan.masks(), &calib, &batch.x, valid)?;
 
         let mut rng = Rng::new(self.cfg.seed ^ 0xF16_2B);
         let fm = inject_uniform(FaultSpec::new(n), 8, &mut rng);
-        let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
+        let plan = self.plans.get_or_compile(&a, &fm, MaskKind::Unmitigated);
         let faulty =
-            ev.faulty_activations(&a, &params, &masks, &calib, &batch.x, valid)?;
+            ev.faulty_activations(&a, &params, plan.masks(), &calib, &batch.x, valid)?;
 
         // paper plots layer 3 (the last hidden layer) of the TIMIT MLP
         let layer = 2usize;
@@ -335,7 +348,10 @@ impl<'rt> Harness<'rt> {
                     );
                     let k = (rate * (n * n) as f64).round() as usize;
                     let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
-                    let (fap_params, masks, _rep) = apply_fap(&a, &baseline, &fm);
+                    // one plan per chip: FAP pruning and every FAP+T
+                    // retrain epoch reuse the same compiled masks
+                    let plan = self.plans.get_or_compile(&a, &fm, MaskKind::FapBypass);
+                    let (fap_params, _rep) = apply_fap_planned(&baseline, &plan);
                     fap_accs.push(ev.accuracy(&a, &fap_params, &test)?);
                     let fcfg = FaptConfig {
                         max_epochs: retrain_epochs,
@@ -343,7 +359,14 @@ impl<'rt> Harness<'rt> {
                         seed: self.cfg.seed ^ rep as u64,
                         snapshot_epochs: vec![],
                     };
-                    let res = fapt_retrain(self.rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
+                    let res = fapt_retrain(
+                        self.rt,
+                        &a,
+                        &fap_params,
+                        &plan.masks().prune,
+                        &train,
+                        &fcfg,
+                    )?;
                     fapt_accs.push(ev.accuracy(&a, &res.params, &test)?);
                 }
                 let (fm_, fs_) = mean_std(&fap_accs);
@@ -420,7 +443,8 @@ impl<'rt> Harness<'rt> {
             let mut rng = Rng::new(self.cfg.seed ^ 0xF165);
             let k = (rate * (n * n) as f64).round() as usize;
             let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
-            let (fap_params, masks, _) = apply_fap(&a, &baseline, &fm);
+            let plan = self.plans.get_or_compile(&a, &fm, MaskKind::FapBypass);
+            let (fap_params, _) = apply_fap_planned(&baseline, &plan);
             let fap_acc = ev.accuracy(&a, &fap_params, &test)?;
 
             let fcfg = FaptConfig {
@@ -429,7 +453,8 @@ impl<'rt> Harness<'rt> {
                 seed: self.cfg.seed,
                 snapshot_epochs: (1..=max_epochs).collect(),
             };
-            let res = fapt_retrain(self.rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
+            let res =
+                fapt_retrain(self.rt, &a, &fap_params, &plan.masks().prune, &train, &fcfg)?;
 
             let mut series = vec![Json::obj()
                 .field("epoch", Json::num(0))
@@ -552,6 +577,10 @@ impl<'rt> Harness<'rt> {
             }
             other => bail!("unknown experiment id {other:?} \
                 (use table1|fig2a|fig2b|fig4a|fig4b|fig5a|fig5b|synthesis|all)"),
+        }
+        let (plans, hits, misses) = self.plan_cache_stats();
+        if plans > 0 {
+            eprintln!("[plans] {plans} compiled chip plans, {hits} cache hits, {misses} misses");
         }
         Ok(())
     }

@@ -5,6 +5,7 @@
 //! nothing, and at the algorithm level that is exactly a zero weight. No
 //! retraining, no run-time overhead.
 
+use crate::exec::ChipPlan;
 use crate::faults::FaultMap;
 use crate::mapping::{LayerMasks, MaskKind};
 use crate::model::{Arch, Params};
@@ -26,10 +27,23 @@ impl FapReport {
 
 /// Apply FAP: returns the pruned parameters, the masks used (for FAP+T or
 /// the faulty-path artifacts), and a report.
+///
+/// Convenience wrapper that compiles a throwaway [`ChipPlan`]; campaigns
+/// that revisit the same chip should compile the plan once (or fetch it
+/// from a [`crate::exec::PlanCache`]) and call [`apply_fap_planned`].
 pub fn apply_fap(arch: &Arch, params: &Params, fm: &FaultMap) -> (Params, LayerMasks, FapReport) {
-    let masks = LayerMasks::build(arch, fm, MaskKind::FapBypass);
+    let plan = ChipPlan::compile(arch, fm, MaskKind::FapBypass);
+    let (pruned, report) = apply_fap_planned(params, &plan);
+    (pruned, plan.masks().clone(), report)
+}
+
+/// Apply FAP from an already-compiled chip plan: fold the plan's prune
+/// masks into the weights (no mask re-synthesis, no per-call expansion).
+pub fn apply_fap_planned(params: &Params, plan: &ChipPlan) -> (Params, FapReport) {
+    assert_eq!(plan.kind(), MaskKind::FapBypass, "FAP needs a bypass-mitigation plan");
+    let masks = plan.masks();
     let mut pruned = params.clone();
-    pruned.apply_masks(&masks.prune);
+    masks.fold_into_weights(&mut pruned);
 
     let total_weights: usize = masks.prune.iter().map(|m| m.len()).sum();
     let pruned_weights: usize = masks
@@ -38,12 +52,12 @@ pub fn apply_fap(arch: &Arch, params: &Params, fm: &FaultMap) -> (Params, LayerM
         .map(|m| m.iter().filter(|&&v| v == 0.0).count())
         .sum();
     let report = FapReport {
-        faulty_macs: fm.faulty_mac_count(),
-        fault_rate: fm.fault_rate(),
+        faulty_macs: plan.faulty_macs(),
+        fault_rate: plan.fault_rate(),
         pruned_weights,
         total_weights,
     };
-    (pruned, masks, report)
+    (pruned, report)
 }
 
 #[cfg(test)]
@@ -83,6 +97,21 @@ mod tests {
         assert!((rep.pruned_fraction() - 0.25).abs() < 0.02, "{}", rep.pruned_fraction());
         assert!((pruned.zero_weight_fraction() - rep.pruned_fraction()).abs() < 1e-9);
         assert_eq!(masks.prune.len(), 4);
+    }
+
+    #[test]
+    fn planned_fap_equals_adhoc_fap() {
+        let arch = mnist();
+        let p = unit_params(&arch);
+        let fm = inject_uniform(FaultSpec::new(16), 40, &mut Rng::new(9));
+        let (adhoc, _, rep1) = apply_fap(&arch, &p, &fm);
+        let plan = ChipPlan::compile(&arch, &fm, MaskKind::FapBypass);
+        let (planned, rep2) = apply_fap_planned(&p, &plan);
+        for ((w1, _), (w2, _)) in adhoc.layers.iter().zip(&planned.layers) {
+            assert_eq!(w1, w2);
+        }
+        assert_eq!(rep1.pruned_weights, rep2.pruned_weights);
+        assert_eq!(rep1.faulty_macs, rep2.faulty_macs);
     }
 
     #[test]

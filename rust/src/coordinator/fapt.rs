@@ -102,12 +102,18 @@ pub fn fapt_retrain(
 }
 
 /// Full per-chip provisioning flow (what a fab-line host would run):
-/// localize faults → FAP → FAP+T → return deployable model.
+/// localize faults → compile the chip plan → FAP → FAP+T → return
+/// deployable model. The compiled [`crate::exec::ChipPlan`] is the single
+/// artifact every downstream step (pruning, retrain masks, deployment)
+/// reads from.
 pub struct ProvisionOutcome {
     pub fault_map: FaultMap,
     pub detected: usize,
     pub fap_report: super::fap::FapReport,
     pub result: FaptResult,
+    /// The chip's compiled plan — ship it with the model; its fingerprint
+    /// pins the exact fault map the retrained weights were tuned for.
+    pub plan: crate::exec::ChipPlan,
 }
 
 pub fn provision_chip(
@@ -127,7 +133,9 @@ pub fn provision_chip(
         // canonical marker fault
         known.add(crate::faults::StuckAt { row: *r as u16, col: *c as u16, bit: 0, value: true });
     }
-    let (fap_params, masks, fap_report) = super::fap::apply_fap(arch, baseline, &known);
-    let result = fapt_retrain(rt, arch, &fap_params, &masks.prune, train, cfg)?;
-    Ok(ProvisionOutcome { fault_map: known, detected: det.faulty.len(), fap_report, result })
+    // compile once; FAP and every retrain epoch reuse the plan's masks
+    let plan = crate::exec::ChipPlan::compile(arch, &known, crate::mapping::MaskKind::FapBypass);
+    let (fap_params, fap_report) = super::fap::apply_fap_planned(baseline, &plan);
+    let result = fapt_retrain(rt, arch, &fap_params, &plan.masks().prune, train, cfg)?;
+    Ok(ProvisionOutcome { fault_map: known, detected: det.faulty.len(), fap_report, result, plan })
 }

@@ -12,6 +12,6 @@ pub mod report;
 pub mod trainer;
 
 pub use evaluate::Evaluator;
-pub use fap::apply_fap;
+pub use fap::{apply_fap, apply_fap_planned};
 pub use fapt::{fapt_retrain, FaptConfig};
 pub use trainer::{train_baseline, TrainConfig};

@@ -1,0 +1,144 @@
+//! Blocked i32 GEMM primitives for the plan executor.
+//!
+//! The datapath is wrapping int32 (the MAC accumulator wraps, never
+//! saturates), and wrapping addition is associative + commutative — so any
+//! summation order is bit-exact against the sequential PE chain. That
+//! freedom is what lets the executor run multi-lane dot products and shard
+//! batches across threads without diverging from the cycle-level oracle.
+//!
+//! Threading uses `std::thread::scope` (the vendored registry has no
+//! rayon): batches shard into contiguous row ranges, each thread owning a
+//! disjoint slice of the output, so no synchronization is needed beyond
+//! the scope join.
+
+/// Wrapping dot product, 4 independent lanes so LLVM can vectorize.
+///
+/// Lane order is free: wrapping i32 addition is associative, so the result
+/// is bit-identical to the sequential sum for every input.
+#[inline]
+pub fn dot_wrapping(a: &[i32], w: &[i32]) -> i32 {
+    debug_assert_eq!(a.len(), w.len());
+    let n4 = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    let mut j = 0;
+    while j < n4 {
+        s0 = s0.wrapping_add(a[j].wrapping_mul(w[j]));
+        s1 = s1.wrapping_add(a[j + 1].wrapping_mul(w[j + 1]));
+        s2 = s2.wrapping_add(a[j + 2].wrapping_mul(w[j + 2]));
+        s3 = s3.wrapping_add(a[j + 3].wrapping_mul(w[j + 3]));
+        j += 4;
+    }
+    let mut acc = s0.wrapping_add(s1).wrapping_add(s2).wrapping_add(s3);
+    while j < a.len() {
+        acc = acc.wrapping_add(a[j].wrapping_mul(w[j]));
+        j += 1;
+    }
+    acc
+}
+
+/// Number of worker threads the executor should use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Shard `batch` rows of `a` (row stride `k`) and `out` (row stride `m`)
+/// into up to `threads` contiguous chunks and run `f(a_chunk, out_chunk,
+/// rows)` on each, in parallel via `std::thread::scope`.
+///
+/// Each thread owns a disjoint `&mut` slice of `out`, so `f` needs no
+/// internal synchronization. With `threads <= 1` (or a single-row batch)
+/// `f` runs inline on the calling thread.
+pub fn for_each_batch_shard<F>(
+    a: &[i32],
+    k: usize,
+    out: &mut [i32],
+    m: usize,
+    batch: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(&[i32], &mut [i32], usize) + Sync,
+{
+    assert_eq!(a.len(), batch * k);
+    assert_eq!(out.len(), batch * m);
+    let t = threads.max(1).min(batch.max(1));
+    if t <= 1 || m == 0 {
+        f(a, out, batch);
+        return;
+    }
+    let shard = batch.div_ceil(t);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut a_rest = a;
+        let mut o_rest = out;
+        while !o_rest.is_empty() {
+            let rows = (o_rest.len() / m).min(shard);
+            let (a_chunk, ar) = a_rest.split_at(rows * k);
+            let (o_chunk, or) = std::mem::take(&mut o_rest).split_at_mut(rows * m);
+            a_rest = ar;
+            o_rest = or;
+            s.spawn(move || fref(a_chunk, o_chunk, rows));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot_matches_sequential() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 3, 4, 7, 8, 17, 256] {
+            let a: Vec<i32> = (0..len).map(|_| rng.below(1 << 16) as i32 - (1 << 15)).collect();
+            let w: Vec<i32> = (0..len).map(|_| rng.below(1 << 16) as i32 - (1 << 15)).collect();
+            let want = a
+                .iter()
+                .zip(&w)
+                .fold(0i32, |acc, (&x, &y)| acc.wrapping_add(x.wrapping_mul(y)));
+            assert_eq!(dot_wrapping(&a, &w), want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn dot_wraps_like_the_datapath() {
+        let a = vec![i32::MAX, i32::MAX];
+        let w = vec![2, 3];
+        let want = i32::MAX
+            .wrapping_mul(2)
+            .wrapping_add(i32::MAX.wrapping_mul(3));
+        assert_eq!(dot_wrapping(&a, &w), want);
+    }
+
+    #[test]
+    fn shards_cover_every_row_once() {
+        let (batch, k, m) = (13, 3, 2);
+        let a: Vec<i32> = (0..batch * k).map(|i| i as i32).collect();
+        let mut out = vec![0i32; batch * m];
+        for threads in [1usize, 2, 4, 16] {
+            out.fill(0);
+            for_each_batch_shard(&a, k, &mut out, m, batch, threads, |ac, oc, rows| {
+                assert_eq!(ac.len(), rows * k);
+                assert_eq!(oc.len(), rows * m);
+                for r in 0..rows {
+                    // tag each output row with its first activation
+                    oc[r * m] = ac[r * k];
+                    oc[r * m + 1] += 1;
+                }
+            });
+            for b in 0..batch {
+                assert_eq!(out[b * m], a[b * k], "threads={threads} row {b}");
+                assert_eq!(out[b * m + 1], 1, "row {b} visited once");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_batch_is_a_noop() {
+        let mut out: Vec<i32> = vec![];
+        for_each_batch_shard(&[], 4, &mut out, 3, 0, 8, |_, _, rows| {
+            assert_eq!(rows, 0);
+        });
+    }
+}

@@ -1,0 +1,33 @@
+//! Compiled chip-plan execution engine.
+//!
+//! The paper's evaluation is thousands of repeated faulty forward passes
+//! (fault-rate sweeps × seeds × archs). The cycle-level simulator in
+//! [`crate::systolic`] walks scalar PE chains per call — value-exact, but
+//! far too slow to be the campaign hot path. This layer treats the faulty
+//! chip as a *compile-once, run-many* target:
+//!
+//! 1. [`plan::MatmulPlan::compile`] lowers `(FaultMap, MaskKind, weights)`
+//!    into per-tile programs: pre-masked dense weight tiles for a blocked
+//!    i32 GEMM core, exact additive fault-correction constants where the
+//!    algebra allows, and straight-line chain programs for the few columns
+//!    a live fault forces off the GEMM core.
+//! 2. [`gemm`] executes the dense part with cache blocking and
+//!    batch-sharded multi-threading (`std::thread::scope`; the vendored
+//!    registry has no rayon). Wrapping i32 arithmetic keeps every
+//!    reordering bit-exact with the sequential PE chain, which stays in
+//!    the tree as the correctness oracle (see `rust/tests/proptest_exec.rs`).
+//! 3. [`plan::ChipPlan`] bundles per-layer masks + tile programs for a
+//!    whole network, and [`plan::PlanCache`] reuses compiled plans across
+//!    sweep points, seeds and retrain epochs, keyed by the fault map's
+//!    fingerprint so a new fault map can never execute a stale plan.
+//!
+//! New dataflows and mitigations plug in here: add a lowering rule in
+//! [`plan`] and every campaign inherits it.
+
+pub mod gemm;
+pub mod plan;
+
+pub use gemm::{default_threads, dot_wrapping, for_each_batch_shard};
+pub use plan::{
+    quantize_mlp_weights, ChipPlan, ExecScratch, MatmulPlan, PlanCache, PlanStats, TileProgram,
+};

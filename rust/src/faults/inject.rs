@@ -3,6 +3,13 @@
 //! stuck-at faults at uniformly random bit positions and polarities
 //! (paper §4 / §6.1: "faults injected in different locations, picked
 //! uniformly at random", repeated per seed).
+//!
+//! Every injection produces a *new chip*: the returned [`FaultMap`] has a
+//! fresh content [`FaultMap::fingerprint`], which structurally invalidates
+//! every execution plan compiled against earlier maps — a
+//! [`crate::exec::ChipPlan`] records the fingerprint it was lowered from
+//! and [`crate::exec::PlanCache`] keys on it, so a stale plan can never be
+//! silently reused after a sweep injects the next fault map.
 
 use super::model::{FaultMap, StuckAt};
 use crate::util::Rng;
@@ -154,6 +161,27 @@ mod tests {
         let mut rng = Rng::new(4);
         let fm = inject_clustered(FaultSpec::new(32), 50, 3, &mut rng);
         assert_eq!(fm.faulty_mac_count(), 50);
+    }
+
+    #[test]
+    fn injected_maps_invalidate_compiled_plans() {
+        use crate::exec::ChipPlan;
+        use crate::mapping::MaskKind;
+        use crate::model::arch::mnist;
+
+        let arch = mnist();
+        let fm1 = inject_uniform(FaultSpec::new(16), 10, &mut Rng::new(21));
+        let plan = ChipPlan::compile(&arch, &fm1, MaskKind::FapBypass);
+        assert!(plan.matches(&fm1));
+        // a new injection is a new chip, even at the same fault count/seed
+        // stream position — the plan compiled for fm1 must not apply
+        let fm2 = inject_uniform(FaultSpec::new(16), 10, &mut Rng::new(22));
+        assert_ne!(fm1.fingerprint(), fm2.fingerprint());
+        assert!(!plan.matches(&fm2));
+        // re-running the identical campaign point reproduces the chip, so
+        // the plan stays valid (what PlanCache relies on)
+        let fm1_again = inject_uniform(FaultSpec::new(16), 10, &mut Rng::new(21));
+        assert!(plan.matches(&fm1_again));
     }
 
     #[test]

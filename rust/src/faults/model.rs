@@ -115,6 +115,21 @@ impl FaultMap {
         let idx = row * self.n + col;
         (acc & self.and_mask[idx]) | self.or_mask[idx]
     }
+
+    /// Content fingerprint of the fault map (FNV-1a over the dense masks).
+    ///
+    /// Two maps with identical datapath behaviour hash equal regardless of
+    /// the order faults were added in. Compiled execution plans
+    /// ([`crate::exec::ChipPlan`]) record this value, so a *new* fault map
+    /// — a different chip — can never silently reuse a stale plan.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ (self.n as u64);
+        for (&a, &o) in self.and_mask.iter().zip(&self.or_mask) {
+            h ^= (a as u32 as u64) | ((o as u32 as u64) << 32);
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -195,5 +210,21 @@ mod tests {
     #[should_panic]
     fn out_of_range_fault_rejected() {
         FaultMap::from_faults(2, [StuckAt { row: 2, col: 0, bit: 0, value: true }]);
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let f1 = StuckAt { row: 1, col: 2, bit: 5, value: true };
+        let f2 = StuckAt { row: 3, col: 0, bit: 9, value: false };
+        let a = FaultMap::from_faults(4, [f1, f2]);
+        let b = FaultMap::from_faults(4, [f2, f1]); // insertion order free
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = FaultMap::from_faults(4, [f1]);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // same masks on a different grid size are a different chip
+        assert_ne!(
+            FaultMap::healthy(4).fingerprint(),
+            FaultMap::healthy(8).fingerprint()
+        );
     }
 }

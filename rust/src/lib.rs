@@ -18,6 +18,12 @@
 //!   parameter store and int8 quantization calibration.
 //! * [`data`] — procedural datasets standing in for MNIST / TIMIT / VOC
 //!   (see DESIGN.md "substitutions").
+//! * [`exec`] — the compiled chip-plan execution engine: lowers one
+//!   `(Arch, FaultMap, mitigation)` triple into immutable per-layer tile
+//!   programs (fault semantics folded into pre-masked weights, additive
+//!   corrections, or chain programs) executed by a blocked, batch-sharded
+//!   multi-threaded i32 GEMM core. Campaigns compile a chip once and run
+//!   it many times; the cycle-level [`systolic`] path is the oracle.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); Python never runs at request time.
 //! * [`coordinator`] — the paper's contribution: baseline training, fault
@@ -29,6 +35,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod faults;
 pub mod mapping;
 pub mod model;

@@ -6,6 +6,8 @@
 //! repro train --model mnist [--steps N]      train + eval a baseline
 //! repro provision --model mnist --faults K   full per-chip flow:
 //!                                            inject -> detect -> FAP+T
+//! repro plan --model mnist --faults K        compile + execute a chip plan
+//!                                            natively (no artifacts)
 //! repro detect --faults K [--n N]            fault localization demo
 //! repro synthesis                            synthesis + yield model
 //! repro smoke                                artifact round-trip checks
@@ -21,10 +23,13 @@ use repro::coordinator::evaluate::Evaluator;
 use repro::coordinator::fapt::{provision_chip, FaptConfig};
 use repro::coordinator::trainer::{train_baseline, TrainConfig};
 use repro::data;
+use repro::exec::{default_threads, ChipPlan, ExecScratch};
 use repro::faults::{detect, inject_uniform, FaultSpec};
-use repro::model::arch;
+use repro::mapping::MaskKind;
+use repro::model::quant::calibrate_mlp;
+use repro::model::{arch, Params};
 use repro::runtime::Runtime;
-use repro::systolic::SystolicArray;
+use repro::systolic::{SystolicArray, TiledMatmul};
 use repro::util::Rng;
 use std::collections::HashMap;
 
@@ -163,6 +168,80 @@ fn main() -> Result<()> {
             println!("  FAP+T accuracy       : {:.2}%  ({:.1}s/epoch)",
                 fapt_acc * 100.0, out.result.secs_per_epoch);
         }
+        "plan" => {
+            // Native chip-plan dry-run: quantize an MLP, compile the
+            // (arch, fault map, mitigation) plans, execute them through the
+            // blocked GEMM core and cross-check against the cycle-exact
+            // simulator. Needs no artifacts — this is the path a host uses
+            // to vet a chip's plan before deployment.
+            let model = args.get("model").unwrap_or("mnist");
+            let a = arch::by_name(model).context("unknown model")?;
+            anyhow::ensure!(a.is_mlp(), "plan needs an MLP arch (mnist|timit), got {model}");
+            let n = args.usize("array-n", 256)?;
+            let faults = args.usize("faults", 4096)?;
+            let seed = args.u64("seed", 42)?;
+            let batch = args.usize("batch", 64)?;
+            let threads = args.usize("threads", default_threads())?;
+
+            let mut rng = Rng::new(seed);
+            let mut params = Params::zeros_like(&a);
+            for (w, b) in &mut params.layers {
+                w.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
+                b.iter_mut().for_each(|v| *v = rng.normal() * 0.01);
+            }
+            let x: Vec<f32> = (0..batch * a.input_len()).map(|_| rng.normal()).collect();
+            let calib = calibrate_mlp(&a, &params, &x, batch);
+            let qweights = repro::exec::quantize_mlp_weights(&a, &params, &calib);
+
+            let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(seed ^ 0x91A7));
+            println!(
+                "chip plan dry-run: {model} on {n}x{n} chip, {faults} faulty MACs, \
+                 batch {batch}, {threads} threads"
+            );
+            for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
+                let plan = ChipPlan::compile_mlp(&a, &fm, kind, &qweights);
+                println!("{kind:?} (fingerprint {:#018x}):", plan.fingerprint());
+                if kind == MaskKind::FapBypass {
+                    // the effective weights a host ships to the chip:
+                    // bypassed slots folded to zero
+                    let mut folded = qweights.clone();
+                    plan.masks().fold_into_qweights(&mut folded);
+                    let zeros: usize =
+                        folded.iter().map(|l| l.iter().filter(|&&w| w == 0).count()).sum();
+                    let total: usize = folded.iter().map(|l| l.len()).sum();
+                    println!("  effective weights: {zeros}/{total} zeroed by bypass fold");
+                }
+                let mut scratch = ExecScratch::new();
+                for li in 0..a.weighted_layers().len() {
+                    let Some(lp) = plan.layer_plan(li) else { continue };
+                    let q: Vec<i32> =
+                        (0..batch * lp.k()).map(|_| rng.below(255) as i32 - 127).collect();
+                    let t0 = std::time::Instant::now();
+                    let got = scratch.run(lp, &q, batch).to_vec();
+                    let dt = t0.elapsed();
+                    let want = TiledMatmul::new(&fm, kind == MaskKind::FapBypass)
+                        .matmul(&q, &qweights[li], batch, lp.k(), lp.m());
+                    anyhow::ensure!(got == want, "layer {li}: plan diverges from PE chain");
+                    anyhow::ensure!(
+                        lp.execute_threaded(&q, batch, threads) == got,
+                        "layer {li}: threaded execution diverges"
+                    );
+                    let s = lp.stats();
+                    let macs = (batch * lp.k() * lp.m()) as f64;
+                    println!(
+                        "  layer {li} {}x{}: {} tiles, {} dense / {} folded / {} chain cols, \
+                         {:.2e} MAC/s x1, exact vs cycle-level sim",
+                        lp.k(),
+                        lp.m(),
+                        s.tiles,
+                        s.dense_cols,
+                        s.folded_cols,
+                        s.chain_cols,
+                        macs / dt.as_secs_f64().max(1e-12)
+                    );
+                }
+            }
+        }
         "detect" => {
             let n = args.usize("n", 64)?;
             let faults = args.usize("faults", 20)?;
@@ -209,6 +288,9 @@ COMMANDS:
                               (table1|fig2a|fig2b|fig4a|fig4b|fig5a|fig5b|synthesis|all)
   train --model <M>           train + evaluate a fault-free baseline
   provision --model <M>       full chip flow: inject -> detect -> FAP -> FAP+T
+  plan --model <M>            compile + execute a chip plan natively (no
+                              artifacts): quantize, lower, run the blocked
+                              GEMM core, cross-check vs the cycle-level sim
   detect                      post-fab fault localization demo
   synthesis                   45nm synthesis + yield model tables
   smoke                       compile key artifacts, verify the runtime

@@ -11,7 +11,7 @@
 
 use super::{conv, fc};
 use crate::faults::FaultMap;
-use crate::model::{Arch, Layer};
+use crate::model::{Arch, Layer, Params};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MaskKind {
@@ -130,6 +130,32 @@ impl LayerMasks {
         LayerMasks { prune, and_m, or_m, bypass }
     }
 
+    /// Lower the prune masks directly into host float weights, in place —
+    /// the "bypassed MAC ⇒ zero effective weight" lowering (paper §5.1).
+    /// This is the compile-time form the FAP path and the exec plan
+    /// compiler share: after folding, a healthy array computes exactly
+    /// what the FAP-bypassed faulty array computes.
+    pub fn fold_into_weights(&self, params: &mut Params) {
+        params.apply_masks(&self.prune);
+    }
+
+    /// Same lowering for quantized int weights (`qweights[li]` in the
+    /// layer's weight layout): zero every slot whose MAC the plan bypasses.
+    /// [`crate::exec::MatmulPlan::compile`] performs this fold per tile
+    /// from the raw fault map; this mask-level form is what a host uses to
+    /// produce the effective weights it ships to a chip (`repro plan`).
+    pub fn fold_into_qweights(&self, qweights: &mut [Vec<i32>]) {
+        assert_eq!(qweights.len(), self.bypass.len());
+        for (qw, bp) in qweights.iter_mut().zip(&self.bypass) {
+            assert_eq!(qw.len(), bp.len());
+            for (w, &b) in qw.iter_mut().zip(bp) {
+                if b != 0 {
+                    *w = 0;
+                }
+            }
+        }
+    }
+
     /// Fraction of weights pruned across the whole network.
     pub fn pruned_fraction(&self) -> f64 {
         let (mut z, mut t) = (0usize, 0usize);
@@ -212,6 +238,38 @@ mod tests {
             }
         }
         assert_eq!(pruned, kh * kw * 1 * 3); // dout in {2, 18, 34}
+    }
+
+    #[test]
+    fn fold_into_weights_matches_prune_mask() {
+        let arch = mnist();
+        let fm = inject_uniform(FaultSpec::new(16), 24, &mut Rng::new(7));
+        let m = LayerMasks::build(&arch, &fm, MaskKind::FapBypass);
+        let mut p = crate::model::Params::zeros_like(&arch);
+        for (w, _) in &mut p.layers {
+            w.iter_mut().for_each(|v| *v = 1.0);
+        }
+        m.fold_into_weights(&mut p);
+        assert!((p.zero_weight_fraction() - m.pruned_fraction()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fold_into_qweights_zeroes_exactly_bypassed_slots() {
+        let arch = mnist();
+        let fm = inject_uniform(FaultSpec::new(16), 24, &mut Rng::new(8));
+        let m = LayerMasks::build(&arch, &fm, MaskKind::FapBypass);
+        let mut qw: Vec<Vec<i32>> = m.bypass.iter().map(|b| vec![7i32; b.len()]).collect();
+        m.fold_into_qweights(&mut qw);
+        for (layer, bp) in qw.iter().zip(&m.bypass) {
+            for (&w, &b) in layer.iter().zip(bp) {
+                assert_eq!(w == 0, b == 1);
+            }
+        }
+        // unmitigated masks bypass nothing, so folding is a no-op
+        let um = LayerMasks::build(&arch, &fm, MaskKind::Unmitigated);
+        let mut qw2: Vec<Vec<i32>> = um.bypass.iter().map(|b| vec![7i32; b.len()]).collect();
+        um.fold_into_qweights(&mut qw2);
+        assert!(qw2.iter().all(|l| l.iter().all(|&w| w == 7)));
     }
 
     #[test]

@@ -119,13 +119,34 @@ impl SystolicArray {
     /// Functional batch pass: `a` is row-major `[batch][active_rows]`.
     /// Returns row-major `[batch][cols]`.
     pub fn matmul(&self, a: &[i32], batch: usize, active_rows: usize, cols: usize) -> Vec<i32> {
-        assert_eq!(a.len(), batch * active_rows);
         let mut out = vec![0i32; batch * cols];
-        // column-outer loop keeps each column's PE chain hot in cache
+        self.matmul_into(a, batch, active_rows, cols, &mut out);
+        out
+    }
+
+    /// [`SystolicArray::matmul`] into a caller-owned buffer (overwrites).
+    ///
+    /// The naive reference the plan executor ([`crate::exec`]) is checked
+    /// against: one PE chain gather per column (reused across the batch,
+    /// not re-cloned per column as the old hot path did), scalar chain
+    /// walk per batch row.
+    pub fn matmul_into(
+        &self,
+        a: &[i32],
+        batch: usize,
+        active_rows: usize,
+        cols: usize,
+        out: &mut [i32],
+    ) {
+        assert!(active_rows <= self.n && cols <= self.n);
+        assert_eq!(a.len(), batch * active_rows);
+        assert_eq!(out.len(), batch * cols);
+        // column-outer loop keeps each column's PE chain hot in cache;
+        // the gather buffer is allocated once per call, not per column
+        let mut col_pes: Vec<Pe> = Vec::with_capacity(active_rows);
         for c in 0..cols {
-            let col_pes: Vec<Pe> = (0..active_rows)
-                .map(|r| self.pes[r * self.n + c])
-                .collect();
+            col_pes.clear();
+            col_pes.extend((0..active_rows).map(|r| self.pes[r * self.n + c]));
             for b in 0..batch {
                 let row = &a[b * active_rows..(b + 1) * active_rows];
                 let mut acc = 0i32;
@@ -135,7 +156,6 @@ impl SystolicArray {
                 out[b * cols + c] = acc;
             }
         }
-        out
     }
 
     /// Cycle-accurate skewed-wavefront execution.
@@ -317,6 +337,18 @@ mod tests {
             let want = arr.matvec(&a[b * 6..(b + 1) * 6], 6, 5);
             assert_eq!(&got[b * 5..(b + 1) * 5], want.as_slice(), "batch {b}");
         }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        let mut rng = Rng::new(5);
+        let (arr, _, a) = rand_array_case(&mut rng, 8, 6, 5, 4, 2);
+        let want = arr.matmul(&a, 4, 6, 5);
+        let mut out = vec![i32::MIN; 4 * 5]; // stale garbage must be overwritten
+        arr.matmul_into(&a, 4, 6, 5, &mut out);
+        assert_eq!(out, want);
+        arr.matmul_into(&a, 4, 6, 5, &mut out); // second pass, same buffer
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -42,12 +42,31 @@ impl TiledMatmul {
     /// `a`: row-major `[batch][k]`, `w`: row-major `[k][m]`.
     /// Returns row-major `[batch][m]` int32 accumulator outputs.
     pub fn matmul(&mut self, a: &[i32], w: &[i32], batch: usize, k: usize, m: usize) -> Vec<i32> {
+        let mut out = vec![0i32; batch * m];
+        self.matmul_into(a, w, batch, k, m, &mut out);
+        out
+    }
+
+    /// [`TiledMatmul::matmul`] into a caller-owned buffer (overwrites) —
+    /// the per-pass partial-result buffer is reused across all tiles of
+    /// the schedule instead of being reallocated per pass.
+    pub fn matmul_into(
+        &mut self,
+        a: &[i32],
+        w: &[i32],
+        batch: usize,
+        k: usize,
+        m: usize,
+        out: &mut [i32],
+    ) {
         assert_eq!(a.len(), batch * k);
         assert_eq!(w.len(), k * m);
+        assert_eq!(out.len(), batch * m);
         let n = self.array.n();
-        let mut out = vec![0i32; batch * m];
+        out.fill(0);
         let mut tile_buf = vec![0i32; n * n];
         let mut act_buf = vec![0i32; batch * n];
+        let mut part = vec![0i32; batch * n];
 
         for k0 in (0..k).step_by(n) {
             let kh = (k - k0).min(n);
@@ -63,7 +82,8 @@ impl TiledMatmul {
                     }
                 }
                 self.array.load_weights(&tile_buf[..kh * mw], kh, mw);
-                let part = self.array.matmul(&act_buf[..batch * kh], batch, kh, mw);
+                self.array
+                    .matmul_into(&act_buf[..batch * kh], batch, kh, mw, &mut part[..batch * mw]);
                 for b in 0..batch {
                     for c in 0..mw {
                         let o = &mut out[b * m + m0 + c];
@@ -72,7 +92,6 @@ impl TiledMatmul {
                 }
             }
         }
-        out
     }
 
     /// Total cycles for the schedule per the paper's timing model:
@@ -157,6 +176,19 @@ mod tests {
         assert!(got[0] > 2 * (1 << 26) - 100, "both passes corrupted: {}", got[0]);
         // healthy columns untouched
         assert_eq!(&got[1..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn matmul_into_overwrites_stale_output() {
+        let mut rng = Rng::new(9);
+        let (n, k, m, batch) = (4, 10, 7, 3);
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+        let mut tm = TiledMatmul::new(&FaultMap::healthy(n), false);
+        let want = tm.matmul(&a, &w, batch, k, m);
+        let mut out = vec![12345i32; batch * m];
+        tm.matmul_into(&a, &w, batch, k, m, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

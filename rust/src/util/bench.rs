@@ -1,7 +1,9 @@
 //! Micro-benchmark harness (criterion is unavailable offline; this provides
 //! the subset we need: warmup, repeated timed runs, median/mean/min report,
-//! and a throughput line). All `rust/benches/*.rs` use this.
+//! a throughput line, and JSON emission so perf trajectories are tracked
+//! across PRs — see `BENCH_exec.json`). All `rust/benches/*.rs` use this.
 
+use super::json::Json;
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -22,12 +24,48 @@ impl BenchResult {
 
     /// Report with an items/second throughput derived from the median.
     pub fn report_throughput(&self, items: u64, unit: &str) {
-        let per_sec = items as f64 / self.median.as_secs_f64();
+        let per_sec = self.throughput(items);
         println!(
             "{:<44} median={:>12?}  {:>14.3e} {unit}/s",
             self.name, self.median, per_sec
         );
     }
+
+    /// Items/second derived from the median run.
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / self.median.as_secs_f64().max(1e-12)
+    }
+
+    /// JSON record of this result (times in nanoseconds).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("name", Json::str(self.name.clone()))
+            .field("iters", Json::num(self.iters as f64))
+            .field("min_ns", Json::num(self.min.as_nanos() as f64))
+            .field("median_ns", Json::num(self.median.as_nanos() as f64))
+            .field("mean_ns", Json::num(self.mean.as_nanos() as f64))
+    }
+}
+
+/// Write a bench summary to `<path>` as `{ "bench": name, ...meta,
+/// "results": [...] }` — the stable record perf trajectories are tracked
+/// from (e.g. `BENCH_exec.json` from `perf_hotpath`).
+pub fn write_bench_json(
+    path: &str,
+    name: &str,
+    meta: Json,
+    results: Vec<Json>,
+) -> std::io::Result<()> {
+    let mut out = Json::obj().field("bench", Json::str(name));
+    if let Json::Obj(fields) = meta {
+        for (k, v) in fields {
+            out = out.field(k, v);
+        }
+    }
+    let out = out.field("results", Json::Arr(results));
+    std::fs::write(path, out.render())?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 /// Time `f` `iters` times after `warmup` untimed runs.
@@ -65,6 +103,22 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_record_has_stable_fields() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            min: Duration::from_nanos(10),
+            median: Duration::from_nanos(20),
+            mean: Duration::from_nanos(30),
+        };
+        let s = r.to_json().render();
+        for key in ["\"name\"", "\"iters\"", "\"min_ns\"", "\"median_ns\"", "\"mean_ns\""] {
+            assert!(s.contains(key), "missing {key} in {s}");
+        }
+        assert!(r.throughput(40) > 0.0);
+    }
 
     #[test]
     fn bench_measures_something() {

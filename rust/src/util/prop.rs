@@ -4,17 +4,46 @@
 //! it reports the failing case seed so the case can be replayed exactly by
 //! constructing `Rng::new(seed)`. Shrinking is intentionally out of scope —
 //! the generators used in this repo produce small cases directly.
+//!
+//! Two environment overrides (used by CI and by hand when a case fails):
+//! * `PROP_CASES=<n>` — override every property's case count (e.g. crank
+//!   to 10000 for a soak run, or 5 for a smoke pass).
+//! * `PROP_REPLAY=<seed>` — run exactly one case with the given case seed
+//!   (decimal or `0x`-prefixed hex, as printed by the failure message).
 
 use super::rng::Rng;
+
+/// Parse a `PROP_REPLAY`-style seed: decimal or `0x`-prefixed hex.
+pub fn parse_replay_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
 
 /// Run `prop` against `cases` random cases derived from `seed`.
 ///
 /// `prop` receives a fresh `Rng` per case and returns `Err(msg)` to fail.
-/// Panics with the case seed on the first failure.
+/// Panics with the case seed on the first failure. Honors the
+/// `PROP_CASES` / `PROP_REPLAY` environment overrides (module docs).
 pub fn check<F>(name: &str, seed: u64, cases: u32, mut prop: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
+    if let Some(case_seed) = std::env::var("PROP_REPLAY").ok().as_deref().and_then(parse_replay_seed)
+    {
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on replayed case {case_seed:#x}: {msg}");
+        }
+        return;
+    }
+    let cases = std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(cases);
     let mut root = Rng::new(seed);
     for case in 0..cases {
         let case_seed = root.next_u64();
@@ -22,7 +51,7 @@ where
         if let Err(msg) = prop(&mut rng) {
             panic!(
                 "property '{name}' failed at case {case}/{cases} \
-                 (replay with Rng::new({case_seed:#x})): {msg}"
+                 (replay with Rng::new({case_seed:#x}) or PROP_REPLAY={case_seed:#x}): {msg}"
             );
         }
     }
@@ -67,5 +96,15 @@ mod tests {
                 Ok(())
             }
         });
+    }
+
+    #[test]
+    fn replay_seed_parses_decimal_and_hex() {
+        assert_eq!(parse_replay_seed("42"), Some(42));
+        assert_eq!(parse_replay_seed("0x2a"), Some(42));
+        assert_eq!(parse_replay_seed("0X2A"), Some(42));
+        assert_eq!(parse_replay_seed(" 0xdeadbeef "), Some(0xdead_beef));
+        assert_eq!(parse_replay_seed("nope"), None);
+        assert_eq!(parse_replay_seed(""), None);
     }
 }

@@ -1,0 +1,184 @@
+//! Property tests: the compiled chip-plan executor ([`repro::exec`]) is
+//! bit-exact with the naive PE-chain simulator across random shapes, fault
+//! maps, mitigations, batch sizes and thread counts — including
+//! partial-height tiles (K % N != 0, K < N) and partial-width tiles.
+//!
+//! Uses the in-repo harness (`rust/src/util/prop.rs`; the offline registry
+//! has no proptest). Failing cases replay with `PROP_REPLAY=<seed>`.
+
+use repro::exec::{ChipPlan, ExecScratch, MatmulPlan};
+use repro::faults::{FaultMap, StuckAt};
+use repro::mapping::MaskKind;
+use repro::model::arch::mnist;
+use repro::prop_assert;
+use repro::systolic::TiledMatmul;
+use repro::util::{prop, Rng};
+
+fn random_fault_map(rng: &mut Rng, n: usize, max_faults: usize) -> FaultMap {
+    let mut fm = FaultMap::healthy(n);
+    for _ in 0..rng.below(max_faults + 1) {
+        fm.add(StuckAt {
+            row: rng.below(n) as u16,
+            col: rng.below(n) as u16,
+            bit: rng.below(32) as u8,
+            value: rng.bool(0.5),
+        });
+    }
+    fm
+}
+
+fn random_case(rng: &mut Rng, k: usize, m: usize, batch: usize) -> (Vec<i32>, Vec<i32>) {
+    let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+    let mut w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+    // sprinkle exact zeros so the additive-constant fold path is exercised
+    for v in w.iter_mut() {
+        if rng.bool(0.15) {
+            *v = 0;
+        }
+    }
+    (a, w)
+}
+
+/// The core oracle property: plan executor == naive PE-chain walk for any
+/// (shape, fault map, mitigation) triple, including partial tiles.
+#[test]
+fn prop_plan_executor_matches_naive_chain() {
+    prop::check("plan_matches_naive", 0xE1, 60, |rng| {
+        let n = 2 + rng.below(7);
+        // bias toward non-multiples of n so partial-height/width tiles are
+        // the common case, and allow k < n (single clock-gated pass)
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        let batch = 1 + rng.below(6);
+        let fm = random_fault_map(rng, n, 8);
+        let (a, w) = random_case(rng, k, m, batch);
+        for (kind, byp) in [(MaskKind::Unmitigated, false), (MaskKind::FapBypass, true)] {
+            let plan = MatmulPlan::compile(&fm, kind, &w, k, m);
+            let got = plan.execute(&a, batch);
+            let want = TiledMatmul::new(&fm, byp).matmul(&a, &w, batch, k, m);
+            prop_assert!(
+                got == want,
+                "{kind:?}: n={n} k={k} m={m} b={batch} faults={}",
+                fm.faults().len()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Partial-height passes clock-gate unused rows: faults below the active
+/// row range must not leak into the plan's output.
+#[test]
+fn prop_partial_height_gates_inactive_rows() {
+    prop::check("partial_height_gating", 0xE2, 40, |rng| {
+        let n = 3 + rng.below(6);
+        let k = 1 + rng.below(n - 1); // strictly partial: K < N
+        let m = 1 + rng.below(2 * n);
+        let batch = 1 + rng.below(4);
+        // plant a fault strictly below the active rows
+        let row = (k + rng.below(n - k)) as u16;
+        let mut fm = random_fault_map(rng, n, 3);
+        fm.add(StuckAt { row, col: rng.below(n) as u16, bit: 30, value: true });
+        let (a, w) = random_case(rng, k, m, batch);
+        let plan = MatmulPlan::compile(&fm, MaskKind::Unmitigated, &w, k, m);
+        let want = TiledMatmul::new(&fm, false).matmul(&a, &w, batch, k, m);
+        prop_assert!(plan.execute(&a, batch) == want, "n={n} k={k} m={m} row={row}");
+        Ok(())
+    });
+}
+
+/// Batch-sharded threading is bit-exact with single-thread execution for
+/// any thread count, including counts exceeding the batch.
+#[test]
+fn prop_threaded_execution_is_bit_exact() {
+    prop::check("threaded_bit_exact", 0xE3, 30, |rng| {
+        let n = 2 + rng.below(6);
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        let batch = 1 + rng.below(12);
+        let fm = random_fault_map(rng, n, 6);
+        let (a, w) = random_case(rng, k, m, batch);
+        let plan = MatmulPlan::compile(&fm, MaskKind::Unmitigated, &w, k, m);
+        let single = plan.execute(&a, batch);
+        for threads in [2usize, 3, 5, batch + 3] {
+            prop_assert!(
+                plan.execute_threaded(&a, batch, threads) == single,
+                "threads={threads} n={n} k={k} m={m} b={batch}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Compile-once / run-many: one plan serves many activation batches (the
+/// campaign access pattern), matching the naive simulator on each.
+#[test]
+fn prop_plan_reuse_across_batches() {
+    prop::check("plan_reuse", 0xE4, 20, |rng| {
+        let n = 2 + rng.below(6);
+        let k = 1 + rng.below(2 * n);
+        let m = 1 + rng.below(2 * n);
+        let fm = random_fault_map(rng, n, 6);
+        let (_, w) = random_case(rng, k, m, 1);
+        let plan = MatmulPlan::compile(&fm, MaskKind::Unmitigated, &w, k, m);
+        let mut naive = TiledMatmul::new(&fm, false);
+        let mut scratch = ExecScratch::new();
+        for run in 0..4 {
+            let batch = 1 + rng.below(8);
+            let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+            let got = scratch.run(&plan, &a, batch).to_vec();
+            let want = naive.matmul(&a, &w, batch, k, m);
+            prop_assert!(got == want, "run={run} b={batch} n={n} k={k} m={m}");
+        }
+        Ok(())
+    });
+}
+
+/// FAP lowering collapses every column onto the dense GEMM core (no chain
+/// programs survive bypass), and still matches the bypassed chain walk.
+#[test]
+fn prop_fap_bypass_is_pure_gemm() {
+    prop::check("fap_pure_gemm", 0xE5, 30, |rng| {
+        let n = 2 + rng.below(6);
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        let batch = 1 + rng.below(4);
+        let fm = random_fault_map(rng, n, 10);
+        let (a, w) = random_case(rng, k, m, batch);
+        let plan = MatmulPlan::compile(&fm, MaskKind::FapBypass, &w, k, m);
+        prop_assert!(
+            plan.stats().chain_cols == 0,
+            "bypass left {} chain columns",
+            plan.stats().chain_cols
+        );
+        let want = TiledMatmul::new(&fm, true).matmul(&a, &w, batch, k, m);
+        prop_assert!(plan.execute(&a, batch) == want, "n={n} k={k} m={m}");
+        Ok(())
+    });
+}
+
+/// Chip-plan invalidation: a plan compiled for one fault map never claims
+/// to match a map with different datapath behaviour, and always matches a
+/// byte-identical re-injection.
+#[test]
+fn prop_chip_plan_fingerprint_invalidation() {
+    prop::check("plan_invalidation", 0xE6, 25, |rng| {
+        let arch = mnist();
+        let n = 16;
+        let fm = random_fault_map(rng, n, 12);
+        let plan = ChipPlan::compile(&arch, &fm, MaskKind::FapBypass);
+        prop_assert!(plan.matches(&fm), "plan must match its own map");
+        // perturb one MAC -> different chip
+        let mut fm2 = fm.clone();
+        fm2.add(StuckAt {
+            row: rng.below(n) as u16,
+            col: rng.below(n) as u16,
+            bit: rng.below(32) as u8,
+            value: rng.bool(0.5),
+        });
+        if fm2.fingerprint() != fm.fingerprint() {
+            prop_assert!(!plan.matches(&fm2), "stale plan accepted a new chip");
+        }
+        Ok(())
+    });
+}
