@@ -11,12 +11,15 @@
 //!   train-step latency, and the scan-fused multi-step training artifact
 //!   vs N single steps. Skipped with a notice when artifacts are absent.
 
+use repro::chip::{Backend, Chip, Engine};
 use repro::coordinator::trainer::{ones_masks, train_step, TrainState};
 use repro::data;
 use repro::exec::{default_threads, MatmulPlan};
 use repro::faults::{inject_uniform, FaultSpec};
 use repro::mapping::{LayerMasks, MaskKind};
 use repro::model::arch;
+use repro::model::quant::calibrate_mlp;
+use repro::model::Params;
 use repro::runtime::{lit_f32, lit_i32, scalar_f32, Runtime};
 use repro::systolic::{timing, TiledMatmul};
 use repro::util::bench;
@@ -24,8 +27,10 @@ use repro::util::json::Json;
 use repro::util::Rng;
 
 /// Naive-vs-plan sweep on the paper's 256×256 array; records MAC/s and
-/// speedups (single- and multi-thread) in `BENCH_exec.json`.
-fn bench_exec_engine(rng: &mut Rng) -> anyhow::Result<()> {
+/// speedups (single- and multi-thread) as `BENCH_exec.json` rows.
+/// Returns `(meta, rows)` so the file meta always matches the sweep
+/// geometry actually run.
+fn bench_exec_engine(rng: &mut Rng) -> anyhow::Result<(Json, Vec<Json>)> {
     println!("# exec engine: compiled plan vs naive PE-chain (n=256)");
     let n = 256;
     let (b, k, m) = (64usize, 512usize, 512usize);
@@ -114,8 +119,62 @@ fn bench_exec_engine(rng: &mut Rng) -> anyhow::Result<()> {
         .field("k", Json::num(k as f64))
         .field("m", Json::num(m as f64))
         .field("threads", Json::num(threads as f64));
-    bench::write_bench_json("BENCH_exec.json", "exec_plan_vs_naive", meta, results)?;
-    Ok(())
+    Ok((meta, results))
+}
+
+/// End-to-end `ChipSession` forward passes, one row per backend (`sim`,
+/// `plan`, and `xla` when an artifacts directory is present): the mnist
+/// MLP on a 10%-faulty 64×64 chip under FAP bypass.
+fn bench_backend_sessions(rng: &mut Rng) -> anyhow::Result<Vec<Json>> {
+    println!("\n# chip-session backends (mnist, 64x64 chip, 10% faults, FAP bypass)");
+    let a = arch::by_name("mnist").unwrap();
+    let batch = 64usize;
+    let mut params = Params::zeros_like(&a);
+    for (w, b) in &mut params.layers {
+        w.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
+        b.iter_mut().for_each(|v| *v = rng.normal() * 0.01);
+    }
+    let x: Vec<f32> = (0..batch * a.input_len()).map(|_| rng.normal()).collect();
+    let calib = calibrate_mlp(&a, &params, &x, batch);
+    let chip = Chip::new(a.clone()).array_n(64).inject(410, 13).mitigate(MaskKind::FapBypass);
+    let macs: u64 = a.weighted_layers().iter().map(|l| (batch * l.weight_len()) as u64).sum();
+
+    let rt = Runtime::new("artifacts").ok();
+    let mut rows = Vec::new();
+    for backend in [Backend::Sim, Backend::Plan, Backend::Xla] {
+        if backend == Backend::Xla && rt.is_none() {
+            println!("(skipping xla backend row: no artifacts)");
+            continue;
+        }
+        let mut engine = Engine::new(backend, rt.as_ref())?;
+        let mut sess = engine.session(&chip)?;
+        sess.load_model(params.clone(), calib.clone());
+        // the sim walks PE chains per call: keep its iteration count low
+        let (warmup, iters) = if backend == Backend::Sim { (1, 3) } else { (2, 10) };
+        let r = bench::bench(
+            &format!("session fwd ({} backend, batch {batch})", backend.name()),
+            warmup,
+            iters,
+            || {
+                bench::black_box(sess.forward_logits(&x, batch).unwrap());
+            },
+        );
+        r.report_throughput(macs, "MAC");
+        // session rows carry their own shape: they run a 64x64 mnist chip,
+        // not the exec sweep's 256x256 / 512x512 geometry in the file meta
+        rows.push(
+            Json::obj()
+                .field("backend", Json::str(backend.name()))
+                .field("model", Json::str("mnist"))
+                .field("array_n", Json::num(64))
+                .field("faulty_macs", Json::num(410))
+                .field("batch", Json::num(batch as f64))
+                .field("macs", Json::num(macs as f64))
+                .field("session_fwd", r.to_json())
+                .field("macs_per_s", Json::num(r.throughput(macs))),
+        );
+    }
+    Ok(rows)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -123,7 +182,13 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(51);
 
     // ---- exec engine: plan compiler + blocked GEMM core (no PJRT needed)
-    bench_exec_engine(&mut rng)?;
+    let (meta, mut results) = bench_exec_engine(&mut rng)?;
+
+    // ---- chip-session backends: one row per ForwardBackend (rows carry
+    // their own shape fields; the file meta describes the exec sweep) ----
+    results.extend(bench_backend_sessions(&mut rng)?);
+
+    bench::write_bench_json("BENCH_exec.json", "exec_plan_vs_naive", meta, results)?;
 
     // ---- L3: cycle-level simulator hot loop -------------------------------
     println!("\n# L3 simulator");

@@ -1,46 +1,46 @@
-//! End-to-end driver: the life of one faulty TPU chip.
+//! End-to-end driver: the life of one faulty TPU chip, through the
+//! unified `Chip` / `ChipSession` API.
 //!
 //! ```text
-//! cargo run --release --example chip_provisioning
+//! cargo run --release --example chip_provisioning [-- <backend>]
 //! ```
 //!
-//! This is the full-system workload (EXPERIMENTS.md §End-to-end):
+//! This is the full-system workload (EXPERIMENTS.md §End-to-end),
+//! artifact-free on the default `plan` backend:
 //!
 //! 1. **Train** the golden MNIST MLP from scratch on the procedural digit
-//!    dataset via the AOT training graph, logging the loss curve.
+//!    dataset, logging the loss curve.
 //! 2. **Fabricate** a chip: a 64x64 systolic array with 15% permanent
 //!    stuck-at faults (hidden from the controller).
-//! 3. **Post-fab test**: localize every faulty MAC with the DFT bypass
-//!    binary search (no knowledge of the injected map).
-//! 4. **FAP + FAP+T**: prune and retrain for this chip's fault map.
+//! 3. **Post-fab test**: `Chip::detect` localizes every faulty MAC with
+//!    the DFT bypass binary search (no knowledge of the injected map).
+//! 4. **FAP + FAP+T**: prune and retrain for this chip's detected map.
 //! 5. **Deploy**: serve batched inference on the faulty chip's quantized
 //!    datapath (bypass live) and report accuracy, latency and throughput.
 
-use repro::coordinator::evaluate::Evaluator;
-use repro::coordinator::fap::apply_fap;
-use repro::coordinator::fapt::{fapt_retrain, FaptConfig};
-use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::chip::{Backend, Chip, Engine};
+use repro::coordinator::fap::apply_fap_planned;
+use repro::coordinator::fapt::FaptConfig;
+use repro::coordinator::trainer::TrainConfig;
 use repro::data;
-use repro::faults::{detect, inject_uniform, FaultSpec};
+use repro::mapping::MaskKind;
 use repro::model::arch;
-use repro::model::quant::calibrate_mlp;
 use repro::runtime::Runtime;
-use repro::systolic::SystolicArray;
-use repro::util::Rng;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
+    let backend = Backend::parse(&std::env::args().nth(1).unwrap_or_else(|| "plan".into()))?;
+    let rt = if backend == Backend::Xla { Some(Runtime::new("artifacts")?) } else { None };
+    let mut engine = Engine::new(backend, rt.as_ref())?;
     let a = arch::by_name("mnist").unwrap();
 
     // 1. golden training with loss-curve logging
-    println!("=== 1. training golden model ===");
+    println!("=== 1. training golden model ({} backend) ===", engine.backend());
     let (train, test) = data::for_arch("mnist", 4000, 1000, 77).unwrap();
     let tcfg = TrainConfig { steps: 400, lr: 0.05, seed: 77, log_every: 50, ..Default::default() };
     let t0 = Instant::now();
-    let (baseline, losses) = train_baseline(&rt, &a, &train, &tcfg)?;
-    let ev = Evaluator::new(&rt);
-    let base_acc = ev.accuracy(&a, &baseline, &test)?;
+    let (baseline, losses) = engine.train(&a, &train, &tcfg)?;
+    let base_acc = engine.float_accuracy(&a, &baseline, &test)?;
     println!(
         "trained {} params in {:.1}s: loss {:.3} -> {:.4}, accuracy {:.2}%",
         a.param_count(),
@@ -53,36 +53,35 @@ fn main() -> anyhow::Result<()> {
     // 2. the fab delivers a wounded chip
     println!("\n=== 2. chip arrives with hidden permanent faults ===");
     let n = 64;
-    let true_fm = inject_uniform(FaultSpec::new(n), (n * n) * 15 / 100, &mut Rng::new(0xFAB));
-    println!("(hidden truth: {} faulty MACs, {:.1}%)", true_fm.faulty_mac_count(),
-        true_fm.fault_rate() * 100.0);
+    let chip = Chip::new(a.clone()).array_n(n).inject((n * n) * 15 / 100, 0xFAB);
+    println!(
+        "(hidden truth: {} faulty MACs, {:.1}%)",
+        chip.true_fault_map().faulty_mac_count(),
+        chip.true_fault_map().fault_rate() * 100.0
+    );
 
     // 3. post-fab test localizes them through the DFT interface only
     println!("\n=== 3. post-fabrication fault localization ===");
-    let mut dut = SystolicArray::with_faults(&true_fm);
     let t0 = Instant::now();
-    let rep = detect::localize_faults(&mut dut, Default::default());
-    let truth = true_fm.faulty_macs();
-    let correct = rep.faulty.iter().filter(|f| truth.contains(f)).count();
+    let chip = chip.detect()?.mitigate(MaskKind::FapBypass);
+    let truth = chip.true_fault_map().faulty_macs();
+    let correct =
+        chip.fault_map().faulty_macs().iter().filter(|f| truth.contains(f)).count();
     println!(
-        "localized {} / {} faulty MACs ({} array test runs, {:.1} ms)",
+        "localized {} / {} faulty MACs ({:.1} ms)",
         correct,
         truth.len(),
-        rep.array_runs,
         t0.elapsed().as_secs_f64() * 1e3
     );
 
-    // 4. FAP + FAP+T for this chip
+    // 4. FAP + FAP+T for this chip's *detected* fault map
     println!("\n=== 4. FAP + FAP+T provisioning ===");
-    let mut known = repro::faults::FaultMap::healthy(n);
-    for (r, c) in &rep.faulty {
-        known.add(repro::faults::StuckAt { row: *r as u16, col: *c as u16, bit: 0, value: true });
-    }
-    let (fap_params, masks, frep) = apply_fap(&a, &baseline, &known);
-    let fap_acc = ev.accuracy(&a, &fap_params, &test)?;
+    let plan = engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
+    let (fap_params, frep) = apply_fap_planned(&baseline, &plan);
+    let fap_acc = engine.float_accuracy(&a, &fap_params, &test)?;
     let fcfg = FaptConfig { max_epochs: 4, lr: 0.01, seed: 77, snapshot_epochs: vec![] };
-    let res = fapt_retrain(&rt, &a, &fap_params, &masks.prune, &train, &fcfg)?;
-    let fapt_acc = ev.accuracy(&a, &res.params, &test)?;
+    let res = engine.retrain(&a, &fap_params, &plan.masks().prune, &train, &fcfg)?;
+    let fapt_acc = engine.float_accuracy(&a, &res.params, &test)?;
     println!(
         "pruned {} weights ({:.1}%); FAP {:.2}% -> FAP+T {:.2}% ({:.2}s/epoch)",
         frep.pruned_weights,
@@ -94,9 +93,10 @@ fn main() -> anyhow::Result<()> {
 
     // 5. deploy: batched serving on the faulty chip's quantized datapath
     println!("\n=== 5. serving on the faulty chip (bypass live) ===");
-    let calib = calibrate_mlp(&a, &res.params, &train.x[..64 * 784], 64);
+    let mut session = engine.session(&chip)?;
+    session.calibrate_and_load(res.params.clone(), &train.x[..64 * 784], 64);
     let t0 = Instant::now();
-    let chip_acc = ev.accuracy_faulty(&a, &res.params, &masks, &calib, &test, false)?;
+    let chip_acc = session.evaluate(&test)?;
     let elapsed = t0.elapsed();
     let batches = test.len().div_ceil(a.eval_batch);
     println!(

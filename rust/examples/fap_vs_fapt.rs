@@ -1,0 +1,60 @@
+//! FAP vs FAP+T across fault rates (Fig 4 style) on TIMIT — the paper's
+//! headline result: FAP alone holds to ~25% faulty MACs, FAP+T holds to
+//! 50% with close-to-baseline accuracy.
+//!
+//! ```text
+//! cargo run --release --example fap_vs_fapt [-- <model> [backend]]
+//! ```
+//!
+//! Runs artifact-free on the `plan` backend by default (native training
+//! and retraining); `xla` uses the AOT graphs in `artifacts/`.
+
+use repro::chip::{Backend, Chip, Engine};
+use repro::coordinator::fap::apply_fap_planned;
+use repro::coordinator::fapt::FaptConfig;
+use repro::coordinator::trainer::TrainConfig;
+use repro::data;
+use repro::mapping::MaskKind;
+use repro::model::arch;
+use repro::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "timit".into());
+    let backend = Backend::parse(&std::env::args().nth(2).unwrap_or_else(|| "plan".into()))?;
+    let rt = if backend == Backend::Xla { Some(Runtime::new("artifacts")?) } else { None };
+    let mut engine = Engine::new(backend, rt.as_ref())?;
+
+    let a = arch::by_name(&model).expect("mnist | timit | alexnet32");
+    let (train, test) = data::for_arch(&model, 183 * 16, 183 * 4, 3)
+        .or_else(|| data::for_arch(&model, 2000, 500, 3))
+        .unwrap();
+    let tcfg = TrainConfig { steps: 500, lr: 0.04, seed: 3, log_every: 200, ..Default::default() };
+    let (baseline, _) = engine.train(&a, &train, &tcfg)?;
+    let base = engine.float_accuracy(&a, &baseline, &test)?;
+    println!("\n{model} ({} backend): baseline accuracy {:.2}%\n", engine.backend(), base * 100.0);
+    println!("{:>10} {:>10} {:>10} {:>10}", "fault %", "FAP %", "FAP+T %", "pruned %");
+
+    let n = 256;
+    for rate in [0.0625, 0.125, 0.25, 0.5] {
+        let chip = Chip::new(a.clone())
+            .array_n(n)
+            .inject_rate(rate, 50 + (rate * 1e3) as u64)
+            .mitigate(MaskKind::FapBypass);
+        // one compiled plan per chip: FAP pruning and every retrain epoch
+        // reuse its masks
+        let plan = engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
+        let (fap_params, report) = apply_fap_planned(&baseline, &plan);
+        let fap_acc = engine.float_accuracy(&a, &fap_params, &test)?;
+        let fcfg = FaptConfig { max_epochs: 3, lr: 0.01, seed: 3, snapshot_epochs: vec![] };
+        let res = engine.retrain(&a, &fap_params, &plan.masks().prune, &train, &fcfg)?;
+        let fapt_acc = engine.float_accuracy(&a, &res.params, &test)?;
+        println!(
+            "{:>9.2}% {:>9.2}% {:>9.2}% {:>9.2}%",
+            rate * 100.0,
+            fap_acc * 100.0,
+            fapt_acc * 100.0,
+            report.pruned_fraction() * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,4 +1,4 @@
-//! Fault-sweep study (Fig 2a style) through the public API.
+//! Fault-sweep study (Fig 2a style) through the `ChipSession` API.
 //!
 //! Sweeps the number of faulty MACs on the physical array and reports the
 //! unmitigated quantized accuracy of MNIST, demonstrating the paper's
@@ -6,30 +6,37 @@
 //! MACs destroys the model.
 //!
 //! ```text
-//! cargo run --release --example fault_sweep [-- <array_n>]
+//! cargo run --release --example fault_sweep [-- <array_n> [backend]]
 //! ```
+//!
+//! Runs artifact-free on the `plan` backend by default; pass `sim` or
+//! `xla` as the second argument to change engines.
 
-use repro::coordinator::evaluate::Evaluator;
-use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::chip::{Backend, Chip, Engine};
+use repro::coordinator::trainer::TrainConfig;
 use repro::data;
-use repro::faults::{inject_uniform, FaultSpec};
-use repro::mapping::{LayerMasks, MaskKind};
 use repro::model::arch;
 use repro::model::quant::calibrate_mlp;
 use repro::runtime::Runtime;
-use repro::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(256);
-    let rt = Runtime::new("artifacts")?;
+    let backend = Backend::parse(&std::env::args().nth(2).unwrap_or_else(|| "plan".into()))?;
+    let rt = if backend == Backend::Xla { Some(Runtime::new("artifacts")?) } else { None };
+    let mut engine = Engine::new(backend, rt.as_ref())?;
+
     let a = arch::by_name("mnist").unwrap();
     let (train, test) = data::for_arch("mnist", 2500, 600, 1).unwrap();
     let tcfg = TrainConfig { steps: 250, lr: 0.05, seed: 1, log_every: 0, ..Default::default() };
-    let (params, _) = train_baseline(&rt, &a, &train, &tcfg)?;
-    let ev = Evaluator::new(&rt);
+    let (params, _) = engine.train(&a, &train, &tcfg)?;
     let calib = calibrate_mlp(&a, &params, &train.x[..64 * 784], 64);
-    let base = ev.accuracy(&a, &params, &test)?;
-    println!("array {n}x{n} ({} MACs), float baseline {:.2}%\n", n * n, base * 100.0);
+    let base = engine.float_accuracy(&a, &params, &test)?;
+    println!(
+        "array {n}x{n} ({} MACs), {} backend, float baseline {:.2}%\n",
+        n * n,
+        engine.backend(),
+        base * 100.0
+    );
     println!("{:>12} {:>12} {:>10}", "faulty MACs", "fault rate", "accuracy");
 
     for k in [0usize, 1, 2, 4, 8, 16, 32, 64, 128] {
@@ -38,9 +45,10 @@ fn main() -> anyhow::Result<()> {
         }
         let mut accs = Vec::new();
         for rep in 0..3 {
-            let fm = inject_uniform(FaultSpec::new(n), k, &mut Rng::new(100 + k as u64 * 7 + rep));
-            let masks = LayerMasks::build(&a, &fm, MaskKind::Unmitigated);
-            accs.push(ev.accuracy_faulty(&a, &params, &masks, &calib, &test, false)?);
+            let chip = Chip::new(a.clone()).array_n(n).inject(k, 100 + k as u64 * 7 + rep);
+            let mut sess = engine.session(&chip)?;
+            sess.load_model(params.clone(), calib.clone());
+            accs.push(sess.evaluate(&test)?);
             if k == 0 {
                 break;
             }

@@ -1,0 +1,67 @@
+//! Quickstart: the whole FAP / FAP+T story in ~60 lines — and, since the
+//! `ChipSession` API, with **no artifacts directory needed**.
+//!
+//! ```text
+//! cargo run --release --example quickstart [-- <backend>]
+//! ```
+//!
+//! Trains the paper's MNIST MLP (784-256-256-256-10) on the procedural
+//! digit dataset, breaks a 64x64 systolic array with 25% permanent
+//! faults, and shows the accuracy of: no mitigation → FAP (prune) →
+//! FAP+T (prune + retrain). `backend` is `plan` (default, native),
+//! `sim` (cycle-level oracle) or `xla` (needs `artifacts/`).
+
+use repro::chip::{Backend, Chip, Engine};
+use repro::coordinator::fap::apply_fap_planned;
+use repro::coordinator::fapt::FaptConfig;
+use repro::coordinator::trainer::TrainConfig;
+use repro::data;
+use repro::mapping::MaskKind;
+use repro::model::arch;
+use repro::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. one engine for everything: training, float eval, chip sessions
+    let backend = Backend::parse(&std::env::args().nth(1).unwrap_or_else(|| "plan".into()))?;
+    let rt = if backend == Backend::Xla { Some(Runtime::new("artifacts")?) } else { None };
+    let mut engine = Engine::new(backend, rt.as_ref())?;
+    let a = arch::by_name("mnist").unwrap();
+
+    // 2. data + baseline training (host-native unless --backend xla)
+    let (train, test) = data::for_arch("mnist", 3000, 800, 42).unwrap();
+    let tcfg = TrainConfig { steps: 300, lr: 0.05, seed: 42, log_every: 100, ..Default::default() };
+    let (baseline, _) = engine.train(&a, &train, &tcfg)?;
+    let base_acc = engine.float_accuracy(&a, &baseline, &test)?;
+
+    // 3. a chip comes back from the fab with 25% of its MACs broken
+    let n = 64;
+    let chip = Chip::new(a.clone()).array_n(n).inject(n * n / 4, 7);
+    println!(
+        "chip: {n}x{n} array, {} faulty MACs ({:.0}%), {} backend",
+        chip.fault_map().faulty_mac_count(),
+        chip.fault_map().fault_rate() * 100.0,
+        engine.backend()
+    );
+
+    // 4. unmitigated: run the quantized faulty datapath as-is
+    let mut faulty = engine.session(&chip)?;
+    faulty.calibrate_and_load(baseline.clone(), &train.x[..64 * 784], 64);
+    let faulty_acc = faulty.evaluate(&test)?;
+
+    // 5. FAP: bypass faulty MACs == prune their weights
+    let plan = engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
+    let (fap_params, report) = apply_fap_planned(&baseline, &plan);
+    let fap_acc = engine.float_accuracy(&a, &fap_params, &test)?;
+
+    // 6. FAP+T: Algorithm 1 — retrain the surviving weights
+    let fcfg = FaptConfig { max_epochs: 3, lr: 0.01, seed: 42, snapshot_epochs: vec![] };
+    let res = engine.retrain(&a, &fap_params, &plan.masks().prune, &train, &fcfg)?;
+    let fapt_acc = engine.float_accuracy(&a, &res.params, &test)?;
+
+    println!("\n  baseline (fault-free) : {:>6.2}%", base_acc * 100.0);
+    println!("  unmitigated faults    : {:>6.2}%", faulty_acc * 100.0);
+    println!("  FAP   ({:>6} pruned)  : {:>6.2}%", report.pruned_weights, fap_acc * 100.0);
+    println!("  FAP+T ({} epochs)      : {:>6.2}%  ({:.1}s/epoch)",
+        fcfg.max_epochs, fapt_acc * 100.0, res.secs_per_epoch);
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! The [`ForwardBackend`] trait and the [`Backend`] capability matrix —
+//! the one place that decides which engine can execute which scenario.
+//!
+//! Every backend presents the same contract: given host float parameters
+//! and a quantization calibration, produce the logits (or per-layer
+//! pre-activations) the *faulty chip* would produce under the session's
+//! mitigation. Campaign code never branches on the engine again; it asks
+//! the [`Backend`] whether a scenario is supported and then speaks the
+//! trait.
+
+use crate::coordinator::evaluate::accuracy_over_batches;
+use crate::data::Dataset;
+use crate::mapping::MaskKind;
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Params};
+use anyhow::{bail, Result};
+
+/// Which execution engine a [`super::ChipSession`] runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Cycle-level systolic simulator ([`crate::systolic::TiledMatmul`]) —
+    /// the bit-exact oracle; slow, used for cross-checks and small runs.
+    Sim,
+    /// Compiled chip-plan executor ([`crate::exec`]) — the native campaign
+    /// hot path: compile once, run many, multi-threaded, no artifacts.
+    Plan,
+    /// PJRT execution of the AOT-compiled XLA artifacts
+    /// ([`crate::runtime::Runtime`]) — needs an `artifacts/` directory.
+    Xla,
+}
+
+/// What a caller wants to run — the axis of the capability matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Float forward of a (possibly pruned) model on a fault-free device.
+    FloatFwd,
+    /// Quantized forward on the faulty chip (the [`super::ChipSession`]
+    /// path: unmitigated faults or FAP bypass live in the datapath).
+    FaultyFwd,
+    /// Gradient training (baseline or FAP+T retraining).
+    Train,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "sim" => Ok(Backend::Sim),
+            "plan" => Ok(Backend::Plan),
+            "xla" => Ok(Backend::Xla),
+            other => bail!("unknown backend {other:?} (use sim | plan | xla)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Plan => "plan",
+            Backend::Xla => "xla",
+        }
+    }
+
+    /// The capability matrix (EXPERIMENTS.md §Backends), in one place
+    /// instead of scattered `bail!`s:
+    ///
+    /// * `sim` / `plan` lower FC layers only — conv archs are rejected for
+    ///   every scenario (the native engines have no conv dataflow).
+    /// * `xla` runs any arch on the float/train paths, but the faulty-path
+    ///   artifacts exist only for the MLP benchmarks.
+    pub fn supports(self, arch: &Arch, scenario: Scenario) -> Result<()> {
+        if arch.is_mlp() {
+            return Ok(());
+        }
+        match (self, scenario) {
+            (Backend::Xla, Scenario::FloatFwd | Scenario::Train) => Ok(()),
+            (Backend::Xla, Scenario::FaultyFwd) => bail!(
+                "xla backend: the faulty-path artifacts exist only for MLP archs \
+                 (got {}; conv archs run the float path only)",
+                arch.name
+            ),
+            (Backend::Sim | Backend::Plan, _) => bail!(
+                "{} backend lowers FC layers only; {} has conv layers — use --backend xla",
+                self.name(),
+                arch.name
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One faulty-chip forward engine. Implementations may cache state derived
+/// from `params`/`calib` (quantized weights, compiled tile programs, input
+/// literals); [`ForwardBackend::params_changed`] must drop it. The
+/// [`super::ChipSession`] owns the model and calls that hook on swaps, so
+/// going through the session is always coherent.
+pub trait ForwardBackend {
+    /// Backend name (`"sim" | "plan" | "xla"`).
+    fn name(&self) -> &'static str;
+
+    /// Architecture this backend executes.
+    fn arch(&self) -> &Arch;
+
+    /// Fingerprint of the fault map compiled into this backend — the chip
+    /// identity ([`crate::faults::FaultMap::fingerprint`]).
+    fn fingerprint(&self) -> u64;
+
+    /// Mitigation compiled into this backend.
+    fn kind(&self) -> MaskKind;
+
+    /// Logits `[batch][num_classes]` of the faulty quantized forward pass
+    /// for `x` row-major `[batch][input_len]`.
+    fn forward_logits(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Per-weighted-layer pre-activations (post-bias, pre-ReLU), one
+    /// `[batch * dout]` buffer per layer — the Fig 2b scatter data.
+    fn activations(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Drop any state derived from the previous parameters (called on
+    /// [`super::ChipSession::swap_params`], e.g. per retrain epoch).
+    fn params_changed(&mut self);
+
+    /// Top-1 accuracy over `data` on this backend. The default batches
+    /// through [`ForwardBackend::forward_logits`]; backends with cheaper
+    /// whole-dataset paths may override.
+    fn evaluate(&mut self, params: &Params, calib: &Calibration, data: &Dataset) -> Result<f64> {
+        let b = self.arch().eval_batch;
+        let classes = self.arch().num_classes;
+        accuracy_over_batches(data, b, classes, |batch| {
+            self.forward_logits(params, calib, &batch.x, b)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::{alexnet32, mnist};
+
+    #[test]
+    fn parse_roundtrip() {
+        for b in [Backend::Sim, Backend::Plan, Backend::Xla] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert!(Backend::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn mlp_supported_everywhere() {
+        let a = mnist();
+        for b in [Backend::Sim, Backend::Plan, Backend::Xla] {
+            for s in [Scenario::FloatFwd, Scenario::FaultyFwd, Scenario::Train] {
+                assert!(b.supports(&a, s).is_ok(), "{b} {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_capability_matrix() {
+        let a = alexnet32();
+        // native engines reject conv archs outright
+        for b in [Backend::Sim, Backend::Plan] {
+            for s in [Scenario::FloatFwd, Scenario::FaultyFwd, Scenario::Train] {
+                let err = b.supports(&a, s).unwrap_err().to_string();
+                assert!(err.contains("conv"), "{b} {s:?}: {err}");
+            }
+        }
+        // xla runs conv float/train but has no conv faulty artifacts
+        assert!(Backend::Xla.supports(&a, Scenario::FloatFwd).is_ok());
+        assert!(Backend::Xla.supports(&a, Scenario::Train).is_ok());
+        let err = Backend::Xla.supports(&a, Scenario::FaultyFwd).unwrap_err().to_string();
+        assert!(err.contains("MLP"), "{err}");
+    }
+}

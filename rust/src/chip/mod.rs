@@ -1,0 +1,538 @@
+//! The chip lifecycle, end-to-end, behind one vocabulary.
+//!
+//! The paper's whole evaluation is "many forward passes against one faulty
+//! chip under one mitigation" (Fig 2/4/5, Algorithm 1). This module owns
+//! that story as a single facade:
+//!
+//! * [`Chip`] — builder for one physical chip: array size, fault
+//!   injection, post-fab localization ([`Chip::detect`]), mitigation.
+//! * [`ForwardBackend`] — the forward-engine trait with three
+//!   implementations: [`SimBackend`] (cycle-level oracle),
+//!   [`PlanBackend`] (compiled chip plans, the native campaign hot path)
+//!   and [`XlaBackend`] (PJRT over the AOT artifacts).
+//! * [`ChipSession`] — a chip + backend + loaded model; `evaluate`,
+//!   `forward_logits`, `activations` and `swap_params` (retrain epochs)
+//!   reuse compiled state across calls.
+//! * [`Engine`] — the campaign-level execution context: backend choice,
+//!   optional PJRT runtime, shared [`PlanCache`], thread budget, and the
+//!   float/train dispatch (XLA graphs vs the native host trainer).
+//! * [`Backend::supports`] — the capability matrix in one place
+//!   (EXPERIMENTS.md §Backends) instead of scattered `bail!`s.
+//!
+//! ```no_run
+//! # use repro::chip::{Backend, Chip};
+//! # use repro::mapping::MaskKind;
+//! # use repro::model::arch;
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Chip::new(arch::by_name("mnist").unwrap())
+//!     .array_n(64)
+//!     .inject(256, 42)
+//!     .detect()?
+//!     .mitigate(MaskKind::FapBypass)
+//!     .session(Backend::Plan)?;
+//! # Ok(()) }
+//! ```
+
+pub mod backend;
+pub mod pipeline;
+pub mod plan;
+pub mod sim;
+pub mod xla;
+
+pub use backend::{Backend, ForwardBackend, Scenario};
+pub use plan::PlanBackend;
+pub use sim::SimBackend;
+pub use xla::XlaBackend;
+
+use crate::coordinator::evaluate::{accuracy_over_batches, Evaluator};
+use crate::coordinator::fapt::{fapt_retrain, fapt_retrain_native, FaptConfig, FaptResult};
+use crate::coordinator::trainer::{train_baseline, train_baseline_native, TrainConfig};
+use crate::data::Dataset;
+use crate::exec::{default_threads, ChipPlan, PlanCache};
+use crate::faults::{detect, inject_uniform, FaultMap, FaultSpec, StuckAt};
+use crate::mapping::MaskKind;
+use crate::model::quant::{calibrate_mlp, mlp_forward, Calibration};
+use crate::model::{Arch, Params};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+/// Builder for one physical chip: architecture, array size, fault state
+/// and mitigation. Consume it with [`Chip::session`] /
+/// [`Chip::session_on`] / [`Engine::session`].
+#[derive(Clone, Debug)]
+pub struct Chip {
+    arch: Arch,
+    array_n: usize,
+    /// The chip as fabricated (hidden truth).
+    truth: FaultMap,
+    /// What the controller knows after [`Chip::detect`]; `None` = assume
+    /// perfect knowledge (campaigns skip the localization step).
+    known: Option<FaultMap>,
+    detected: Option<usize>,
+    kind: MaskKind,
+    /// 0 = inherit (engine setting, falling back to all cores).
+    threads: usize,
+}
+
+impl Chip {
+    pub fn new(arch: Arch) -> Chip {
+        Chip {
+            arch,
+            array_n: 256,
+            truth: FaultMap::healthy(256),
+            known: None,
+            detected: None,
+            kind: MaskKind::Unmitigated,
+            threads: 0,
+        }
+    }
+
+    /// Physical array dimension (paper: 256). Set before injecting faults.
+    pub fn array_n(mut self, n: usize) -> Chip {
+        assert_eq!(
+            self.truth.faulty_mac_count(),
+            0,
+            "set array_n before injecting faults"
+        );
+        self.array_n = n;
+        self.truth = FaultMap::healthy(n);
+        self
+    }
+
+    /// Adopt an existing fault map (the chip as fabricated).
+    pub fn with_fault_map(mut self, fm: FaultMap) -> Chip {
+        self.array_n = fm.n();
+        self.truth = fm;
+        self.known = None;
+        self.detected = None;
+        self
+    }
+
+    /// Uniformly inject `faulty_macs` distinct faulty MACs (paper §4).
+    pub fn inject(mut self, faulty_macs: usize, seed: u64) -> Chip {
+        self.truth =
+            inject_uniform(FaultSpec::new(self.array_n), faulty_macs, &mut Rng::new(seed));
+        self.known = None;
+        self.detected = None;
+        self
+    }
+
+    /// Inject by fault *rate* (fraction of the grid, Fig 4's x-axis).
+    pub fn inject_rate(self, rate: f64, seed: u64) -> Chip {
+        let total = self.array_n * self.array_n;
+        let k = ((rate * total as f64).round() as usize).min(total);
+        self.inject(k, seed)
+    }
+
+    /// Post-fabrication localization: run the DFT bypass search against
+    /// the true fault map and adopt the *detected* map (MAC granularity,
+    /// canonical marker faults) as what the controller mitigates.
+    pub fn detect(mut self) -> Result<Chip> {
+        let rep = detect::localize_from_map(&self.truth, Default::default());
+        let mut known = FaultMap::healthy(self.array_n);
+        for (r, c) in &rep.faulty {
+            known.add(StuckAt { row: *r as u16, col: *c as u16, bit: 0, value: true });
+        }
+        self.detected = Some(rep.faulty.len());
+        self.known = Some(known);
+        Ok(self)
+    }
+
+    pub fn mitigate(mut self, kind: MaskKind) -> Chip {
+        self.kind = kind;
+        self
+    }
+
+    /// Worker threads for the plan executor (0 = inherit).
+    pub fn threads(mut self, t: usize) -> Chip {
+        self.threads = t;
+        self
+    }
+
+    pub fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    pub fn kind(&self) -> MaskKind {
+        self.kind
+    }
+
+    /// The controller-visible fault map (detected if [`Chip::detect`] ran,
+    /// the fabricated truth otherwise).
+    pub fn fault_map(&self) -> &FaultMap {
+        self.known.as_ref().unwrap_or(&self.truth)
+    }
+
+    /// The chip as fabricated, regardless of detection.
+    pub fn true_fault_map(&self) -> &FaultMap {
+        &self.truth
+    }
+
+    /// Faulty MACs the localization step reported (after [`Chip::detect`]).
+    pub fn detected(&self) -> Option<usize> {
+        self.detected
+    }
+
+    /// Open a session on a native backend (`sim` | `plan`); the `xla`
+    /// backend needs a runtime — use [`Chip::session_on`] or
+    /// [`Engine::session`].
+    pub fn session(&self, backend: Backend) -> Result<ChipSession<'static>> {
+        if backend == Backend::Xla {
+            bail!(
+                "the xla backend needs a PJRT runtime over an artifacts directory — \
+                 use Chip::session_on(Backend::Xla, &rt) or Engine::session"
+            );
+        }
+        self.build(backend, None, None, 0)
+    }
+
+    /// Open a session on any backend, with a PJRT runtime available.
+    pub fn session_on<'rt>(&self, backend: Backend, rt: &'rt Runtime) -> Result<ChipSession<'rt>> {
+        self.build(backend, Some(rt), None, 0)
+    }
+
+    fn build<'rt>(
+        &self,
+        backend: Backend,
+        rt: Option<&'rt Runtime>,
+        plans: Option<&mut PlanCache>,
+        fallback_threads: usize,
+    ) -> Result<ChipSession<'rt>> {
+        backend.supports(&self.arch, Scenario::FaultyFwd)?;
+        let fm = self.fault_map().clone();
+        let threads = match (self.threads, fallback_threads) {
+            (0, 0) => default_threads(),
+            (0, t) => t,
+            (t, _) => t,
+        };
+        let engine: Box<dyn ForwardBackend + 'rt> = match backend {
+            Backend::Sim => Box::new(SimBackend::new(self.arch.clone(), fm, self.kind)),
+            Backend::Plan | Backend::Xla => {
+                // mask-level plan: shared via the campaign cache when given
+                let chip_plan = match plans {
+                    Some(cache) => cache.get_or_compile(&self.arch, &fm, self.kind),
+                    None => Rc::new(ChipPlan::compile(&self.arch, &fm, self.kind)),
+                };
+                if backend == Backend::Plan {
+                    let arch = self.arch.clone();
+                    Box::new(PlanBackend::new(arch, fm, self.kind, chip_plan, threads))
+                } else {
+                    let rt = rt.context("xla backend needs a PJRT runtime")?;
+                    Box::new(XlaBackend::new(rt, self.arch.clone(), chip_plan))
+                }
+            }
+        };
+        Ok(ChipSession { arch: self.arch.clone(), backend: engine, model: None })
+    }
+}
+
+/// A chip, an execution backend, and a loaded model: the unit every
+/// campaign, example and bench runs forward passes through.
+pub struct ChipSession<'rt> {
+    arch: Arch,
+    backend: Box<dyn ForwardBackend + 'rt>,
+    model: Option<(Params, Calibration)>,
+}
+
+impl ChipSession<'_> {
+    pub fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Chip identity: the fault-map fingerprint the backend was compiled
+    /// against ([`crate::faults::FaultMap::fingerprint`]).
+    pub fn fingerprint(&self) -> u64 {
+        self.backend.fingerprint()
+    }
+
+    pub fn kind(&self) -> MaskKind {
+        self.backend.kind()
+    }
+
+    /// Load model parameters and their quantization calibration.
+    pub fn load_model(&mut self, params: Params, calib: Calibration) {
+        self.model = Some((params, calib));
+        self.backend.params_changed();
+    }
+
+    /// [`ChipSession::load_model`] with the calibration computed from a
+    /// calibration batch (`x` row-major `[batch][input_len]`).
+    pub fn calibrate_and_load(&mut self, params: Params, x: &[f32], batch: usize) {
+        let calib = calibrate_mlp(&self.arch, &params, x, batch);
+        self.load_model(params, calib);
+    }
+
+    /// Swap parameters (e.g. per FAP+T retrain epoch), keeping the
+    /// calibration; backend state derived from the old params is dropped,
+    /// everything derived from the chip (masks, cached plans) is reused.
+    pub fn swap_params(&mut self, params: Params) -> Result<()> {
+        match &mut self.model {
+            Some((p, _)) => {
+                *p = params;
+                self.backend.params_changed();
+                Ok(())
+            }
+            None => bail!("ChipSession: load_model before swap_params"),
+        }
+    }
+
+    pub fn params(&self) -> Option<&Params> {
+        self.model.as_ref().map(|(p, _)| p)
+    }
+
+    /// Logits `[batch][num_classes]` of the faulty quantized forward.
+    pub fn forward_logits(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let Some((params, calib)) = self.model.as_ref() else {
+            bail!("ChipSession: load_model before forward_logits");
+        };
+        self.backend.forward_logits(params, calib, x, batch)
+    }
+
+    /// Per-weighted-layer pre-activations (Fig 2b scatter data).
+    pub fn activations(&mut self, x: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        let Some((params, calib)) = self.model.as_ref() else {
+            bail!("ChipSession: load_model before activations");
+        };
+        self.backend.activations(params, calib, x, batch)
+    }
+
+    /// Top-1 accuracy over `data` on this chip.
+    pub fn evaluate(&mut self, data: &Dataset) -> Result<f64> {
+        let Some((params, calib)) = self.model.as_ref() else {
+            bail!("ChipSession: load_model before evaluate");
+        };
+        self.backend.evaluate(params, calib, data)
+    }
+}
+
+/// Campaign-level execution context: one backend choice, the optional PJRT
+/// runtime, a shared compile-once [`PlanCache`], and the float/train
+/// dispatch between the XLA graphs and the native host trainer.
+pub struct Engine<'rt> {
+    backend: Backend,
+    rt: Option<&'rt Runtime>,
+    /// Compile-once chip-plan cache shared across every session the engine
+    /// opens (sweep points, seeds, retrain epochs of the same chip).
+    pub plans: PlanCache,
+    threads: usize,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(backend: Backend, rt: Option<&'rt Runtime>) -> Result<Engine<'rt>> {
+        if backend == Backend::Xla && rt.is_none() {
+            bail!("backend xla needs the PJRT runtime (an artifacts directory)");
+        }
+        Ok(Engine { backend, rt, plans: PlanCache::new(), threads: 0 })
+    }
+
+    /// Worker threads for the plan executor (0 = all cores).
+    pub fn with_threads(mut self, threads: usize) -> Engine<'rt> {
+        self.threads = threads;
+        self
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn runtime(&self) -> Option<&'rt Runtime> {
+        self.rt
+    }
+
+    pub fn threads(&self) -> usize {
+        if self.threads == 0 {
+            default_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Plan-cache statistics `(cached plans, hits, misses)`.
+    pub fn plan_stats(&self) -> (usize, usize, usize) {
+        (self.plans.len(), self.plans.hits(), self.plans.misses())
+    }
+
+    /// Open a [`ChipSession`] on this engine's backend, sharing the plan
+    /// cache and thread budget.
+    pub fn session(&mut self, chip: &Chip) -> Result<ChipSession<'rt>> {
+        chip.build(self.backend, self.rt, Some(&mut self.plans), self.threads)
+    }
+
+    /// Float accuracy of a model on a fault-free device (baseline / FAP /
+    /// FAP+T numbers): the `{arch}_fwd` artifact under `xla`, the host
+    /// float forward natively.
+    pub fn float_accuracy(&self, arch: &Arch, params: &Params, data: &Dataset) -> Result<f64> {
+        self.backend.supports(arch, Scenario::FloatFwd)?;
+        match self.backend {
+            Backend::Xla => Evaluator::new(self.rt.unwrap()).accuracy(arch, params, data),
+            Backend::Sim | Backend::Plan => {
+                let b = arch.eval_batch;
+                accuracy_over_batches(data, b, arch.num_classes, |batch| {
+                    Ok(mlp_forward(arch, params, &batch.x, b))
+                })
+            }
+        }
+    }
+
+    /// Train a fresh baseline: the `{arch}_train` graph under `xla`, the
+    /// host trainer natively (same loss / SGD+momentum / masking rules).
+    pub fn train(
+        &self,
+        arch: &Arch,
+        train: &Dataset,
+        cfg: &TrainConfig,
+    ) -> Result<(Params, Vec<f32>)> {
+        self.backend.supports(arch, Scenario::Train)?;
+        match self.backend {
+            Backend::Xla => train_baseline(self.rt.unwrap(), arch, train, cfg),
+            Backend::Sim | Backend::Plan => train_baseline_native(arch, train, cfg),
+        }
+    }
+
+    /// FAP+T retraining (Algorithm 1) from already-pruned parameters.
+    pub fn retrain(
+        &self,
+        arch: &Arch,
+        fap_params: &Params,
+        prune_masks: &[Vec<f32>],
+        train: &Dataset,
+        cfg: &FaptConfig,
+    ) -> Result<FaptResult> {
+        self.backend.supports(arch, Scenario::Train)?;
+        match self.backend {
+            Backend::Xla => {
+                fapt_retrain(self.rt.unwrap(), arch, fap_params, prune_masks, train, cfg)
+            }
+            Backend::Sim | Backend::Plan => {
+                fapt_retrain_native(arch, fap_params, prune_masks, train, cfg)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::alexnet32;
+    use crate::model::Layer;
+
+    fn tiny_mlp() -> Arch {
+        Arch {
+            name: "tiny",
+            layers: vec![Layer::fc(12, 9, true), Layer::fc(9, 4, false)],
+            input_shape: vec![12],
+            num_classes: 4,
+            eval_batch: 8,
+            train_batch: 8,
+        }
+    }
+
+    fn rand_params(arch: &Arch, rng: &mut Rng) -> Params {
+        let mut p = Params::zeros_like(arch);
+        for (w, b) in &mut p.layers {
+            w.iter_mut().for_each(|v| *v = rng.normal() * 0.3);
+            b.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
+        }
+        p
+    }
+
+    #[test]
+    fn builder_tracks_fault_state() {
+        let chip = Chip::new(tiny_mlp()).array_n(8).inject(10, 3);
+        assert_eq!(chip.fault_map().faulty_mac_count(), 10);
+        assert_eq!(chip.true_fault_map().faulty_mac_count(), 10);
+        assert!(chip.detected().is_none());
+        let chip = chip.detect().unwrap();
+        let det = chip.detected().unwrap();
+        // the controller now mitigates the *detected* map: a subset of the
+        // truth at MAC granularity (localization is probabilistic-exact)
+        assert_eq!(chip.fault_map().faulty_mac_count(), det);
+        assert!(det > 0 && det <= 10);
+        let truth = chip.true_fault_map().faulty_macs();
+        for mac in chip.fault_map().faulty_macs() {
+            assert!(truth.contains(&mac), "false positive at {mac:?}");
+        }
+    }
+
+    #[test]
+    fn xla_session_requires_runtime() {
+        let err = Chip::new(tiny_mlp()).session(Backend::Xla).unwrap_err().to_string();
+        assert!(err.contains("runtime"), "{err}");
+        assert!(Engine::new(Backend::Xla, None).is_err());
+    }
+
+    #[test]
+    fn conv_arch_rejected_in_one_place() {
+        let chip = Chip::new(alexnet32()).array_n(8).inject(4, 1);
+        for backend in [Backend::Sim, Backend::Plan] {
+            let err = chip.session(backend).unwrap_err().to_string();
+            assert!(err.contains("conv"), "{backend}: {err}");
+        }
+    }
+
+    #[test]
+    fn session_requires_model() {
+        let mut s = Chip::new(tiny_mlp()).array_n(4).session(Backend::Plan).unwrap();
+        assert!(s.forward_logits(&[0.0; 12], 1).is_err());
+        assert!(s.swap_params(Params::zeros_like(&tiny_mlp())).is_err());
+    }
+
+    #[test]
+    fn swap_params_invalidates_compiled_state() {
+        let arch = tiny_mlp();
+        let mut rng = Rng::new(5);
+        let p1 = rand_params(&arch, &mut rng);
+        let p2 = rand_params(&arch, &mut rng);
+        let x: Vec<f32> = (0..2 * 12).map(|_| rng.normal()).collect();
+        let calib = calibrate_mlp(&arch, &p1, &x, 2);
+
+        let chip = Chip::new(arch.clone()).array_n(4).inject(3, 9);
+        let mut s = chip.session(Backend::Plan).unwrap();
+        s.load_model(p1, calib.clone());
+        let l1 = s.forward_logits(&x, 2).unwrap();
+        s.swap_params(p2).unwrap();
+        let l2 = s.forward_logits(&x, 2).unwrap();
+        assert_ne!(l1, l2, "new params must reach the compiled engine");
+    }
+
+    #[test]
+    fn sim_and_plan_sessions_bit_agree() {
+        let arch = tiny_mlp();
+        let mut rng = Rng::new(7);
+        let params = rand_params(&arch, &mut rng);
+        let x: Vec<f32> = (0..8 * 12).map(|_| rng.normal()).collect();
+        let calib = calibrate_mlp(&arch, &params, &x, 8);
+        for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
+            let chip = Chip::new(arch.clone()).array_n(5).inject(6, 11).mitigate(kind);
+            let mut sim = chip.session(Backend::Sim).unwrap();
+            let mut plan = chip.session(Backend::Plan).unwrap();
+            sim.load_model(params.clone(), calib.clone());
+            plan.load_model(params.clone(), calib.clone());
+            assert_eq!(sim.fingerprint(), plan.fingerprint());
+            let ls = sim.forward_logits(&x, 8).unwrap();
+            let lp = plan.forward_logits(&x, 8).unwrap();
+            let (bs, bp): (Vec<u32>, Vec<u32>) = (
+                ls.iter().map(|v| v.to_bits()).collect(),
+                lp.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(bs, bp, "kind {kind:?}");
+        }
+    }
+
+    #[test]
+    fn engine_shares_plan_cache_across_sessions() {
+        let arch = tiny_mlp();
+        let mut engine = Engine::new(Backend::Plan, None).unwrap();
+        let chip = Chip::new(arch).array_n(4).inject(2, 1);
+        let _s1 = engine.session(&chip).unwrap();
+        let _s2 = engine.session(&chip).unwrap();
+        let (plans, hits, misses) = engine.plan_stats();
+        assert_eq!((plans, hits, misses), (1, 1, 1));
+    }
+}

@@ -1,0 +1,79 @@
+//! The quantize → int-matmul → dequantize pipeline shared by the native
+//! backends.
+//!
+//! Mirrors `python/compile/faulty.py::faulty_forward` operation-for-
+//! operation: per layer, quantize activations with the calibration's
+//! activation scale, run the faulty systolic matmul in wrapping int32
+//! (supplied by the backend as a closure — the only part that differs
+//! between the cycle-level sim and the compiled plan executor), dequantize
+//! with `a_scale * w_scale`, add the float bias, ReLU on hidden layers.
+//!
+//! Because [`super::SimBackend`] and [`super::PlanBackend`] both run this
+//! exact float code around int32 cores that are bit-exact with each other
+//! (`rust/tests/proptest_exec.rs`), their logits are bitwise identical —
+//! the property `rust/tests/backend_parity.rs` pins.
+
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Layer, Params};
+use crate::systolic::fixed;
+use anyhow::{ensure, Result};
+
+/// Run the quantized MLP forward. `matmul(li, q, batch, k, m, acc)` must
+/// overwrite `acc` (pre-sized to `batch * m`) with the faulty chip's
+/// wrapping-int32 accumulator outputs, row-major `[batch][m]`, for
+/// quantized activations `q` (`[batch][k]`) against weighted layer `li` —
+/// the buffer is reused across layers so the hot path never copies the
+/// GEMM output. Returns `(logits, preacts)`; `preacts` is empty unless
+/// `keep_preacts` (one post-bias pre-ReLU buffer per layer).
+pub(crate) fn quantized_mlp_forward<M>(
+    arch: &Arch,
+    params: &Params,
+    calib: &Calibration,
+    x: &[f32],
+    batch: usize,
+    keep_preacts: bool,
+    mut matmul: M,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>)>
+where
+    M: FnMut(usize, &[i32], usize, usize, usize, &mut [i32]),
+{
+    ensure!(arch.is_mlp(), "quantized pipeline supports MLP archs only (got {})", arch.name);
+    ensure!(
+        x.len() == batch * arch.input_len(),
+        "input length {} != batch {} x input_len {}",
+        x.len(),
+        batch,
+        arch.input_len()
+    );
+    let mut act = x.to_vec();
+    let mut preacts = Vec::new();
+    let mut acc: Vec<i32> = Vec::new();
+    for (li, layer) in arch.weighted_layers().iter().enumerate() {
+        let Layer::Fc(fc) = layer else { unreachable!("MLP arch") };
+        let (_w, b) = &params.layers[li];
+        let (a_s, w_s) = (calib.a_scales[li], calib.w_scales[li]);
+        let q = fixed::quantize_vec(&act, a_s);
+        acc.resize(batch * fc.dout, 0);
+        matmul(li, &q, batch, fc.din, fc.dout, &mut acc);
+        let mut y = vec![0.0f32; batch * fc.dout];
+        for bi in 0..batch {
+            let row = &acc[bi * fc.dout..(bi + 1) * fc.dout];
+            let out = &mut y[bi * fc.dout..(bi + 1) * fc.dout];
+            for (j, (&a, o)) in row.iter().zip(out.iter_mut()).enumerate() {
+                *o = fixed::dequantize(a, a_s, w_s) + b[j];
+            }
+        }
+        if keep_preacts {
+            preacts.push(y.clone());
+        }
+        if fc.relu {
+            for v in y.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        act = y;
+    }
+    Ok((act, preacts))
+}

@@ -1,0 +1,129 @@
+//! [`PlanBackend`] — the compiled chip-plan engine behind
+//! [`super::Backend::Plan`]: the whole quantize → compile → execute →
+//! dequantize pipeline, so callers never touch
+//! [`crate::exec::quantize_mlp_weights`] or [`crate::exec::MatmulPlan`]
+//! directly.
+//!
+//! Compiled state is reused across calls: the mask-level
+//! [`crate::exec::ChipPlan`] (shared through the campaign's
+//! [`crate::exec::PlanCache`]) lives for the session, and the per-layer
+//! weight tile programs are compiled once per parameter set — a retrain
+//! loop that [`super::ChipSession::swap_params`]s each epoch pays exactly
+//! one lowering per epoch, nothing per batch.
+
+use super::backend::ForwardBackend;
+use super::pipeline::quantized_mlp_forward;
+use crate::exec::{quantize_mlp_weights, ChipPlan, MatmulPlan};
+use crate::faults::FaultMap;
+use crate::mapping::MaskKind;
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Layer, Params};
+use anyhow::Result;
+use std::rc::Rc;
+
+pub struct PlanBackend {
+    arch: Arch,
+    fm: FaultMap,
+    kind: MaskKind,
+    threads: usize,
+    /// Mask-level plan (chip identity + per-layer masks), typically shared
+    /// from the campaign's [`crate::exec::PlanCache`].
+    chip_plan: Rc<ChipPlan>,
+    /// Weight tile programs for the current params, one per weighted
+    /// layer; empty until the first forward after a param (re)load.
+    layer_plans: Vec<MatmulPlan>,
+}
+
+impl PlanBackend {
+    pub fn new(
+        arch: Arch,
+        fm: FaultMap,
+        kind: MaskKind,
+        chip_plan: Rc<ChipPlan>,
+        threads: usize,
+    ) -> PlanBackend {
+        debug_assert!(chip_plan.matches(&fm));
+        PlanBackend { arch, fm, kind, threads: threads.max(1), chip_plan, layer_plans: Vec::new() }
+    }
+
+    /// The mask-level chip plan this backend executes.
+    pub fn chip_plan(&self) -> &Rc<ChipPlan> {
+        &self.chip_plan
+    }
+
+    fn ensure_plans(&mut self, params: &Params, calib: &Calibration) {
+        if !self.layer_plans.is_empty() {
+            return;
+        }
+        let qweights = quantize_mlp_weights(&self.arch, params, calib);
+        self.layer_plans = self
+            .arch
+            .weighted_layers()
+            .iter()
+            .zip(&qweights)
+            .map(|(l, qw)| {
+                let Layer::Fc(f) = l else { unreachable!("MLP arch") };
+                MatmulPlan::compile(&self.fm, self.kind, qw, f.din, f.dout)
+            })
+            .collect();
+    }
+
+    fn forward(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+        keep_preacts: bool,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        self.ensure_plans(params, calib);
+        let plans = &self.layer_plans;
+        let threads = self.threads;
+        let matmul = |li: usize, q: &[i32], b: usize, _k: usize, _m: usize, out: &mut [i32]| {
+            plans[li].execute_threaded_into(q, b, threads, out);
+        };
+        quantized_mlp_forward(&self.arch, params, calib, x, batch, keep_preacts, matmul)
+    }
+}
+
+impl ForwardBackend for PlanBackend {
+    fn name(&self) -> &'static str {
+        "plan"
+    }
+
+    fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.chip_plan.fingerprint()
+    }
+
+    fn kind(&self) -> MaskKind {
+        self.kind
+    }
+
+    fn forward_logits(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        Ok(self.forward(params, calib, x, batch, false)?.0)
+    }
+
+    fn activations(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(self.forward(params, calib, x, batch, true)?.1)
+    }
+
+    fn params_changed(&mut self) {
+        self.layer_plans.clear();
+    }
+}

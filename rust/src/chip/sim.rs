@@ -1,0 +1,96 @@
+//! [`SimBackend`] — the cycle-level oracle behind the [`super::Backend::Sim`]
+//! session: every matmul walks the bit-accurate PE chains of
+//! [`crate::systolic::TiledMatmul`] with the chip's stuck-at faults (and,
+//! under FAP, the bypass muxes) live. Slow by design; it is the reference
+//! the compiled-plan backend is verified against.
+
+use super::backend::ForwardBackend;
+use super::pipeline::quantized_mlp_forward;
+use crate::exec::quantize_mlp_weights;
+use crate::faults::FaultMap;
+use crate::mapping::MaskKind;
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Params};
+use crate::systolic::TiledMatmul;
+use anyhow::Result;
+
+pub struct SimBackend {
+    arch: Arch,
+    fingerprint: u64,
+    kind: MaskKind,
+    tm: TiledMatmul,
+    /// Quantized layer weights for the current params (dropped on swap).
+    qweights: Option<Vec<Vec<i32>>>,
+}
+
+impl SimBackend {
+    pub fn new(arch: Arch, fm: FaultMap, kind: MaskKind) -> SimBackend {
+        let tm = TiledMatmul::new(&fm, kind == MaskKind::FapBypass);
+        SimBackend { arch, fingerprint: fm.fingerprint(), kind, tm, qweights: None }
+    }
+
+    fn ensure_qweights(&mut self, params: &Params, calib: &Calibration) {
+        if self.qweights.is_none() {
+            self.qweights = Some(quantize_mlp_weights(&self.arch, params, calib));
+        }
+    }
+
+    fn forward(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+        keep_preacts: bool,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        self.ensure_qweights(params, calib);
+        let qw = self.qweights.as_ref().unwrap();
+        let tm = &mut self.tm;
+        let matmul = |li: usize, q: &[i32], b: usize, k: usize, m: usize, out: &mut [i32]| {
+            tm.matmul_into(q, &qw[li], b, k, m, out);
+        };
+        quantized_mlp_forward(&self.arch, params, calib, x, batch, keep_preacts, matmul)
+    }
+}
+
+impl ForwardBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    fn kind(&self) -> MaskKind {
+        self.kind
+    }
+
+    fn forward_logits(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        Ok(self.forward(params, calib, x, batch, false)?.0)
+    }
+
+    fn activations(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        Ok(self.forward(params, calib, x, batch, true)?.1)
+    }
+
+    fn params_changed(&mut self) {
+        self.qweights = None;
+    }
+}

@@ -1,0 +1,150 @@
+//! [`XlaBackend`] — the PJRT engine behind [`super::Backend::Xla`]: wraps
+//! the [`crate::coordinator::evaluate::Evaluator`] artifact paths
+//! (`{arch}_faulty_fwd`, `{arch}_faulty_acts`) behind the
+//! [`ForwardBackend`] contract.
+//!
+//! The (large) parameter + mask + scale literal set is built once per
+//! parameter set and only the per-call `x` literal is swapped in place —
+//! the EXPERIMENTS.md §Perf lesson (cloning ~45 MB of mask literals per
+//! batch used to dominate this path).
+
+use super::backend::ForwardBackend;
+use crate::coordinator::evaluate::Evaluator;
+use crate::exec::ChipPlan;
+use crate::mapping::MaskKind;
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Params};
+use crate::runtime::{lit_f32, Runtime};
+use anyhow::{ensure, Result};
+use std::rc::Rc;
+
+pub struct XlaBackend<'rt> {
+    rt: &'rt Runtime,
+    arch: Arch,
+    /// Mask-level chip plan (identity + per-layer masks the artifacts eat).
+    chip_plan: Rc<ChipPlan>,
+    /// Cached artifact inputs for the current params: params, AND/OR/bypass
+    /// masks and scales, with slot `x_slot` reserved for the batch literal.
+    inputs: Option<Vec<xla::Literal>>,
+    x_slot: usize,
+}
+
+impl<'rt> XlaBackend<'rt> {
+    pub fn new(rt: &'rt Runtime, arch: Arch, chip_plan: Rc<ChipPlan>) -> XlaBackend<'rt> {
+        XlaBackend { rt, arch, chip_plan, inputs: None, x_slot: 0 }
+    }
+
+    fn ensure_inputs(&mut self, params: &Params, calib: &Calibration) -> Result<()> {
+        if self.inputs.is_none() {
+            let ev = Evaluator::new(self.rt);
+            let inputs = ev.faulty_inputs(&self.arch, params, self.chip_plan.masks(), calib)?;
+            self.x_slot = inputs.len();
+            self.inputs = Some(inputs);
+        }
+        Ok(())
+    }
+
+    /// Run `exe_suffix` over `x` in eval-batch chunks (zero-padding the
+    /// tail) and hand each chunk's outputs to `collect(outs, take)`.
+    fn run_chunked<F>(
+        &mut self,
+        exe_suffix: &str,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+        mut collect: F,
+    ) -> Result<()>
+    where
+        F: FnMut(&crate::runtime::Executable, &[xla::Literal], usize) -> Result<()>,
+    {
+        let b = self.arch.eval_batch;
+        let dim = self.arch.input_len();
+        ensure!(
+            x.len() == batch * dim,
+            "input length {} != batch {} x input_len {}",
+            x.len(),
+            batch,
+            dim
+        );
+        self.ensure_inputs(params, calib)?;
+        let exe = self.rt.load(&format!("{}{}", self.arch.name, exe_suffix))?;
+        let inputs = self.inputs.as_mut().unwrap();
+        let mut pos = 0;
+        while pos < batch {
+            let take = (batch - pos).min(b);
+            let mut xb = vec![0.0f32; b * dim];
+            xb[..take * dim].copy_from_slice(&x[pos * dim..(pos + take) * dim]);
+            let x_lit = lit_f32(&xb, &[b, dim])?;
+            if inputs.len() == self.x_slot {
+                inputs.push(x_lit);
+            } else {
+                inputs[self.x_slot] = x_lit;
+            }
+            let outs = exe.run(&inputs[..])?;
+            collect(&exe, &outs, take)?;
+            pos += take;
+        }
+        Ok(())
+    }
+}
+
+impl ForwardBackend for XlaBackend<'_> {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn arch(&self) -> &Arch {
+        &self.arch
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.chip_plan.fingerprint()
+    }
+
+    fn kind(&self) -> MaskKind {
+        self.chip_plan.kind()
+    }
+
+    fn forward_logits(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let classes = self.arch.num_classes;
+        let mut logits = Vec::with_capacity(batch * classes);
+        self.run_chunked("_faulty_fwd", params, calib, x, batch, |exe, outs, take| {
+            let full = exe.f32_out(outs, 0)?;
+            logits.extend_from_slice(&full[..take * classes]);
+            Ok(())
+        })?;
+        Ok(logits)
+    }
+
+    fn activations(
+        &mut self,
+        params: &Params,
+        calib: &Calibration,
+        x: &[f32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let douts: Vec<usize> =
+            self.arch.weighted_layers().iter().map(|l| l.bias_len()).collect();
+        let mut acts: Vec<Vec<f32>> =
+            douts.iter().map(|d| Vec::with_capacity(batch * d)).collect();
+        self.run_chunked("_faulty_acts", params, calib, x, batch, |exe, outs, take| {
+            for (i, d) in douts.iter().enumerate() {
+                let full = exe.f32_out(outs, i)?;
+                acts[i].extend_from_slice(&full[..take * d]);
+            }
+            Ok(())
+        })?;
+        Ok(acts)
+    }
+
+    fn params_changed(&mut self) {
+        self.inputs = None;
+    }
+}

@@ -64,8 +64,11 @@ impl<'rt> Evaluator<'rt> {
         Ok(correct as f64 / total.max(1) as f64)
     }
 
-    /// Inputs to the faulty artifacts: params, and/or/byp masks, scales, x.
-    fn faulty_inputs(
+    /// Inputs to the faulty artifacts: params, and/or/byp masks, scales —
+    /// everything except the per-batch `x` literal. Shared with
+    /// [`crate::chip::XlaBackend`], which caches the set and swaps only
+    /// `x` in place (EXPERIMENTS.md §Perf).
+    pub(crate) fn faulty_inputs(
         &self,
         arch: &Arch,
         params: &Params,
@@ -175,6 +178,28 @@ impl<'rt> Evaluator<'rt> {
         }
         Ok(acts)
     }
+}
+
+/// Fold top-1 accuracy over padded batches: `logits_of(batch)` returns the
+/// `[batch_size][classes]` logits; only each batch's `valid` rows count.
+/// Shared by the chip backends' default `evaluate` and the engine's native
+/// float path so the padding/empty-dataset handling lives in one place.
+pub fn accuracy_over_batches<F>(
+    data: &Dataset,
+    batch_size: usize,
+    classes: usize,
+    mut logits_of: F,
+) -> Result<f64>
+where
+    F: FnMut(&crate::data::dataset::Batch) -> Result<Vec<f32>>,
+{
+    let (mut correct, mut total) = (0usize, 0usize);
+    for batch in data.batches(batch_size) {
+        let logits = logits_of(&batch)?;
+        correct += count_correct(&logits, &batch.y, classes, batch.valid);
+        total += batch.valid;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
 }
 
 /// Count argmax hits over the first `valid` rows.

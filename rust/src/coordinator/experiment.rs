@@ -1,27 +1,30 @@
 //! The figure/table harness: regenerates every table and figure of the
-//! paper's evaluation (see DESIGN.md per-experiment index).
+//! paper's evaluation (see DESIGN.md per-experiment index) on any
+//! execution backend — `sim`, `plan` (both artifact-free) or `xla`.
+//!
+//! Every faulty forward pass goes through a [`crate::chip::ChipSession`]
+//! opened on the harness's [`Engine`], so the engine's compile-once plan
+//! cache, thread budget and capability checks apply uniformly; training
+//! and float evaluation dispatch through the same engine (XLA graphs or
+//! the native host trainer).
 //!
 //! Scaled defaults: the paper's full campaign (10 seeds x 64K-MAC
 //! gate-level sim x 25 retrain epochs) is far beyond a single CPU core;
 //! the harness defaults reproduce every curve's *shape* at reduced
 //! repeats/sets (EXPERIMENTS.md records the exact parameters of each
-//! recorded run). `--paper-scale` lifts the reductions.
+//! recorded run). `--profile paper` lifts the reductions.
 
-use super::evaluate::Evaluator;
 use super::fap::apply_fap_planned;
-use super::fapt::{fapt_retrain, FaptConfig};
+use super::fapt::FaptConfig;
 use super::report::{mean_std, print_table, write_csv, write_json};
-use super::trainer::{train_baseline, TrainConfig};
+use super::trainer::TrainConfig;
+use crate::chip::{Chip, Engine};
 use crate::data;
-use crate::exec::PlanCache;
-use crate::faults::{inject_uniform, FaultSpec};
 use crate::mapping::MaskKind;
 use crate::model::quant::{calibrate_mlp, Calibration};
 use crate::model::{arch, Arch, Params};
-use crate::runtime::Runtime;
 use crate::systolic::synthesis;
 use crate::util::json::Json;
-use crate::util::Rng;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 
@@ -35,6 +38,8 @@ pub struct HarnessConfig {
     pub array_n: usize,
     /// Scale factor profile: quick (CI-sized), default, or paper-scale.
     pub profile: Profile,
+    /// Plan-executor worker threads (0 = all cores).
+    pub threads: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +57,7 @@ impl Default for HarnessConfig {
             repeats: 3,
             array_n: 256,
             profile: Profile::Default,
+            threads: 0,
         }
     }
 }
@@ -66,24 +72,28 @@ struct ModelBundle {
 }
 
 pub struct Harness<'rt> {
-    rt: &'rt Runtime,
+    engine: Engine<'rt>,
     pub cfg: HarnessConfig,
     bundles: HashMap<String, ModelBundle>,
-    /// Compile-once chip-plan cache: each `(arch, fault map, mitigation)`
-    /// triple is lowered exactly once and reused across every sweep point,
-    /// seed and retrain epoch that touches the same chip.
-    plans: PlanCache,
 }
 
 impl<'rt> Harness<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: HarnessConfig) -> Self {
-        Harness { rt, cfg, bundles: HashMap::new(), plans: PlanCache::new() }
+    pub fn new(mut engine: Engine<'rt>, cfg: HarnessConfig) -> Self {
+        if cfg.threads != 0 {
+            engine = engine.with_threads(cfg.threads);
+        }
+        Harness { engine, cfg, bundles: HashMap::new() }
+    }
+
+    /// The execution engine (backend, plan cache, runtime handle).
+    pub fn engine(&self) -> &Engine<'rt> {
+        &self.engine
     }
 
     /// Plan-cache statistics `(cached plans, hits, misses)` — campaign
     /// diagnostics surfaced after `run`.
     pub fn plan_cache_stats(&self) -> (usize, usize, usize) {
-        (self.plans.len(), self.plans.hits(), self.plans.misses())
+        self.engine.plan_stats()
     }
 
     fn train_config(&self, name: &str) -> (usize, usize, TrainConfig) {
@@ -118,10 +128,13 @@ impl<'rt> Harness<'rt> {
             eprintln!("[{name}] generating data (train {train_n}, test {test_n})");
             let (train, test) =
                 data::for_arch(name, train_n, test_n, self.cfg.seed).unwrap();
-            eprintln!("[{name}] training baseline ({} steps)", tcfg.steps);
-            let (baseline, _losses) = train_baseline(self.rt, &a, &train, &tcfg)?;
-            let ev = Evaluator::new(self.rt);
-            let baseline_acc = ev.accuracy(&a, &baseline, &test)?;
+            eprintln!(
+                "[{name}] training baseline ({} steps, {} backend)",
+                tcfg.steps,
+                self.engine.backend()
+            );
+            let (baseline, _losses) = self.engine.train(&a, &train, &tcfg)?;
+            let baseline_acc = self.engine.float_accuracy(&a, &baseline, &test)?;
             eprintln!("[{name}] baseline accuracy {:.2}%", baseline_acc * 100.0);
             let calib = if a.is_mlp() {
                 let cal_batch = 64.min(train.len());
@@ -185,6 +198,7 @@ impl<'rt> Harness<'rt> {
         let n = self.cfg.array_n;
         let mut out = Json::obj()
             .field("figure", Json::str("fig2a"))
+            .field("backend", Json::str(self.engine.backend().name()))
             .field("array_n", Json::num(n as f64))
             .field("seed", Json::num(self.cfg.seed as f64));
         let mut rows = Vec::new();
@@ -196,21 +210,22 @@ impl<'rt> Harness<'rt> {
                 (b.arch.clone(), b.baseline.clone(), b.calib.clone().unwrap());
             let test = b.test.clone();
             let float_acc = b.baseline_acc;
-            let ev = Evaluator::new(self.rt);
 
             let mut series = Vec::new();
             for &k in &counts {
                 let mut accs = Vec::new();
                 for rep in 0..repeats {
-                    let mut rng =
-                        Rng::new(self.cfg.seed ^ (k as u64) << 16 ^ rep as u64);
-                    let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
-                    // compile the chip once; any later experiment touching
-                    // the same fault map reuses the plan from the cache
-                    let plan = self.plans.get_or_compile(&a, &fm, MaskKind::Unmitigated);
-                    let acc =
-                        ev.accuracy_planned(&a, &params, &plan, &calib, &test, false)?;
-                    accs.push(acc);
+                    let seed = self.cfg.seed ^ ((k as u64) << 16) ^ rep as u64;
+                    // one chip per (count, rep); the session compiles it
+                    // once and the engine's plan cache reuses the lowering
+                    // for any later experiment touching the same chip
+                    let chip = Chip::new(a.clone())
+                        .array_n(n)
+                        .inject(k, seed)
+                        .mitigate(MaskKind::Unmitigated);
+                    let mut sess = self.engine.session(&chip)?;
+                    sess.load_model(params.clone(), calib.clone());
+                    accs.push(sess.evaluate(&test)?);
                     if k == 0 {
                         break; // no randomness at zero faults
                     }
@@ -257,26 +272,27 @@ impl<'rt> Harness<'rt> {
         let (a, params, calib) =
             (b.arch.clone(), b.baseline.clone(), b.calib.clone().unwrap());
         let test = b.test.clone();
-        let ev = Evaluator::new(self.rt);
 
         let batch = test.batches(a.eval_batch).next().unwrap();
         let valid = batch.valid.min(64); // paper scatters a sample subset
 
-        let healthy = crate::faults::FaultMap::healthy(n);
-        let golden_plan = self.plans.get_or_compile(&a, &healthy, MaskKind::Unmitigated);
-        let golden =
-            ev.faulty_activations(&a, &params, golden_plan.masks(), &calib, &batch.x, valid)?;
+        // golden = the same quantized datapath on a defect-free chip
+        let golden_chip = Chip::new(a.clone()).array_n(n);
+        let mut golden_sess = self.engine.session(&golden_chip)?;
+        golden_sess.load_model(params.clone(), calib.clone());
+        let golden = golden_sess.activations(&batch.x, a.eval_batch)?;
 
-        let mut rng = Rng::new(self.cfg.seed ^ 0xF16_2B);
-        let fm = inject_uniform(FaultSpec::new(n), 8, &mut rng);
-        let plan = self.plans.get_or_compile(&a, &fm, MaskKind::Unmitigated);
-        let faulty =
-            ev.faulty_activations(&a, &params, plan.masks(), &calib, &batch.x, valid)?;
+        let faulty_chip =
+            Chip::new(a.clone()).array_n(n).inject(8, self.cfg.seed ^ 0xF16_2B);
+        let mut faulty_sess = self.engine.session(&faulty_chip)?;
+        faulty_sess.load_model(params.clone(), calib.clone());
+        let faulty = faulty_sess.activations(&batch.x, a.eval_batch)?;
 
         // paper plots layer 3 (the last hidden layer) of the TIMIT MLP
         let layer = 2usize;
-        let g = &golden[layer];
-        let f = &faulty[layer];
+        let dout = a.weighted_layers()[layer].bias_len();
+        let g = &golden[layer][..valid * dout];
+        let f = &faulty[layer][..valid * dout];
         let gmax = g.iter().fold(0.0f32, |m, v| m.max(v.abs()));
         let fmax = f.iter().fold(0.0f32, |m, v| m.max(v.abs()));
         let scatter: Vec<Vec<f64>> = g
@@ -289,6 +305,7 @@ impl<'rt> Harness<'rt> {
 
         let out = Json::obj()
             .field("figure", Json::str("fig2b"))
+            .field("backend", Json::str(self.engine.backend().name()))
             .field("faulty_macs", Json::num(8))
             .field("layer", Json::num(layer as f64 + 1.0))
             .field("golden_max_abs", Json::num(gmax as f64))
@@ -327,6 +344,7 @@ impl<'rt> Harness<'rt> {
         let repeats = self.cfg.repeats;
         let mut out = Json::obj()
             .field("figure", Json::str("fig4"))
+            .field("backend", Json::str(self.engine.backend().name()))
             .field("array_n", Json::num(n as f64))
             .field("retrain_epochs", Json::num(retrain_epochs as f64));
         let mut rows = Vec::new();
@@ -337,37 +355,41 @@ impl<'rt> Harness<'rt> {
             let (a, baseline) = (b.arch.clone(), b.baseline.clone());
             let (train, test) = (b.train.clone(), b.test.clone());
             let base_acc = b.baseline_acc;
-            let ev = Evaluator::new(self.rt);
 
             let mut series = Vec::new();
             for &rate in &rates {
                 let (mut fap_accs, mut fapt_accs) = (Vec::new(), Vec::new());
                 for rep in 0..repeats {
-                    let mut rng = Rng::new(
-                        self.cfg.seed ^ ((rate * 1e4) as u64) << 20 ^ rep as u64,
-                    );
+                    let seed =
+                        self.cfg.seed ^ (((rate * 1e4) as u64) << 20) ^ rep as u64;
                     let k = (rate * (n * n) as f64).round() as usize;
-                    let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
+                    let chip = Chip::new(a.clone())
+                        .array_n(n)
+                        .inject(k, seed)
+                        .mitigate(MaskKind::FapBypass);
                     // one plan per chip: FAP pruning and every FAP+T
                     // retrain epoch reuse the same compiled masks
-                    let plan = self.plans.get_or_compile(&a, &fm, MaskKind::FapBypass);
+                    let plan = self.engine.plans.get_or_compile(
+                        &a,
+                        chip.fault_map(),
+                        MaskKind::FapBypass,
+                    );
                     let (fap_params, _rep) = apply_fap_planned(&baseline, &plan);
-                    fap_accs.push(ev.accuracy(&a, &fap_params, &test)?);
+                    fap_accs.push(self.engine.float_accuracy(&a, &fap_params, &test)?);
                     let fcfg = FaptConfig {
                         max_epochs: retrain_epochs,
                         lr: 0.01,
                         seed: self.cfg.seed ^ rep as u64,
                         snapshot_epochs: vec![],
                     };
-                    let res = fapt_retrain(
-                        self.rt,
+                    let res = self.engine.retrain(
                         &a,
                         &fap_params,
                         &plan.masks().prune,
                         &train,
                         &fcfg,
                     )?;
-                    fapt_accs.push(ev.accuracy(&a, &res.params, &test)?);
+                    fapt_accs.push(self.engine.float_accuracy(&a, &res.params, &test)?);
                 }
                 let (fm_, fs_) = mean_std(&fap_accs);
                 let (tm_, ts_) = mean_std(&fapt_accs);
@@ -428,6 +450,7 @@ impl<'rt> Harness<'rt> {
         let n = self.cfg.array_n;
         let mut out = Json::obj()
             .field("figure", Json::str("fig5"))
+            .field("backend", Json::str(self.engine.backend().name()))
             .field("fault_rate", Json::num(rate))
             .field("max_epochs", Json::num(max_epochs as f64));
         let mut rows = Vec::new();
@@ -438,14 +461,16 @@ impl<'rt> Harness<'rt> {
             let (a, baseline) = (b.arch.clone(), b.baseline.clone());
             let (train, test) = (b.train.clone(), b.test.clone());
             let base_acc = b.baseline_acc;
-            let ev = Evaluator::new(self.rt);
 
-            let mut rng = Rng::new(self.cfg.seed ^ 0xF165);
             let k = (rate * (n * n) as f64).round() as usize;
-            let fm = inject_uniform(FaultSpec::new(n), k, &mut rng);
-            let plan = self.plans.get_or_compile(&a, &fm, MaskKind::FapBypass);
+            let chip = Chip::new(a.clone())
+                .array_n(n)
+                .inject(k, self.cfg.seed ^ 0xF165)
+                .mitigate(MaskKind::FapBypass);
+            let plan =
+                self.engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
             let (fap_params, _) = apply_fap_planned(&baseline, &plan);
-            let fap_acc = ev.accuracy(&a, &fap_params, &test)?;
+            let fap_acc = self.engine.float_accuracy(&a, &fap_params, &test)?;
 
             let fcfg = FaptConfig {
                 max_epochs,
@@ -454,7 +479,7 @@ impl<'rt> Harness<'rt> {
                 snapshot_epochs: (1..=max_epochs).collect(),
             };
             let res =
-                fapt_retrain(self.rt, &a, &fap_params, &plan.masks().prune, &train, &fcfg)?;
+                self.engine.retrain(&a, &fap_params, &plan.masks().prune, &train, &fcfg)?;
 
             let mut series = vec![Json::obj()
                 .field("epoch", Json::num(0))
@@ -466,7 +491,7 @@ impl<'rt> Harness<'rt> {
                 format!("{:.2}", base_acc * 100.0),
             ]);
             for (epoch, p) in &res.snapshots {
-                let acc = ev.accuracy(&a, p, &test)?;
+                let acc = self.engine.float_accuracy(&a, p, &test)?;
                 rows.push(vec![
                     name.to_string(),
                     epoch.to_string(),
@@ -580,7 +605,11 @@ impl<'rt> Harness<'rt> {
         }
         let (plans, hits, misses) = self.plan_cache_stats();
         if plans > 0 {
-            eprintln!("[plans] {plans} compiled chip plans, {hits} cache hits, {misses} misses");
+            eprintln!(
+                "[plans] {} backend: {plans} compiled chip plans, {hits} cache hits, \
+                 {misses} misses",
+                self.engine.backend()
+            );
         }
         Ok(())
     }

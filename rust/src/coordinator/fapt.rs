@@ -16,7 +16,9 @@
 //! drives the epoch loop and snapshots intermediate models for the Fig 5
 //! accuracy-vs-MAX_EPOCHS sweep.
 
-use super::trainer::{mask_literals, train_step, TrainState};
+use super::trainer::{mask_literals, native_train_step, train_step, NativeTrainState, TrainState};
+use crate::chip::{Backend, Engine};
+use crate::data::dataset::Batch;
 use crate::data::Dataset;
 use crate::faults::FaultMap;
 use crate::model::{Arch, Params};
@@ -54,6 +56,51 @@ pub struct FaptResult {
     pub secs_per_epoch: f64,
 }
 
+/// Shared epoch driver for Algorithm 1's lines 4–6: per epoch, shuffle,
+/// run `step` over every (padded) batch, average the loss, and snapshot
+/// via `params_of` when the epoch is in `cfg.snapshot_epochs`. `state` is
+/// whatever the step function trains (device literals or host params) —
+/// threading it through the driver lets both closures touch it without
+/// aliasing. Returns `(epoch_losses, snapshots, secs_per_epoch)`.
+fn drive_epochs<D, S, P>(
+    train: &Dataset,
+    batch: usize,
+    cfg: &FaptConfig,
+    state: &mut D,
+    mut step: S,
+    mut params_of: P,
+) -> Result<(Vec<f32>, Vec<(usize, Params)>, f64)>
+where
+    S: FnMut(&mut D, &Batch) -> Result<f32>,
+    P: FnMut(&mut D) -> Result<Params>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    let mut data = train.clone();
+    let mut epoch_losses = Vec::with_capacity(cfg.max_epochs);
+    let mut snapshots = Vec::new();
+    let t0 = Instant::now();
+
+    for epoch in 1..=cfg.max_epochs {
+        data.shuffle(&mut rng);
+        let (mut sum, mut count) = (0.0f32, 0usize);
+        for bt in data.batches(batch) {
+            sum += step(state, &bt)?;
+            count += 1;
+        }
+        epoch_losses.push(sum / count.max(1) as f32);
+        if cfg.snapshot_epochs.contains(&epoch) {
+            snapshots.push((epoch, params_of(state)?));
+        }
+    }
+
+    let secs_per_epoch = if cfg.max_epochs > 0 {
+        t0.elapsed().as_secs_f64() / cfg.max_epochs as f64
+    } else {
+        0.0
+    };
+    Ok((epoch_losses, snapshots, secs_per_epoch))
+}
+
 /// Run Algorithm 1 starting from `fap_params` (already pruned by
 /// [`super::fap::apply_fap`]) with the matching prune masks.
 pub fn fapt_retrain(
@@ -71,34 +118,45 @@ pub fn fapt_retrain(
     let b = arch.train_batch;
     let mut x_dims = vec![b];
     x_dims.extend(&arch.input_shape);
-    let mut rng = Rng::new(cfg.seed);
-    let mut data = train.clone();
 
-    let mut epoch_losses = Vec::with_capacity(cfg.max_epochs);
-    let mut snapshots = Vec::new();
-    let t0 = Instant::now();
-
-    for epoch in 1..=cfg.max_epochs {
-        data.shuffle(&mut rng);
-        let (mut sum, mut count) = (0.0f32, 0usize);
-        for batch in data.batches(b) {
-            let loss = train_step(&exe, &mut state, &masks, &batch.x, &batch.y, &x_dims, cfg.lr)?;
-            sum += loss;
-            count += 1;
-        }
-        epoch_losses.push(sum / count.max(1) as f32);
-        if cfg.snapshot_epochs.contains(&epoch) {
-            snapshots.push((epoch, state.to_params(arch)?));
-        }
-    }
-
-    let secs_per_epoch = if cfg.max_epochs > 0 {
-        t0.elapsed().as_secs_f64() / cfg.max_epochs as f64
-    } else {
-        0.0
-    };
+    let (epoch_losses, snapshots, secs_per_epoch) = drive_epochs(
+        train,
+        b,
+        cfg,
+        &mut state,
+        |st, bt| train_step(&exe, st, &masks, &bt.x, &bt.y, &x_dims, cfg.lr),
+        |st| st.to_params(arch),
+    )?;
     let params = state.to_params(arch).context("downloading retrained params")?;
     Ok(FaptResult { params, epoch_losses, snapshots, secs_per_epoch })
+}
+
+/// Native (artifact-free) Algorithm 1: the same epoch loop as
+/// [`fapt_retrain`] driven by the host trainer
+/// ([`super::trainer::native_train_step`]) — what `--backend sim|plan`
+/// campaigns retrain with.
+pub fn fapt_retrain_native(
+    arch: &Arch,
+    fap_params: &Params,
+    prune_masks: &[Vec<f32>],
+    train: &Dataset,
+    cfg: &FaptConfig,
+) -> Result<FaptResult> {
+    anyhow::ensure!(arch.is_mlp(), "native retraining supports MLP archs only (got {})", arch.name);
+    let mut state = NativeTrainState::from_params(arch, fap_params);
+    let b = arch.train_batch;
+
+    let (epoch_losses, snapshots, secs_per_epoch) = drive_epochs(
+        train,
+        b,
+        cfg,
+        &mut state,
+        |st, bt| {
+            Ok(native_train_step(arch, st, Some(prune_masks), &bt.x, &bt.y, b, cfg.lr))
+        },
+        |st| Ok(st.params.clone()),
+    )?;
+    Ok(FaptResult { params: state.params, epoch_losses, snapshots, secs_per_epoch })
 }
 
 /// Full per-chip provisioning flow (what a fab-line host would run):
@@ -124,18 +182,31 @@ pub fn provision_chip(
     train: &Dataset,
     cfg: &FaptConfig,
 ) -> Result<ProvisionOutcome> {
-    // post-fab test: localize the faults (the paper assumes this step)
-    let det = crate::faults::detect::localize_from_map(fm, Default::default());
-    // build the fault map the controller will actually use: MAC granularity
-    let mut known = FaultMap::healthy(fm.n());
-    for (r, c) in &det.faulty {
-        // polarity/bit don't matter for FAP — any fault ⇒ bypass; record a
-        // canonical marker fault
-        known.add(crate::faults::StuckAt { row: *r as u16, col: *c as u16, bit: 0, value: true });
-    }
+    let engine = Engine::new(Backend::Xla, Some(rt))?;
+    provision_chip_engine(&engine, arch, baseline, fm, train, cfg)
+}
+
+/// [`provision_chip`] on any execution engine: retraining dispatches to
+/// the XLA graph or the native host trainer per the engine's backend.
+pub fn provision_chip_engine(
+    engine: &Engine<'_>,
+    arch: &Arch,
+    baseline: &Params,
+    fm: &FaultMap,
+    train: &Dataset,
+    cfg: &FaptConfig,
+) -> Result<ProvisionOutcome> {
+    // post-fab test: localize the faults (the paper assumes this step);
+    // the controller then mitigates the *detected* map at MAC granularity
+    let chip = crate::chip::Chip::new(arch.clone())
+        .with_fault_map(fm.clone())
+        .detect()?
+        .mitigate(crate::mapping::MaskKind::FapBypass);
+    let known = chip.fault_map().clone();
+    let detected = chip.detected().unwrap_or(0);
     // compile once; FAP and every retrain epoch reuse the plan's masks
     let plan = crate::exec::ChipPlan::compile(arch, &known, crate::mapping::MaskKind::FapBypass);
     let (fap_params, fap_report) = super::fap::apply_fap_planned(baseline, &plan);
-    let result = fapt_retrain(rt, arch, &fap_params, &plan.masks().prune, train, cfg)?;
-    Ok(ProvisionOutcome { fault_map: known, detected: det.faulty.len(), fap_report, result, plan })
+    let result = engine.retrain(arch, &fap_params, &plan.masks().prune, train, cfg)?;
+    Ok(ProvisionOutcome { fault_map: known, detected, fap_report, result, plan })
 }

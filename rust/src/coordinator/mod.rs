@@ -13,5 +13,5 @@ pub mod trainer;
 
 pub use evaluate::Evaluator;
 pub use fap::{apply_fap, apply_fap_planned};
-pub use fapt::{fapt_retrain, FaptConfig};
-pub use trainer::{train_baseline, TrainConfig};
+pub use fapt::{fapt_retrain, fapt_retrain_native, provision_chip_engine, FaptConfig};
+pub use trainer::{train_baseline, train_baseline_native, TrainConfig};

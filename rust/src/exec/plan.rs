@@ -334,6 +334,21 @@ impl ExecScratch {
         plan.execute_into(a, batch, &mut self.out);
         &self.out
     }
+
+    /// [`ExecScratch::run`] through the batch-sharded multi-threaded
+    /// executor (bit-exact with the single-thread path; see
+    /// [`MatmulPlan::execute_threaded`]). `threads <= 1` runs inline.
+    pub fn run_threaded<'s>(
+        &'s mut self,
+        plan: &MatmulPlan,
+        a: &[i32],
+        batch: usize,
+        threads: usize,
+    ) -> &'s [i32] {
+        self.out.resize(batch * plan.m(), 0);
+        plan.execute_threaded_into(a, batch, threads, &mut self.out);
+        &self.out
+    }
 }
 
 /// Quantize each weighted layer's float weights with the calibration's
@@ -680,6 +695,8 @@ mod tests {
         let second = scratch.run(&plan, &a, batch).to_vec();
         assert_eq!(first, second);
         assert_eq!(first, plan.execute(&a, batch));
+        let threaded = scratch.run_threaded(&plan, &a, batch, 3).to_vec();
+        assert_eq!(threaded, first);
     }
 
     #[test]

@@ -26,6 +26,10 @@
 //!   it many times; the cycle-level [`systolic`] path is the oracle.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); Python never runs at request time.
+//! * [`chip`] — the unified chip-session facade: one `ForwardBackend`
+//!   trait over the cycle-level sim, the compiled plan executor and the
+//!   XLA runtime; `Chip` builder (inject → detect → mitigate → session)
+//!   and the campaign `Engine` (backend dispatch, plan cache, threads).
 //! * [`coordinator`] — the paper's contribution: baseline training, fault
 //!   injection campaigns, FAP pruning, the FAP+T per-chip retraining loop
 //!   (Algorithm 1), accuracy evaluation and the figure/table harness.
@@ -33,6 +37,7 @@
 //!   harnesses (the vendored registry has no criterion/proptest — see
 //!   Cargo.toml).
 
+pub mod chip;
 pub mod coordinator;
 pub mod data;
 pub mod exec;

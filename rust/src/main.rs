@@ -6,32 +6,86 @@
 //! repro train --model mnist [--steps N]      train + eval a baseline
 //! repro provision --model mnist --faults K   full per-chip flow:
 //!                                            inject -> detect -> FAP+T
-//! repro plan --model mnist --faults K        compile + execute a chip plan
-//!                                            natively (no artifacts)
+//! repro plan --model mnist --faults K        compile + execute a chip
+//!                                            session natively (no artifacts)
 //! repro detect --faults K [--n N]            fault localization demo
 //! repro synthesis                            synthesis + yield model
 //! repro smoke                                artifact round-trip checks
 //! ```
 //!
-//! Common options: `--artifacts DIR` (default artifacts/), `--out DIR`
-//! (default results/), `--seed S`, `--repeats R`, `--array-n N`,
-//! `--profile quick|default|paper`.
+//! Common options: `--backend sim|plan|xla` (execution engine; `sim`/`plan`
+//! need no artifacts), `--threads T` (plan executor), `--artifacts DIR`
+//! (default artifacts/), `--out DIR` (default results/), `--seed S`,
+//! `--repeats R`, `--array-n N`, `--profile quick|default|paper`.
 
 use anyhow::{bail, Context, Result};
+use repro::chip::{Backend, Chip, Engine};
 use repro::coordinator::experiment::{Harness, HarnessConfig, Profile};
-use repro::coordinator::evaluate::Evaluator;
-use repro::coordinator::fapt::{provision_chip, FaptConfig};
-use repro::coordinator::trainer::{train_baseline, TrainConfig};
+use repro::coordinator::fapt::{provision_chip_engine, FaptConfig};
+use repro::coordinator::trainer::TrainConfig;
 use repro::data;
-use repro::exec::{default_threads, ChipPlan, ExecScratch};
+use repro::exec::{default_threads, ChipPlan};
 use repro::faults::{detect, inject_uniform, FaultSpec};
 use repro::mapping::MaskKind;
 use repro::model::quant::calibrate_mlp;
 use repro::model::{arch, Params};
 use repro::runtime::Runtime;
-use repro::systolic::{SystolicArray, TiledMatmul};
+use repro::systolic::SystolicArray;
 use repro::util::Rng;
 use std::collections::HashMap;
+
+/// Accepted `--option` keys per subcommand (every key is validated; a
+/// misspelled option errors with the nearest accepted match instead of
+/// being silently absorbed).
+fn allowed_opts(cmd: &str) -> Option<&'static [&'static str]> {
+    match cmd {
+        "help" | "--help" | "-h" => Some(&[]),
+        "table1" | "synthesis" => {
+            Some(&["artifacts", "out", "seed", "repeats", "array-n", "profile", "backend", "threads"])
+        }
+        "experiment" => Some(&[
+            "id", "artifacts", "out", "seed", "repeats", "array-n", "profile", "backend", "threads",
+        ]),
+        "train" => {
+            Some(&["model", "steps", "train-n", "test-n", "seed", "artifacts", "backend", "threads"])
+        }
+        "provision" => Some(&[
+            "model", "array-n", "faults", "seed", "train-n", "test-n", "steps", "epochs",
+            "artifacts", "backend", "threads",
+        ]),
+        "plan" => Some(&["model", "array-n", "faults", "seed", "batch", "threads", "backend",
+            "artifacts"]),
+        "detect" => Some(&["n", "faults", "seed"]),
+        "smoke" => Some(&["artifacts"]),
+        _ => None,
+    }
+}
+
+/// Levenshtein distance (for the did-you-mean hint).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest accepted option within edit distance 3, if any.
+fn nearest<'a>(key: &str, allowed: &[&'a str]) -> Option<&'a str> {
+    allowed
+        .iter()
+        .map(|&cand| (edit_distance(key, cand), cand))
+        .filter(|&(d, _)| d <= 3)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, cand)| cand)
+}
 
 /// Minimal `--key value` argument parser (offline registry has no clap).
 struct Args {
@@ -41,7 +95,11 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Args> {
-        let mut it = std::env::args().skip(1);
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    fn parse_from(it: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut it = it.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".into());
         let mut opts = HashMap::new();
         while let Some(k) = it.next() {
@@ -52,7 +110,30 @@ impl Args {
             let val = it.next().with_context(|| format!("--{key} needs a value"))?;
             opts.insert(key, val);
         }
-        Ok(Args { cmd, opts })
+        let args = Args { cmd, opts };
+        args.validate()?;
+        Ok(args)
+    }
+
+    /// Reject options the subcommand does not accept (with a nearest-match
+    /// hint). Unknown *commands* are reported by `main`'s dispatch instead.
+    fn validate(&self) -> Result<()> {
+        let Some(allowed) = allowed_opts(&self.cmd) else {
+            return Ok(());
+        };
+        for key in self.opts.keys() {
+            if !allowed.contains(&key.as_str()) {
+                let hint = nearest(key, allowed)
+                    .map(|c| format!(" (did you mean --{c}?)"))
+                    .unwrap_or_default();
+                bail!(
+                    "unknown option --{key} for `{}`{hint}; accepted: {}",
+                    self.cmd,
+                    allowed.iter().map(|o| format!("--{o}")).collect::<Vec<_>>().join(" ")
+                );
+            }
+        }
+        Ok(())
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -72,6 +153,13 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    fn backend(&self, default: Backend) -> Result<Backend> {
+        match self.get("backend") {
+            Some(v) => Backend::parse(v),
+            None => Ok(default),
+        }
+    }
 }
 
 fn harness_config(args: &Args) -> Result<HarnessConfig> {
@@ -87,7 +175,18 @@ fn harness_config(args: &Args) -> Result<HarnessConfig> {
         repeats: args.usize("repeats", 3)?,
         array_n: args.usize("array-n", 256)?,
         profile,
+        threads: args.usize("threads", 0)?,
     })
+}
+
+/// Build the runtime only when the chosen backend needs it — `sim`/`plan`
+/// run with no artifacts directory present.
+fn runtime_for(backend: Backend, artifacts_dir: &str) -> Result<Option<Runtime>> {
+    if backend == Backend::Xla {
+        Ok(Some(Runtime::new(artifacts_dir)?))
+    } else {
+        Ok(None)
+    }
 }
 
 fn main() -> Result<()> {
@@ -98,33 +197,43 @@ fn main() -> Result<()> {
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
         }
-        "table1" => {
-            let rt = Runtime::new(&artifacts_dir)?;
-            Harness::new(&rt, harness_config(&args)?).table1()?;
-        }
-        "synthesis" => {
-            let rt = Runtime::new(&artifacts_dir)?;
-            Harness::new(&rt, harness_config(&args)?).synthesis_table()?;
+        "table1" | "synthesis" => {
+            // no execution involved: default to the artifact-free backend
+            let backend = args.backend(Backend::Plan)?;
+            let rt = runtime_for(backend, &artifacts_dir)?;
+            let engine = Engine::new(backend, rt.as_ref())?;
+            let mut h = Harness::new(engine, harness_config(&args)?);
+            match args.cmd.as_str() {
+                "table1" => h.table1()?,
+                _ => h.synthesis_table()?,
+            }
         }
         "experiment" => {
             let id = args.get("id").context("--id required (e.g. fig4a)")?;
-            let rt = Runtime::new(&artifacts_dir)?;
-            let mut h = Harness::new(&rt, harness_config(&args)?);
+            let backend = args.backend(Backend::Xla)?;
+            let rt = runtime_for(backend, &artifacts_dir)?;
+            let engine = Engine::new(backend, rt.as_ref())?;
+            let mut h = Harness::new(engine, harness_config(&args)?);
             h.run(id)?;
-            eprintln!("(XLA compile time: {:?})", rt.compile_time());
+            if let Some(rt) = &rt {
+                eprintln!("(XLA compile time: {:?})", rt.compile_time());
+            }
         }
         "train" => {
             let model = args.get("model").context("--model required")?;
             let a = arch::by_name(model).context("unknown model")?;
-            let rt = Runtime::new(&artifacts_dir)?;
+            let backend = args.backend(Backend::Xla)?;
+            let rt = runtime_for(backend, &artifacts_dir)?;
+            let engine = Engine::new(backend, rt.as_ref())?;
             let steps = args.usize("steps", 400)?;
             let (train, test) = data::for_arch(model, args.usize("train-n", 2000)?,
                 args.usize("test-n", 500)?, args.u64("seed", 42)?).unwrap();
             let cfg = TrainConfig { steps, seed: args.u64("seed", 42)?, ..Default::default() };
-            let (params, losses) = train_baseline(&rt, &a, &train, &cfg)?;
-            let acc = Evaluator::new(&rt).accuracy(&a, &params, &test)?;
+            let (params, losses) = engine.train(&a, &train, &cfg)?;
+            let acc = engine.float_accuracy(&a, &params, &test)?;
             println!(
-                "{model}: {} steps, final loss {:.4}, test accuracy {:.2}%",
+                "{model} ({} backend): {} steps, final loss {:.4}, test accuracy {:.2}%",
+                engine.backend(),
                 steps,
                 losses.last().unwrap_or(&f32::NAN),
                 acc * 100.0
@@ -133,17 +242,19 @@ fn main() -> Result<()> {
         "provision" => {
             let model = args.get("model").context("--model required")?;
             let a = arch::by_name(model).context("unknown model")?;
-            let rt = Runtime::new(&artifacts_dir)?;
+            let backend = args.backend(Backend::Xla)?;
+            let rt = runtime_for(backend, &artifacts_dir)?;
+            let engine = Engine::new(backend, rt.as_ref())?
+                .with_threads(args.usize("threads", 0)?);
             let n = args.usize("array-n", 64)?;
             let faults = args.usize("faults", 100)?;
             let seed = args.u64("seed", 42)?;
             let (train, test) = data::for_arch(model, args.usize("train-n", 2000)?,
                 args.usize("test-n", 500)?, seed).unwrap();
             let cfg = TrainConfig { steps: args.usize("steps", 400)?, seed, ..Default::default() };
-            eprintln!("training golden model...");
-            let (baseline, _) = train_baseline(&rt, &a, &train, &cfg)?;
-            let ev = Evaluator::new(&rt);
-            let base_acc = ev.accuracy(&a, &baseline, &test)?;
+            eprintln!("training golden model ({} backend)...", engine.backend());
+            let (baseline, _) = engine.train(&a, &train, &cfg)?;
+            let base_acc = engine.float_accuracy(&a, &baseline, &test)?;
             eprintln!("golden accuracy {:.2}%", base_acc * 100.0);
 
             let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(seed ^ 0xC41F));
@@ -153,12 +264,12 @@ fn main() -> Result<()> {
                 seed,
                 snapshot_epochs: vec![],
             };
-            let out = provision_chip(&rt, &a, &baseline, &fm, &train, &fcfg)?;
+            let out = provision_chip_engine(&engine, &a, &baseline, &fm, &train, &fcfg)?;
             let fap_acc = {
                 let (p, _, _) = repro::coordinator::fap::apply_fap(&a, &baseline, &out.fault_map);
-                ev.accuracy(&a, &p, &test)?
+                engine.float_accuracy(&a, &p, &test)?
             };
-            let fapt_acc = ev.accuracy(&a, &out.result.params, &test)?;
+            let fapt_acc = engine.float_accuracy(&a, &out.result.params, &test)?;
             println!("chip provisioning ({model}, {n}x{n} array, {faults} faulty MACs):");
             println!("  detected faulty MACs : {} / {}", out.detected, fm.faulty_mac_count());
             println!("  pruned weights       : {} ({:.2}%)", out.fap_report.pruned_weights,
@@ -169,19 +280,22 @@ fn main() -> Result<()> {
                 fapt_acc * 100.0, out.result.secs_per_epoch);
         }
         "plan" => {
-            // Native chip-plan dry-run: quantize an MLP, compile the
-            // (arch, fault map, mitigation) plans, execute them through the
-            // blocked GEMM core and cross-check against the cycle-exact
-            // simulator. Needs no artifacts — this is the path a host uses
-            // to vet a chip's plan before deployment.
+            // Native chip-session dry-run: quantize an MLP, open a session
+            // on the chosen backend, run the forward engine and (for the
+            // plan backend) cross-check against the cycle-exact simulator.
+            // Needs no artifacts — this is the path a host uses to vet a
+            // chip before deployment.
             let model = args.get("model").unwrap_or("mnist");
             let a = arch::by_name(model).context("unknown model")?;
             anyhow::ensure!(a.is_mlp(), "plan needs an MLP arch (mnist|timit), got {model}");
+            let backend = args.backend(Backend::Plan)?;
+            let rt = runtime_for(backend, &artifacts_dir)?;
             let n = args.usize("array-n", 256)?;
             let faults = args.usize("faults", 4096)?;
             let seed = args.u64("seed", 42)?;
             let batch = args.usize("batch", 64)?;
             let threads = args.usize("threads", default_threads())?;
+            let mut engine = Engine::new(backend, rt.as_ref())?.with_threads(threads);
 
             let mut rng = Rng::new(seed);
             let mut params = Params::zeros_like(&a);
@@ -191,54 +305,71 @@ fn main() -> Result<()> {
             }
             let x: Vec<f32> = (0..batch * a.input_len()).map(|_| rng.normal()).collect();
             let calib = calibrate_mlp(&a, &params, &x, batch);
-            let qweights = repro::exec::quantize_mlp_weights(&a, &params, &calib);
 
-            let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(seed ^ 0x91A7));
+            let chip = Chip::new(a.clone())
+                .array_n(n)
+                .inject(faults, seed ^ 0x91A7)
+                .threads(threads);
+            // quantized once for the per-layer lowering stats below (the
+            // session quantizes internally; this copy is kind-independent)
+            let qweights = repro::exec::quantize_mlp_weights(&a, &params, &calib);
             println!(
-                "chip plan dry-run: {model} on {n}x{n} chip, {faults} faulty MACs, \
-                 batch {batch}, {threads} threads"
+                "chip session dry-run: {model} on {n}x{n} chip, {faults} faulty MACs, \
+                 batch {batch}, {threads} threads, {} backend",
+                backend
             );
             for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
-                let plan = ChipPlan::compile_mlp(&a, &fm, kind, &qweights);
-                println!("{kind:?} (fingerprint {:#018x}):", plan.fingerprint());
-                if kind == MaskKind::FapBypass {
-                    // the effective weights a host ships to the chip:
-                    // bypassed slots folded to zero
-                    let mut folded = qweights.clone();
-                    plan.masks().fold_into_qweights(&mut folded);
-                    let zeros: usize =
-                        folded.iter().map(|l| l.iter().filter(|&&w| w == 0).count()).sum();
-                    let total: usize = folded.iter().map(|l| l.len()).sum();
-                    println!("  effective weights: {zeros}/{total} zeroed by bypass fold");
-                }
-                let mut scratch = ExecScratch::new();
+                let chip = chip.clone().mitigate(kind);
+                let mut sess = engine.session(&chip)?;
+                sess.load_model(params.clone(), calib.clone());
+                let t0 = std::time::Instant::now();
+                let logits = sess.forward_logits(&x, batch)?;
+                let dt = t0.elapsed();
+                let total_macs: u64 =
+                    a.weighted_layers().iter().map(|l| (batch * l.weight_len()) as u64).sum();
+                println!(
+                    "{kind:?} (fingerprint {:#018x}): {} logits in {dt:?} \
+                     ({:.2e} MAC/s)",
+                    sess.fingerprint(),
+                    logits.len(),
+                    total_macs as f64 / dt.as_secs_f64().max(1e-12)
+                );
+                // per-layer lowering stats from the compiled plan
+                let cp = ChipPlan::compile_mlp(&a, chip.fault_map(), kind, &qweights);
                 for li in 0..a.weighted_layers().len() {
-                    let Some(lp) = plan.layer_plan(li) else { continue };
-                    let q: Vec<i32> =
-                        (0..batch * lp.k()).map(|_| rng.below(255) as i32 - 127).collect();
-                    let t0 = std::time::Instant::now();
-                    let got = scratch.run(lp, &q, batch).to_vec();
-                    let dt = t0.elapsed();
-                    let want = TiledMatmul::new(&fm, kind == MaskKind::FapBypass)
-                        .matmul(&q, &qweights[li], batch, lp.k(), lp.m());
-                    anyhow::ensure!(got == want, "layer {li}: plan diverges from PE chain");
-                    anyhow::ensure!(
-                        lp.execute_threaded(&q, batch, threads) == got,
-                        "layer {li}: threaded execution diverges"
-                    );
+                    let Some(lp) = cp.layer_plan(li) else { continue };
                     let s = lp.stats();
-                    let macs = (batch * lp.k() * lp.m()) as f64;
                     println!(
-                        "  layer {li} {}x{}: {} tiles, {} dense / {} folded / {} chain cols, \
-                         {:.2e} MAC/s x1, exact vs cycle-level sim",
+                        "  layer {li} {}x{}: {} tiles, {} dense / {} folded / {} chain cols",
                         lp.k(),
                         lp.m(),
                         s.tiles,
                         s.dense_cols,
                         s.folded_cols,
-                        s.chain_cols,
-                        macs / dt.as_secs_f64().max(1e-12)
+                        s.chain_cols
                     );
+                }
+                if backend != Backend::Sim {
+                    // the cycle-level sim is the oracle: logits must agree
+                    // bit-for-bit on the native backends
+                    let mut oracle = chip.session(Backend::Sim)?;
+                    oracle.load_model(params.clone(), calib.clone());
+                    let want = oracle.forward_logits(&x, batch)?;
+                    if backend == Backend::Plan {
+                        anyhow::ensure!(
+                            logits.iter().map(|v| v.to_bits()).eq(
+                                want.iter().map(|v| v.to_bits())
+                            ),
+                            "{kind:?}: plan backend diverges from the cycle-level sim"
+                        );
+                        println!("  exact vs cycle-level sim");
+                    } else {
+                        let max_abs = logits
+                            .iter()
+                            .zip(&want)
+                            .fold(0.0f32, |m, (&g, &w)| m.max((g - w).abs()));
+                        println!("  max |logit delta| vs sim: {max_abs:.3e}");
+                    }
                 }
             }
         }
@@ -288,14 +419,18 @@ COMMANDS:
                               (table1|fig2a|fig2b|fig4a|fig4b|fig5a|fig5b|synthesis|all)
   train --model <M>           train + evaluate a fault-free baseline
   provision --model <M>       full chip flow: inject -> detect -> FAP -> FAP+T
-  plan --model <M>            compile + execute a chip plan natively (no
-                              artifacts): quantize, lower, run the blocked
-                              GEMM core, cross-check vs the cycle-level sim
+  plan --model <M>            open a chip session and execute it natively
+                              (no artifacts): quantize, lower, run the
+                              forward engine, cross-check vs the sim oracle
   detect                      post-fab fault localization demo
   synthesis                   45nm synthesis + yield model tables
   smoke                       compile key artifacts, verify the runtime
 
 OPTIONS:
+  --backend B       execution engine: sim | plan | xla
+                    (sim/plan need no artifacts; default: xla for
+                    experiment/train/provision, plan elsewhere)
+  --threads T       plan-executor worker threads (default: all cores)
   --artifacts DIR   artifacts directory (default: artifacts)
   --out DIR         results directory (default: results)
   --seed S          RNG seed (default: 42)
@@ -304,3 +439,76 @@ OPTIONS:
   --profile P       quick | default | paper
   --model M         mnist | timit | alexnet32
 ";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_options() {
+        let a = Args::parse_from(argv(&["experiment", "--id", "fig2a", "--seed", "7"])).unwrap();
+        assert_eq!(a.cmd, "experiment");
+        assert_eq!(a.get("id"), Some("fig2a"));
+        assert_eq!(a.u64("seed", 42).unwrap(), 7);
+        assert_eq!(a.usize("repeats", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn rejects_misspelled_option_with_hint() {
+        let err = Args::parse_from(argv(&["experiment", "--id", "fig2a", "--seeed", "7"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--seeed"), "{err}");
+        assert!(err.contains("did you mean --seed"), "{err}");
+    }
+
+    #[test]
+    fn rejects_option_valid_elsewhere() {
+        // --id belongs to `experiment`, not `train`
+        let err = Args::parse_from(argv(&["train", "--id", "fig2a"])).unwrap_err().to_string();
+        assert!(err.contains("unknown option --id"), "{err}");
+    }
+
+    #[test]
+    fn far_off_option_lists_accepted_set() {
+        let err = Args::parse_from(argv(&["detect", "--zzzzzzzz", "1"])).unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("--faults"), "{err}");
+    }
+
+    #[test]
+    fn missing_value_and_missing_dashes_error() {
+        assert!(Args::parse_from(argv(&["train", "--model"])).is_err());
+        assert!(Args::parse_from(argv(&["train", "model", "mnist"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_passes_parse() {
+        // dispatch (not the parser) reports unknown commands
+        let a = Args::parse_from(argv(&["frobnicate", "--x", "1"])).unwrap();
+        assert_eq!(a.cmd, "frobnicate");
+    }
+
+    #[test]
+    fn backend_option_parses() {
+        let a = Args::parse_from(argv(&["plan", "--backend", "sim"])).unwrap();
+        assert_eq!(a.backend(Backend::Plan).unwrap(), Backend::Sim);
+        let a = Args::parse_from(argv(&["plan"])).unwrap();
+        assert_eq!(a.backend(Backend::Plan).unwrap(), Backend::Plan);
+        let a = Args::parse_from(argv(&["plan", "--backend", "gpu"])).unwrap();
+        assert!(a.backend(Backend::Plan).is_err());
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("seed", "seed"), 0);
+        assert_eq!(edit_distance("seeed", "seed"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(nearest("seeed", &["seed", "threads"]), Some("seed"));
+        assert_eq!(nearest("zzzzzzzz", &["seed", "threads"]), None);
+    }
+}

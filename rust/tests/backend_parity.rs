@@ -1,0 +1,177 @@
+//! Backend equivalence: the same `(arch, fault map, mitigation, batch)`
+//! run through [`repro::chip::SimBackend`] (cycle-level oracle) and
+//! [`repro::chip::PlanBackend`] (compiled executor) must produce
+//! bit-identical logits — the chip-session-level form of the
+//! `proptest_exec.rs` oracle property — plus the capability-rejection
+//! story for unsupported (backend, arch) combinations.
+
+use repro::chip::{Backend, Chip, Engine, Scenario};
+use repro::mapping::MaskKind;
+use repro::model::arch::{alexnet32, mnist};
+use repro::model::quant::calibrate_mlp;
+use repro::model::{Arch, Layer, Params};
+use repro::prop_assert;
+use repro::util::{prop, Rng};
+
+fn tiny_mlp() -> Arch {
+    Arch {
+        name: "tiny",
+        layers: vec![
+            Layer::fc(19, 16, true),
+            Layer::fc(16, 11, true),
+            Layer::fc(11, 7, false),
+        ],
+        input_shape: vec![19],
+        num_classes: 7,
+        eval_batch: 8,
+        train_batch: 8,
+    }
+}
+
+fn rand_params(arch: &Arch, rng: &mut Rng) -> Params {
+    let mut p = Params::zeros_like(arch);
+    for (w, b) in &mut p.layers {
+        w.iter_mut().for_each(|v| *v = rng.normal() * 0.4);
+        b.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
+    }
+    p
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random faulty chips: Sim and Plan sessions bit-agree on logits under
+/// both mitigations, across random array sizes, fault counts and batches.
+#[test]
+fn prop_sim_plan_logits_bit_identical() {
+    let arch = tiny_mlp();
+    prop::check("backend_parity_logits", 0xBAC0, 25, |rng| {
+        let n = 2 + rng.below(7);
+        let faults = rng.below(2 * n);
+        let batch = 1 + rng.below(6);
+        let kind = if rng.bool(0.5) { MaskKind::Unmitigated } else { MaskKind::FapBypass };
+        let params = rand_params(&arch, rng);
+        let x: Vec<f32> = (0..batch * arch.input_len()).map(|_| rng.normal()).collect();
+        let calib = calibrate_mlp(&arch, &params, &x, batch);
+
+        let chip = Chip::new(arch.clone())
+            .array_n(n)
+            .inject(faults, rng.next_u64())
+            .mitigate(kind)
+            .threads(1 + rng.below(4));
+        let mut sim = chip.session(Backend::Sim).unwrap();
+        let mut plan = chip.session(Backend::Plan).unwrap();
+        sim.load_model(params.clone(), calib.clone());
+        plan.load_model(params, calib);
+
+        let ls = sim.forward_logits(&x, batch).unwrap();
+        let lp = plan.forward_logits(&x, batch).unwrap();
+        prop_assert!(
+            bits(&ls) == bits(&lp),
+            "n={n} faults={faults} batch={batch} kind={kind:?}"
+        );
+        Ok(())
+    });
+}
+
+/// Activations (the Fig 2b path) agree bit-for-bit too.
+#[test]
+fn sim_plan_activations_bit_identical() {
+    let arch = tiny_mlp();
+    let mut rng = Rng::new(0xAC7);
+    let params = rand_params(&arch, &mut rng);
+    let batch = 5;
+    let x: Vec<f32> = (0..batch * arch.input_len()).map(|_| rng.normal()).collect();
+    let calib = calibrate_mlp(&arch, &params, &x, batch);
+    let chip = Chip::new(arch.clone()).array_n(4).inject(9, 3);
+    let mut sim = chip.session(Backend::Sim).unwrap();
+    let mut plan = chip.session(Backend::Plan).unwrap();
+    sim.load_model(params.clone(), calib.clone());
+    plan.load_model(params, calib);
+    let acts_s = sim.activations(&x, batch).unwrap();
+    let acts_p = plan.activations(&x, batch).unwrap();
+    assert_eq!(acts_s.len(), 3);
+    for (li, (s, p)) in acts_s.iter().zip(&acts_p).enumerate() {
+        assert_eq!(bits(s), bits(p), "layer {li}");
+    }
+}
+
+/// Whole-dataset accuracy agrees (same chip, same model, both backends),
+/// on the paper's MNIST arch with a real fault map.
+#[test]
+fn sim_plan_accuracy_identical_on_mnist() {
+    let mut arch = mnist();
+    arch.eval_batch = 16; // keep the cycle-level oracle affordable in CI
+    let mut rng = Rng::new(0x51AB);
+    let params = rand_params(&arch, &mut rng);
+    // tiny dataset: accuracy equality is about the datapath, not learning
+    let n_samples = arch.eval_batch; // one padded batch
+    let x: Vec<f32> = (0..n_samples * 784).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..n_samples).map(|_| rng.below(10) as i32).collect();
+    let data = repro::data::Dataset::new(x, y, 784, 10);
+    let calib = calibrate_mlp(&arch, &params, &data.x[..8 * 784], 8);
+
+    for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
+        let chip = Chip::new(arch.clone()).array_n(16).inject(24, 7).mitigate(kind);
+        let mut sim = chip.session(Backend::Sim).unwrap();
+        let mut plan = chip.session(Backend::Plan).unwrap();
+        sim.load_model(params.clone(), calib.clone());
+        plan.load_model(params.clone(), calib.clone());
+        let acc_s = sim.evaluate(&data).unwrap();
+        let acc_p = plan.evaluate(&data).unwrap();
+        assert_eq!(acc_s, acc_p, "kind {kind:?}");
+    }
+}
+
+/// Session state survives swap_params coherently on both backends: after
+/// the same swap, both still bit-agree (compiled state was invalidated).
+#[test]
+fn parity_survives_param_swaps() {
+    let arch = tiny_mlp();
+    let mut rng = Rng::new(0x5AB);
+    let p1 = rand_params(&arch, &mut rng);
+    let p2 = rand_params(&arch, &mut rng);
+    let batch = 4;
+    let x: Vec<f32> = (0..batch * arch.input_len()).map(|_| rng.normal()).collect();
+    let calib = calibrate_mlp(&arch, &p1, &x, batch);
+    let chip = Chip::new(arch.clone()).array_n(5).inject(7, 2).mitigate(MaskKind::FapBypass);
+    let mut sim = chip.session(Backend::Sim).unwrap();
+    let mut plan = chip.session(Backend::Plan).unwrap();
+    sim.load_model(p1.clone(), calib.clone());
+    plan.load_model(p1, calib);
+    assert_eq!(
+        bits(&sim.forward_logits(&x, batch).unwrap()),
+        bits(&plan.forward_logits(&x, batch).unwrap())
+    );
+    sim.swap_params(p2.clone()).unwrap();
+    plan.swap_params(p2).unwrap();
+    assert_eq!(
+        bits(&sim.forward_logits(&x, batch).unwrap()),
+        bits(&plan.forward_logits(&x, batch).unwrap())
+    );
+}
+
+/// Capability rejection: the matrix lives in `Backend::supports` and the
+/// session builder enforces it for every unsupported (backend, arch) pair.
+#[test]
+fn unsupported_backend_arch_combos_rejected() {
+    let conv = alexnet32();
+    let chip = Chip::new(conv.clone()).array_n(8).inject(5, 1);
+    for backend in [Backend::Sim, Backend::Plan] {
+        let err = chip.session(backend).unwrap_err().to_string();
+        assert!(err.contains("conv layers"), "{backend:?}: {err}");
+    }
+    // xla: float/train fine, faulty chip path rejected
+    assert!(Backend::Xla.supports(&conv, Scenario::FloatFwd).is_ok());
+    assert!(Backend::Xla.supports(&conv, Scenario::Train).is_ok());
+    assert!(Backend::Xla.supports(&conv, Scenario::FaultyFwd).is_err());
+    // native engines cannot train conv archs either
+    let engine = Engine::new(Backend::Plan, None).unwrap();
+    let (train, _) = repro::data::for_arch("alexnet32", 64, 32, 1).unwrap();
+    let cfg = repro::coordinator::trainer::TrainConfig { steps: 1, ..Default::default() };
+    assert!(engine.train(&conv, &train, &cfg).is_err());
+    // xla sessions without a runtime are impossible to build
+    assert!(Chip::new(mnist()).session(Backend::Xla).is_err());
+    assert!(Engine::new(Backend::Xla, None).is_err());
+}
