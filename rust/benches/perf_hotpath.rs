@@ -16,6 +16,7 @@ use repro::coordinator::trainer::{ones_masks, train_step, TrainState};
 use repro::data;
 use repro::exec::{default_threads, MatmulPlan};
 use repro::faults::{inject_uniform, FaultSpec};
+use repro::fleet::{percentile, serve, ChipUnit, RoutingPolicy, WorkloadConfig};
 use repro::mapping::{LayerMasks, MaskKind};
 use repro::model::arch;
 use repro::model::quant::calibrate_mlp;
@@ -177,6 +178,81 @@ fn bench_backend_sessions(rng: &mut Rng) -> anyhow::Result<Vec<Json>> {
     Ok(rows)
 }
 
+/// Fleet scheduler throughput: 4 faulty chips behind the batched
+/// dispatcher, one row per routing policy (samples/s + latency
+/// percentiles), emitted as `BENCH_fleet.json` so the serving-layer perf
+/// trajectory is tracked PR over PR like the exec engine's.
+fn bench_fleet_scheduler(rng: &mut Rng) -> anyhow::Result<(Json, Vec<Json>)> {
+    println!("\n# fleet scheduler (mnist, 4x 32x32 chips, 5% faults, FAP bypass)");
+    let a = arch::by_name("mnist").unwrap();
+    let (chips_n, array_n, batch, requests) = (4usize, 32usize, 64usize, 32usize);
+    let mut params = Params::zeros_like(&a);
+    for (w, b) in &mut params.layers {
+        w.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
+        b.iter_mut().for_each(|v| *v = rng.normal() * 0.01);
+    }
+    let (_, workload) = data::for_arch("mnist", 64, 512, 53).unwrap();
+    let calib = calibrate_mlp(&a, &params, &workload.x[..64 * a.input_len()], 64);
+    let chips: Vec<Chip> = (0..chips_n)
+        .map(|i| {
+            Chip::new(a.clone())
+                .array_n(array_n)
+                .inject(array_n * array_n / 20, 400 + i as u64)
+                .mitigate(MaskKind::FapBypass)
+                .threads(1)
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for policy in
+        [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::AccuracyWeighted]
+    {
+        let units: Vec<ChipUnit<'_>> = chips
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                ChipUnit { id: i, chip: c, params: &params, weight: 1.0 - 0.1 * i as f64 }
+            })
+            .collect();
+        let cfg = WorkloadConfig {
+            backend: Backend::Plan,
+            policy,
+            batch,
+            queue_depth: 4,
+            requests,
+            workers: 0,
+            seed: 71,
+        };
+        let rep = serve(&units, &calib, &workload, &cfg)?;
+        let lats = rep.sorted_latencies_us();
+        let (p50, p99) = (percentile(&lats, 0.5), percentile(&lats, 0.99));
+        println!(
+            "fleet {policy:<18} {:>10.0} samples/s  p50 {p50:>8.0}us  p99 {p99:>8.0}us",
+            rep.samples_per_sec()
+        );
+        rows.push(
+            Json::obj()
+                .field("policy", Json::str(policy.name()))
+                .field("chips", Json::num(chips_n as f64))
+                .field("array_n", Json::num(array_n as f64))
+                .field("batch", Json::num(batch as f64))
+                .field("requests", Json::num(requests as f64))
+                .field("samples", Json::num(rep.samples as f64))
+                .field("samples_per_sec", Json::num(rep.samples_per_sec()))
+                .field("sim_cycles", Json::num(rep.sim_cycles as f64))
+                .field("p50_latency_us", Json::num(p50))
+                .field("p99_latency_us", Json::num(p99)),
+        );
+    }
+    let meta = Json::obj()
+        .field("model", Json::str("mnist"))
+        .field("chips", Json::num(chips_n as f64))
+        .field("array_n", Json::num(array_n as f64))
+        .field("batch", Json::num(batch as f64))
+        .field("requests", Json::num(requests as f64));
+    Ok((meta, rows))
+}
+
 fn main() -> anyhow::Result<()> {
     println!("## bench perf_hotpath\n");
     let mut rng = Rng::new(51);
@@ -189,6 +265,10 @@ fn main() -> anyhow::Result<()> {
     results.extend(bench_backend_sessions(&mut rng)?);
 
     bench::write_bench_json("BENCH_exec.json", "exec_plan_vs_naive", meta, results)?;
+
+    // ---- fleet scheduler: serving-layer rows, own bench record ----------
+    let (fleet_meta, fleet_rows) = bench_fleet_scheduler(&mut rng)?;
+    bench::write_bench_json("BENCH_fleet.json", "fleet_scheduler", fleet_meta, fleet_rows)?;
 
     // ---- L3: cycle-level simulator hot loop -------------------------------
     println!("\n# L3 simulator");

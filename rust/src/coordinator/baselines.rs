@@ -109,4 +109,42 @@ mod tests {
         assert_eq!(cb.healthy_cols, 0);
         assert_eq!(cb.schedule_cycles(8, 32, 32), None);
     }
+
+    #[test]
+    fn zero_healthy_columns_chip_unusable_on_every_shape() {
+        // one faulty MAC per column is enough to kill the whole policy
+        let fm = FaultMap::from_faults(
+            4,
+            (0..4u16).map(|c| StuckAt { row: 0, col: c, bit: 1, value: true }),
+        );
+        let cb = ColumnBypass::from_map(&fm);
+        assert_eq!(cb.healthy_cols, 0);
+        for (b, k, m) in [(1, 1, 1), (8, 16, 16), (256, 784, 256)] {
+            assert_eq!(cb.schedule_cycles(b, k, m), None, "({b},{k},{m})");
+            assert_eq!(cb.slowdown(b, k, m), None, "({b},{k},{m})");
+        }
+    }
+
+    #[test]
+    fn fully_healthy_array_slowdown_is_exactly_one() {
+        let cb = ColumnBypass::from_map(&FaultMap::healthy(16));
+        assert_eq!(cb.healthy_cols, 16);
+        for (b, k, m) in [(1, 1, 1), (8, 16, 16), (64, 300, 500)] {
+            assert_eq!(cb.slowdown(b, k, m), Some(1.0), "({b},{k},{m})");
+            assert!(cb.schedule_cycles(b, k, m).unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn slowdown_never_improves_as_columns_die() {
+        let n = 8;
+        let mut prev = 1.0;
+        for healthy in (1..=n).rev() {
+            let cb = ColumnBypass { n, healthy_cols: healthy };
+            let s = cb.slowdown(16, 32, 32).unwrap();
+            assert!(s >= prev, "slowdown dropped to {s} at {healthy} healthy cols");
+            assert!(s >= 1.0);
+            prev = s;
+        }
+    }
 }

@@ -23,6 +23,17 @@ pub struct AgingModel {
 }
 
 impl AgingModel {
+    /// Calibrate τ so that the expected fault rate reaches `eol_rate` after
+    /// `lifetime_hours` of operation — the way a fleet campaign states its
+    /// scenario ("25% faulty MACs at end of life") without hand-solving the
+    /// Weibull CDF: `1 - exp(-(H/τ)^β) = r  ⇒  τ = H / (-ln(1-r))^(1/β)`.
+    pub fn with_eol_rate(spec: FaultSpec, eol_rate: f64, lifetime_hours: f64, beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&eol_rate) && eol_rate > 0.0, "eol_rate in (0, 1)");
+        assert!(lifetime_hours > 0.0 && beta >= 1.0);
+        let tau_hours = lifetime_hours / (-(1.0 - eol_rate).ln()).powf(1.0 / beta);
+        AgingModel { tau_hours, beta, spec }
+    }
+
     /// Expected fraction of faulty MACs after `hours` of operation.
     pub fn expected_fault_rate(&self, hours: f64) -> f64 {
         1.0 - (-(hours / self.tau_hours).powf(self.beta)).exp()
@@ -56,8 +67,27 @@ impl AgingChip {
         &self.map
     }
 
+    /// Detect-compatible snapshot of the chip's *current* physical fault
+    /// state: feed it to [`crate::chip::Chip::with_fault_map`] +
+    /// [`crate::chip::Chip::detect`] to re-run post-deployment localization
+    /// exactly like the post-fab flow (the fleet health monitor's re-mask
+    /// path). The snapshot is an owned copy — advancing the chip afterwards
+    /// never mutates what the controller already adopted.
+    pub fn snapshot(&self) -> FaultMap {
+        self.map.clone()
+    }
+
+    pub fn model(&self) -> &AgingModel {
+        &self.model
+    }
+
     pub fn hours(&self) -> f64 {
         self.hours
+    }
+
+    /// Current fraction of faulty MACs (sampled, not expected).
+    pub fn fault_rate(&self) -> f64 {
+        self.map.fault_rate()
     }
 
     /// Advance the clock; new wear-out faults strike MACs uniformly at

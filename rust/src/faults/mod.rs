@@ -11,6 +11,7 @@ pub mod detect;
 pub mod inject;
 pub mod model;
 
+pub use aging::{AgingChip, AgingModel};
 pub use detect::{localize_faults, DetectReport, TestPatterns};
 pub use inject::{inject_clustered, inject_uniform, FaultSpec};
 pub use model::{FaultMap, StuckAt};

@@ -1,0 +1,255 @@
+//! Fleet-campaign configuration: how many chips, how defective they come
+//! out of the fab, how requests are routed, and how the lifetime loop is
+//! scaled per profile.
+
+use crate::coordinator::experiment::Profile;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// How the dispatcher picks a chip for the next request batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through active chips in id order.
+    RoundRobin,
+    /// Send to the chip with the fewest in-flight batches.
+    LeastLoaded,
+    /// Smooth weighted round-robin with per-chip weights proportional to
+    /// the last health-check accuracy: healthier chips absorb more of the
+    /// traffic, degraded chips keep serving a trickle until retrain/retire.
+    AccuracyWeighted,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Result<RoutingPolicy> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutingPolicy::RoundRobin),
+            "ll" | "least-loaded" => Ok(RoutingPolicy::LeastLoaded),
+            "aw" | "accuracy" | "accuracy-weighted" => Ok(RoutingPolicy::AccuracyWeighted),
+            other => bail!(
+                "unknown routing policy {other:?} (use round-robin | least-loaded | \
+                 accuracy-weighted)"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+            RoutingPolicy::AccuracyWeighted => "accuracy-weighted",
+        }
+    }
+}
+
+impl std::fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-chip manufacturing defect count distribution — the fab's yield
+/// model. The classic die-defect assumption is Poisson-distributed defect
+/// counts with mean `defect_rate · N²` (each MAC independently defective),
+/// which is exactly what [`crate::systolic::synthesis::yield_discard`]
+/// integrates; [`YieldDist::sample`] draws the per-chip realization.
+#[derive(Clone, Copy, Debug)]
+pub enum YieldDist {
+    /// Every chip ships with exactly this many defective MACs.
+    Fixed(usize),
+    /// Poisson with mean `rate * n * n` defective MACs.
+    Poisson { rate: f64 },
+}
+
+impl YieldDist {
+    /// Draw one chip's manufacturing defect count for an `n x n` array.
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> usize {
+        let cap = n * n;
+        match *self {
+            YieldDist::Fixed(k) => k.min(cap),
+            YieldDist::Poisson { rate } => {
+                let lambda = (rate * cap as f64).max(0.0);
+                let k = if lambda == 0.0 {
+                    0
+                } else if lambda < 64.0 {
+                    // Knuth's product-of-uniforms sampler.
+                    let limit = (-lambda).exp();
+                    let mut k = 0usize;
+                    let mut p = 1.0f64;
+                    loop {
+                        p *= rng.f64();
+                        if p <= limit {
+                            break k;
+                        }
+                        k += 1;
+                    }
+                } else {
+                    // Normal approximation for large means.
+                    (lambda + lambda.sqrt() * rng.normal() as f64).round().max(0.0) as usize
+                };
+                k.min(cap)
+            }
+        }
+    }
+}
+
+/// Everything the fleet campaign needs beyond the model/data bundle.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Number of chips provisioned into the fleet.
+    pub chips: usize,
+    /// Physical array dimension per chip.
+    pub array_n: usize,
+    pub seed: u64,
+    pub policy: RoutingPolicy,
+    /// Simulated deployment lifetime in hours.
+    pub hours: f64,
+    /// Health-check epochs the lifetime is divided into.
+    pub life_steps: usize,
+    /// Manufacturing defect distribution (sampled once per chip).
+    pub yield_dist: YieldDist,
+    /// Expected aging fault rate at `hours` (calibrates the Weibull τ).
+    pub eol_fault_rate: f64,
+    /// Weibull shape of the wear-out process (≥ 1).
+    pub aging_beta: f64,
+    /// SLO as a fraction of the golden (fault-free quantized) accuracy;
+    /// chips below it get retrained (managed) or merely recorded.
+    pub slo_frac: f64,
+    /// Samples per request batch.
+    pub batch: usize,
+    /// Bounded per-chip queue depth (batches).
+    pub queue_depth: usize,
+    /// Request batches dispatched per active chip per life step.
+    pub batches_per_chip: usize,
+    /// Scheduler worker threads (0 = min(chips, cores)).
+    pub workers: usize,
+    /// FAP+T epochs per retrain event.
+    pub retrain_epochs: usize,
+    /// Simulated downtime charged per retrain event.
+    pub retrain_downtime_hours: f64,
+    /// Retrain budget per chip over its whole life.
+    pub max_retrains: usize,
+    /// `true` = FAP + FAP+T health management; `false` = unmitigated fleet
+    /// (no detection, no masking, no retraining, no retirement).
+    pub managed: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            chips: 8,
+            array_n: 64,
+            seed: 42,
+            policy: RoutingPolicy::LeastLoaded,
+            hours: 50_000.0,
+            life_steps: 8,
+            yield_dist: YieldDist::Poisson { rate: 0.02 },
+            eol_fault_rate: 0.25,
+            aging_beta: 2.0,
+            slo_frac: 0.9,
+            batch: 64,
+            queue_depth: 4,
+            batches_per_chip: 4,
+            workers: 0,
+            retrain_epochs: 2,
+            retrain_downtime_hours: 200.0,
+            max_retrains: 8,
+            managed: true,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Scale the lifetime-loop knobs per profile (CLI `--profile`): `quick`
+    /// is CI-sized, `paper` runs the long campaign.
+    pub fn scaled(mut self, profile: Profile) -> FleetConfig {
+        match profile {
+            Profile::Quick => {
+                self.life_steps = 4;
+                self.batches_per_chip = 2;
+                self.retrain_epochs = 1;
+                self.batch = 32;
+            }
+            Profile::Default => {}
+            Profile::Paper => {
+                self.life_steps = 16;
+                self.batches_per_chip = 8;
+                self.retrain_epochs = 4;
+            }
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in
+            [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::AccuracyWeighted]
+        {
+            assert_eq!(RoutingPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(RoutingPolicy::parse("rr").unwrap(), RoutingPolicy::RoundRobin);
+        assert!(RoutingPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn poisson_sample_tracks_mean() {
+        let mut rng = Rng::new(3);
+        let dist = YieldDist::Poisson { rate: 0.02 };
+        let n = 64;
+        let reps = 400;
+        let total: usize = (0..reps).map(|_| dist.sample(n, &mut rng)).sum();
+        let mean = total as f64 / reps as f64;
+        let want = 0.02 * (n * n) as f64; // 81.9
+        assert!((mean - want).abs() < 5.0, "mean {mean} vs {want}");
+    }
+
+    #[test]
+    fn poisson_small_mean_knuth_branch_tracks_mean() {
+        // n=32, rate 0.02 -> lambda 20.48 < 64: the Knuth sampler path
+        let mut rng = Rng::new(11);
+        let dist = YieldDist::Poisson { rate: 0.02 };
+        let n = 32;
+        let reps = 600;
+        let samples: Vec<usize> = (0..reps).map(|_| dist.sample(n, &mut rng)).collect();
+        let mean = samples.iter().sum::<usize>() as f64 / reps as f64;
+        let want = 0.02 * (n * n) as f64; // 20.48
+        assert!((mean - want).abs() < 1.0, "mean {mean} vs {want}");
+        // Poisson: variance ~= mean
+        let var = samples.iter().map(|&k| (k as f64 - mean).powi(2)).sum::<f64>() / reps as f64;
+        assert!((var - want).abs() < want, "variance {var} vs {want}");
+    }
+
+    #[test]
+    fn poisson_large_mean_uses_normal_branch() {
+        let mut rng = Rng::new(5);
+        let dist = YieldDist::Poisson { rate: 0.1 };
+        let n = 128; // mean 1638 > 64 → normal approximation
+        let reps = 50;
+        let total: usize = (0..reps).map(|_| dist.sample(n, &mut rng)).sum();
+        let mean = total as f64 / reps as f64;
+        let want = 0.1 * (n * n) as f64;
+        assert!((mean - want).abs() / want < 0.05, "mean {mean} vs {want}");
+    }
+
+    #[test]
+    fn samples_never_exceed_grid() {
+        let mut rng = Rng::new(7);
+        assert_eq!(YieldDist::Fixed(1_000_000).sample(4, &mut rng), 16);
+        for _ in 0..100 {
+            assert!(YieldDist::Poisson { rate: 0.999 }.sample(4, &mut rng) <= 16);
+        }
+    }
+
+    #[test]
+    fn profile_scaling_touches_loop_knobs() {
+        let quick = FleetConfig::default().scaled(Profile::Quick);
+        let paper = FleetConfig::default().scaled(Profile::Paper);
+        assert!(quick.life_steps < paper.life_steps);
+        assert!(quick.batches_per_chip < paper.batches_per_chip);
+        assert!(quick.retrain_epochs < paper.retrain_epochs);
+    }
+}

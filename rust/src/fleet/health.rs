@@ -1,0 +1,269 @@
+//! Lifetime health management: advance the fleet's aging processes, re-run
+//! fault localization, re-mask (FAP), queue FAP+T retraining for chips
+//! below the accuracy SLO, retire chips that can no longer meet it — and
+//! serve traffic between health checks.
+//!
+//! The managed flow per chip per life step (the paper's amortization
+//! argument, extended over deployment time):
+//!
+//! ```text
+//! aging.advance(Δh)                      faults accrue (superset maps)
+//!   └─ snapshot → detect                 post-deployment localization
+//!        └─ FAP re-mask                  prune against the new map
+//!             └─ accuracy ≥ SLO? ──yes── back to serving
+//!                  └─ no: FAP+T retrain  (downtime charged)
+//!                       └─ still < SLO or budget spent → retire
+//! ```
+//!
+//! The unmanaged fleet (`cfg.managed == false`) is the paper's strawman:
+//! the controller is blind, chips serve the golden weights on their faulty
+//! arrays, the monitor only records the accuracy trajectory.
+
+use super::config::FleetConfig;
+use super::provision::{ChipStatus, Fleet, FleetChip, RetrainEvent};
+use super::scheduler::{self, ChipUnit, WorkloadConfig, WorkloadReport};
+use crate::chip::{Chip, Engine};
+use crate::coordinator::fap::apply_fap_planned;
+use crate::coordinator::fapt::FaptConfig;
+use crate::data::Dataset;
+use crate::mapping::MaskKind;
+use crate::model::quant::Calibration;
+use crate::model::Params;
+use anyhow::Result;
+
+/// One health-check epoch of the fleet's life.
+pub struct LifeStep {
+    pub step: usize,
+    /// Simulated clock at the end of the step.
+    pub hours: f64,
+    pub active_chips: usize,
+    /// Wear-out faults that struck across the fleet this step.
+    pub new_faults: usize,
+    /// FAP+T retrain events the health monitor queued this step.
+    pub retrains: usize,
+    pub retired: usize,
+    /// Traffic served after the health pass (`None` once every chip is
+    /// retired — the fleet is dark).
+    pub workload: Option<WorkloadReport>,
+}
+
+/// Whole-life outcome: per-step trajectory plus merged serving stats.
+pub struct FleetOutcome {
+    pub steps: Vec<LifeStep>,
+    /// Fraction of chips meeting the SLO right after provisioning.
+    pub provision_yield: f64,
+    pub total_requests: usize,
+    pub total_samples: usize,
+    pub total_correct: usize,
+    /// Wall-clock seconds spent inside the scheduler.
+    pub serve_secs: f64,
+    pub sim_cycles: u64,
+    /// Every batch latency over the whole life, ascending.
+    pub latencies_us: Vec<f64>,
+}
+
+impl FleetOutcome {
+    /// Accuracy over all traffic actually served across the fleet's life.
+    pub fn served_accuracy(&self) -> f64 {
+        self.total_correct as f64 / self.total_samples.max(1) as f64
+    }
+
+    pub fn samples_per_sec(&self) -> f64 {
+        self.total_samples as f64 / self.serve_secs.max(1e-12)
+    }
+
+    pub fn p50_latency_us(&self) -> f64 {
+        scheduler::percentile(&self.latencies_us, 0.5)
+    }
+
+    pub fn p99_latency_us(&self) -> f64 {
+        scheduler::percentile(&self.latencies_us, 0.99)
+    }
+}
+
+fn evaluate_on(
+    engine: &mut Engine<'_>,
+    view: &Chip,
+    params: &Params,
+    calib: &Calibration,
+    eval: &Dataset,
+) -> Result<f64> {
+    let mut sess = engine.session(view)?;
+    sess.load_model(params.clone(), calib.clone());
+    sess.evaluate(eval)
+}
+
+/// One health pass over chip `id`: re-localize from the aging snapshot,
+/// re-mask, evaluate against the SLO, retrain / retire as needed. Also the
+/// provisioning pass (at hour 0 the "aged" state is the fab state).
+pub fn health_check(
+    engine: &mut Engine<'_>,
+    fleet: &mut Fleet,
+    id: usize,
+    golden: &Params,
+    train: &Dataset,
+    eval: &Dataset,
+) -> Result<()> {
+    let Fleet { cfg, arch, calib, slo, chips, .. } = fleet;
+    let slo = *slo;
+    let chip = &mut chips[id];
+    if !chip.is_active() {
+        return Ok(());
+    }
+    let at_hours = chip.aging.hours();
+    let snapshot = chip.aging.snapshot();
+
+    if !cfg.managed {
+        // blind controller: the true (undetected) faults corrupt the
+        // datapath, the monitor only records how bad it got
+        chip.view = Chip::new(arch.clone())
+            .with_fault_map(snapshot)
+            .mitigate(MaskKind::Unmitigated)
+            .threads(1);
+        chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
+        return Ok(());
+    }
+
+    // managed: re-run localization exactly like the post-fab flow, then
+    // re-mask the deployed weights against the newly detected map (aging
+    // maps are supersets, so pruning only grows)
+    chip.view = Chip::new(arch.clone())
+        .with_fault_map(snapshot)
+        .detect()?
+        .mitigate(MaskKind::FapBypass)
+        .threads(1);
+    let known = chip.view.fault_map().clone();
+    let plan = engine.plans.get_or_compile(arch, &known, MaskKind::FapBypass);
+    let (remasked, _) = apply_fap_planned(&chip.params, &plan);
+    chip.params = remasked;
+    chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
+    if chip.accuracy >= slo {
+        return Ok(());
+    }
+
+    if chip.retrains.len() >= cfg.max_retrains {
+        chip.status = ChipStatus::Retired { at_hours };
+        return Ok(());
+    }
+
+    // FAP+T (Algorithm 1) from the golden baseline pruned by the current
+    // masks — the per-chip retrain the paper amortizes over the lifetime
+    let acc_before = chip.accuracy;
+    let (fap_golden, _) = apply_fap_planned(golden, &plan);
+    let fcfg = FaptConfig {
+        max_epochs: cfg.retrain_epochs,
+        lr: 0.01,
+        seed: cfg.seed ^ ((id as u64) << 8) ^ chip.retrains.len() as u64,
+        snapshot_epochs: vec![],
+    };
+    let result = engine.retrain(arch, &fap_golden, &plan.masks().prune, train, &fcfg)?;
+    chip.params = result.params;
+    chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
+    chip.downtime_hours += cfg.retrain_downtime_hours;
+    chip.retrains.push(RetrainEvent {
+        at_hours,
+        faulty_macs: known.faulty_mac_count(),
+        acc_before,
+        acc_after: chip.accuracy,
+        epochs: cfg.retrain_epochs,
+        downtime_hours: cfg.retrain_downtime_hours,
+    });
+    if chip.accuracy < slo {
+        chip.status = ChipStatus::Retired { at_hours };
+    }
+    Ok(())
+}
+
+/// Drive the fleet through its whole deployed life: `cfg.life_steps`
+/// rounds of (age → health pass → serve traffic), merging scheduler stats
+/// back into the per-chip records.
+pub fn run_lifetime(
+    engine: &mut Engine<'_>,
+    fleet: &mut Fleet,
+    golden: &Params,
+    train: &Dataset,
+    eval: &Dataset,
+) -> Result<FleetOutcome> {
+    let provision_yield = fleet.effective_yield();
+    let cfg = fleet.cfg.clone();
+    let step_hours = cfg.hours / cfg.life_steps.max(1) as f64;
+    let mut out = FleetOutcome {
+        steps: Vec::with_capacity(cfg.life_steps),
+        provision_yield,
+        total_requests: 0,
+        total_samples: 0,
+        total_correct: 0,
+        serve_secs: 0.0,
+        sim_cycles: 0,
+        latencies_us: Vec::new(),
+    };
+
+    for step in 1..=cfg.life_steps {
+        let mut new_faults = 0usize;
+        for chip in fleet.chips.iter_mut().filter(|c| c.is_active()) {
+            new_faults += chip.aging.advance(step_hours);
+        }
+        let retrains_before: usize = fleet.chips.iter().map(|c| c.retrains.len()).sum();
+        let retired_before = fleet.chips.len() - fleet.active_chips();
+        for id in 0..fleet.chips.len() {
+            health_check(engine, fleet, id, golden, train, eval)?;
+        }
+        let retrains: usize =
+            fleet.chips.iter().map(|c| c.retrains.len()).sum::<usize>() - retrains_before;
+        let retired = (fleet.chips.len() - fleet.active_chips()) - retired_before;
+
+        let workload = serve_step(engine, fleet, eval, &cfg, step as u64)?;
+        if let Some(w) = &workload {
+            for s in &w.per_chip {
+                let chip = fleet.chips.iter_mut().find(|c| c.id == s.chip_id).unwrap();
+                chip.served_samples += s.samples;
+                chip.served_correct += s.correct;
+            }
+            out.total_requests += w.requests;
+            out.total_samples += w.samples;
+            out.total_correct += w.correct;
+            out.serve_secs += w.wall_secs;
+            out.sim_cycles += w.sim_cycles;
+            out.latencies_us.extend(w.sorted_latencies_us());
+        }
+        out.steps.push(LifeStep {
+            step,
+            hours: step as f64 * step_hours,
+            active_chips: fleet.active_chips(),
+            new_faults,
+            retrains,
+            retired,
+            workload,
+        });
+    }
+    out.latencies_us.sort_by(|a, b| a.total_cmp(b));
+    Ok(out)
+}
+
+/// Serve one life step's traffic over the currently active chips.
+fn serve_step(
+    engine: &Engine<'_>,
+    fleet: &Fleet,
+    eval: &Dataset,
+    cfg: &FleetConfig,
+    step: u64,
+) -> Result<Option<WorkloadReport>> {
+    let active: Vec<&FleetChip> = fleet.chips.iter().filter(|c| c.is_active()).collect();
+    if active.is_empty() {
+        return Ok(None);
+    }
+    let units: Vec<ChipUnit<'_>> = active
+        .iter()
+        .map(|c| ChipUnit { id: c.id, chip: &c.view, params: &c.params, weight: c.accuracy })
+        .collect();
+    let wcfg = WorkloadConfig {
+        backend: engine.backend(),
+        policy: cfg.policy,
+        batch: cfg.batch,
+        queue_depth: cfg.queue_depth,
+        requests: cfg.batches_per_chip * units.len(),
+        workers: cfg.workers,
+        seed: cfg.seed ^ (step << 32) ^ 0x5EB5,
+    };
+    scheduler::serve(&units, &fleet.calib, eval, &wcfg).map(Some)
+}

@@ -1,0 +1,40 @@
+//! Fleet serving: many imperfect chips, one workload.
+//!
+//! The paper's economic argument is fleet-scale — FAP/FAP+T let chips
+//! fabbed in high-defect-rate technologies *ship*, with the one-time
+//! retraining penalty amortized over the chip's whole deployed life. This
+//! subsystem closes that loop end to end:
+//!
+//! * [`config`] — yield distribution (per-chip manufacturing defect
+//!   counts), routing policies, lifetime/profile knobs.
+//! * [`provision`] — stand up N chips: sample defects, attach a Weibull
+//!   wear-out process ([`crate::faults::AgingChip`]), run the post-fab
+//!   pass (detect → FAP → FAP+T if needed) through the shared
+//!   [`crate::chip::Engine`]; fab rejects count against provision yield.
+//! * [`scheduler`] — batched request dispatch into bounded per-chip
+//!   queues; worker threads own disjoint chip subsets and drive one
+//!   [`crate::chip::ChipSession`] per chip; round-robin / least-loaded /
+//!   accuracy-weighted routing.
+//! * [`health`] — the lifetime loop: simulated hours advance, faults
+//!   accrue monotonically, the monitor re-runs localization, re-masks,
+//!   queues FAP+T retraining below the SLO and retires chips that can no
+//!   longer meet it.
+//! * [`report`] — `results/fleet.json`: throughput (samples/sec +
+//!   simulated cycles), p50/p99 batch latency, aggregate served accuracy,
+//!   effective yield, per-chip retrain/downtime history.
+//!
+//! Entry point: `repro fleet --chips N --backend sim|plan --policy P
+//! --hours H --profile quick|default|paper` (see `main.rs`), or
+//! [`provision::provision_fleet`] + [`health::run_lifetime`] from code.
+
+pub mod config;
+pub mod health;
+pub mod provision;
+pub mod report;
+pub mod scheduler;
+
+pub use config::{FleetConfig, RoutingPolicy, YieldDist};
+pub use health::{run_lifetime, FleetOutcome, LifeStep};
+pub use provision::{provision_fleet, ChipStatus, Fleet, FleetChip, RetrainEvent};
+pub use report::{fleet_json, print_summary};
+pub use scheduler::{percentile, serve, ChipUnit, WorkloadConfig, WorkloadReport};

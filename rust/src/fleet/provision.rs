@@ -1,0 +1,167 @@
+//! Fleet provisioning: sample each chip's manufacturing defects from the
+//! yield distribution, stand up its aging process and controller view, and
+//! run the post-fab health pass (detect → FAP → FAP+T if below SLO) so
+//! only chips that can meet the SLO enter service. Chips that cannot are
+//! fab rejects — they count against the provision yield, exactly the
+//! economics the paper's FAP/FAP+T argument is about.
+
+use super::config::FleetConfig;
+use super::health;
+use crate::chip::{Chip, Engine};
+use crate::data::Dataset;
+use crate::faults::aging::{AgingChip, AgingModel};
+use crate::faults::FaultSpec;
+use crate::mapping::MaskKind;
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Params};
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// Where a chip is in its service life.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChipStatus {
+    Active,
+    /// Out of service: failed the SLO with the retrain budget exhausted
+    /// (or at provision time, i.e. a fab reject at `at_hours == 0`).
+    Retired { at_hours: f64 },
+}
+
+/// One FAP+T retraining event in a chip's life (the health monitor's
+/// retrain queue emits these).
+#[derive(Clone, Debug)]
+pub struct RetrainEvent {
+    pub at_hours: f64,
+    /// Detected faulty MACs at the time of the retrain.
+    pub faulty_macs: usize,
+    pub acc_before: f64,
+    pub acc_after: f64,
+    pub epochs: usize,
+    pub downtime_hours: f64,
+}
+
+/// One deployed chip: the physical aging process (hidden truth), the
+/// controller's current detected + mitigated view, and the model weights
+/// deployed on it (per-chip after any FAP/FAP+T pass).
+pub struct FleetChip {
+    pub id: usize,
+    /// The physical device: faults accrue monotonically over life.
+    pub aging: AgingChip,
+    /// Controller view compiled into sessions: detected fault map +
+    /// mitigation (FAP bypass when managed, unmitigated otherwise).
+    pub view: Chip,
+    /// Weights deployed on this chip (golden, FAP-pruned, or retrained).
+    pub params: Params,
+    /// Last health-check accuracy.
+    pub accuracy: f64,
+    pub status: ChipStatus,
+    pub retrains: Vec<RetrainEvent>,
+    /// Simulated hours spent out of service retraining.
+    pub downtime_hours: f64,
+    pub initial_defects: usize,
+    /// Samples served over life (filled in by the scheduler).
+    pub served_samples: usize,
+    pub served_correct: usize,
+}
+
+impl FleetChip {
+    pub fn is_active(&self) -> bool {
+        self.status == ChipStatus::Active
+    }
+
+    /// Detected fault count of the current controller view.
+    pub fn known_faulty_macs(&self) -> usize {
+        self.view.fault_map().faulty_mac_count()
+    }
+}
+
+/// A provisioned fleet: shared model bundle plus per-chip state. Traffic
+/// and lifetime management happen in [`super::scheduler`] /
+/// [`super::health`]; this struct owns the state they evolve.
+pub struct Fleet {
+    pub cfg: FleetConfig,
+    pub arch: Arch,
+    pub calib: Calibration,
+    /// Golden (fault-free quantized) accuracy of the shared baseline.
+    pub golden_acc: f64,
+    /// Absolute accuracy SLO (`cfg.slo_frac * golden_acc`).
+    pub slo: f64,
+    pub chips: Vec<FleetChip>,
+}
+
+impl Fleet {
+    pub fn active_chips(&self) -> usize {
+        self.chips.iter().filter(|c| c.is_active()).count()
+    }
+
+    /// Fraction of chips currently in service and meeting the SLO.
+    pub fn effective_yield(&self) -> f64 {
+        let ok = self.chips.iter().filter(|c| c.is_active() && c.accuracy >= self.slo).count();
+        ok as f64 / self.cfg.chips.max(1) as f64
+    }
+}
+
+/// Provision `cfg.chips` chips: per-chip defects from the yield
+/// distribution, a Weibull aging process calibrated to hit
+/// `cfg.eol_fault_rate` at `cfg.hours`, and the initial health pass
+/// (detect → FAP → FAP+T when below SLO) through the shared engine.
+pub fn provision_fleet(
+    engine: &mut Engine<'_>,
+    cfg: FleetConfig,
+    arch: &Arch,
+    golden: &Params,
+    calib: &Calibration,
+    train: &Dataset,
+    eval: &Dataset,
+) -> Result<Fleet> {
+    ensure!(cfg.chips > 0, "fleet needs at least one chip");
+    ensure!(arch.is_mlp(), "fleet serves MLP archs only (got {})", arch.name);
+    ensure!(cfg.batch <= eval.len(), "batch {} exceeds eval set {}", cfg.batch, eval.len());
+
+    // golden accuracy on a defect-free chip of the same array: the SLO
+    // anchor (quantized, so FAP+T chips can actually approach it)
+    let golden_chip = Chip::new(arch.clone()).array_n(cfg.array_n).threads(1);
+    let mut sess = engine.session(&golden_chip)?;
+    sess.load_model(golden.clone(), calib.clone());
+    let golden_acc = sess.evaluate(eval)?;
+    let slo = cfg.slo_frac * golden_acc;
+
+    let model = AgingModel::with_eol_rate(
+        FaultSpec::new(cfg.array_n),
+        cfg.eol_fault_rate,
+        cfg.hours,
+        cfg.aging_beta,
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0xF1EE_7000);
+    let mut chips = Vec::with_capacity(cfg.chips);
+    for id in 0..cfg.chips {
+        let defects = cfg.yield_dist.sample(cfg.array_n, &mut rng);
+        let aging = AgingChip::new(model, defects, cfg.seed ^ ((id as u64) << 20) ^ 0xA61C);
+        // placeholder view; the provision health pass below rebuilds it
+        // from the aging snapshot with detection + mitigation applied
+        let view = Chip::new(arch.clone())
+            .with_fault_map(aging.snapshot())
+            .mitigate(MaskKind::Unmitigated)
+            .threads(1);
+        chips.push(FleetChip {
+            id,
+            aging,
+            view,
+            params: golden.clone(),
+            accuracy: 0.0,
+            status: ChipStatus::Active,
+            retrains: Vec::new(),
+            downtime_hours: 0.0,
+            initial_defects: defects,
+            served_samples: 0,
+            served_correct: 0,
+        });
+    }
+
+    let mut fleet =
+        Fleet { cfg, arch: arch.clone(), calib: calib.clone(), golden_acc, slo, chips };
+    // post-fab pass: same code path as the in-life health check, at hour 0
+    for id in 0..fleet.chips.len() {
+        health::health_check(engine, &mut fleet, id, golden, train, eval)?;
+    }
+    Ok(fleet)
+}

@@ -1,0 +1,162 @@
+//! Fleet-level reporting: the `results/fleet.json` record and the console
+//! summary table — throughput (samples/sec and simulated cycles), batch
+//! latency percentiles, aggregate served accuracy, effective yield, and
+//! the per-chip retrain/downtime history.
+
+use super::health::FleetOutcome;
+use super::provision::{ChipStatus, Fleet};
+use crate::coordinator::report::print_table;
+use crate::util::json::Json;
+
+/// Assemble the stable JSON record of one fleet campaign.
+pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json {
+    let cfg = &fleet.cfg;
+    let mut chips = Vec::with_capacity(fleet.chips.len());
+    for c in &fleet.chips {
+        let retrains = c
+            .retrains
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .field("at_hours", Json::num(r.at_hours))
+                    .field("faulty_macs", Json::num(r.faulty_macs as f64))
+                    .field("acc_before", Json::num(r.acc_before))
+                    .field("acc_after", Json::num(r.acc_after))
+                    .field("epochs", Json::num(r.epochs as f64))
+                    .field("downtime_hours", Json::num(r.downtime_hours))
+            })
+            .collect::<Vec<_>>();
+        let (status, retired_at) = match c.status {
+            ChipStatus::Active => ("active", Json::Null),
+            ChipStatus::Retired { at_hours } => ("retired", Json::num(at_hours)),
+        };
+        let final_faulty = c.aging.fault_map().faulty_mac_count();
+        chips.push(
+            Json::obj()
+                .field("id", Json::num(c.id as f64))
+                .field("initial_defects", Json::num(c.initial_defects as f64))
+                .field("final_faulty_macs", Json::num(final_faulty as f64))
+                .field("final_fault_rate", Json::num(c.aging.fault_rate()))
+                .field("detected_faulty_macs", Json::num(c.known_faulty_macs() as f64))
+                .field("accuracy", Json::num(c.accuracy))
+                .field("status", Json::str(status))
+                .field("retired_at_hours", retired_at)
+                .field("served_samples", Json::num(c.served_samples as f64))
+                .field("served_correct", Json::num(c.served_correct as f64))
+                .field("downtime_hours", Json::num(c.downtime_hours))
+                .field("retrain_events", Json::Arr(retrains)),
+        );
+    }
+
+    let steps = outcome
+        .steps
+        .iter()
+        .map(|s| {
+            let mut j = Json::obj()
+                .field("step", Json::num(s.step as f64))
+                .field("hours", Json::num(s.hours))
+                .field("active_chips", Json::num(s.active_chips as f64))
+                .field("new_faults", Json::num(s.new_faults as f64))
+                .field("retrains", Json::num(s.retrains as f64))
+                .field("retired", Json::num(s.retired as f64));
+            if let Some(w) = &s.workload {
+                j = j
+                    .field("requests", Json::num(w.requests as f64))
+                    .field("samples", Json::num(w.samples as f64))
+                    .field("accuracy", Json::num(w.accuracy()))
+                    .field("samples_per_sec", Json::num(w.samples_per_sec()))
+                    .field("sim_cycles", Json::num(w.sim_cycles as f64));
+            }
+            j
+        })
+        .collect::<Vec<_>>();
+
+    let total_retrains: usize = fleet.chips.iter().map(|c| c.retrains.len()).sum();
+    let total_downtime: f64 = fleet.chips.iter().map(|c| c.downtime_hours).sum();
+    Json::obj()
+        .field("campaign", Json::str("fleet"))
+        .field("backend", Json::str(backend.to_string()))
+        .field("model", Json::str(fleet.arch.name))
+        .field("chips", Json::num(cfg.chips as f64))
+        .field("array_n", Json::num(cfg.array_n as f64))
+        .field("policy", Json::str(cfg.policy.name()))
+        .field("managed", Json::Bool(cfg.managed))
+        .field("hours", Json::num(cfg.hours))
+        .field("life_steps", Json::num(cfg.life_steps as f64))
+        .field("eol_fault_rate", Json::num(cfg.eol_fault_rate))
+        .field("aging_beta", Json::num(cfg.aging_beta))
+        .field("seed", Json::num(cfg.seed as f64))
+        .field("batch", Json::num(cfg.batch as f64))
+        .field("golden_accuracy", Json::num(fleet.golden_acc))
+        .field("slo_accuracy", Json::num(fleet.slo))
+        .field("provision_yield", Json::num(outcome.provision_yield))
+        .field("effective_yield", Json::num(fleet.effective_yield()))
+        .field("fleet_accuracy", Json::num(outcome.served_accuracy()))
+        .field("total_requests", Json::num(outcome.total_requests as f64))
+        .field("total_samples", Json::num(outcome.total_samples as f64))
+        .field("samples_per_sec", Json::num(outcome.samples_per_sec()))
+        .field("sim_cycles", Json::num(outcome.sim_cycles as f64))
+        .field("p50_batch_latency_us", Json::num(outcome.p50_latency_us()))
+        .field("p99_batch_latency_us", Json::num(outcome.p99_latency_us()))
+        .field("total_retrains", Json::num(total_retrains as f64))
+        .field("total_downtime_hours", Json::num(total_downtime))
+        .field("steps", Json::Arr(steps))
+        .field("per_chip", Json::Arr(chips))
+}
+
+/// Console summary: fleet headline numbers + one row per chip.
+pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
+    println!(
+        "fleet: {} chips ({}x{} {}), policy {}, {} life steps over {:.0}h ({})",
+        fleet.cfg.chips,
+        fleet.cfg.array_n,
+        fleet.cfg.array_n,
+        fleet.arch.name,
+        fleet.cfg.policy,
+        fleet.cfg.life_steps,
+        fleet.cfg.hours,
+        if fleet.cfg.managed { "FAP+T managed" } else { "unmitigated" },
+    );
+    println!(
+        "  golden acc {:.2}%  SLO {:.2}%  provision yield {:.0}%  end-of-life yield {:.0}%",
+        fleet.golden_acc * 100.0,
+        fleet.slo * 100.0,
+        outcome.provision_yield * 100.0,
+        fleet.effective_yield() * 100.0
+    );
+    println!(
+        "  served {} samples in {} batches at {:.0} samples/s ({:.3e} sim cycles), \
+         latency p50 {:.0}us p99 {:.0}us, fleet accuracy {:.2}%",
+        outcome.total_samples,
+        outcome.total_requests,
+        outcome.samples_per_sec(),
+        outcome.sim_cycles as f64,
+        outcome.p50_latency_us(),
+        outcome.p99_latency_us(),
+        outcome.served_accuracy() * 100.0
+    );
+    let rows: Vec<Vec<String>> = fleet
+        .chips
+        .iter()
+        .map(|c| {
+            vec![
+                c.id.to_string(),
+                c.initial_defects.to_string(),
+                format!("{:.2}%", c.aging.fault_rate() * 100.0),
+                format!("{:.2}%", c.accuracy * 100.0),
+                c.served_samples.to_string(),
+                c.retrains.len().to_string(),
+                format!("{:.0}", c.downtime_hours),
+                match c.status {
+                    ChipStatus::Active => "active".into(),
+                    ChipStatus::Retired { at_hours } => format!("retired@{at_hours:.0}h"),
+                },
+            ]
+        })
+        .collect();
+    print_table(
+        "fleet per-chip lifetime summary",
+        &["chip", "fab defects", "eol faults", "acc", "served", "retrains", "downtime h", "status"],
+        &rows,
+    );
+}

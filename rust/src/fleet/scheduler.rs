@@ -1,0 +1,365 @@
+//! Batched request scheduling across the fleet's chips.
+//!
+//! The dispatcher routes fixed-size request batches into bounded per-chip
+//! queues (`std::sync::mpsc::sync_channel`, so a full queue back-pressures
+//! the dispatcher exactly like a real serving stack); worker threads own
+//! disjoint subsets of the chips, build each chip's [`crate::chip::ChipSession`]
+//! locally (sessions are deliberately not `Send` — the compiled plan is
+//! thread-affine), and drain their queues until the dispatcher hangs up.
+//! Parallelism is chip-level: each session runs its plan single-threaded
+//! and the fleet scales across workers instead of oversubscribing cores.
+//!
+//! Three routing policies (issue/EXPERIMENTS.md §Fleet): round-robin,
+//! least-loaded (live queue depths), and accuracy-weighted (smooth
+//! weighted round-robin over the chips' last health-check accuracies).
+
+use super::config::RoutingPolicy;
+use crate::chip::{Backend, Chip};
+use crate::coordinator::evaluate::count_correct;
+use crate::data::Dataset;
+use crate::exec::default_threads;
+use crate::model::quant::Calibration;
+use crate::model::{Arch, Layer, Params};
+use crate::systolic::timing;
+use crate::util::Rng;
+use anyhow::{anyhow, ensure, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::time::Instant;
+
+/// One serving lane the scheduler can route to: a chip's controller view,
+/// the weights deployed on it, and its routing weight (last health-check
+/// accuracy under the accuracy-weighted policy).
+pub struct ChipUnit<'a> {
+    pub id: usize,
+    pub chip: &'a Chip,
+    pub params: &'a Params,
+    pub weight: f64,
+}
+
+/// Scheduler knobs for one serving window.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadConfig {
+    pub backend: Backend,
+    pub policy: RoutingPolicy,
+    /// Samples per request batch.
+    pub batch: usize,
+    /// Bounded per-chip queue depth (batches).
+    pub queue_depth: usize,
+    /// Total request batches to dispatch.
+    pub requests: usize,
+    /// Worker threads (0 = min(chips, cores)).
+    pub workers: usize,
+    pub seed: u64,
+}
+
+struct WorkItem {
+    req_id: usize,
+    /// First sample index of the batch in the workload dataset.
+    lo: usize,
+    enqueued: Instant,
+}
+
+/// Per-chip serving outcome for one window.
+pub struct ChipServeStats {
+    pub chip_id: usize,
+    /// Every request id this chip served (conservation: the union over
+    /// chips is exactly `0..requests`, each id once).
+    pub request_ids: Vec<usize>,
+    pub samples: usize,
+    pub correct: usize,
+    /// Simulated array cycles spent (paper timing model).
+    pub sim_cycles: u64,
+    /// Enqueue→completion latency per served batch, microseconds.
+    pub latencies_us: Vec<f64>,
+}
+
+/// Fleet-level serving outcome for one window.
+pub struct WorkloadReport {
+    pub requests: usize,
+    pub samples: usize,
+    pub correct: usize,
+    pub wall_secs: f64,
+    pub sim_cycles: u64,
+    pub per_chip: Vec<ChipServeStats>,
+}
+
+impl WorkloadReport {
+    /// Top-1 accuracy over the traffic actually served.
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.samples.max(1) as f64
+    }
+
+    pub fn samples_per_sec(&self) -> f64 {
+        self.samples as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// All batch latencies, sorted ascending (for percentiles).
+    pub fn sorted_latencies_us(&self) -> Vec<f64> {
+        let mut all: Vec<f64> =
+            self.per_chip.iter().flat_map(|c| c.latencies_us.iter().copied()).collect();
+        all.sort_by(|a, b| a.total_cmp(b));
+        all
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`p` in [0, 1]).
+pub fn percentile(sorted_ascending: &[f64], p: f64) -> f64 {
+    if sorted_ascending.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted_ascending.len() as f64).ceil() as usize)
+        .clamp(1, sorted_ascending.len());
+    sorted_ascending[rank - 1]
+}
+
+/// Simulated array cycles one `batch`-sample MLP forward costs on an
+/// `n x n` array under the paper's timing model (per-layer tiled passes).
+pub fn batch_sim_cycles(arch: &Arch, n: usize, batch: usize) -> u64 {
+    arch.weighted_layers()
+        .iter()
+        .map(|l| match l {
+            Layer::Fc(f) => timing::tiled_cycles(n, batch, f.din, f.dout),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Serve `cfg.requests` batches across `units`, returning per-chip and
+/// fleet-level stats. Deterministic in `cfg.seed` for the request stream
+/// and (for round-robin / accuracy-weighted) the routing itself;
+/// least-loaded routing depends on live queue depths, but every request is
+/// still served exactly once (conservation is policy-independent).
+pub fn serve(
+    units: &[ChipUnit<'_>],
+    calib: &Calibration,
+    data: &Dataset,
+    cfg: &WorkloadConfig,
+) -> Result<WorkloadReport> {
+    ensure!(!units.is_empty(), "scheduler: no active chips to route to");
+    ensure!(cfg.batch > 0 && cfg.batch <= data.len(), "batch must be in 1..={}", data.len());
+    ensure!(
+        cfg.backend != Backend::Xla,
+        "fleet scheduler drives the native backends (sim | plan) only"
+    );
+
+    let workers = if cfg.workers == 0 {
+        units.len().min(default_threads())
+    } else {
+        cfg.workers.min(units.len())
+    };
+    let depth: Vec<AtomicUsize> = (0..units.len()).map(|_| AtomicUsize::new(0)).collect();
+    // workers bump this once their sessions are built (success or not), so
+    // the serving clock starts when the fleet is actually ready — plan
+    // compilation must not pollute throughput/latency numbers
+    let ready = AtomicUsize::new(0);
+    let (txs, rxs): (Vec<_>, Vec<_>) =
+        (0..units.len()).map(|_| sync_channel::<WorkItem>(cfg.queue_depth.max(1))).unzip();
+
+    let serve_result: Result<(Vec<Vec<ChipServeStats>>, f64)> = std::thread::scope(|s| {
+        let depth = &depth;
+        let ready = &ready;
+        let mut rx_slots: Vec<Option<Receiver<WorkItem>>> = rxs.into_iter().map(Some).collect();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let owned: Vec<(usize, Receiver<WorkItem>)> = (w..units.len())
+                .step_by(workers)
+                .map(|i| (i, rx_slots[i].take().unwrap()))
+                .collect();
+            handles
+                .push(s.spawn(move || worker_loop(owned, units, calib, data, cfg, depth, ready)));
+        }
+
+        // Barrier: wait until every worker has built (or failed to build)
+        // its sessions before starting the serving clock. A failed worker
+        // still counts — its dropped receivers surface as a dispatch error.
+        while ready.load(Ordering::SeqCst) < workers {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+        let t0 = Instant::now();
+
+        // Dispatcher (scope main thread): route every request per policy.
+        let dispatch = dispatch_all(&txs, units, data, cfg, depth);
+        drop(txs); // hang up: workers drain and exit
+
+        let mut all = Vec::with_capacity(workers);
+        for h in handles {
+            all.push(h.join().expect("fleet worker panicked")?);
+        }
+        dispatch?;
+        Ok((all, t0.elapsed().as_secs_f64()))
+    });
+
+    let (per_worker, wall_secs) = serve_result?;
+    let mut per_chip: Vec<ChipServeStats> = per_worker.into_iter().flatten().collect();
+    per_chip.sort_by_key(|c| c.chip_id);
+    let requests: usize = per_chip.iter().map(|c| c.request_ids.len()).sum();
+    let samples: usize = per_chip.iter().map(|c| c.samples).sum();
+    let correct: usize = per_chip.iter().map(|c| c.correct).sum();
+    let sim_cycles: u64 = per_chip.iter().map(|c| c.sim_cycles).sum();
+    Ok(WorkloadReport { requests, samples, correct, wall_secs, sim_cycles, per_chip })
+}
+
+/// Route every request to a chip queue per the configured policy; blocks
+/// on full queues (bounded-queue backpressure). Errors when a target
+/// chip's worker has already exited.
+fn dispatch_all(
+    txs: &[SyncSender<WorkItem>],
+    units: &[ChipUnit<'_>],
+    data: &Dataset,
+    cfg: &WorkloadConfig,
+    depth: &[AtomicUsize],
+) -> Result<()> {
+    let mut rng = Rng::new(cfg.seed ^ 0xD15F_A7C4);
+    let mut rr = 0usize;
+    let mut credits = vec![0.0f64; units.len()];
+    let weights: Vec<f64> = units.iter().map(|u| u.weight.max(1e-3)).collect();
+    let wsum: f64 = weights.iter().sum();
+    for req_id in 0..cfg.requests {
+        let i = match cfg.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = rr % units.len();
+                rr += 1;
+                i
+            }
+            RoutingPolicy::LeastLoaded => {
+                // lowest in-flight count, ties to the lowest index
+                (0..units.len()).min_by_key(|&i| (depth[i].load(Ordering::SeqCst), i)).unwrap()
+            }
+            RoutingPolicy::AccuracyWeighted => {
+                // smooth weighted round-robin: deterministic and
+                // proportional to the accuracy weights
+                for (c, w) in credits.iter_mut().zip(&weights) {
+                    *c += w;
+                }
+                let i =
+                    (0..units.len()).max_by(|&a, &b| credits[a].total_cmp(&credits[b])).unwrap();
+                credits[i] -= wsum;
+                i
+            }
+        };
+        let lo = rng.below(data.len() - cfg.batch + 1);
+        depth[i].fetch_add(1, Ordering::SeqCst);
+        // blocking send on a full queue: bounded-queue backpressure
+        txs[i]
+            .send(WorkItem { req_id, lo, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("chip {} worker exited early", units[i].id))?;
+    }
+    Ok(())
+}
+
+/// One worker: open sessions for its owned chips, then round-robin over
+/// their queues until every dispatcher handle is dropped.
+fn worker_loop(
+    owned: Vec<(usize, Receiver<WorkItem>)>,
+    units: &[ChipUnit<'_>],
+    calib: &Calibration,
+    data: &Dataset,
+    cfg: &WorkloadConfig,
+    depth: &[AtomicUsize],
+    ready: &AtomicUsize,
+) -> Result<Vec<ChipServeStats>> {
+    struct Lane<'rt> {
+        unit_idx: usize,
+        rx: Receiver<WorkItem>,
+        sess: crate::chip::ChipSession<'rt>,
+        cycles_per_batch: u64,
+        open: bool,
+        stats: ChipServeStats,
+    }
+
+    let dim = data.sample_dim;
+    let classes = data.num_classes;
+    let build = || -> Result<Vec<Lane<'static>>> {
+        let mut lanes = Vec::with_capacity(owned.len());
+        for (i, rx) in owned {
+            let u = &units[i];
+            let mut sess = u.chip.session(cfg.backend)?;
+            sess.load_model(u.params.clone(), calib.clone());
+            let cycles_per_batch =
+                batch_sim_cycles(sess.arch(), u.chip.fault_map().n(), cfg.batch);
+            lanes.push(Lane {
+                unit_idx: i,
+                rx,
+                sess,
+                cycles_per_batch,
+                open: true,
+                stats: ChipServeStats {
+                    chip_id: u.id,
+                    request_ids: Vec::new(),
+                    samples: 0,
+                    correct: 0,
+                    sim_cycles: 0,
+                    latencies_us: Vec::new(),
+                },
+            });
+        }
+        Ok(lanes)
+    };
+    // signal readiness whether the build succeeded or not — the serve
+    // barrier must never wait on a worker that already failed
+    let built = build();
+    ready.fetch_add(1, Ordering::SeqCst);
+    let mut lanes = built?;
+
+    loop {
+        let mut progressed = false;
+        let mut any_open = false;
+        for lane in &mut lanes {
+            if !lane.open {
+                continue;
+            }
+            match lane.rx.try_recv() {
+                Ok(item) => {
+                    let (lo, b) = (item.lo, cfg.batch);
+                    let x = &data.x[lo * dim..(lo + b) * dim];
+                    let logits = lane.sess.forward_logits(x, b)?;
+                    let correct = count_correct(&logits, &data.y[lo..lo + b], classes, b);
+                    depth[lane.unit_idx].fetch_sub(1, Ordering::SeqCst);
+                    lane.stats.request_ids.push(item.req_id);
+                    lane.stats.samples += b;
+                    lane.stats.correct += correct;
+                    lane.stats.sim_cycles += lane.cycles_per_batch;
+                    lane.stats.latencies_us.push(item.enqueued.elapsed().as_secs_f64() * 1e6);
+                    progressed = true;
+                    any_open = true;
+                }
+                Err(TryRecvError::Empty) => any_open = true,
+                Err(TryRecvError::Disconnected) => lane.open = false,
+            }
+        }
+        if !any_open {
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_micros(20));
+        }
+    }
+    Ok(lanes.into_iter().map(|l| l.stats).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.5), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn sim_cycles_scale_with_batch_and_shrink_with_array() {
+        let a = crate::model::arch::mnist();
+        let c32 = batch_sim_cycles(&a, 32, 64);
+        let c64 = batch_sim_cycles(&a, 64, 64);
+        let big = batch_sim_cycles(&a, 32, 128);
+        assert!(c32 > c64, "smaller array needs more passes: {c32} vs {c64}");
+        assert!(big > c32, "more samples cost more cycles");
+    }
+}

@@ -33,6 +33,11 @@
 //! * [`coordinator`] — the paper's contribution: baseline training, fault
 //!   injection campaigns, FAP pruning, the FAP+T per-chip retraining loop
 //!   (Algorithm 1), accuracy evaluation and the figure/table harness.
+//! * [`fleet`] — the serving layer over all of the above: provision N
+//!   chips from a yield distribution, route batched requests through a
+//!   bounded multi-threaded scheduler, and manage each chip's lifetime
+//!   (aging faults, re-detection, FAP re-masking, FAP+T retrain queue,
+//!   retirement) against an accuracy SLO.
 //! * [`util`] — deterministic RNG, JSON emission, micro-bench + property
 //!   harnesses (the vendored registry has no criterion/proptest — see
 //!   Cargo.toml).
@@ -42,6 +47,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod faults;
+pub mod fleet;
 pub mod mapping;
 pub mod model;
 pub mod runtime;

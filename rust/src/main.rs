@@ -25,7 +25,10 @@ use repro::coordinator::fapt::{provision_chip_engine, FaptConfig};
 use repro::coordinator::trainer::TrainConfig;
 use repro::data;
 use repro::exec::{default_threads, ChipPlan};
-use repro::faults::{detect, inject_uniform, FaultSpec};
+use repro::faults::{detect, inject_uniform, AgingChip, AgingModel, FaultSpec};
+use repro::fleet::{
+    fleet_json, print_summary, provision_fleet, run_lifetime, FleetConfig, RoutingPolicy, YieldDist,
+};
 use repro::mapping::MaskKind;
 use repro::model::quant::calibrate_mlp;
 use repro::model::{arch, Params};
@@ -55,6 +58,14 @@ fn allowed_opts(cmd: &str) -> Option<&'static [&'static str]> {
         ]),
         "plan" => Some(&["model", "array-n", "faults", "seed", "batch", "threads", "backend",
             "artifacts"]),
+        // no --threads here: fleet parallelism is chip-level (--workers);
+        // every session the fleet opens runs its plan single-threaded
+        "fleet" => Some(&[
+            "model", "chips", "array-n", "seed", "policy", "hours", "backend", "out",
+            "profile", "slo", "defect-rate", "eol-rate", "batch", "life-steps", "managed",
+            "queue-depth", "workers", "train-n", "test-n", "steps",
+        ]),
+        "aging" => Some(&["tau", "beta", "n", "faults", "seed", "points", "hours", "eol-rate"]),
         "detect" => Some(&["n", "faults", "seed"]),
         "smoke" => Some(&["artifacts"]),
         _ => None,
@@ -154,6 +165,22 @@ impl Args {
         }
     }
 
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some("true" | "yes" | "on" | "1") => Ok(true),
+            Some("false" | "no" | "off" | "0") => Ok(false),
+            Some(v) => bail!("--{key} {v:?} (use true | false)"),
+            None => Ok(default),
+        }
+    }
+
     fn backend(&self, default: Backend) -> Result<Backend> {
         match self.get("backend") {
             Some(v) => Backend::parse(v),
@@ -162,13 +189,17 @@ impl Args {
     }
 }
 
-fn harness_config(args: &Args) -> Result<HarnessConfig> {
-    let profile = match args.get("profile").unwrap_or("default") {
-        "quick" => Profile::Quick,
-        "default" => Profile::Default,
-        "paper" => Profile::Paper,
+fn profile_of(args: &Args) -> Result<Profile> {
+    match args.get("profile").unwrap_or("default") {
+        "quick" => Ok(Profile::Quick),
+        "default" => Ok(Profile::Default),
+        "paper" => Ok(Profile::Paper),
         other => bail!("unknown profile {other:?}"),
-    };
+    }
+}
+
+fn harness_config(args: &Args) -> Result<HarnessConfig> {
+    let profile = profile_of(args)?;
     Ok(HarnessConfig {
         out_dir: args.get("out").unwrap_or("results").to_string(),
         seed: args.u64("seed", 42)?,
@@ -373,6 +404,134 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "fleet" => {
+            // Fleet campaign: provision N chips from the yield distribution,
+            // serve batched traffic through the scheduler, manage each
+            // chip's lifetime (aging -> re-detect -> FAP re-mask -> FAP+T
+            // retrain queue -> retire) against the accuracy SLO.
+            let model = args.get("model").unwrap_or("mnist");
+            let a = arch::by_name(model).context("unknown model")?;
+            anyhow::ensure!(a.is_mlp(), "fleet serves MLP archs (mnist|timit), got {model}");
+            let backend = args.backend(Backend::Plan)?;
+            anyhow::ensure!(
+                backend != Backend::Xla,
+                "fleet runs on the native backends: --backend sim|plan"
+            );
+            let profile = profile_of(&args)?;
+            let seed = args.u64("seed", 42)?;
+            let mut fcfg = FleetConfig {
+                chips: args.usize("chips", 8)?,
+                array_n: args.usize("array-n", 64)?,
+                seed,
+                policy: RoutingPolicy::parse(args.get("policy").unwrap_or("least-loaded"))?,
+                hours: args.f64("hours", 50_000.0)?,
+                yield_dist: YieldDist::Poisson { rate: args.f64("defect-rate", 0.02)? },
+                eol_fault_rate: args.f64("eol-rate", 0.25)?,
+                slo_frac: args.f64("slo", 0.9)?,
+                managed: args.bool("managed", true)?,
+                workers: args.usize("workers", 0)?,
+                ..FleetConfig::default()
+            }
+            .scaled(profile);
+            fcfg.batch = args.usize("batch", fcfg.batch)?;
+            fcfg.life_steps = args.usize("life-steps", fcfg.life_steps)?;
+            fcfg.queue_depth = args.usize("queue-depth", fcfg.queue_depth)?;
+            anyhow::ensure!(
+                fcfg.eol_fault_rate > 0.0 && fcfg.eol_fault_rate < 1.0,
+                "--eol-rate must be in (0, 1), got {}",
+                fcfg.eol_fault_rate
+            );
+            anyhow::ensure!(fcfg.hours > 0.0, "--hours must be > 0, got {}", fcfg.hours);
+            anyhow::ensure!(fcfg.chips > 0, "--chips must be > 0");
+            anyhow::ensure!(fcfg.life_steps > 0, "--life-steps must be > 0");
+
+            // golden baseline shared by the whole fleet (profile-scaled)
+            let (div_n, div_s) = if profile == Profile::Quick { (4, 4) } else { (1, 1) };
+            let train_n = args.usize("train-n", 4000 / div_n)?;
+            let test_n = args.usize("test-n", 1000 / div_n)?.max(fcfg.batch);
+            let steps = args.usize("steps", 700 / div_s)?;
+            let (train, test) = data::for_arch(model, train_n, test_n, seed).unwrap();
+            let mut engine = Engine::new(backend, None)?;
+            eprintln!(
+                "training golden model ({model}, {steps} steps, {} backend)...",
+                engine.backend()
+            );
+            let tcfg = TrainConfig { steps, seed, ..Default::default() };
+            let (golden, _) = engine.train(&a, &train, &tcfg)?;
+            let cal_batch = 64.min(train.len());
+            let calib =
+                calibrate_mlp(&a, &golden, &train.x[..cal_batch * a.input_len()], cal_batch);
+
+            eprintln!("provisioning {} chips...", fcfg.chips);
+            let mut fleet =
+                provision_fleet(&mut engine, fcfg, &a, &golden, &calib, &train, &test)?;
+            eprintln!(
+                "provision yield {:.0}% — entering lifetime loop",
+                fleet.effective_yield() * 100.0
+            );
+            let outcome = run_lifetime(&mut engine, &mut fleet, &golden, &train, &test)?;
+            print_summary(&fleet, &outcome);
+            let json = fleet_json(&fleet, &outcome, backend.name());
+            repro::coordinator::report::write_json(
+                args.get("out").unwrap_or("results"),
+                "fleet",
+                &json,
+            )?;
+        }
+        "aging" => {
+            // Wear-out model sweep: expected vs sampled fault-rate
+            // trajectory of one aging chip.
+            let n = args.usize("n", 64)?;
+            let beta = args.f64("beta", 2.0)?;
+            let seed = args.u64("seed", 42)?;
+            let faults = args.usize("faults", 0)?;
+            let hours = args.f64("hours", 0.0)?;
+            anyhow::ensure!(beta >= 1.0, "--beta must be >= 1, got {beta}");
+            let spec = FaultSpec::new(n);
+            let model = match (args.get("tau"), args.get("eol-rate")) {
+                (Some(_), Some(_)) => bail!("give --tau or --eol-rate, not both"),
+                (None, Some(_)) => {
+                    let rate = args.f64("eol-rate", 0.25)?;
+                    anyhow::ensure!(
+                        rate > 0.0 && rate < 1.0,
+                        "--eol-rate must be in (0, 1), got {rate}"
+                    );
+                    let h = if hours > 0.0 { hours } else { 50_000.0 };
+                    AgingModel::with_eol_rate(spec, rate, h, beta)
+                }
+                _ => {
+                    let tau = args.f64("tau", 50_000.0)?;
+                    anyhow::ensure!(tau > 0.0, "--tau must be > 0, got {tau}");
+                    AgingModel { tau_hours: tau, beta, spec }
+                }
+            };
+            let horizon = if hours > 0.0 { hours } else { 2.0 * model.tau_hours };
+            let points = args.usize("points", 10)?.max(1);
+            let mut chip = AgingChip::new(model, faults, seed);
+            println!(
+                "aging sweep: {n}x{n} array, tau {:.0}h, beta {}, {} initial defects",
+                model.tau_hours, model.beta, faults
+            );
+            println!(
+                "{:>10} {:>14} {:>14} {:>12} {:>8}",
+                "hours", "expected rate", "sampled rate", "faulty MACs", "new"
+            );
+            let row = |chip: &AgingChip, newly: usize| {
+                println!(
+                    "{:>10.0} {:>13.3}% {:>13.3}% {:>12} {:>8}",
+                    chip.hours(),
+                    model.expected_fault_rate(chip.hours()) * 100.0,
+                    chip.fault_rate() * 100.0,
+                    chip.fault_map().faulty_mac_count(),
+                    newly
+                );
+            };
+            row(&chip, 0);
+            for _ in 0..points {
+                let newly = chip.advance(horizon / points as f64);
+                row(&chip, newly);
+            }
+        }
         "detect" => {
             let n = args.usize("n", 64)?;
             let faults = args.usize("faults", 20)?;
@@ -422,6 +581,10 @@ COMMANDS:
   plan --model <M>            open a chip session and execute it natively
                               (no artifacts): quantize, lower, run the
                               forward engine, cross-check vs the sim oracle
+  fleet                       provision + serve + lifetime-manage a fleet of
+                              faulty chips (writes results/fleet.json)
+  aging                       wear-out model sweep: expected vs sampled
+                              fault-rate trajectory
   detect                      post-fab fault localization demo
   synthesis                   45nm synthesis + yield model tables
   smoke                       compile key artifacts, verify the runtime
@@ -438,6 +601,19 @@ OPTIONS:
   --array-n N       physical array dimension (default: 256)
   --profile P       quick | default | paper
   --model M         mnist | timit | alexnet32
+
+FLEET OPTIONS (repro fleet):
+  --chips N         fleet size (default: 8)
+  --policy P        round-robin | least-loaded | accuracy-weighted
+  --hours H         simulated deployment lifetime (default: 50000)
+  --defect-rate R   mean manufacturing defect rate (Poisson, default: 0.02)
+  --eol-rate R      expected aging fault rate at end of life (default: 0.25)
+  --slo F           accuracy SLO as a fraction of golden (default: 0.9)
+  --managed B       true = FAP+T health management, false = unmitigated
+  --life-steps S    health-check epochs (profile-scaled)
+  --batch B         samples per request batch (profile-scaled)
+  --queue-depth D   bounded per-chip queue depth (default: 4)
+  --workers W       scheduler worker threads (default: min(chips, cores))
 ";
 
 #[cfg(test)]

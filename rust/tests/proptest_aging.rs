@@ -1,0 +1,108 @@
+//! Property tests over the aging fault model (`faults::aging`) — the
+//! invariants the fleet's lifetime health loop relies on: fault maps are
+//! supersets over time (permanent faults never heal), sampled counts
+//! track the Weibull expectation, and the map fingerprint changes exactly
+//! when the map does (plan-cache invalidation safety).
+
+use repro::faults::aging::{AgingChip, AgingModel};
+use repro::faults::FaultSpec;
+use repro::prop_assert;
+use repro::util::prop;
+
+#[test]
+fn prop_aging_maps_are_supersets_over_time() {
+    prop::check("aging_superset", 0xA6E1, 30, |rng| {
+        let n = 4 + rng.below(13); // 4..=16
+        let beta = 1.0 + rng.f64() * 2.0;
+        let tau = 20_000.0 + rng.f64() * 80_000.0;
+        let model = AgingModel { tau_hours: tau, beta, spec: FaultSpec::new(n) };
+        let initial = rng.below(n * n / 4 + 1);
+        let mut chip = AgingChip::new(model, initial, rng.next_u64());
+        prop_assert!(
+            chip.fault_map().faulty_mac_count() == initial,
+            "fab defects {} != {initial}",
+            chip.fault_map().faulty_mac_count()
+        );
+        let mut prev = chip.snapshot();
+        for _ in 0..8 {
+            let newly = chip.advance(tau / 6.0);
+            let cur = chip.fault_map();
+            for (r, c) in prev.faulty_macs() {
+                prop_assert!(cur.is_faulty(r, c), "fault healed at ({r},{c})");
+            }
+            // strictness: the faulty set grew exactly when advance said so
+            let grew = cur.faulty_mac_count() > prev.faulty_mac_count();
+            prop_assert!(
+                grew == (newly > 0),
+                "advance reported {newly} new faults but map grew={grew}"
+            );
+            prev = chip.snapshot();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampled_counts_track_expectation() {
+    prop::check("aging_expectation", 0xE8A2, 12, |rng| {
+        let n = 24 + rng.below(17); // 24..=40: enough MACs for statistics
+        let beta = 1.0 + rng.f64() * 1.5;
+        let model = AgingModel { tau_hours: 40_000.0, beta, spec: FaultSpec::new(n) };
+        let mut chip = AgingChip::new(model, 0, rng.next_u64());
+        let steps = 16;
+        let horizon = 60_000.0;
+        for _ in 0..steps {
+            chip.advance(horizon / steps as f64);
+        }
+        let got = chip.fault_map().faulty_mac_count() as f64;
+        let want = model.expected_faulty_macs(horizon) as f64;
+        let tol = (want * 0.2).max(8.0);
+        prop_assert!(
+            (got - want).abs() <= tol,
+            "sampled {got} vs expected {want} (n={n}, beta={beta:.2})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fingerprint_changes_iff_map_changes() {
+    prop::check("aging_fingerprint", 0xF1A3, 30, |rng| {
+        let n = 4 + rng.below(9); // 4..=12
+        let model =
+            AgingModel { tau_hours: 30_000.0, beta: 2.0, spec: FaultSpec::new(n) };
+        let mut chip = AgingChip::new(model, rng.below(3), rng.next_u64());
+        // small steps so some advances strike zero new MACs
+        for _ in 0..12 {
+            let before = chip.fault_map().fingerprint();
+            let newly = chip.advance(1_500.0);
+            let after = chip.fault_map().fingerprint();
+            if newly == 0 {
+                prop_assert!(after == before, "fingerprint moved with no new faults");
+            } else {
+                prop_assert!(
+                    after != before,
+                    "{newly} new faults but the fingerprint is stale — \
+                     a cached plan would silently serve the wrong chip"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eol_calibration_hits_target_rate() {
+    prop::check("aging_eol_calibration", 0xE01C, 50, |rng| {
+        let rate = 0.05 + rng.f64() * 0.6;
+        let hours = 10_000.0 + rng.f64() * 90_000.0;
+        let beta = 1.0 + rng.f64() * 2.0;
+        let m = AgingModel::with_eol_rate(FaultSpec::new(16), rate, hours, beta);
+        let got = m.expected_fault_rate(hours);
+        prop_assert!(
+            (got - rate).abs() < 1e-9,
+            "calibrated model reaches {got} at end of life, wanted {rate}"
+        );
+        Ok(())
+    });
+}
