@@ -1,21 +1,30 @@
 //! Bench: the performance-critical paths across all three layers, tracked
-//! by EXPERIMENTS.md §Perf and `BENCH_exec.json`.
+//! by EXPERIMENTS.md §Perf, `BENCH_exec.json` and `BENCH_gemm.json`.
 //!
 //! * Exec engine: compiled chip-plan executor vs the naive PE-chain
 //!   simulator on the paper's 256×256 array, across a fault-rate sweep,
-//!   single- and multi-threaded (MAC/s + speedup, emitted as
+//!   single-threaded and pooled (MAC/s + speedup, emitted as
 //!   `BENCH_exec.json` so the perf trajectory is tracked PR over PR).
+//! * GEMM kernel: packed-panel 4×4 microkernel vs the column-at-a-time
+//!   `dot_wrapping` baseline at the fig2a mnist MLP shapes, plus
+//!   pool-vs-scope dispatch rows at serving batch sizes
+//!   (`BENCH_gemm.json`). **Parity-gated**: every timed variant's output
+//!   is compared bit-for-bit and a mismatch exits nonzero — the CI
+//!   quick-bench smoke fails on parity, never on timing.
 //! * L3 sim: functional systolic matmul (MAC/s) — target ≥100M MAC/s/core.
 //! * L3 masks: LayerMasks synthesis for the TIMIT model on a 256 grid.
 //! * RT (needs `artifacts/`): PJRT fwd latency/throughput (mnist + timit),
 //!   train-step latency, and the scan-fused multi-step training artifact
 //!   vs N single steps. Skipped with a notice when artifacts are absent.
+//!
+//! `REPRO_BENCH_QUICK=1` shrinks every section to CI-smoke size (seconds,
+//! not minutes) while keeping all parity gates live.
 
 use repro::chip::{Backend, Chip, Engine};
 use repro::coordinator::trainer::{ones_masks, train_step, TrainState};
 use repro::data;
-use repro::exec::{default_threads, MatmulPlan};
-use repro::faults::{inject_uniform, FaultSpec};
+use repro::exec::{default_threads, dot_wrapping, MatmulPlan, WorkerPool};
+use repro::faults::{inject_uniform, FaultMap, FaultSpec};
 use repro::fleet::{percentile, serve, ChipUnit, RoutingPolicy, WorkloadConfig};
 use repro::mapping::{LayerMasks, MaskKind};
 use repro::model::arch;
@@ -28,21 +37,24 @@ use repro::util::json::Json;
 use repro::util::Rng;
 
 /// Naive-vs-plan sweep on the paper's 256×256 array; records MAC/s and
-/// speedups (single- and multi-thread) as `BENCH_exec.json` rows.
+/// speedups (single-thread and pooled) as `BENCH_exec.json` rows.
 /// Returns `(meta, rows)` so the file meta always matches the sweep
 /// geometry actually run.
-fn bench_exec_engine(rng: &mut Rng) -> anyhow::Result<(Json, Vec<Json>)> {
-    println!("# exec engine: compiled plan vs naive PE-chain (n=256)");
-    let n = 256;
-    let (b, k, m) = (64usize, 512usize, 512usize);
+fn bench_exec_engine(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Json>)> {
+    let (n, b, k, m) = if quick { (32, 16usize, 96usize, 96usize) } else { (256, 64, 512, 512) };
+    // fault counts over the grid: 0%, ~0.4%, 6.25%, 25% (quick: 0%, 6.25%)
+    let fault_counts: Vec<usize> =
+        if quick { vec![0, n * n / 16] } else { vec![0, 256, 4096, 16384] };
+    let (naive_wu, naive_it, plan_wu, plan_it) = if quick { (0, 1, 1, 3) } else { (1, 3, 2, 10) };
+    println!("# exec engine: compiled plan vs naive PE-chain (n={n})");
     let macs = timing::mac_ops(b, k, m);
     let threads = default_threads().max(4);
+    let pool = WorkerPool::new(threads);
     let a: Vec<i32> = (0..b * k).map(|_| rng.below(255) as i32 - 127).collect();
     let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
 
     let mut results = Vec::new();
-    // fault counts over the 65536-MAC grid: 0%, ~0.4%, 6.25%, 25%
-    for &faults in &[0usize, 256, 4096, 16384] {
+    for &faults in &fault_counts {
         let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(97 ^ faults as u64));
         for (kind, label) in [
             (MaskKind::Unmitigated, "unmitigated"),
@@ -57,36 +69,39 @@ fn bench_exec_engine(rng: &mut Rng) -> anyhow::Result<(Json, Vec<Json>)> {
             let mut out = vec![0i32; b * m];
             let naive = bench::bench(
                 &format!("naive chain ({faults} faults, {label})"),
-                1,
-                3,
+                naive_wu,
+                naive_it,
                 || {
                     tm.matmul_into(&a, &w, b, k, m, &mut out);
                     bench::black_box(&mut out);
                 },
             );
             naive.report_throughput(macs, "MAC");
+            let want = out.clone(); // oracle output for the parity gates
 
             let plan = MatmulPlan::compile(&fm, kind, &w, k, m);
             let single = bench::bench(
                 &format!("plan x1 thread ({faults} faults, {label})"),
-                2,
-                10,
+                plan_wu,
+                plan_it,
                 || {
                     plan.execute_into(&a, b, &mut out);
                     bench::black_box(&mut out);
                 },
             );
             single.report_throughput(macs, "MAC");
+            anyhow::ensure!(out == want, "parity: plan x1 != naive ({faults} faults, {label})");
             let multi = bench::bench(
-                &format!("plan x{threads} threads ({faults} faults, {label})"),
-                2,
-                10,
+                &format!("plan x{threads} pooled ({faults} faults, {label})"),
+                plan_wu,
+                plan_it,
                 || {
-                    plan.execute_threaded_into(&a, b, threads, &mut out);
+                    plan.execute_pooled_into(&a, b, &pool, &mut out);
                     bench::black_box(&mut out);
                 },
             );
             multi.report_throughput(macs, "MAC");
+            anyhow::ensure!(out == want, "parity: pooled != naive ({faults} faults, {label})");
 
             let speedup_single =
                 naive.median.as_secs_f64() / single.median.as_secs_f64().max(1e-12);
@@ -123,13 +138,163 @@ fn bench_exec_engine(rng: &mut Rng) -> anyhow::Result<(Json, Vec<Json>)> {
     Ok((meta, results))
 }
 
+/// The column-at-a-time dot-product GEMM this PR replaced — kept inline
+/// as the `BENCH_gemm.json` baseline. `wcols` is column-major `[m][k]`
+/// with fault folding already applied (the pre-packing compile layout).
+fn dot_gemm_into(a: &[i32], wcols: &[i32], b: usize, k: usize, m: usize, out: &mut [i32]) {
+    for j in 0..m {
+        let col = &wcols[j * k..(j + 1) * k];
+        for bi in 0..b {
+            out[bi * m + j] = dot_wrapping(&a[bi * k..(bi + 1) * k], col);
+        }
+    }
+}
+
+/// Microkernel-vs-dot rows at the fig2a mnist MLP shapes, plus
+/// pool-vs-scope dispatch rows at serving batch sizes — `BENCH_gemm.json`.
+/// Every variant is parity-gated bit-for-bit (in quick mode additionally
+/// against the cycle-level oracle); a mismatch aborts the bench with a
+/// nonzero exit, which is what the CI smoke asserts.
+fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Json>)> {
+    let n = if quick { 32 } else { 256 };
+    let batch = if quick { 16usize } else { 64 };
+    // fig2a mnist MLP layer shapes (din x dout), shrunk under quick
+    let shapes: &[(usize, usize)] =
+        if quick { &[(96, 64), (64, 10)] } else { &[(784, 256), (256, 256), (256, 10)] };
+    let (wu, it) = if quick { (1, 3) } else { (2, 10) };
+    println!("\n# gemm: packed 4x4 microkernel vs column-dot baseline (n={n}, batch {batch})");
+
+    let mut rows = Vec::new();
+    for &(k, m) in shapes {
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+        for (faults, kind, label) in [
+            (0usize, MaskKind::Unmitigated, "healthy"),
+            (n * n / 16, MaskKind::FapBypass, "6.25% fap-bypass"),
+        ] {
+            let fm = inject_uniform(
+                FaultSpec::new(n),
+                faults,
+                &mut Rng::new(33 ^ (k * 31 + m + faults) as u64),
+            );
+            // fold bypassed MACs to zero columns, column-major — exactly
+            // what the old compile produced for the dot walk
+            let mut wcols = vec![0i32; k * m];
+            for j in 0..m {
+                for kk in 0..k {
+                    let byp = kind == MaskKind::FapBypass && fm.is_faulty(kk % n, j % n);
+                    wcols[j * k + kk] = if byp { 0 } else { w[kk * m + j] };
+                }
+            }
+            let macs = timing::mac_ops(batch, k, m);
+            let mut out_dot = vec![0i32; batch * m];
+            let dot = bench::bench(&format!("col-dot {k}x{m} ({label})"), wu, it, || {
+                dot_gemm_into(&a, &wcols, batch, k, m, &mut out_dot);
+                bench::black_box(&mut out_dot);
+            });
+            dot.report_throughput(macs, "MAC");
+
+            let plan = MatmulPlan::compile(&fm, kind, &w, k, m);
+            let mut out_packed = vec![0i32; batch * m];
+            let packed = bench::bench(&format!("packed 4x4 {k}x{m} ({label})"), wu, it, || {
+                plan.execute_into(&a, batch, &mut out_packed);
+                bench::black_box(&mut out_packed);
+            });
+            packed.report_throughput(macs, "MAC");
+
+            // parity gate: packed microkernel == dot baseline, bit-for-bit
+            anyhow::ensure!(
+                out_packed == out_dot,
+                "parity: packed != col-dot at {k}x{m} ({label})"
+            );
+            if quick {
+                // CI smoke: cross-check the cycle-level oracle too
+                let want = TiledMatmul::new(&fm, kind == MaskKind::FapBypass)
+                    .matmul(&a, &w, batch, k, m);
+                anyhow::ensure!(
+                    out_packed == want,
+                    "parity: packed != cycle oracle at {k}x{m} ({label})"
+                );
+            }
+            let speedup = dot.median.as_secs_f64() / packed.median.as_secs_f64().max(1e-12);
+            println!("  -> packed speedup x1 = {speedup:.2}");
+            rows.push(
+                Json::obj()
+                    .field("row", Json::str("micro_vs_dot"))
+                    .field("k", Json::num(k as f64))
+                    .field("m", Json::num(m as f64))
+                    .field("batch", Json::num(batch as f64))
+                    .field("faulty_macs", Json::num(faults as f64))
+                    .field("mitigation", Json::str(label))
+                    .field("macs", Json::num(macs as f64))
+                    .field("dot", dot.to_json())
+                    .field("packed", packed.to_json())
+                    .field("dot_macs_per_s", Json::num(dot.throughput(macs)))
+                    .field("packed_macs_per_s", Json::num(packed.throughput(macs)))
+                    .field("speedup_packed", Json::num(speedup)),
+            );
+        }
+    }
+
+    // pool vs scope: dispatch overhead at serving batch sizes, where
+    // per-call thread spawns dominate small forwards
+    let threads = default_threads().max(2);
+    let pool = WorkerPool::new(threads);
+    let (k, m) = if quick { (64usize, 64usize) } else { (256, 256) };
+    let serving_batches: &[usize] = if quick { &[2, 8] } else { &[4, 64] };
+    let (wu2, it2) = if quick { (1, 5) } else { (3, 30) };
+    println!("# dispatch: spawn-once pool vs per-call thread::scope ({k}x{m}, x{threads})");
+    let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+    let plan = MatmulPlan::compile(&FaultMap::healthy(n), MaskKind::Unmitigated, &w, k, m);
+    for &sb in serving_batches {
+        let a: Vec<i32> = (0..sb * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let macs = timing::mac_ops(sb, k, m);
+        let mut out_scope = vec![0i32; sb * m];
+        let scope = bench::bench(&format!("scope x{threads} (batch {sb})"), wu2, it2, || {
+            plan.execute_threaded_into(&a, sb, threads, &mut out_scope);
+            bench::black_box(&mut out_scope);
+        });
+        scope.report_throughput(macs, "MAC");
+        let mut out_pool = vec![0i32; sb * m];
+        let pooled = bench::bench(&format!("pool  x{threads} (batch {sb})"), wu2, it2, || {
+            plan.execute_pooled_into(&a, sb, &pool, &mut out_pool);
+            bench::black_box(&mut out_pool);
+        });
+        pooled.report_throughput(macs, "MAC");
+        anyhow::ensure!(out_pool == out_scope, "parity: pool != scope at batch {sb}");
+        let speedup = scope.median.as_secs_f64() / pooled.median.as_secs_f64().max(1e-12);
+        println!("  -> pool speedup over scope = {speedup:.2} (batch {sb})");
+        rows.push(
+            Json::obj()
+                .field("row", Json::str("pool_vs_scope"))
+                .field("k", Json::num(k as f64))
+                .field("m", Json::num(m as f64))
+                .field("batch", Json::num(sb as f64))
+                .field("threads", Json::num(threads as f64))
+                .field("macs", Json::num(macs as f64))
+                .field("scope", scope.to_json())
+                .field("pool", pooled.to_json())
+                .field("scope_macs_per_s", Json::num(scope.throughput(macs)))
+                .field("pool_macs_per_s", Json::num(pooled.throughput(macs)))
+                .field("speedup_pool", Json::num(speedup)),
+        );
+    }
+
+    let meta = Json::obj()
+        .field("array_n", Json::num(n as f64))
+        .field("batch", Json::num(batch as f64))
+        .field("threads", Json::num(threads as f64))
+        .field("quick", Json::num(if quick { 1.0 } else { 0.0 }));
+    Ok((meta, rows))
+}
+
 /// End-to-end `ChipSession` forward passes, one row per backend (`sim`,
 /// `plan`, and `xla` when an artifacts directory is present): the mnist
 /// MLP on a 10%-faulty 64×64 chip under FAP bypass.
-fn bench_backend_sessions(rng: &mut Rng) -> anyhow::Result<Vec<Json>> {
-    println!("\n# chip-session backends (mnist, 64x64 chip, 10% faults, FAP bypass)");
+fn bench_backend_sessions(rng: &mut Rng, quick: bool) -> anyhow::Result<Vec<Json>> {
+    let (array_n, faults, batch) = if quick { (32usize, 102, 16) } else { (64, 410, 64) };
+    println!("\n# chip-session backends (mnist, {array_n}x{array_n}, 10% faults, FAP bypass)");
     let a = arch::by_name("mnist").unwrap();
-    let batch = 64usize;
     let mut params = Params::zeros_like(&a);
     for (w, b) in &mut params.layers {
         w.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
@@ -137,7 +302,8 @@ fn bench_backend_sessions(rng: &mut Rng) -> anyhow::Result<Vec<Json>> {
     }
     let x: Vec<f32> = (0..batch * a.input_len()).map(|_| rng.normal()).collect();
     let calib = calibrate_mlp(&a, &params, &x, batch);
-    let chip = Chip::new(a.clone()).array_n(64).inject(410, 13).mitigate(MaskKind::FapBypass);
+    let chip =
+        Chip::new(a.clone()).array_n(array_n).inject(faults, 13).mitigate(MaskKind::FapBypass);
     let macs: u64 = a.weighted_layers().iter().map(|l| (batch * l.weight_len()) as u64).sum();
 
     let rt = Runtime::new("artifacts").ok();
@@ -151,7 +317,12 @@ fn bench_backend_sessions(rng: &mut Rng) -> anyhow::Result<Vec<Json>> {
         let mut sess = engine.session(&chip)?;
         sess.load_model(params.clone(), calib.clone());
         // the sim walks PE chains per call: keep its iteration count low
-        let (warmup, iters) = if backend == Backend::Sim { (1, 3) } else { (2, 10) };
+        let (warmup, iters) = match (backend, quick) {
+            (Backend::Sim, false) => (1, 3),
+            (Backend::Sim, true) => (0, 1),
+            (_, false) => (2, 10),
+            (_, true) => (1, 3),
+        };
         let r = bench::bench(
             &format!("session fwd ({} backend, batch {batch})", backend.name()),
             warmup,
@@ -167,8 +338,8 @@ fn bench_backend_sessions(rng: &mut Rng) -> anyhow::Result<Vec<Json>> {
             Json::obj()
                 .field("backend", Json::str(backend.name()))
                 .field("model", Json::str("mnist"))
-                .field("array_n", Json::num(64))
-                .field("faulty_macs", Json::num(410))
+                .field("array_n", Json::num(array_n as f64))
+                .field("faulty_macs", Json::num(faults as f64))
                 .field("batch", Json::num(batch as f64))
                 .field("macs", Json::num(macs as f64))
                 .field("session_fwd", r.to_json())
@@ -182,10 +353,11 @@ fn bench_backend_sessions(rng: &mut Rng) -> anyhow::Result<Vec<Json>> {
 /// dispatcher, one row per routing policy (samples/s + latency
 /// percentiles), emitted as `BENCH_fleet.json` so the serving-layer perf
 /// trajectory is tracked PR over PR like the exec engine's.
-fn bench_fleet_scheduler(rng: &mut Rng) -> anyhow::Result<(Json, Vec<Json>)> {
+fn bench_fleet_scheduler(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Json>)> {
     println!("\n# fleet scheduler (mnist, 4x 32x32 chips, 5% faults, FAP bypass)");
     let a = arch::by_name("mnist").unwrap();
-    let (chips_n, array_n, batch, requests) = (4usize, 32usize, 64usize, 32usize);
+    let (chips_n, array_n) = (4usize, 32usize);
+    let (batch, requests) = if quick { (16usize, 8usize) } else { (64, 32) };
     let mut params = Params::zeros_like(&a);
     for (w, b) in &mut params.layers {
         w.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
@@ -254,21 +426,33 @@ fn bench_fleet_scheduler(rng: &mut Rng) -> anyhow::Result<(Json, Vec<Json>)> {
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("## bench perf_hotpath\n");
+    let quick = std::env::var_os("REPRO_BENCH_QUICK").is_some();
+    println!("## bench perf_hotpath{}\n", if quick { " (quick smoke)" } else { "" });
     let mut rng = Rng::new(51);
 
-    // ---- exec engine: plan compiler + blocked GEMM core (no PJRT needed)
-    let (meta, mut results) = bench_exec_engine(&mut rng)?;
+    // ---- exec engine: plan compiler + packed GEMM core (no PJRT needed)
+    let (meta, mut results) = bench_exec_engine(&mut rng, quick)?;
+
+    // ---- gemm kernel: microkernel-vs-dot + pool-vs-scope, parity-gated --
+    let (gemm_meta, gemm_rows) = bench_gemm_micro(&mut rng, quick)?;
+    bench::write_bench_json("BENCH_gemm.json", "gemm_microkernel", gemm_meta, gemm_rows)?;
 
     // ---- chip-session backends: one row per ForwardBackend (rows carry
     // their own shape fields; the file meta describes the exec sweep) ----
-    results.extend(bench_backend_sessions(&mut rng)?);
+    results.extend(bench_backend_sessions(&mut rng, quick)?);
 
     bench::write_bench_json("BENCH_exec.json", "exec_plan_vs_naive", meta, results)?;
 
     // ---- fleet scheduler: serving-layer rows, own bench record ----------
-    let (fleet_meta, fleet_rows) = bench_fleet_scheduler(&mut rng)?;
+    let (fleet_meta, fleet_rows) = bench_fleet_scheduler(&mut rng, quick)?;
     bench::write_bench_json("BENCH_fleet.json", "fleet_scheduler", fleet_meta, fleet_rows)?;
+
+    if quick {
+        // the smoke run exists to exercise the parity gates above; the
+        // L3 / PJRT sections below add minutes without adding coverage
+        println!("\n(quick mode: skipping L3 + PJRT sections)");
+        return Ok(());
+    }
 
     // ---- L3: cycle-level simulator hot loop -------------------------------
     println!("\n# L3 simulator");
@@ -279,7 +463,7 @@ fn main() -> anyhow::Result<()> {
     let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
     let macs = timing::mac_ops(b, k, m);
 
-    let mut tm = TiledMatmul::new(&repro::faults::FaultMap::healthy(n), false);
+    let mut tm = TiledMatmul::new(&FaultMap::healthy(n), false);
     let r = bench::bench("tiled matmul (healthy, 512x256 b32)", 2, 8, || {
         bench::black_box(tm.matmul(&a, &w, b, k, m));
     });

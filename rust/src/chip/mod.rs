@@ -14,8 +14,9 @@
 //!   `forward_logits`, `activations` and `swap_params` (retrain epochs)
 //!   reuse compiled state across calls.
 //! * [`Engine`] — the campaign-level execution context: backend choice,
-//!   optional PJRT runtime, shared [`PlanCache`], thread budget, and the
-//!   float/train dispatch (XLA graphs vs the native host trainer).
+//!   optional PJRT runtime, shared [`PlanCache`], a spawn-once
+//!   [`WorkerPool`] every plan session executes on, thread budget, and
+//!   the float/train dispatch (XLA graphs vs the native host trainer).
 //! * [`Backend::supports`] — the capability matrix in one place
 //!   (EXPERIMENTS.md §Backends) instead of scattered `bail!`s.
 //!
@@ -48,15 +49,15 @@ use crate::coordinator::evaluate::{accuracy_over_batches, Evaluator};
 use crate::coordinator::fapt::{fapt_retrain, fapt_retrain_native, FaptConfig, FaptResult};
 use crate::coordinator::trainer::{train_baseline, train_baseline_native, TrainConfig};
 use crate::data::Dataset;
-use crate::exec::{default_threads, ChipPlan, PlanCache};
+use crate::exec::{default_threads, ChipPlan, PlanCache, WorkerPool};
 use crate::faults::{detect, inject_uniform, FaultMap, FaultSpec, StuckAt};
 use crate::mapping::MaskKind;
 use crate::model::quant::{calibrate_mlp, mlp_forward, Calibration};
 use crate::model::{Arch, Params};
 use crate::runtime::Runtime;
 use crate::util::Rng;
-use anyhow::{bail, Context, Result};
-use std::rc::Rc;
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::Arc;
 
 /// Builder for one physical chip: architecture, array size, fault state
 /// and mitigation. Consume it with [`Chip::session`] /
@@ -185,12 +186,38 @@ impl Chip {
                  use Chip::session_on(Backend::Xla, &rt) or Engine::session"
             );
         }
-        self.build(backend, None, None, 0)
+        self.build(backend, None, None, 0, None, None)
     }
 
     /// Open a session on any backend, with a PJRT runtime available.
     pub fn session_on<'rt>(&self, backend: Backend, rt: &'rt Runtime) -> Result<ChipSession<'rt>> {
-        self.build(backend, Some(rt), None, 0)
+        self.build(backend, Some(rt), None, 0, None, None)
+    }
+
+    /// Open a session on a **precompiled shared plan** and a **shared
+    /// worker pool** — the fleet serving path: the session adopts the
+    /// `Arc<ChipPlan>` (including packed weight tile programs when the
+    /// plan was compiled with weights) instead of lowering its own, and
+    /// executes on the caller's spawn-once pool. The plan must have been
+    /// compiled for exactly this chip's fault map and mitigation.
+    pub fn session_shared(
+        &self,
+        backend: Backend,
+        plan: Arc<ChipPlan>,
+        pool: Arc<WorkerPool>,
+    ) -> Result<ChipSession<'static>> {
+        if backend == Backend::Xla {
+            bail!("session_shared drives the native backends (sim | plan) only");
+        }
+        // validate here, for every backend — the sim engine ignores the
+        // plan, but a caller handing us a stale fleet plan must hear
+        // about it regardless of which engine the session runs on
+        ensure!(
+            plan.matches(self.fault_map()) && plan.kind() == self.kind,
+            "shared plan was compiled for a different chip \
+             (fingerprint/mitigation mismatch)"
+        );
+        self.build(backend, None, None, 0, Some(plan), Some(pool))
     }
 
     fn build<'rt>(
@@ -199,6 +226,8 @@ impl Chip {
         rt: Option<&'rt Runtime>,
         plans: Option<&mut PlanCache>,
         fallback_threads: usize,
+        shared_plan: Option<Arc<ChipPlan>>,
+        pool: Option<Arc<WorkerPool>>,
     ) -> Result<ChipSession<'rt>> {
         backend.supports(&self.arch, Scenario::FaultyFwd)?;
         let fm = self.fault_map().clone();
@@ -210,14 +239,28 @@ impl Chip {
         let engine: Box<dyn ForwardBackend + 'rt> = match backend {
             Backend::Sim => Box::new(SimBackend::new(self.arch.clone(), fm, self.kind)),
             Backend::Plan | Backend::Xla => {
-                // mask-level plan: shared via the campaign cache when given
-                let chip_plan = match plans {
-                    Some(cache) => cache.get_or_compile(&self.arch, &fm, self.kind),
-                    None => Rc::new(ChipPlan::compile(&self.arch, &fm, self.kind)),
+                // mask-level plan: adopt the caller's shared plan (already
+                // validated by session_shared, the only path that sets
+                // it), else share via the campaign cache, else compile
+                let chip_plan = match shared_plan {
+                    Some(plan) => {
+                        debug_assert!(plan.matches(&fm) && plan.kind() == self.kind);
+                        plan
+                    }
+                    None => match plans {
+                        Some(cache) => cache.get_or_compile(&self.arch, &fm, self.kind),
+                        None => Arc::new(ChipPlan::compile(&self.arch, &fm, self.kind)),
+                    },
                 };
                 if backend == Backend::Plan {
+                    // reuse the caller's pool unless the chip pins an
+                    // explicit thread count the pool does not satisfy
+                    let pool = match pool {
+                        Some(p) if self.threads == 0 || p.lanes() == self.threads => p,
+                        _ => Arc::new(WorkerPool::new(threads)),
+                    };
                     let arch = self.arch.clone();
-                    Box::new(PlanBackend::new(arch, fm, self.kind, chip_plan, threads))
+                    Box::new(PlanBackend::new(arch, fm, self.kind, chip_plan, pool))
                 } else {
                     let rt = rt.context("xla backend needs a PJRT runtime")?;
                     Box::new(XlaBackend::new(rt, self.arch.clone(), chip_plan))
@@ -321,6 +364,12 @@ pub struct Engine<'rt> {
     /// opens (sweep points, seeds, retrain epochs of the same chip).
     pub plans: PlanCache,
     threads: usize,
+    /// Spawn-once worker pool shared by every plan session the engine
+    /// opens (lazily built; rebuilt only if the thread budget changes).
+    /// This is what makes the campaign hot path spawn-free: a sweep of
+    /// thousands of forwards reuses these threads instead of paying a
+    /// `thread::scope` spawn per call.
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl<'rt> Engine<'rt> {
@@ -328,13 +377,30 @@ impl<'rt> Engine<'rt> {
         if backend == Backend::Xla && rt.is_none() {
             bail!("backend xla needs the PJRT runtime (an artifacts directory)");
         }
-        Ok(Engine { backend, rt, plans: PlanCache::new(), threads: 0 })
+        Ok(Engine { backend, rt, plans: PlanCache::new(), threads: 0, pool: None })
     }
 
     /// Worker threads for the plan executor (0 = all cores).
     pub fn with_threads(mut self, threads: usize) -> Engine<'rt> {
+        if threads != self.threads {
+            self.pool = None; // lane count changed: rebuild lazily
+        }
         self.threads = threads;
         self
+    }
+
+    /// The engine's persistent worker pool (spawned once with the current
+    /// thread budget; every plan session shares these lanes).
+    pub fn worker_pool(&mut self) -> Arc<WorkerPool> {
+        let lanes = self.threads();
+        if let Some(p) = &self.pool {
+            if p.lanes() == lanes {
+                return p.clone();
+            }
+        }
+        let p = Arc::new(WorkerPool::new(lanes));
+        self.pool = Some(p.clone());
+        p
     }
 
     pub fn backend(&self) -> Backend {
@@ -359,9 +425,10 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Open a [`ChipSession`] on this engine's backend, sharing the plan
-    /// cache and thread budget.
+    /// cache, the spawn-once worker pool and the thread budget.
     pub fn session(&mut self, chip: &Chip) -> Result<ChipSession<'rt>> {
-        chip.build(self.backend, self.rt, Some(&mut self.plans), self.threads)
+        let pool = (self.backend == Backend::Plan).then(|| self.worker_pool());
+        chip.build(self.backend, self.rt, Some(&mut self.plans), self.threads, None, pool)
     }
 
     /// Float accuracy of a model on a fault-free device (baseline / FAP /
@@ -534,5 +601,52 @@ mod tests {
         let _s2 = engine.session(&chip).unwrap();
         let (plans, hits, misses) = engine.plan_stats();
         assert_eq!((plans, hits, misses), (1, 1, 1));
+    }
+
+    #[test]
+    fn engine_pool_spawns_once_and_tracks_thread_budget() {
+        let mut engine = Engine::new(Backend::Plan, None).unwrap().with_threads(3);
+        let p1 = engine.worker_pool();
+        let p2 = engine.worker_pool();
+        assert!(Arc::ptr_eq(&p1, &p2), "pool must be spawn-once");
+        assert_eq!(p1.lanes(), 3);
+        let mut engine = engine.with_threads(2);
+        let p3 = engine.worker_pool();
+        assert!(!Arc::ptr_eq(&p1, &p3), "new thread budget rebuilds the pool");
+        assert_eq!(p3.lanes(), 2);
+    }
+
+    #[test]
+    fn shared_plan_session_bit_matches_and_rejects_mismatches() {
+        let arch = tiny_mlp();
+        let mut rng = Rng::new(12);
+        let params = rand_params(&arch, &mut rng);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.normal()).collect();
+        let calib = calibrate_mlp(&arch, &params, &x, batch);
+        let chip = Chip::new(arch.clone()).array_n(4).inject(5, 6).mitigate(MaskKind::FapBypass);
+
+        // weight-compiled shared plan, as the fleet provisioner builds it
+        let qw = crate::exec::quantize_mlp_weights(&arch, &params, &calib);
+        let plan = Arc::new(ChipPlan::compile_mlp(&arch, chip.fault_map(), chip.kind(), &qw));
+        let pool = Arc::new(WorkerPool::new(2));
+        let mut shared = chip.session_shared(Backend::Plan, plan.clone(), pool.clone()).unwrap();
+        shared.load_model(params.clone(), calib.clone());
+        let mut own = chip.session(Backend::Plan).unwrap();
+        own.load_model(params.clone(), calib.clone());
+        let ls: Vec<u32> =
+            shared.forward_logits(&x, batch).unwrap().iter().map(|v| v.to_bits()).collect();
+        let lo: Vec<u32> =
+            own.forward_logits(&x, batch).unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ls, lo, "shared-plan session must bit-match a self-compiled one");
+
+        // a plan for a different chip (or mitigation) is rejected up
+        // front — on the sim backend too, which ignores the plan at
+        // execution time but must still refuse a stale one
+        let other = Chip::new(arch.clone()).array_n(4).inject(5, 7).mitigate(MaskKind::FapBypass);
+        assert!(other.session_shared(Backend::Plan, plan.clone(), pool.clone()).is_err());
+        assert!(other.session_shared(Backend::Sim, plan.clone(), pool.clone()).is_err());
+        let unmit = chip.clone().mitigate(MaskKind::Unmitigated);
+        assert!(unmit.session_shared(Backend::Plan, plan, pool).is_err());
     }
 }

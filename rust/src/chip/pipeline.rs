@@ -8,6 +8,15 @@
 //! between the cycle-level sim and the compiled plan executor), dequantize
 //! with `a_scale * w_scale`, add the float bias, ReLU on hidden layers.
 //!
+//! The hot path is **zero-allocation in steady state**: all four working
+//! buffers (activations in/out, quantized activations, int32 accumulator)
+//! live in a [`ForwardScratch`] the backend owns across calls, so a
+//! session serving millions of forwards never touches the allocator after
+//! the first call with a given shape. Every forward — session or one-shot
+//! (`repro plan` dry-runs open short-lived sessions) — goes through this
+//! scratch pipeline, so even a single call reuses its buffers across the
+//! network's layers instead of allocating per layer.
+//!
 //! Because [`super::SimBackend`] and [`super::PlanBackend`] both run this
 //! exact float code around int32 cores that are bit-exact with each other
 //! (`rust/tests/proptest_exec.rs`), their logits are bitwise identical —
@@ -18,20 +27,46 @@ use crate::model::{Arch, Layer, Params};
 use crate::systolic::fixed;
 use anyhow::{ensure, Result};
 
-/// Run the quantized MLP forward. `matmul(li, q, batch, k, m, acc)` must
-/// overwrite `acc` (pre-sized to `batch * m`) with the faulty chip's
-/// wrapping-int32 accumulator outputs, row-major `[batch][m]`, for
-/// quantized activations `q` (`[batch][k]`) against weighted layer `li` —
-/// the buffer is reused across layers so the hot path never copies the
-/// GEMM output. Returns `(logits, preacts)`; `preacts` is empty unless
-/// `keep_preacts` (one post-bias pre-ReLU buffer per layer).
-pub(crate) fn quantized_mlp_forward<M>(
+/// Reusable working buffers of the quantized forward: current activations,
+/// next-layer activations, quantized activations and the int32 accumulator.
+/// Buffers grow to the largest layer ever run and are then stable — the
+/// steady-state forward performs no allocations (aside from the logits the
+/// caller receives and owns).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct ForwardScratch {
+    /// Current layer input activations, `[batch][din]`.
+    act: Vec<f32>,
+    /// Next layer activations being built, `[batch][dout]`.
+    next: Vec<f32>,
+    /// Quantized activations, `[batch][din]`.
+    q: Vec<i32>,
+    /// Wrapping-int32 accumulator output, `[batch][dout]`.
+    acc: Vec<i32>,
+}
+
+impl ForwardScratch {
+    pub(crate) fn new() -> ForwardScratch {
+        ForwardScratch::default()
+    }
+}
+
+/// Run the quantized MLP forward through caller-owned scratch buffers.
+/// `matmul(li, q, batch, k, m, acc)` must overwrite `acc` (pre-sized to
+/// `batch * m`) with the faulty chip's wrapping-int32 accumulator outputs,
+/// row-major `[batch][m]`, for quantized activations `q` (`[batch][k]`)
+/// against weighted layer `li` — the buffers are reused across layers and
+/// across calls, so the hot path never copies the GEMM output or touches
+/// the allocator. Returns `(logits, preacts)`; `preacts` is empty unless
+/// `keep_preacts` (one post-bias pre-ReLU buffer per layer — that path
+/// clones per layer and is not allocation-free by design).
+pub(crate) fn quantized_mlp_forward_scratch<M>(
     arch: &Arch,
     params: &Params,
     calib: &Calibration,
     x: &[f32],
     batch: usize,
     keep_preacts: bool,
+    scratch: &mut ForwardScratch,
     mut matmul: M,
 ) -> Result<(Vec<f32>, Vec<Vec<f32>>)>
 where
@@ -45,35 +80,162 @@ where
         batch,
         arch.input_len()
     );
-    let mut act = x.to_vec();
+    scratch.act.clear();
+    scratch.act.extend_from_slice(x);
     let mut preacts = Vec::new();
-    let mut acc: Vec<i32> = Vec::new();
     for (li, layer) in arch.weighted_layers().iter().enumerate() {
         let Layer::Fc(fc) = layer else { unreachable!("MLP arch") };
         let (_w, b) = &params.layers[li];
         let (a_s, w_s) = (calib.a_scales[li], calib.w_scales[li]);
-        let q = fixed::quantize_vec(&act, a_s);
-        acc.resize(batch * fc.dout, 0);
-        matmul(li, &q, batch, fc.din, fc.dout, &mut acc);
-        let mut y = vec![0.0f32; batch * fc.dout];
+        fixed::quantize_into(&scratch.act, a_s, &mut scratch.q);
+        scratch.acc.resize(batch * fc.dout, 0);
+        matmul(li, &scratch.q, batch, fc.din, fc.dout, &mut scratch.acc);
+        scratch.next.resize(batch * fc.dout, 0.0);
         for bi in 0..batch {
-            let row = &acc[bi * fc.dout..(bi + 1) * fc.dout];
-            let out = &mut y[bi * fc.dout..(bi + 1) * fc.dout];
+            let row = &scratch.acc[bi * fc.dout..(bi + 1) * fc.dout];
+            let out = &mut scratch.next[bi * fc.dout..(bi + 1) * fc.dout];
             for (j, (&a, o)) in row.iter().zip(out.iter_mut()).enumerate() {
                 *o = fixed::dequantize(a, a_s, w_s) + b[j];
             }
         }
         if keep_preacts {
-            preacts.push(y.clone());
+            preacts.push(scratch.next.clone());
         }
         if fc.relu {
-            for v in y.iter_mut() {
+            for v in scratch.next.iter_mut() {
                 if *v < 0.0 {
                     *v = 0.0;
                 }
             }
         }
-        act = y;
+        std::mem::swap(&mut scratch.act, &mut scratch.next);
     }
-    Ok((act, preacts))
+    Ok((scratch.act.clone(), preacts))
+}
+
+/// One-shot wrapper over [`quantized_mlp_forward_scratch`] with a fresh
+/// local scratch — the reference the scratch-reuse tests compare against
+/// (all production callers are sessions holding a persistent scratch).
+#[cfg(test)]
+pub(crate) fn quantized_mlp_forward<M>(
+    arch: &Arch,
+    params: &Params,
+    calib: &Calibration,
+    x: &[f32],
+    batch: usize,
+    keep_preacts: bool,
+    matmul: M,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>)>
+where
+    M: FnMut(usize, &[i32], usize, usize, usize, &mut [i32]),
+{
+    let mut scratch = ForwardScratch::new();
+    quantized_mlp_forward_scratch(arch, params, calib, x, batch, keep_preacts, &mut scratch, matmul)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::by_name;
+    use crate::util::Rng;
+
+    fn tiny() -> Arch {
+        Arch {
+            name: "tiny",
+            layers: vec![Layer::fc(6, 5, true), Layer::fc(5, 3, false)],
+            input_shape: vec![6],
+            num_classes: 3,
+            eval_batch: 4,
+            train_batch: 4,
+        }
+    }
+
+    /// An exact host-side matmul closure (no faults) for pipeline tests;
+    /// owns its quantized weights, so it borrows nothing.
+    fn host_matmul(
+        params: &Params,
+        calib: &Calibration,
+        arch: &Arch,
+    ) -> impl FnMut(usize, &[i32], usize, usize, usize, &mut [i32]) {
+        let qweights = crate::exec::quantize_mlp_weights(arch, params, calib);
+        move |li: usize, q: &[i32], b: usize, k: usize, m: usize, out: &mut [i32]| {
+            let qw = &qweights[li];
+            for bi in 0..b {
+                for j in 0..m {
+                    let mut acc = 0i32;
+                    for kk in 0..k {
+                        acc = acc.wrapping_add(q[bi * k + kk].wrapping_mul(qw[kk * m + j]));
+                    }
+                    out[bi * m + j] = acc;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_stable_across_calls_and_shapes() {
+        let arch = tiny();
+        let mut rng = Rng::new(3);
+        let mut params = Params::zeros_like(&arch);
+        for (w, b) in &mut params.layers {
+            w.iter_mut().for_each(|v| *v = rng.normal() * 0.3);
+            b.iter_mut().for_each(|v| *v = rng.normal() * 0.1);
+        }
+        let x4: Vec<f32> = (0..4 * 6).map(|_| rng.normal()).collect();
+        let calib = crate::model::quant::calibrate_mlp(&arch, &params, &x4, 4);
+
+        let mut scratch = ForwardScratch::new();
+        let mm = || host_matmul(&params, &calib, &arch);
+        let (l1, _) =
+            quantized_mlp_forward_scratch(&arch, &params, &calib, &x4, 4, false, &mut scratch, mm())
+                .unwrap();
+        // the one-shot wrapper is the reference
+        let (want, _) = quantized_mlp_forward(&arch, &params, &calib, &x4, 4, false, mm()).unwrap();
+        assert_eq!(l1, want);
+        // second call through dirty scratch: identical
+        let (l2, _) =
+            quantized_mlp_forward_scratch(&arch, &params, &calib, &x4, 4, false, &mut scratch, mm())
+                .unwrap();
+        assert_eq!(l2, want);
+        // shrink the batch through the same scratch: still exact
+        let x1 = &x4[..6];
+        let (l3, _) =
+            quantized_mlp_forward_scratch(&arch, &params, &calib, x1, 1, false, &mut scratch, mm())
+                .unwrap();
+        let (want1, _) = quantized_mlp_forward(&arch, &params, &calib, x1, 1, false, mm()).unwrap();
+        assert_eq!(l3, want1);
+    }
+
+    #[test]
+    fn preacts_match_between_scratch_and_oneshot() {
+        let arch = tiny();
+        let mut rng = Rng::new(8);
+        let mut params = Params::zeros_like(&arch);
+        for (w, b) in &mut params.layers {
+            w.iter_mut().for_each(|v| *v = rng.normal() * 0.3);
+            b.iter_mut().for_each(|v| *v = rng.normal() * 0.1);
+        }
+        let x: Vec<f32> = (0..2 * 6).map(|_| rng.normal()).collect();
+        let calib = crate::model::quant::calibrate_mlp(&arch, &params, &x, 2);
+        let mut scratch = ForwardScratch::new();
+        let mm = || host_matmul(&params, &calib, &arch);
+        let (_, pa) =
+            quantized_mlp_forward_scratch(&arch, &params, &calib, &x, 2, true, &mut scratch, mm())
+                .unwrap();
+        let (_, pb) = quantized_mlp_forward(&arch, &params, &calib, &x, 2, true, mm()).unwrap();
+        assert_eq!(pa.len(), 2);
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn conv_arch_rejected() {
+        let conv = by_name("alexnet32").unwrap();
+        let params = Params::zeros_like(&conv);
+        let calib = Calibration { a_scales: vec![1.0], w_scales: vec![1.0] };
+        let noop = |_: usize, _: &[i32], _: usize, _: usize, _: usize, _: &mut [i32]| {};
+        let err = quantized_mlp_forward(&conv, &params, &calib, &[0.0; 4], 1, false, noop)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("MLP"), "{err}");
+    }
 }

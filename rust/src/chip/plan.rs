@@ -4,34 +4,59 @@
 //! [`crate::exec::quantize_mlp_weights`] or [`crate::exec::MatmulPlan`]
 //! directly.
 //!
-//! Compiled state is reused across calls: the mask-level
-//! [`crate::exec::ChipPlan`] (shared through the campaign's
-//! [`crate::exec::PlanCache`]) lives for the session, and the per-layer
-//! weight tile programs are compiled once per parameter set — a retrain
-//! loop that [`super::ChipSession::swap_params`]s each epoch pays exactly
-//! one lowering per epoch, nothing per batch.
+//! Compiled state is reused across calls and **across threads**: the
+//! mask-level [`crate::exec::ChipPlan`] is an `Arc` shared through the
+//! campaign's [`crate::exec::PlanCache`] (or the fleet provisioner), and
+//! when the shared plan was compiled with weights whose
+//! [`crate::exec::qweights_fingerprint`] matches the session's own
+//! quantized weights, its packed tile programs are adopted directly — the
+//! fleet's serving workers execute one compiled, packed plan instead of
+//! re-lowering per thread. Otherwise per-layer tile programs are compiled
+//! locally, once per parameter set — a retrain loop that
+//! [`super::ChipSession::swap_params`]s each epoch pays exactly one
+//! lowering per epoch, nothing per batch.
+//!
+//! Execution runs on a persistent [`WorkerPool`] (spawn-once; shared from
+//! the `Engine` when the session came from one) and the float pipeline
+//! runs through a session-owned [`ForwardScratch`], so the steady-state
+//! forward performs no thread spawns and no allocations.
 
 use super::backend::ForwardBackend;
-use super::pipeline::quantized_mlp_forward;
-use crate::exec::{quantize_mlp_weights, ChipPlan, MatmulPlan};
+use super::pipeline::{quantized_mlp_forward_scratch, ForwardScratch};
+use crate::exec::{quantize_mlp_weights, qweights_fingerprint, ChipPlan, MatmulPlan, WorkerPool};
 use crate::faults::FaultMap;
 use crate::mapping::MaskKind;
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
+
+/// Where the per-layer tile programs come from for the current params.
+enum LayerPlans {
+    /// Not yet resolved (fresh session or after a param swap).
+    Unresolved,
+    /// Adopted from the shared `Arc<ChipPlan>` (weights fingerprint
+    /// matched — zero lowering cost for this session).
+    Shared,
+    /// Compiled locally for this session's params.
+    Local(Vec<MatmulPlan>),
+}
 
 pub struct PlanBackend {
     arch: Arch,
     fm: FaultMap,
     kind: MaskKind,
-    threads: usize,
-    /// Mask-level plan (chip identity + per-layer masks), typically shared
-    /// from the campaign's [`crate::exec::PlanCache`].
-    chip_plan: Rc<ChipPlan>,
-    /// Weight tile programs for the current params, one per weighted
-    /// layer; empty until the first forward after a param (re)load.
-    layer_plans: Vec<MatmulPlan>,
+    /// Persistent execution lanes (spawn-once; see [`WorkerPool`]).
+    pool: Arc<WorkerPool>,
+    /// Mask-level plan (chip identity + per-layer masks), shared from the
+    /// campaign's [`crate::exec::PlanCache`] or the fleet provisioner —
+    /// possibly weight-compiled, in which case its tile programs are
+    /// adopted when the fingerprint matches.
+    chip_plan: Arc<ChipPlan>,
+    /// Tile-program source for the current params.
+    plans: LayerPlans,
+    /// Pipeline working buffers, reused across forwards.
+    scratch: ForwardScratch,
 }
 
 impl PlanBackend {
@@ -39,33 +64,62 @@ impl PlanBackend {
         arch: Arch,
         fm: FaultMap,
         kind: MaskKind,
-        chip_plan: Rc<ChipPlan>,
-        threads: usize,
+        chip_plan: Arc<ChipPlan>,
+        pool: Arc<WorkerPool>,
     ) -> PlanBackend {
         debug_assert!(chip_plan.matches(&fm));
-        PlanBackend { arch, fm, kind, threads: threads.max(1), chip_plan, layer_plans: Vec::new() }
+        PlanBackend {
+            arch,
+            fm,
+            kind,
+            pool,
+            chip_plan,
+            plans: LayerPlans::Unresolved,
+            scratch: ForwardScratch::new(),
+        }
     }
 
     /// The mask-level chip plan this backend executes.
-    pub fn chip_plan(&self) -> &Rc<ChipPlan> {
+    pub fn chip_plan(&self) -> &Arc<ChipPlan> {
         &self.chip_plan
     }
 
+    /// The worker pool this backend executes on.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Does this session execute the shared plan's tile programs (true)
+    /// or a locally compiled set (false)? Meaningful after the first
+    /// forward; used by tests and the fleet bench.
+    pub fn uses_shared_plans(&self) -> bool {
+        matches!(self.plans, LayerPlans::Shared)
+    }
+
     fn ensure_plans(&mut self, params: &Params, calib: &Calibration) {
-        if !self.layer_plans.is_empty() {
+        if !matches!(self.plans, LayerPlans::Unresolved) {
             return;
         }
         let qweights = quantize_mlp_weights(&self.arch, params, calib);
-        self.layer_plans = self
-            .arch
-            .weighted_layers()
-            .iter()
-            .zip(&qweights)
-            .map(|(l, qw)| {
-                let Layer::Fc(f) = l else { unreachable!("MLP arch") };
-                MatmulPlan::compile(&self.fm, self.kind, qw, f.din, f.dout)
-            })
-            .collect();
+        // adopt the shared weight-compiled tile programs when they were
+        // lowered from exactly these quantized weights
+        let weighted = self.arch.weighted_layers();
+        if self.chip_plan.weights_fingerprint() == Some(qweights_fingerprint(&qweights))
+            && (0..weighted.len()).all(|li| self.chip_plan.layer_plan(li).is_some())
+        {
+            self.plans = LayerPlans::Shared;
+            return;
+        }
+        self.plans = LayerPlans::Local(
+            weighted
+                .iter()
+                .zip(&qweights)
+                .map(|(l, qw)| {
+                    let Layer::Fc(f) = l else { unreachable!("MLP arch") };
+                    MatmulPlan::compile(&self.fm, self.kind, qw, f.din, f.dout)
+                })
+                .collect(),
+        );
     }
 
     fn forward(
@@ -77,12 +131,20 @@ impl PlanBackend {
         keep_preacts: bool,
     ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
         self.ensure_plans(params, calib);
-        let plans = &self.layer_plans;
-        let threads = self.threads;
+        let chip_plan = &self.chip_plan;
+        let plans = &self.plans;
+        let pool = &self.pool;
+        let scratch = &mut self.scratch;
         let matmul = |li: usize, q: &[i32], b: usize, _k: usize, _m: usize, out: &mut [i32]| {
-            plans[li].execute_threaded_into(q, b, threads, out);
+            let plan = match plans {
+                LayerPlans::Shared => chip_plan.layer_plan(li).expect("shared FC plan"),
+                LayerPlans::Local(local) => &local[li],
+                LayerPlans::Unresolved => unreachable!("ensure_plans ran"),
+            };
+            plan.execute_pooled_into(q, b, pool, out);
         };
-        quantized_mlp_forward(&self.arch, params, calib, x, batch, keep_preacts, matmul)
+        let arch = &self.arch;
+        quantized_mlp_forward_scratch(arch, params, calib, x, batch, keep_preacts, scratch, matmul)
     }
 }
 
@@ -124,6 +186,8 @@ impl ForwardBackend for PlanBackend {
     }
 
     fn params_changed(&mut self) {
-        self.layer_plans.clear();
+        // new params can no longer match the shared plan's weights (nor a
+        // stale local lowering) — re-resolve on the next forward
+        self.plans = LayerPlans::Unresolved;
     }
 }

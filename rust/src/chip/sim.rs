@@ -5,7 +5,7 @@
 //! the compiled-plan backend is verified against.
 
 use super::backend::ForwardBackend;
-use super::pipeline::quantized_mlp_forward;
+use super::pipeline::{quantized_mlp_forward_scratch, ForwardScratch};
 use crate::exec::quantize_mlp_weights;
 use crate::faults::FaultMap;
 use crate::mapping::MaskKind;
@@ -21,12 +21,22 @@ pub struct SimBackend {
     tm: TiledMatmul,
     /// Quantized layer weights for the current params (dropped on swap).
     qweights: Option<Vec<Vec<i32>>>,
+    /// Pipeline working buffers, reused across forwards (chip-derived, so
+    /// they survive `params_changed`).
+    scratch: ForwardScratch,
 }
 
 impl SimBackend {
     pub fn new(arch: Arch, fm: FaultMap, kind: MaskKind) -> SimBackend {
         let tm = TiledMatmul::new(&fm, kind == MaskKind::FapBypass);
-        SimBackend { arch, fingerprint: fm.fingerprint(), kind, tm, qweights: None }
+        SimBackend {
+            arch,
+            fingerprint: fm.fingerprint(),
+            kind,
+            tm,
+            qweights: None,
+            scratch: ForwardScratch::new(),
+        }
     }
 
     fn ensure_qweights(&mut self, params: &Params, calib: &Calibration) {
@@ -46,10 +56,12 @@ impl SimBackend {
         self.ensure_qweights(params, calib);
         let qw = self.qweights.as_ref().unwrap();
         let tm = &mut self.tm;
+        let scratch = &mut self.scratch;
         let matmul = |li: usize, q: &[i32], b: usize, k: usize, m: usize, out: &mut [i32]| {
             tm.matmul_into(q, &qw[li], b, k, m, out);
         };
-        quantized_mlp_forward(&self.arch, params, calib, x, batch, keep_preacts, matmul)
+        let arch = &self.arch;
+        quantized_mlp_forward_scratch(arch, params, calib, x, batch, keep_preacts, scratch, matmul)
     }
 }
 

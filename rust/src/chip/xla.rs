@@ -16,13 +16,13 @@ use crate::model::quant::Calibration;
 use crate::model::{Arch, Params};
 use crate::runtime::{lit_f32, Runtime};
 use anyhow::{ensure, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub struct XlaBackend<'rt> {
     rt: &'rt Runtime,
     arch: Arch,
     /// Mask-level chip plan (identity + per-layer masks the artifacts eat).
-    chip_plan: Rc<ChipPlan>,
+    chip_plan: Arc<ChipPlan>,
     /// Cached artifact inputs for the current params: params, AND/OR/bypass
     /// masks and scales, with slot `x_slot` reserved for the batch literal.
     inputs: Option<Vec<xla::Literal>>,
@@ -30,7 +30,7 @@ pub struct XlaBackend<'rt> {
 }
 
 impl<'rt> XlaBackend<'rt> {
-    pub fn new(rt: &'rt Runtime, arch: Arch, chip_plan: Rc<ChipPlan>) -> XlaBackend<'rt> {
+    pub fn new(rt: &'rt Runtime, arch: Arch, chip_plan: Arc<ChipPlan>) -> XlaBackend<'rt> {
         XlaBackend { rt, arch, chip_plan, inputs: None, x_slot: 0 }
     }
 

@@ -18,7 +18,7 @@ use super::fap::apply_fap_planned;
 use super::fapt::FaptConfig;
 use super::report::{mean_std, print_table, write_csv, write_json};
 use super::trainer::TrainConfig;
-use crate::chip::{Chip, Engine};
+use crate::chip::{Backend, Chip, Engine};
 use crate::data;
 use crate::mapping::MaskKind;
 use crate::model::quant::{calibrate_mlp, Calibration};
@@ -81,6 +81,12 @@ impl<'rt> Harness<'rt> {
     pub fn new(mut engine: Engine<'rt>, cfg: HarnessConfig) -> Self {
         if cfg.threads != 0 {
             engine = engine.with_threads(cfg.threads);
+        }
+        // spawn the persistent worker pool up front: campaign sessions
+        // share it, and the first timed forward must not pay the one-time
+        // thread spawn
+        if engine.backend() == Backend::Plan {
+            let _ = engine.worker_pool();
         }
         Harness { engine, cfg, bundles: HashMap::new() }
     }

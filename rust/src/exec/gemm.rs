@@ -3,13 +3,106 @@
 //! The datapath is wrapping int32 (the MAC accumulator wraps, never
 //! saturates), and wrapping addition is associative + commutative — so any
 //! summation order is bit-exact against the sequential PE chain. That
-//! freedom is what lets the executor run multi-lane dot products and shard
-//! batches across threads without diverging from the cycle-level oracle.
+//! freedom is what lets the executor run multi-lane dot products, a
+//! register-tiled microkernel, and batch sharding across threads without
+//! diverging from the cycle-level oracle.
 //!
-//! Threading uses `std::thread::scope` (the vendored registry has no
-//! rayon): batches shard into contiguous row ranges, each thread owning a
-//! disjoint slice of the output, so no synchronization is needed beyond
-//! the scope join.
+//! The hot path is the **packed-panel microkernel**: dense weight columns
+//! are packed once at plan-compile time into panel-major layout
+//! ([`pack_panels`]: [`PANEL_NR`] columns interleaved per reduction step,
+//! one contiguous panel per column group) and executed as
+//! [`MICRO_MR`]`x`[`PANEL_NR`] register tiles ([`micro_gemm_4x4`]) — every
+//! loaded activation feeds 4 columns and every loaded weight feeds 4 batch
+//! rows, cutting loads per MAC ~4x over the column-at-a-time
+//! [`dot_wrapping`] walk (which stays as the chain-segment kernel and the
+//! bench baseline).
+//!
+//! Threading: [`for_each_batch_shard`] (per-call `std::thread::scope`;
+//! kept as the pool's bench baseline) and the spawn-once
+//! [`super::WorkerPool`] both shard batches into contiguous row ranges,
+//! each lane owning a disjoint slice of the output, so no synchronization
+//! is needed beyond the join/completion barrier.
+
+/// Columns per packed weight panel (the microkernel's N register tile).
+pub const PANEL_NR: usize = 4;
+
+/// Batch rows per microkernel invocation (the M register tile).
+pub const MICRO_MR: usize = 4;
+
+/// Pack `slots` column-major weight columns (each `kh` contiguous values
+/// in `slot_major`) into panel-major layout: panel `p` holds columns
+/// `p*PANEL_NR ..`, stored interleaved so reduction step `kk` reads the
+/// `PANEL_NR` lane weights from `panel[kk*PANEL_NR ..]` as one contiguous
+/// (SIMD-friendly) load. Tail panels zero-pad missing lanes — a zero
+/// weight contributes an exact wrapping zero, so padded lanes are inert.
+pub fn pack_panels(slot_major: &[i32], kh: usize, slots: usize) -> Vec<i32> {
+    debug_assert_eq!(slot_major.len(), kh * slots);
+    let panels = slots.div_ceil(PANEL_NR);
+    let mut packed = vec![0i32; panels * kh * PANEL_NR];
+    for s in 0..slots {
+        let (p, lane) = (s / PANEL_NR, s % PANEL_NR);
+        let src = &slot_major[s * kh..(s + 1) * kh];
+        let dst = &mut packed[p * kh * PANEL_NR..(p + 1) * kh * PANEL_NR];
+        for (kk, &w) in src.iter().enumerate() {
+            dst[kk * PANEL_NR + lane] = w;
+        }
+    }
+    packed
+}
+
+/// The 4x4 register-tiled microkernel: accumulate `MICRO_MR` batch rows of
+/// `a` (rows at stride `row_stride`, `kh` active values each) against one
+/// packed panel (`kh * PANEL_NR` weights, see [`pack_panels`]), returning
+/// the 16 wrapping dot products row-major (`acc[r * PANEL_NR + j]` = row
+/// `r` x lane `j`).
+///
+/// Bit-exact with [`dot_wrapping`] per (row, lane) pair: wrapping i32
+/// addition is associative + commutative, so the straight `kk`-order sum
+/// equals any other order.
+#[inline]
+pub fn micro_gemm_4x4(a: &[i32], row_stride: usize, kh: usize, panel: &[i32]) -> [i32; 16] {
+    let r0 = &a[..kh];
+    let r1 = &a[row_stride..row_stride + kh];
+    let r2 = &a[2 * row_stride..2 * row_stride + kh];
+    let r3 = &a[3 * row_stride..3 * row_stride + kh];
+    let mut acc = [0i32; 16];
+    let rows = r0.iter().zip(r1).zip(r2).zip(r3);
+    for ((((&a0, &a1), &a2), &a3), w) in rows.zip(panel.chunks_exact(PANEL_NR)) {
+        let (w0, w1, w2, w3) = (w[0], w[1], w[2], w[3]);
+        acc[0] = acc[0].wrapping_add(a0.wrapping_mul(w0));
+        acc[1] = acc[1].wrapping_add(a0.wrapping_mul(w1));
+        acc[2] = acc[2].wrapping_add(a0.wrapping_mul(w2));
+        acc[3] = acc[3].wrapping_add(a0.wrapping_mul(w3));
+        acc[4] = acc[4].wrapping_add(a1.wrapping_mul(w0));
+        acc[5] = acc[5].wrapping_add(a1.wrapping_mul(w1));
+        acc[6] = acc[6].wrapping_add(a1.wrapping_mul(w2));
+        acc[7] = acc[7].wrapping_add(a1.wrapping_mul(w3));
+        acc[8] = acc[8].wrapping_add(a2.wrapping_mul(w0));
+        acc[9] = acc[9].wrapping_add(a2.wrapping_mul(w1));
+        acc[10] = acc[10].wrapping_add(a2.wrapping_mul(w2));
+        acc[11] = acc[11].wrapping_add(a2.wrapping_mul(w3));
+        acc[12] = acc[12].wrapping_add(a3.wrapping_mul(w0));
+        acc[13] = acc[13].wrapping_add(a3.wrapping_mul(w1));
+        acc[14] = acc[14].wrapping_add(a3.wrapping_mul(w2));
+        acc[15] = acc[15].wrapping_add(a3.wrapping_mul(w3));
+    }
+    acc
+}
+
+/// Single-row edge kernel: one batch row against one packed panel —
+/// handles the `batch % MICRO_MR` tail rows. Same bit-exactness argument
+/// as [`micro_gemm_4x4`].
+#[inline]
+pub fn micro_gemm_1x4(a_row: &[i32], kh: usize, panel: &[i32]) -> [i32; 4] {
+    let mut acc = [0i32; 4];
+    for (&av, w) in a_row[..kh].iter().zip(panel.chunks_exact(PANEL_NR)) {
+        acc[0] = acc[0].wrapping_add(av.wrapping_mul(w[0]));
+        acc[1] = acc[1].wrapping_add(av.wrapping_mul(w[1]));
+        acc[2] = acc[2].wrapping_add(av.wrapping_mul(w[2]));
+        acc[3] = acc[3].wrapping_add(av.wrapping_mul(w[3]));
+    }
+    acc
+}
 
 /// Wrapping dot product, 4 independent lanes so LLVM can vectorize.
 ///
@@ -48,6 +141,12 @@ pub fn default_threads() -> usize {
 /// Each thread owns a disjoint `&mut` slice of `out`, so `f` needs no
 /// internal synchronization. With `threads <= 1` (or a single-row batch)
 /// `f` runs inline on the calling thread.
+///
+/// This is the per-call spawn path: it pays a thread spawn + join per
+/// invocation, which dominates small-batch forwards. The steady-state hot
+/// path uses the spawn-once [`super::WorkerPool`] instead; this stays as
+/// the pool's bench baseline (`BENCH_gemm.json` pool-vs-scope rows) and
+/// for one-shot callers without a pool.
 pub fn for_each_batch_shard<F>(
     a: &[i32],
     k: usize,
@@ -140,5 +239,71 @@ mod tests {
         for_each_batch_shard(&[], 4, &mut out, 3, 0, 8, |_, _, rows| {
             assert_eq!(rows, 0);
         });
+    }
+
+    #[test]
+    fn pack_panels_layout_and_padding() {
+        // 3 columns of kh=2: tail panel pads lane 3 with zeros
+        let slot_major = [1, 2, 10, 20, 100, 200]; // cols: [1,2] [10,20] [100,200]
+        let packed = pack_panels(&slot_major, 2, 3);
+        assert_eq!(packed.len(), 1 * 2 * PANEL_NR);
+        assert_eq!(packed, vec![1, 10, 100, 0, 2, 20, 200, 0]);
+        // 5 columns: two panels, second mostly padded
+        let slot_major: Vec<i32> = (0..5).flat_map(|c| [c * 10 + 1, c * 10 + 2]).collect();
+        let packed = pack_panels(&slot_major, 2, 5);
+        assert_eq!(packed.len(), 2 * 2 * PANEL_NR);
+        assert_eq!(&packed[..8], &[1, 11, 21, 31, 2, 12, 22, 32]);
+        assert_eq!(&packed[8..], &[41, 0, 0, 0, 42, 0, 0, 0]);
+        // empty slots pack to nothing
+        assert!(pack_panels(&[], 3, 0).is_empty());
+    }
+
+    #[test]
+    fn micro_kernels_match_dot_wrapping() {
+        let mut rng = Rng::new(21);
+        for kh in [1usize, 3, 4, 7, 16, 33] {
+            let stride = kh + 2; // rows wider than the active range
+            let a: Vec<i32> =
+                (0..4 * stride).map(|_| rng.below(1 << 16) as i32 - (1 << 15)).collect();
+            for slots in 1..=5usize {
+                let slot_major: Vec<i32> = (0..slots * kh)
+                    .map(|_| rng.below(1 << 16) as i32 - (1 << 15))
+                    .collect();
+                let packed = pack_panels(&slot_major, kh, slots);
+                for (p, panel) in packed.chunks_exact(kh * PANEL_NR).enumerate() {
+                    let acc4 = micro_gemm_4x4(&a, stride, kh, panel);
+                    for r in 0..MICRO_MR {
+                        let row = &a[r * stride..r * stride + kh];
+                        let acc1 = micro_gemm_1x4(row, kh, panel);
+                        for lane in 0..PANEL_NR {
+                            let s = p * PANEL_NR + lane;
+                            let want = if s < slots {
+                                dot_wrapping(row, &slot_major[s * kh..(s + 1) * kh])
+                            } else {
+                                0 // padded lane is inert
+                            };
+                            assert_eq!(
+                                acc4[r * PANEL_NR + lane],
+                                want,
+                                "4x4 kh={kh} slots={slots} r={r} lane={lane}"
+                            );
+                            assert_eq!(acc1[lane], want, "1x4 kh={kh} slots={slots} lane={lane}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn micro_kernel_wraps_like_the_datapath() {
+        // saturating values through the packed path: wrap, never saturate
+        let a = [i32::MAX, i32::MAX, 0, 0, 0, 0, 0, 0]; // 4 rows, stride 2, kh 2
+        let slot_major = [2, 3, 0, 0, 0, 0, 0, 0]; // 4 cols of kh 2
+        let packed = pack_panels(&slot_major, 2, 4);
+        let acc = micro_gemm_4x4(&a, 2, 2, &packed);
+        let want = i32::MAX.wrapping_mul(2).wrapping_add(i32::MAX.wrapping_mul(3));
+        assert_eq!(acc[0], want);
+        assert_eq!(acc[1], 0);
     }
 }

@@ -11,23 +11,36 @@
 //!    i32 GEMM core, exact additive fault-correction constants where the
 //!    algebra allows, and straight-line chain programs for the few columns
 //!    a live fault forces off the GEMM core.
-//! 2. [`gemm`] executes the dense part with cache blocking and
-//!    batch-sharded multi-threading (`std::thread::scope`; the vendored
-//!    registry has no rayon). Wrapping i32 arithmetic keeps every
+//! 2. [`gemm`] executes the dense part with a cache-blocked,
+//!    register-tiled **packed-panel microkernel**: dense weight columns
+//!    are packed panel-major once at compile time and run as 4x4 output
+//!    tiles, so each loaded activation feeds 4 columns and each loaded
+//!    weight feeds 4 batch rows. Wrapping i32 arithmetic keeps every
 //!    reordering bit-exact with the sequential PE chain, which stays in
 //!    the tree as the correctness oracle (see `rust/tests/proptest_exec.rs`).
-//! 3. [`plan::ChipPlan`] bundles per-layer masks + tile programs for a
-//!    whole network, and [`plan::PlanCache`] reuses compiled plans across
-//!    sweep points, seeds and retrain epochs, keyed by the fault map's
-//!    fingerprint so a new fault map can never execute a stale plan.
+//! 3. [`pool::WorkerPool`] shards batches across **spawn-once** worker
+//!    threads (chunk-queue claims; the vendored registry has no rayon) —
+//!    the steady-state forward pays no thread spawns, unlike the per-call
+//!    `std::thread::scope` path that remains as the bench baseline.
+//! 4. [`plan::ChipPlan`] bundles per-layer masks + tile programs for a
+//!    whole network, and [`plan::PlanCache`] (LRU-bounded, `Arc`-shared)
+//!    reuses compiled plans across sweep points, seeds, retrain epochs
+//!    and worker threads, keyed by the fault map's fingerprint so a new
+//!    fault map can never execute a stale plan.
 //!
 //! New dataflows and mitigations plug in here: add a lowering rule in
 //! [`plan`] and every campaign inherits it.
 
 pub mod gemm;
 pub mod plan;
+pub mod pool;
 
-pub use gemm::{default_threads, dot_wrapping, for_each_batch_shard};
-pub use plan::{
-    quantize_mlp_weights, ChipPlan, ExecScratch, MatmulPlan, PlanCache, PlanStats, TileProgram,
+pub use gemm::{
+    default_threads, dot_wrapping, for_each_batch_shard, micro_gemm_1x4, micro_gemm_4x4,
+    pack_panels, MICRO_MR, PANEL_NR,
 };
+pub use plan::{
+    quantize_mlp_weights, qweights_fingerprint, ChipPlan, ExecScratch, MatmulPlan, PlanCache,
+    PlanStats, TileProgram,
+};
+pub use pool::WorkerPool;

@@ -23,13 +23,14 @@
 //! silently execute a stale plan.
 
 use super::gemm;
+use super::pool::WorkerPool;
 use crate::faults::FaultMap;
 use crate::mapping::{LayerMasks, MaskKind};
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
 use crate::systolic::fixed;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// One dot-segment of a chain column: accumulate `weights · a[start..]`,
 /// then apply the fault mask of the segment's terminal MAC.
@@ -79,9 +80,12 @@ pub struct TileProgram {
     /// partial-height pass with the unused rows clock-gated.
     pub kh: usize,
     pub mw: usize,
-    /// Transposed pre-masked dense weights, `[dense_cols.len()][kh]` —
-    /// each slot's weights are contiguous for the dot kernel.
-    wt: Vec<i32>,
+    /// Pre-masked dense weights in panel-major layout
+    /// ([`gemm::pack_panels`]): groups of [`gemm::PANEL_NR`] dense slots
+    /// interleaved per reduction step, packed **once at plan-compile
+    /// time** so the packing cost amortizes across every sweep point,
+    /// seed and retrain epoch that reuses the plan.
+    panels: Vec<i32>,
     /// Tile-local output column of each dense slot.
     dense_cols: Vec<u32>,
     /// Additive fault-correction constant per dense slot (0 = healthy;
@@ -157,7 +161,10 @@ impl TileProgram {
                 chain_cols.push(ChainCol { col: c, segs });
             }
         }
-        TileProgram { k0, m0, kh, mw, wt, dense_cols, base, chain_cols }
+        // pack the slot-major dense weights into panel-major layout here,
+        // at compile time — execution never repacks
+        let panels = gemm::pack_panels(&wt, kh, dense_cols.len());
+        TileProgram { k0, m0, kh, mw, panels, dense_cols, base, chain_cols }
     }
 }
 
@@ -253,19 +260,53 @@ impl MatmulPlan {
     }
 
     /// Accumulate the planned matmul into `out` (callers must pre-zero).
+    ///
+    /// Dense columns run on the packed-panel microkernel
+    /// ([`gemm::micro_gemm_4x4`]): within each `BATCH_BLOCK` of activation
+    /// rows, every panel of [`gemm::PANEL_NR`] columns is streamed against
+    /// [`gemm::MICRO_MR`]-row register tiles, so each loaded activation
+    /// feeds 4 columns and each loaded weight feeds 4 rows. Chain columns
+    /// keep the exact chain programs. Bit-exact with the column-at-a-time
+    /// [`gemm::dot_wrapping`] walk (wrapping adds reorder freely).
     fn accumulate(&self, a: &[i32], out: &mut [i32], batch: usize) {
+        const MR: usize = gemm::MICRO_MR;
+        const NR: usize = gemm::PANEL_NR;
         for tile in &self.tiles {
             let mut bb = 0;
             while bb < batch {
                 let bhi = (bb + BATCH_BLOCK).min(batch);
-                for (slot, &c) in tile.dense_cols.iter().enumerate() {
-                    let wt = &tile.wt[slot * tile.kh..(slot + 1) * tile.kh];
-                    let cst = tile.base[slot];
-                    for b in bb..bhi {
-                        let a_row = &a[b * self.k + tile.k0..b * self.k + tile.k0 + tile.kh];
-                        let o = &mut out[b * self.m + tile.m0 + c as usize];
-                        *o = o.wrapping_add(cst.wrapping_add(gemm::dot_wrapping(a_row, wt)));
+                let nslots = tile.dense_cols.len();
+                let mut ps = 0;
+                while ps < nslots {
+                    let lanes = (nslots - ps).min(NR);
+                    let pbase = (ps / NR) * tile.kh * NR;
+                    let panel = &tile.panels[pbase..pbase + tile.kh * NR];
+                    let cols = &tile.dense_cols[ps..ps + lanes];
+                    let bases = &tile.base[ps..ps + lanes];
+                    let mut b = bb;
+                    while b + MR <= bhi {
+                        let a_base = &a[b * self.k + tile.k0..];
+                        let acc = gemm::micro_gemm_4x4(a_base, self.k, tile.kh, panel);
+                        for r in 0..MR {
+                            let orow = &mut out[(b + r) * self.m + tile.m0..];
+                            for (j, (&c, &cst)) in cols.iter().zip(bases).enumerate() {
+                                let o = &mut orow[c as usize];
+                                *o = o.wrapping_add(cst.wrapping_add(acc[r * NR + j]));
+                            }
+                        }
+                        b += MR;
                     }
+                    while b < bhi {
+                        let a_row = &a[b * self.k + tile.k0..b * self.k + tile.k0 + tile.kh];
+                        let acc = gemm::micro_gemm_1x4(a_row, tile.kh, panel);
+                        let orow = &mut out[b * self.m + tile.m0..];
+                        for (j, (&c, &cst)) in cols.iter().zip(bases).enumerate() {
+                            let o = &mut orow[c as usize];
+                            *o = o.wrapping_add(cst.wrapping_add(acc[j]));
+                        }
+                        b += 1;
+                    }
+                    ps += NR;
                 }
                 for cc in &tile.chain_cols {
                     for b in bb..bhi {
@@ -312,6 +353,26 @@ impl MatmulPlan {
     pub fn execute_threaded(&self, a: &[i32], batch: usize, threads: usize) -> Vec<i32> {
         let mut out = vec![0i32; batch * self.m];
         self.execute_threaded_into(a, batch, threads, &mut out);
+        out
+    }
+
+    /// Batch-sharded execution on a persistent [`WorkerPool`] — the
+    /// steady-state hot path: no thread spawns, no allocations, bit-exact
+    /// with [`MatmulPlan::execute`] (contiguous row shards, identical
+    /// per-row sums regardless of which lane runs them).
+    pub fn execute_pooled_into(&self, a: &[i32], batch: usize, pool: &WorkerPool, out: &mut [i32]) {
+        assert_eq!(a.len(), batch * self.k);
+        assert_eq!(out.len(), batch * self.m);
+        out.fill(0);
+        pool.for_each_batch_shard(a, self.k, out, self.m, batch, |ac, oc, rows| {
+            self.accumulate(ac, oc, rows);
+        });
+    }
+
+    /// [`MatmulPlan::execute_pooled_into`] into a fresh buffer.
+    pub fn execute_pooled(&self, a: &[i32], batch: usize, pool: &WorkerPool) -> Vec<i32> {
+        let mut out = vec![0i32; batch * self.m];
+        self.execute_pooled_into(a, batch, pool, &mut out);
         out
     }
 }
@@ -363,6 +424,26 @@ pub fn quantize_mlp_weights(arch: &Arch, params: &Params, calib: &Calibration) -
         .collect()
 }
 
+/// FNV-1a over quantized layer weights (layer-order and length salted) —
+/// the identity of the weight set a [`ChipPlan`]'s tile programs were
+/// compiled from. A `PlanBackend` handed a **shared** weight-compiled plan
+/// (`Arc<ChipPlan>` from the fleet provisioner) checks this against its
+/// own quantized weights before adopting the shared tile programs, so a
+/// stale or mismatched plan can never execute silently.
+pub fn qweights_fingerprint(qweights: &[Vec<i32>]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for qw in qweights {
+        h ^= qw.len() as u64 ^ 0x9e37_79b9_7f4a_7c15;
+        h = h.wrapping_mul(PRIME);
+        for &w in qw {
+            h ^= w as u32 as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
 /// Everything one chip needs to execute one network: the per-layer host
 /// masks (consumed by the AOT artifacts) and, when compiled with weights,
 /// a [`MatmulPlan`] per FC layer for the native int path.
@@ -376,6 +457,9 @@ pub struct ChipPlan {
     fault_rate: f64,
     masks: LayerMasks,
     layer_plans: Vec<Option<MatmulPlan>>,
+    /// [`qweights_fingerprint`] of the weights the tile programs were
+    /// compiled from; `None` for mask-only plans.
+    weights_fp: Option<u64>,
 }
 
 impl ChipPlan {
@@ -393,6 +477,7 @@ impl ChipPlan {
             fault_rate: fm.fault_rate(),
             masks,
             layer_plans: arch.weighted_layers().iter().map(|_| None).collect(),
+            weights_fp: None,
         }
     }
 
@@ -416,6 +501,7 @@ impl ChipPlan {
                 _ => None,
             })
             .collect();
+        plan.weights_fp = Some(qweights_fingerprint(qweights));
         plan
     }
 
@@ -455,6 +541,13 @@ impl ChipPlan {
         self.layer_plans.get(li).and_then(|p| p.as_ref())
     }
 
+    /// Fingerprint of the quantized weights the tile programs were
+    /// compiled from (`None` = mask-only plan, no tile programs). See
+    /// [`qweights_fingerprint`].
+    pub fn weights_fingerprint(&self) -> Option<u64> {
+        self.weights_fp
+    }
+
     /// Is this plan still valid for `fm`?
     pub fn matches(&self, fm: &FaultMap) -> bool {
         self.n == fm.n() && self.fingerprint == fm.fingerprint()
@@ -468,18 +561,31 @@ impl ChipPlan {
 /// new fault map changes the fingerprint, so stale plans are structurally
 /// unreachable (invalidation by construction).
 ///
-/// Capacity is bounded: a long sweep injects a fresh chip per iteration,
-/// and each cached plan retains full per-layer masks (megabytes for the
-/// Table 1 models). When the cache would exceed its capacity it is flushed
-/// wholesale — compilation is cheap relative to an evaluation pass, and a
-/// full flush keeps reuse within the window that actually repeats chips
-/// (FAP + retrain + eval of the same map) without letting a campaign
-/// accumulate unbounded dead plans.
+/// Capacity is bounded with **LRU eviction**: a long sweep injects a
+/// fresh chip per iteration, and each cached plan retains full per-layer
+/// masks (megabytes for the Table 1 models). At capacity, only the
+/// least-recently-used plan is evicted, so the working set that actually
+/// repeats chips (FAP + retrain + eval of the same map, interleaved
+/// mitigations of one chip) survives a cold plan streaming through —
+/// unlike the old wholesale flush, which dropped every live plan the
+/// moment one extra chip arrived.
+///
+/// Plans are handed out as `Arc<ChipPlan>` so one compiled plan can be
+/// shared across the worker pool's threads and the fleet's serving
+/// workers instead of being recompiled per thread.
 pub struct PlanCache {
-    map: HashMap<(String, u64, u8), Rc<ChipPlan>>,
+    map: HashMap<(String, u64, u8), CacheEntry>,
     capacity: usize,
+    /// Logical clock bumped per access; entries carry their last-touched
+    /// tick, and eviction removes the minimum.
+    tick: u64,
     hits: usize,
     misses: usize,
+}
+
+struct CacheEntry {
+    plan: Arc<ChipPlan>,
+    last_used: u64,
 }
 
 /// Default bound on live cached plans (see [`PlanCache`] docs).
@@ -498,25 +604,42 @@ impl PlanCache {
 
     /// A cache bounded to `capacity` live plans (0 disables caching).
     pub fn with_capacity(capacity: usize) -> PlanCache {
-        PlanCache { map: HashMap::new(), capacity, hits: 0, misses: 0 }
+        PlanCache { map: HashMap::new(), capacity, tick: 0, hits: 0, misses: 0 }
     }
 
-    pub fn get_or_compile(&mut self, arch: &Arch, fm: &FaultMap, kind: MaskKind) -> Rc<ChipPlan> {
+    pub fn get_or_compile(&mut self, arch: &Arch, fm: &FaultMap, kind: MaskKind) -> Arc<ChipPlan> {
         let key = (arch.name.to_string(), fm.fingerprint(), kind as u8);
-        if let Some(plan) = self.map.get(&key) {
+        self.tick += 1;
+        if let Some(entry) = self.map.get_mut(&key) {
             self.hits += 1;
-            debug_assert!(plan.matches(fm));
-            return plan.clone();
+            entry.last_used = self.tick;
+            debug_assert!(entry.plan.matches(fm));
+            return entry.plan.clone();
         }
         self.misses += 1;
-        let plan = Rc::new(ChipPlan::compile(arch, fm, kind));
-        if self.map.len() >= self.capacity {
-            self.map.clear(); // bounded: flush dead sweep plans wholesale
-        }
+        let plan = Arc::new(ChipPlan::compile(arch, fm, kind));
         if self.capacity > 0 {
-            self.map.insert(key, plan.clone());
+            if self.map.len() >= self.capacity {
+                self.evict_lru();
+            }
+            self.map.insert(key, CacheEntry { plan: plan.clone(), last_used: self.tick });
         }
         plan
+    }
+
+    /// Remove exactly the least-recently-used entry (O(capacity) scan —
+    /// the capacity is small and eviction is off the per-forward path).
+    fn evict_lru(&mut self) {
+        if let Some(victim) =
+            self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
+        {
+            self.map.remove(&victim);
+        }
+    }
+
+    /// Is this plan currently cached? (Does not touch LRU state.)
+    pub fn contains(&self, arch: &Arch, fm: &FaultMap, kind: MaskKind) -> bool {
+        self.map.contains_key(&(arch.name.to_string(), fm.fingerprint(), kind as u8))
     }
 
     pub fn len(&self) -> usize {
@@ -655,14 +778,14 @@ mod tests {
         let fm1 = inject_uniform(FaultSpec::new(16), 8, &mut Rng::new(1));
         let p1 = cache.get_or_compile(&a, &fm1, MaskKind::FapBypass);
         let p2 = cache.get_or_compile(&a, &fm1, MaskKind::FapBypass);
-        assert!(Rc::ptr_eq(&p1, &p2), "same chip reuses the compiled plan");
+        assert!(Arc::ptr_eq(&p1, &p2), "same chip reuses the compiled plan");
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         let fm2 = inject_uniform(FaultSpec::new(16), 8, &mut Rng::new(2));
         let p3 = cache.get_or_compile(&a, &fm2, MaskKind::FapBypass);
-        assert!(!Rc::ptr_eq(&p1, &p3), "new fault map compiles a new plan");
+        assert!(!Arc::ptr_eq(&p1, &p3), "new fault map compiles a new plan");
         // a different mitigation on the same chip is a distinct plan
         let p4 = cache.get_or_compile(&a, &fm1, MaskKind::Unmitigated);
-        assert!(!Rc::ptr_eq(&p1, &p4));
+        assert!(!Arc::ptr_eq(&p1, &p4));
         assert_eq!(cache.len(), 3);
     }
 
@@ -676,11 +799,91 @@ mod tests {
             assert!(cache.len() <= 4, "cache grew past capacity at seed {seed}");
         }
         assert_eq!(cache.misses(), 20);
+        // LRU: a full cache stays full — cold plans displace one entry
+        // each, not the whole map
+        assert_eq!(cache.len(), 4);
         // capacity 0 disables retention entirely
         let mut off = PlanCache::with_capacity(0);
         let fm = inject_uniform(FaultSpec::new(16), 5, &mut Rng::new(1));
         let _ = off.get_or_compile(&a, &fm, MaskKind::FapBypass);
         assert!(off.is_empty());
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_only() {
+        let a = mnist();
+        let mut cache = PlanCache::with_capacity(2);
+        let fm1 = inject_uniform(FaultSpec::new(16), 4, &mut Rng::new(1));
+        let fm2 = inject_uniform(FaultSpec::new(16), 4, &mut Rng::new(2));
+        let fm3 = inject_uniform(FaultSpec::new(16), 4, &mut Rng::new(3));
+        let p1 = cache.get_or_compile(&a, &fm1, MaskKind::FapBypass);
+        let _ = cache.get_or_compile(&a, &fm2, MaskKind::FapBypass);
+        // touch fm1 so fm2 becomes the LRU entry
+        let p1b = cache.get_or_compile(&a, &fm1, MaskKind::FapBypass);
+        assert!(Arc::ptr_eq(&p1, &p1b));
+        // inserting fm3 must evict exactly fm2 (the LRU), not fm1
+        let _ = cache.get_or_compile(&a, &fm3, MaskKind::FapBypass);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(&a, &fm1, MaskKind::FapBypass), "recently-used plan evicted");
+        assert!(cache.contains(&a, &fm3, MaskKind::FapBypass));
+        assert!(!cache.contains(&a, &fm2, MaskKind::FapBypass), "LRU plan retained");
+        // counters stay accurate through evictions: fm1 hit once,
+        // fm1/fm2/fm3 each missed once
+        assert_eq!((cache.hits(), cache.misses()), (1, 3));
+        // the evicted chip recompiles as a fresh miss and re-enters
+        let p2b = cache.get_or_compile(&a, &fm2, MaskKind::FapBypass);
+        assert!(p2b.matches(&fm2));
+        assert_eq!((cache.hits(), cache.misses()), (1, 4));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn eviction_order_follows_access_order() {
+        let a = mnist();
+        let mut cache = PlanCache::with_capacity(3);
+        let maps: Vec<FaultMap> = (0..4u64)
+            .map(|s| inject_uniform(FaultSpec::new(16), 3, &mut Rng::new(10 + s)))
+            .collect();
+        for fm in &maps[..3] {
+            let _ = cache.get_or_compile(&a, fm, MaskKind::Unmitigated);
+        }
+        // access order is now 0, 1, 2; touch 0 then 1 -> LRU is 2
+        let _ = cache.get_or_compile(&a, &maps[0], MaskKind::Unmitigated);
+        let _ = cache.get_or_compile(&a, &maps[1], MaskKind::Unmitigated);
+        let _ = cache.get_or_compile(&a, &maps[3], MaskKind::Unmitigated);
+        assert!(cache.contains(&a, &maps[0], MaskKind::Unmitigated));
+        assert!(cache.contains(&a, &maps[1], MaskKind::Unmitigated));
+        assert!(!cache.contains(&a, &maps[2], MaskKind::Unmitigated), "map 2 was the LRU");
+        assert!(cache.contains(&a, &maps[3], MaskKind::Unmitigated));
+    }
+
+    #[test]
+    fn pooled_equals_single_thread() {
+        let mut rng = Rng::new(14);
+        let fm = inject_uniform(FaultSpec::new(8), 10, &mut Rng::new(9));
+        let (k, m, batch) = (20, 17, 13);
+        let (a, w) = rand_case(&mut rng, k, m, batch);
+        let plan = MatmulPlan::compile(&fm, MaskKind::Unmitigated, &w, k, m);
+        let single = plan.execute(&a, batch);
+        for lanes in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(lanes);
+            assert_eq!(plan.execute_pooled(&a, batch, &pool), single, "lanes={lanes}");
+            // the pool is persistent: a second run through the same pool
+            // must be identical too
+            let mut out = vec![0i32; batch * m];
+            plan.execute_pooled_into(&a, batch, &pool, &mut out);
+            assert_eq!(out, single, "lanes={lanes} second run");
+        }
+    }
+
+    #[test]
+    fn weights_fingerprint_tracks_weight_identity() {
+        let qw1 = vec![vec![1i32, 2, 3], vec![4, 5]];
+        let qw2 = vec![vec![1i32, 2, 3], vec![4, 6]];
+        let qw3 = vec![vec![1i32, 2, 3, 4], vec![5]]; // same flat values, other split
+        assert_eq!(qweights_fingerprint(&qw1), qweights_fingerprint(&qw1));
+        assert_ne!(qweights_fingerprint(&qw1), qweights_fingerprint(&qw2));
+        assert_ne!(qweights_fingerprint(&qw1), qweights_fingerprint(&qw3));
     }
 
     #[test]
@@ -713,5 +916,10 @@ mod tests {
         assert_eq!(plan.layer_plan(0).unwrap().m(), 256);
         assert_eq!(plan.layer_plan(3).unwrap().m(), 10);
         assert!(plan.layer_plan(4).is_none());
+        // weight identity: a weight-compiled plan carries the fingerprint
+        // of exactly the weights it was lowered from
+        assert_eq!(plan.weights_fingerprint(), Some(qweights_fingerprint(&qw)));
+        let mask_only = ChipPlan::compile(&a, &fm, MaskKind::Unmitigated);
+        assert!(mask_only.weights_fingerprint().is_none());
     }
 }

@@ -1,0 +1,449 @@
+//! Persistent worker pool for the plan executor.
+//!
+//! The fleet layer hammers the forward path with millions of small-batch
+//! requests; spawning OS threads per call (`std::thread::scope` in the old
+//! `for_each_batch_shard`) costs tens of microseconds per forward — more
+//! than the GEMM itself at serving batch sizes. A [`WorkerPool`] spawns its
+//! threads **once** (owned by the `Engine` / `ChipSession`) and dispatches
+//! each call as a chunk-queue job: shards are claimed from an atomic
+//! counter, so a slow worker never strands work assigned to it up front
+//! (the cheap half of work stealing without per-worker deques).
+//!
+//! Bit-exactness is inherited, not re-proven: shards are contiguous batch
+//! row ranges and every row's sum is computed identically regardless of
+//! which lane runs it, so pooled execution equals single-thread execution
+//! bit-for-bit (pinned by `prop_pooled_execution_is_bit_exact` and the
+//! fleet determinism tests).
+//!
+//! A panicking task poisons the job, never the pool: every shard runs
+//! under `catch_unwind` so the completion accounting always finishes,
+//! and `run` re-raises the panic after the join barrier — the same
+//! crash-visibility `thread::scope` gave, without the deadlock a lost
+//! completion would cause. The pool itself stays usable afterwards.
+//!
+//! The vendored registry has no rayon/crossbeam; this is the minimal
+//! scoped-dispatch pool: one `Mutex<State>` + two condvars + three
+//! atomics.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One dispatched job: a borrowed task closure (lifetime erased — see the
+/// safety argument on [`WorkerPool::run`]) and its shard count.
+#[derive(Clone, Copy)]
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    tasks: usize,
+}
+
+struct State {
+    job: Option<Job>,
+    /// Bumped per job so a worker that already drained an epoch's queue
+    /// does not re-enter it while the caller is still unwinding.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers sleep here between jobs.
+    work: Condvar,
+    /// The caller sleeps here until the last shard completes; also used to
+    /// serialize overlapping `run` calls from different owners.
+    done: Condvar,
+    /// Next unclaimed shard index of the current job.
+    next: AtomicUsize,
+    /// Shards not yet *completed* (claims beyond the shard count do not
+    /// run; a claimed shard decrements only after its task call returns).
+    pending: AtomicUsize,
+    /// Workers currently inside a job's claim loop. `run` waits for this
+    /// to drain before recycling the job slot, so a worker that is about
+    /// to make one last (failed) claim can never observe the *next* job's
+    /// reset `next` counter and re-run a stale shard.
+    active: AtomicUsize,
+    /// Set when any shard of the current job panicked; `run` re-raises
+    /// after the join barrier so a panicking task crashes the caller
+    /// (like `thread::scope` would) instead of deadlocking the pool.
+    poisoned: AtomicBool,
+}
+
+thread_local! {
+    /// Address of the pool whose task this thread is currently inside —
+    /// lets [`WorkerPool::run`] turn a reentrant dispatch (a guaranteed
+    /// deadlock) into an immediate panic with a diagnosis.
+    static RUNNING_POOL: std::cell::Cell<usize> = std::cell::Cell::new(0);
+}
+
+impl Shared {
+    /// Run one claimed shard, recording (not propagating) a panic so the
+    /// pending/active accounting always completes and the pool can never
+    /// deadlock on a panicking task. `AssertUnwindSafe` is justified
+    /// because a poisoned job makes `run` panic before any result of the
+    /// job can be observed.
+    fn run_shard(&self, task: &(dyn Fn(usize) + Sync), i: usize) {
+        let prev = RUNNING_POOL.with(|c| c.replace(self as *const Shared as usize));
+        if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
+            self.poisoned.store(true, Ordering::SeqCst);
+        }
+        RUNNING_POOL.with(|c| c.set(prev));
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // lock before notifying so the caller cannot miss the wakeup
+            // between its pending check and its wait
+            let _guard = self.state.lock().unwrap();
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Spawn-once worker pool. `lanes` is the total parallelism including the
+/// calling thread: a pool with `lanes <= 1` spawns no threads and runs
+/// every job inline, so single-threaded sessions (e.g. fleet lanes) pay
+/// nothing for the abstraction.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    lanes: usize,
+}
+
+impl WorkerPool {
+    /// A pool with `lanes` total execution lanes (the caller is lane 0;
+    /// `lanes - 1` worker threads are spawned once and live until drop).
+    pub fn new(lanes: usize) -> WorkerPool {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, epoch: 0, shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        });
+        let handles = (1..lanes)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("repro-exec-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, lanes }
+    }
+
+    /// Total execution lanes (caller + spawned workers).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Spawned worker threads (`lanes - 1` unless the pool is inline).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `task(0..tasks)` across the pool's lanes, returning when every
+    /// call has completed. The calling thread participates as lane 0, so a
+    /// job is never slower than inline execution plus one dispatch.
+    ///
+    /// Shards are claimed dynamically (chunk queue): any lane may run any
+    /// shard, which keeps lanes busy when shard costs are uneven (e.g.
+    /// chain-heavy rows).
+    ///
+    /// One job at a time: concurrent `run`s from different owner threads
+    /// serialize, but dispatching on a pool **from inside one of its own
+    /// tasks** can never make progress — that reentrant case panics
+    /// immediately instead of deadlocking. Nest on a different pool or
+    /// run the inner work inline.
+    pub fn run(&self, tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if tasks == 0 {
+            return;
+        }
+        if self.handles.is_empty() || tasks == 1 {
+            for i in 0..tasks {
+                task(i);
+            }
+            return;
+        }
+        assert!(
+            RUNNING_POOL.with(|c| c.get()) != &*self.shared as *const Shared as usize,
+            "WorkerPool::run dispatched from inside one of its own tasks — reentrant \
+             dispatch deadlocks; use a different pool or run the nested work inline"
+        );
+        // SAFETY (lifetime erasure): a worker can only enter this job's
+        // claim loop while `state.job` is Some (checked under the state
+        // lock), and `run` does not return until `pending == 0` (every
+        // dispatched call has returned) *and* `active == 0` (every worker
+        // has left the claim loop) — only then is the slot cleared. A
+        // claim past `tasks` never touches the reference. So the borrow
+        // outlives every use.
+        let task_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // one job at a time: overlapping `run`s from different owners
+            // of a shared pool serialize here
+            while st.job.is_some() {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            self.shared.next.store(0, Ordering::SeqCst);
+            self.shared.pending.store(tasks, Ordering::SeqCst);
+            self.shared.poisoned.store(false, Ordering::SeqCst);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(Job { task: task_static, tasks });
+            self.shared.work.notify_all();
+        }
+        // lane 0: claim and run shards like any worker
+        loop {
+            let i = self.shared.next.fetch_add(1, Ordering::AcqRel);
+            if i >= tasks {
+                break;
+            }
+            self.shared.run_shard(task, i);
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0
+            || self.shared.active.load(Ordering::SeqCst) != 0
+        {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        // read the poison flag BEFORE releasing the job slot: a queued
+        // owner resets it for its own job the moment the slot frees, and
+        // our job's panic must not be masked by that reset
+        let poisoned = self.shared.poisoned.load(Ordering::SeqCst);
+        st.job = None;
+        // wake any owner queued behind us (and nobody else cares)
+        self.shared.done.notify_all();
+        drop(st);
+        if poisoned {
+            // propagate like thread::scope's join would: the job's output
+            // is unusable and the caller must not observe it as success
+            panic!("WorkerPool task panicked (job aborted after completion barrier)");
+        }
+    }
+
+    /// Shard `batch` rows of `a` (row stride `k`) and `out` (row stride
+    /// `m`) into contiguous chunks and run `f(a_chunk, out_chunk, rows)`
+    /// across the pool — the pooled, spawn-free successor of
+    /// [`super::gemm::for_each_batch_shard`]. Each chunk owns a disjoint
+    /// `&mut` slice of `out`, so `f` needs no internal synchronization.
+    pub fn for_each_batch_shard<F>(
+        &self,
+        a: &[i32],
+        k: usize,
+        out: &mut [i32],
+        m: usize,
+        batch: usize,
+        f: F,
+    ) where
+        F: Fn(&[i32], &mut [i32], usize) + Sync,
+    {
+        assert_eq!(a.len(), batch * k);
+        assert_eq!(out.len(), batch * m);
+        if batch == 0 {
+            return;
+        }
+        if self.handles.is_empty() || batch == 1 || m == 0 {
+            f(a, out, batch);
+            return;
+        }
+        // a few more shards than lanes so the chunk queue can balance
+        // uneven shard costs; contiguous ranges keep outputs disjoint
+        let rows_per = batch.div_ceil((self.lanes * 2).min(batch));
+        let shards = batch.div_ceil(rows_per);
+        // addresses as usize so the closure is Sync without raw-pointer
+        // fields; shard ranges are disjoint, so the &mut slices never alias
+        let a_addr = a.as_ptr() as usize;
+        let o_addr = out.as_mut_ptr() as usize;
+        self.run(shards, &|s| {
+            let lo = s * rows_per;
+            let rows = rows_per.min(batch - lo);
+            // SAFETY: lo..lo+rows is in-bounds and disjoint per shard; the
+            // backing borrows of `a` and `out` are held by this call frame
+            // for the whole `run`.
+            let ac = unsafe {
+                std::slice::from_raw_parts((a_addr as *const i32).add(lo * k), rows * k)
+            };
+            let oc = unsafe {
+                std::slice::from_raw_parts_mut((o_addr as *mut i32).add(lo * m), rows * m)
+            };
+            f(ac, oc, rows);
+        });
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("lanes", &self.lanes).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = st.job {
+                        seen = st.epoch;
+                        // still under the lock: `run` cannot observe
+                        // active == 0 between our job copy and the claims
+                        shared.active.fetch_add(1, Ordering::SeqCst);
+                        break job;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        loop {
+            let i = shared.next.fetch_add(1, Ordering::AcqRel);
+            if i >= job.tasks {
+                break;
+            }
+            shared.run_shard(job.task, i);
+        }
+        if shared.active.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _guard = shared.state.lock().unwrap();
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for lanes in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::new(lanes);
+            assert_eq!(pool.lanes(), lanes);
+            assert_eq!(pool.workers(), lanes - 1);
+            let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "lanes={lanes} task {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        let pool = WorkerPool::new(3);
+        pool.run(0, &|_| panic!("no task should run"));
+    }
+
+    #[test]
+    fn reusable_across_many_jobs() {
+        // spawn-once is the whole point: many jobs on one pool, with
+        // results accumulated across jobs
+        let pool = WorkerPool::new(4);
+        let total = AtomicU64::new(0);
+        for round in 0..50u64 {
+            pool.run(8, &|i| {
+                total.fetch_add(round * 8 + i as u64, Ordering::SeqCst);
+            });
+        }
+        // sum over all rounds of sum_{i<8} (round*8 + i)
+        let want: u64 = (0..50u64).map(|r| r * 64 + 28).sum();
+        assert_eq!(total.load(Ordering::SeqCst), want);
+    }
+
+    #[test]
+    fn batch_shard_covers_every_row_once() {
+        let (batch, k, m) = (13usize, 3usize, 2usize);
+        let a: Vec<i32> = (0..batch * k).map(|i| i as i32).collect();
+        for lanes in [1usize, 2, 4, 16] {
+            let pool = WorkerPool::new(lanes);
+            let mut out = vec![0i32; batch * m];
+            pool.for_each_batch_shard(&a, k, &mut out, m, batch, |ac, oc, rows| {
+                assert_eq!(ac.len(), rows * k);
+                assert_eq!(oc.len(), rows * m);
+                for r in 0..rows {
+                    oc[r * m] = ac[r * k]; // tag rows with their activation
+                    oc[r * m + 1] += 1;
+                }
+            });
+            for b in 0..batch {
+                assert_eq!(out[b * m], a[b * k], "lanes={lanes} row {b}");
+                assert_eq!(out[b * m + 1], 1, "lanes={lanes} row {b} visited once");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_batch_shard_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        let mut out: Vec<i32> = vec![];
+        pool.for_each_batch_shard(&[], 4, &mut out, 3, 0, |_, _, _| {
+            panic!("no shard should run");
+        });
+    }
+
+    #[test]
+    fn panicking_task_poisons_the_job_not_the_pool() {
+        let pool = WorkerPool::new(3);
+        // a panic on one shard must propagate to the caller...
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "task panic must reach the run caller");
+        // ...and the pool must stay fully usable afterwards
+        let hits: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {i} after poisoned job");
+        }
+    }
+
+    #[test]
+    fn shared_pool_serializes_owners() {
+        // two threads driving one pool concurrently: jobs serialize, both
+        // complete, no shard is lost
+        let pool = Arc::new(WorkerPool::new(3));
+        let counters = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+        std::thread::scope(|s| {
+            for owner in 0..2usize {
+                let pool = pool.clone();
+                let counters = counters.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        pool.run(5, &|_| {
+                            counters[owner].fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(counters[0].load(Ordering::SeqCst), 100);
+        assert_eq!(counters[1].load(Ordering::SeqCst), 100);
+    }
+}

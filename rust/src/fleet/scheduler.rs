@@ -3,11 +3,14 @@
 //! The dispatcher routes fixed-size request batches into bounded per-chip
 //! queues (`std::sync::mpsc::sync_channel`, so a full queue back-pressures
 //! the dispatcher exactly like a real serving stack); worker threads own
-//! disjoint subsets of the chips, build each chip's [`crate::chip::ChipSession`]
-//! locally (sessions are deliberately not `Send` — the compiled plan is
-//! thread-affine), and drain their queues until the dispatcher hangs up.
-//! Parallelism is chip-level: each session runs its plan single-threaded
-//! and the fleet scales across workers instead of oversubscribing cores.
+//! disjoint subsets of the chips and drain their queues until the
+//! dispatcher hangs up. Under the plan backend every chip's
+//! [`crate::exec::ChipPlan`] is **compiled (weights packed and all) once
+//! on the dispatcher thread** and handed to the owning worker as an
+//! `Arc` — workers adopt the shared packed tile programs instead of
+//! re-lowering per thread, and all sessions execute inline on one shared
+//! single-lane [`crate::exec::WorkerPool`]. Parallelism is chip-level:
+//! the fleet scales across workers instead of oversubscribing cores.
 //!
 //! Three routing policies (issue/EXPERIMENTS.md §Fleet): round-robin,
 //! least-loaded (live queue depths), and accuracy-weighted (smooth
@@ -17,7 +20,7 @@ use super::config::RoutingPolicy;
 use crate::chip::{Backend, Chip};
 use crate::coordinator::evaluate::count_correct;
 use crate::data::Dataset;
-use crate::exec::default_threads;
+use crate::exec::{default_threads, quantize_mlp_weights, ChipPlan, WorkerPool};
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
 use crate::systolic::timing;
@@ -25,6 +28,7 @@ use crate::util::Rng;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One serving lane the scheduler can route to: a chip's controller view,
@@ -148,6 +152,35 @@ pub fn serve(
     } else {
         cfg.workers.min(units.len())
     };
+    // Compile every chip's plan once, up front, before the serving clock
+    // starts: the packed weight tile programs are shared into the owning
+    // worker as an Arc, so workers adopt one compiled plan instead of
+    // re-lowering per thread. Compilation itself fans out over the worker
+    // budget (a big fleet should not pay a serial provision pass).
+    let shared_plans: Vec<Option<Arc<ChipPlan>>> = if cfg.backend == Backend::Plan {
+        let mut plans: Vec<Option<Arc<ChipPlan>>> = vec![None; units.len()];
+        let chunk = units.len().div_ceil(workers.max(1));
+        std::thread::scope(|s| {
+            for (uc, pc) in units.chunks(chunk).zip(plans.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    for (u, slot) in uc.iter().zip(pc.iter_mut()) {
+                        let arch = u.chip.arch();
+                        let qw = quantize_mlp_weights(arch, u.params, calib);
+                        let plan =
+                            ChipPlan::compile_mlp(arch, u.chip.fault_map(), u.chip.kind(), &qw);
+                        *slot = Some(Arc::new(plan));
+                    }
+                });
+            }
+        });
+        plans
+    } else {
+        vec![None; units.len()]
+    };
+    // One shared inline pool: fleet sessions run single-threaded (the
+    // fleet scales across workers, not within a forward), and a 1-lane
+    // pool spawns no threads at all.
+    let exec_pool = Arc::new(WorkerPool::new(1));
     let depth: Vec<AtomicUsize> = (0..units.len()).map(|_| AtomicUsize::new(0)).collect();
     // workers bump this once their sessions are built (success or not), so
     // the serving clock starts when the fleet is actually ready — plan
@@ -159,6 +192,8 @@ pub fn serve(
     let serve_result: Result<(Vec<Vec<ChipServeStats>>, f64)> = std::thread::scope(|s| {
         let depth = &depth;
         let ready = &ready;
+        let shared_plans = &shared_plans;
+        let exec_pool = &exec_pool;
         let mut rx_slots: Vec<Option<Receiver<WorkItem>>> = rxs.into_iter().map(Some).collect();
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
@@ -166,8 +201,9 @@ pub fn serve(
                 .step_by(workers)
                 .map(|i| (i, rx_slots[i].take().unwrap()))
                 .collect();
-            handles
-                .push(s.spawn(move || worker_loop(owned, units, calib, data, cfg, depth, ready)));
+            handles.push(s.spawn(move || {
+                worker_loop(owned, units, calib, data, cfg, depth, ready, shared_plans, exec_pool)
+            }));
         }
 
         // Barrier: wait until every worker has built (or failed to build)
@@ -248,8 +284,10 @@ fn dispatch_all(
     Ok(())
 }
 
-/// One worker: open sessions for its owned chips, then round-robin over
-/// their queues until every dispatcher handle is dropped.
+/// One worker: open sessions for its owned chips (adopting the shared
+/// precompiled plans + shared inline pool under the plan backend), then
+/// round-robin over their queues until every dispatcher handle is dropped.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     owned: Vec<(usize, Receiver<WorkItem>)>,
     units: &[ChipUnit<'_>],
@@ -258,6 +296,8 @@ fn worker_loop(
     cfg: &WorkloadConfig,
     depth: &[AtomicUsize],
     ready: &AtomicUsize,
+    shared_plans: &[Option<Arc<ChipPlan>>],
+    exec_pool: &Arc<WorkerPool>,
 ) -> Result<Vec<ChipServeStats>> {
     struct Lane<'rt> {
         unit_idx: usize,
@@ -274,7 +314,14 @@ fn worker_loop(
         let mut lanes = Vec::with_capacity(owned.len());
         for (i, rx) in owned {
             let u = &units[i];
-            let mut sess = u.chip.session(cfg.backend)?;
+            let mut sess = match &shared_plans[i] {
+                // adopt the dispatcher's precompiled packed plan + the
+                // shared inline pool: no lowering on the worker at all
+                Some(plan) => {
+                    u.chip.session_shared(cfg.backend, plan.clone(), exec_pool.clone())?
+                }
+                None => u.chip.session(cfg.backend)?,
+            };
             sess.load_model(u.params.clone(), calib.clone());
             let cycles_per_batch =
                 batch_sim_cycles(sess.arch(), u.chip.fault_map().n(), cfg.batch);

@@ -29,6 +29,13 @@ pub fn quantize_vec(xs: &[f32], scale: f32) -> Vec<i32> {
     xs.iter().map(|&x| quantize(x, scale)).collect()
 }
 
+/// [`quantize_vec`] into a reused buffer (cleared + refilled) — the
+/// zero-allocation steady-state path of the forward pipeline.
+pub fn quantize_into(xs: &[f32], scale: f32, out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| quantize(x, scale)));
+}
+
 /// Dequantize an int32 accumulator given both input scales.
 #[inline]
 pub fn dequantize(acc: i32, a_scale: f32, w_scale: f32) -> f32 {
@@ -66,6 +73,16 @@ mod tests {
     fn clipping() {
         assert_eq!(quantize(1e9, 1.0), 127);
         assert_eq!(quantize(-1e9, 1.0), -127);
+    }
+
+    #[test]
+    fn quantize_into_matches_vec_and_reuses_buffer() {
+        let xs = [0.3f32, -0.7, 0.11, 2.5, -1e9];
+        let mut buf = vec![99i32; 2]; // stale shorter content must vanish
+        quantize_into(&xs, 0.5, &mut buf);
+        assert_eq!(buf, quantize_vec(&xs, 0.5));
+        quantize_into(&xs[..2], 0.5, &mut buf); // shrink on reuse
+        assert_eq!(buf, quantize_vec(&xs[..2], 0.5));
     }
 
     #[test]

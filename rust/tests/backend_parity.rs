@@ -152,6 +152,44 @@ fn parity_survives_param_swaps() {
     );
 }
 
+/// Pool determinism: the same chip + seed + model produces bit-identical
+/// logits whether the persistent pool runs 1, 2 or N lanes — the
+/// serving-stack guarantee that thread budget is a pure throughput knob.
+#[test]
+fn pool_determinism_same_seed_same_logits_across_thread_counts() {
+    let arch = tiny_mlp();
+    let mut rng = Rng::new(0x9001);
+    let params = rand_params(&arch, &mut rng);
+    let batch = 9; // not a multiple of the microkernel tile: edge rows live
+    let x: Vec<f32> = (0..batch * arch.input_len()).map(|_| rng.normal()).collect();
+    let calib = calibrate_mlp(&arch, &params, &x, batch);
+    let chip = Chip::new(arch.clone()).array_n(6).inject(8, 77).mitigate(MaskKind::FapBypass);
+
+    let run = |threads: usize| -> Vec<u32> {
+        let mut sess = chip.clone().threads(threads).session(Backend::Plan).unwrap();
+        sess.load_model(params.clone(), calib.clone());
+        // two forwards through the same session: the persistent pool and
+        // reused scratch must not drift between calls either
+        let first = bits(&sess.forward_logits(&x, batch).unwrap());
+        let second = bits(&sess.forward_logits(&x, batch).unwrap());
+        assert_eq!(first, second, "threads={threads}: repeat call drifted");
+        first
+    };
+    let single = run(1);
+    for threads in [2usize, 3, 8] {
+        assert_eq!(run(threads), single, "threads={threads} diverged from single-thread");
+    }
+
+    // and through an Engine (shared spawn-once pool across sessions)
+    let mut engine = Engine::new(Backend::Plan, None).unwrap().with_threads(4);
+    let mut s1 = engine.session(&chip).unwrap();
+    s1.load_model(params.clone(), calib.clone());
+    assert_eq!(bits(&s1.forward_logits(&x, batch).unwrap()), single);
+    let mut s2 = engine.session(&chip).unwrap();
+    s2.load_model(params.clone(), calib.clone());
+    assert_eq!(bits(&s2.forward_logits(&x, batch).unwrap()), single);
+}
+
 /// Capability rejection: the matrix lives in `Backend::supports` and the
 /// session builder enforces it for every unsupported (backend, arch) pair.
 #[test]

@@ -6,7 +6,7 @@
 //! Uses the in-repo harness (`rust/src/util/prop.rs`; the offline registry
 //! has no proptest). Failing cases replay with `PROP_REPLAY=<seed>`.
 
-use repro::exec::{ChipPlan, ExecScratch, MatmulPlan};
+use repro::exec::{dot_wrapping, ChipPlan, ExecScratch, MatmulPlan, WorkerPool};
 use repro::faults::{FaultMap, StuckAt};
 use repro::mapping::MaskKind;
 use repro::model::arch::mnist;
@@ -104,6 +104,84 @@ fn prop_threaded_execution_is_bit_exact() {
             prop_assert!(
                 plan.execute_threaded(&a, batch, threads) == single,
                 "threads={threads} n={n} k={k} m={m} b={batch}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The packed-panel microkernel is bit-identical to an explicit
+/// column-at-a-time [`dot_wrapping`] reference across random shapes —
+/// partial-height/width tiles, tail panels (`m % PANEL_NR != 0`), tail
+/// rows (`batch % MICRO_MR != 0`) and batch = 1 — under FAP bypass, where
+/// every column lowers to the dense GEMM core. Chain columns (unmitigated
+/// live faults) are cross-checked against the naive PE-chain walk in the
+/// same iteration, so packed + chain outputs interleave in one output
+/// buffer exactly as the executor produces them.
+#[test]
+fn prop_packed_microkernel_matches_dot_wrapping() {
+    prop::check("packed_matches_dot", 0xE7, 50, |rng| {
+        let n = 2 + rng.below(7);
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        // force batch = 1 often: the single-row edge kernel must be as
+        // correct as the 4x4 tile path
+        let batch = if rng.bool(0.3) { 1 } else { 1 + rng.below(9) };
+        let fm = random_fault_map(rng, n, 8);
+        let (a, w) = random_case(rng, k, m, batch);
+
+        // FAP bypass: every column is dense -> pure packed microkernel;
+        // reference = dot_wrapping over the bypass-folded weight columns
+        let plan = MatmulPlan::compile(&fm, MaskKind::FapBypass, &w, k, m);
+        prop_assert!(plan.stats().chain_cols == 0, "bypass must be pure GEMM");
+        let got = plan.execute(&a, batch);
+        for b in 0..batch {
+            let row = &a[b * k..(b + 1) * k];
+            for j in 0..m {
+                // static mapping r = i mod N, c = j mod N: bypassed MACs
+                // are exactly zero effective weights
+                let col: Vec<i32> = (0..k)
+                    .map(|kk| if fm.is_faulty(kk % n, j % n) { 0 } else { w[kk * m + j] })
+                    .collect();
+                let want = dot_wrapping(row, &col);
+                prop_assert!(
+                    got[b * m + j] == want,
+                    "packed != dot: n={n} k={k} m={m} b={b}/{batch} j={j}"
+                );
+            }
+        }
+
+        // unmitigated: chain columns live alongside packed dense columns;
+        // the naive PE-chain walk is the oracle for the mixture
+        let plan = MatmulPlan::compile(&fm, MaskKind::Unmitigated, &w, k, m);
+        let got = plan.execute(&a, batch);
+        let want = TiledMatmul::new(&fm, false).matmul(&a, &w, batch, k, m);
+        prop_assert!(got == want, "chain mix: n={n} k={k} m={m} batch={batch}");
+        Ok(())
+    });
+}
+
+/// Pooled execution (persistent spawn-once workers) is bit-exact with
+/// single-thread execution for any lane count — including lanes exceeding
+/// the batch — and stays exact when one pool is reused across many plans
+/// and shapes (the fleet serving pattern).
+#[test]
+fn prop_pooled_execution_is_bit_exact() {
+    let pools: Vec<WorkerPool> = [1usize, 2, 3, 6].into_iter().map(WorkerPool::new).collect();
+    prop::check("pooled_bit_exact", 0xE8, 30, |rng| {
+        let n = 2 + rng.below(6);
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        let batch = 1 + rng.below(12);
+        let fm = random_fault_map(rng, n, 6);
+        let (a, w) = random_case(rng, k, m, batch);
+        let plan = MatmulPlan::compile(&fm, MaskKind::Unmitigated, &w, k, m);
+        let single = plan.execute(&a, batch);
+        for pool in &pools {
+            prop_assert!(
+                plan.execute_pooled(&a, batch, pool) == single,
+                "lanes={} n={n} k={k} m={m} b={batch}",
+                pool.lanes()
             );
         }
         Ok(())
