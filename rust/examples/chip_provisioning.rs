@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     let chip = chip.detect()?.mitigate(MaskKind::FapBypass);
     let truth = chip.true_fault_map().faulty_macs();
     let correct =
-        chip.fault_map().faulty_macs().iter().filter(|f| truth.contains(f)).count();
+        chip.known_map().faulty_macs().iter().filter(|f| truth.contains(f)).count();
     println!(
         "localized {} / {} faulty MACs ({:.1} ms)",
         correct,
@@ -74,9 +74,15 @@ fn main() -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64() * 1e3
     );
 
-    // 4. FAP + FAP+T for this chip's *detected* fault map
+    // 4. FAP + FAP+T for this chip's *detected* view — the truth map
+    // keeps driving the datapath; the view only decides the masks
     println!("\n=== 4. FAP + FAP+T provisioning ===");
-    let plan = engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
+    let plan = engine.plans.get_or_compile_views(
+        &a,
+        chip.true_fault_map(),
+        &chip.known_map(),
+        MaskKind::FapBypass,
+    );
     let (fap_params, frep) = apply_fap_planned(&baseline, &plan);
     let fap_acc = engine.float_accuracy(&a, &fap_params, &test)?;
     let fcfg = FaptConfig { max_epochs: 4, lr: 0.01, seed: 77, snapshot_epochs: vec![] };

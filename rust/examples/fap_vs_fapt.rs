@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
             .mitigate(MaskKind::FapBypass);
         // one compiled plan per chip: FAP pruning and every retrain epoch
         // reuse its masks
-        let plan = engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
+        let plan = engine.plans.get_or_compile(&a, chip.true_fault_map(), MaskKind::FapBypass);
         let (fap_params, report) = apply_fap_planned(&baseline, &plan);
         let fap_acc = engine.float_accuracy(&a, &fap_params, &test)?;
         let fcfg = FaptConfig { max_epochs: 3, lr: 0.01, seed: 3, snapshot_epochs: vec![] };

@@ -38,8 +38,8 @@ fn main() -> anyhow::Result<()> {
     let chip = Chip::new(a.clone()).array_n(n).inject(n * n / 4, 7);
     println!(
         "chip: {n}x{n} array, {} faulty MACs ({:.0}%), {} backend",
-        chip.fault_map().faulty_mac_count(),
-        chip.fault_map().fault_rate() * 100.0,
+        chip.true_fault_map().faulty_mac_count(),
+        chip.true_fault_map().fault_rate() * 100.0,
         engine.backend()
     );
 
@@ -48,8 +48,9 @@ fn main() -> anyhow::Result<()> {
     faulty.calibrate_and_load(baseline.clone(), &train.x[..64 * 784], 64);
     let faulty_acc = faulty.evaluate(&test)?;
 
-    // 5. FAP: bypass faulty MACs == prune their weights
-    let plan = engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
+    // 5. FAP: bypass faulty MACs == prune their weights (no localization
+    // step here, so the controller has perfect knowledge of the truth map)
+    let plan = engine.plans.get_or_compile(&a, chip.true_fault_map(), MaskKind::FapBypass);
     let (fap_params, report) = apply_fap_planned(&baseline, &plan);
     let fap_acc = engine.float_accuracy(&a, &fap_params, &test)?;
 

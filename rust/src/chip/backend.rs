@@ -104,8 +104,9 @@ pub trait ForwardBackend {
     /// Architecture this backend executes.
     fn arch(&self) -> &Arch;
 
-    /// Fingerprint of the fault map compiled into this backend — the chip
-    /// identity ([`crate::faults::FaultMap::fingerprint`]).
+    /// Session identity: the combined fingerprint of the truth fault map
+    /// and the controller's known view compiled into this backend
+    /// ([`crate::faults::chip_fingerprint`]).
     fn fingerprint(&self) -> u64;
 
     /// Mitigation compiled into this backend.

@@ -50,7 +50,7 @@ use crate::coordinator::fapt::{fapt_retrain, fapt_retrain_native, FaptConfig, Fa
 use crate::coordinator::trainer::{train_baseline, train_baseline_native, TrainConfig};
 use crate::data::Dataset;
 use crate::exec::{default_threads, ChipPlan, PlanCache, WorkerPool};
-use crate::faults::{detect, inject_uniform, FaultMap, FaultSpec, StuckAt};
+use crate::faults::{detect, inject_uniform, FaultMap, FaultSpec, KnownMap, TestPatterns};
 use crate::mapping::MaskKind;
 use crate::model::quant::{calibrate_mlp, mlp_forward, Calibration};
 use crate::model::{Arch, Params};
@@ -66,11 +66,13 @@ use std::sync::Arc;
 pub struct Chip {
     arch: Arch,
     array_n: usize,
-    /// The chip as fabricated (hidden truth).
+    /// The chip as fabricated (hidden truth). Execution corruption always
+    /// comes from here — detection never changes what the silicon does.
     truth: FaultMap,
-    /// What the controller knows after [`Chip::detect`]; `None` = assume
-    /// perfect knowledge (campaigns skip the localization step).
-    known: Option<FaultMap>,
+    /// What the controller knows after [`Chip::detect`] (MAC granularity
+    /// only); `None` = assume perfect knowledge (campaigns skip the
+    /// localization step). All bypass/prune masks derive from this view.
+    known: Option<KnownMap>,
     detected: Option<usize>,
     kind: MaskKind,
     /// 0 = inherit (engine setting, falling back to all cores).
@@ -127,18 +129,38 @@ impl Chip {
         self.inject(k, seed)
     }
 
+    /// Post-fabrication localization with the default test program:
+    /// see [`Chip::detect_with`].
+    pub fn detect(self) -> Result<Chip> {
+        self.detect_with(TestPatterns::default())
+    }
+
     /// Post-fabrication localization: run the DFT bypass search against
-    /// the true fault map and adopt the *detected* map (MAC granularity,
-    /// canonical marker faults) as what the controller mitigates.
-    pub fn detect(mut self) -> Result<Chip> {
-        let rep = detect::localize_from_map(&self.truth, Default::default());
-        let mut known = FaultMap::healthy(self.array_n);
-        for (r, c) in &rep.faulty {
-            known.add(StuckAt { row: *r as u16, col: *c as u16, bit: 0, value: true });
-        }
+    /// the true fault map and adopt the *detected* MAC set as the
+    /// controller's [`KnownMap`]. Knowledge is MAC-granularity only — the
+    /// controller learns *which* MACs are broken, never which bits — and
+    /// it is used purely for masking (bypass/prune); the truth map keeps
+    /// driving the datapath corruption. With `cfg.escape_prob > 0`,
+    /// faults escape the test program per the observability model and the
+    /// known view is a strict subset of the truth's MAC set.
+    pub fn detect_with(mut self, cfg: TestPatterns) -> Result<Chip> {
+        let rep = detect::localize_from_map(&self.truth, cfg);
         self.detected = Some(rep.faulty.len());
-        self.known = Some(known);
+        self.known = Some(KnownMap::from_macs(self.array_n, rep.faulty.iter().copied()));
         Ok(self)
+    }
+
+    /// Model a controller that never ran localization and believes the
+    /// chip clean: the known view is explicitly *empty* rather than the
+    /// default perfect-knowledge assumption. Nothing is bypassed or
+    /// pruned, and every truth fault counts as escaped — this is how an
+    /// unmanaged (blind) fleet's silent-data-corruption exposure is
+    /// accounted, instead of `known: None` reporting zero escapes by
+    /// assumption.
+    pub fn assume_blind(mut self) -> Chip {
+        self.known = Some(KnownMap::empty(self.array_n));
+        self.detected = None;
+        self
     }
 
     pub fn mitigate(mut self, kind: MaskKind) -> Chip {
@@ -160,15 +182,44 @@ impl Chip {
         self.kind
     }
 
-    /// The controller-visible fault map (detected if [`Chip::detect`] ran,
-    /// the fabricated truth otherwise).
-    pub fn fault_map(&self) -> &FaultMap {
-        self.known.as_ref().unwrap_or(&self.truth)
+    /// Physical array dimension.
+    pub fn n(&self) -> usize {
+        self.array_n
     }
 
-    /// The chip as fabricated, regardless of detection.
+    /// The controller's view of the chip's faults: the detected MAC set
+    /// when [`Chip::detect`] ran, perfect knowledge of the truth's MAC
+    /// set otherwise. This is what mitigation masks are built from —
+    /// never what the datapath corrupts with.
+    pub fn known_map(&self) -> KnownMap {
+        match &self.known {
+            Some(k) => k.clone(),
+            None => KnownMap::perfect(&self.truth),
+        }
+    }
+
+    /// Known-faulty MAC count of the controller view.
+    pub fn known_faulty_macs(&self) -> usize {
+        match &self.known {
+            Some(k) => k.faulty_mac_count(),
+            None => self.truth.faulty_mac_count(),
+        }
+    }
+
+    /// The chip as fabricated, regardless of detection — the map every
+    /// backend executes.
     pub fn true_fault_map(&self) -> &FaultMap {
         &self.truth
+    }
+
+    /// Truth-faulty MACs the controller view missed (0 when no detection
+    /// ran — perfect knowledge by assumption). These faults corrupt
+    /// silently: nothing bypasses or prunes them.
+    pub fn escaped_faulty_macs(&self) -> usize {
+        match &self.known {
+            Some(k) => k.escaped_from(&self.truth),
+            None => 0,
+        }
     }
 
     /// Faulty MACs the localization step reported (after [`Chip::detect`]).
@@ -211,11 +262,13 @@ impl Chip {
         }
         // validate here, for every backend — the sim engine ignores the
         // plan, but a caller handing us a stale fleet plan must hear
-        // about it regardless of which engine the session runs on
+        // about it regardless of which engine the session runs on; both
+        // roles are checked, so a plan compiled under an outdated truth
+        // map *or* an outdated controller view is rejected
         ensure!(
-            plan.matches(self.fault_map()) && plan.kind() == self.kind,
+            plan.matches_views(&self.truth, &self.known_map()) && plan.kind() == self.kind,
             "shared plan was compiled for a different chip \
-             (fingerprint/mitigation mismatch)"
+             (truth/known fingerprint or mitigation mismatch)"
         );
         self.build(backend, None, None, 0, Some(plan), Some(pool))
     }
@@ -230,26 +283,40 @@ impl Chip {
         pool: Option<Arc<WorkerPool>>,
     ) -> Result<ChipSession<'rt>> {
         backend.supports(&self.arch, Scenario::FaultyFwd)?;
-        let fm = self.fault_map().clone();
+        // the two fault-map roles every backend consumes: execute truth,
+        // mitigate with the controller's known view
+        let truth = self.truth.clone();
+        let known = self.known_map();
         let threads = match (self.threads, fallback_threads) {
             (0, 0) => default_threads(),
             (0, t) => t,
             (t, _) => t,
         };
         let engine: Box<dyn ForwardBackend + 'rt> = match backend {
-            Backend::Sim => Box::new(SimBackend::new(self.arch.clone(), fm, self.kind)),
+            Backend::Sim => {
+                Box::new(SimBackend::new(self.arch.clone(), truth, known, self.kind))
+            }
             Backend::Plan | Backend::Xla => {
                 // mask-level plan: adopt the caller's shared plan (already
                 // validated by session_shared, the only path that sets
                 // it), else share via the campaign cache, else compile
                 let chip_plan = match shared_plan {
                     Some(plan) => {
-                        debug_assert!(plan.matches(&fm) && plan.kind() == self.kind);
+                        debug_assert!(
+                            plan.matches_views(&truth, &known) && plan.kind() == self.kind
+                        );
                         plan
                     }
                     None => match plans {
-                        Some(cache) => cache.get_or_compile(&self.arch, &fm, self.kind),
-                        None => Arc::new(ChipPlan::compile(&self.arch, &fm, self.kind)),
+                        Some(cache) => {
+                            cache.get_or_compile_views(&self.arch, &truth, &known, self.kind)
+                        }
+                        None => Arc::new(ChipPlan::compile_views(
+                            &self.arch,
+                            &truth,
+                            &known,
+                            self.kind,
+                        )),
                     },
                 };
                 if backend == Backend::Plan {
@@ -260,7 +327,7 @@ impl Chip {
                         _ => Arc::new(WorkerPool::new(threads)),
                     };
                     let arch = self.arch.clone();
-                    Box::new(PlanBackend::new(arch, fm, self.kind, chip_plan, pool))
+                    Box::new(PlanBackend::new(arch, truth, known, self.kind, chip_plan, pool))
                 } else {
                     let rt = rt.context("xla backend needs a PJRT runtime")?;
                     Box::new(XlaBackend::new(rt, self.arch.clone(), chip_plan))
@@ -288,8 +355,10 @@ impl ChipSession<'_> {
         self.backend.name()
     }
 
-    /// Chip identity: the fault-map fingerprint the backend was compiled
-    /// against ([`crate::faults::FaultMap::fingerprint`]).
+    /// Chip identity: the combined `(truth, known)` fingerprint the
+    /// backend was compiled against
+    /// ([`crate::faults::chip_fingerprint`]) — it changes when either the
+    /// fabricated fault map or the controller's detected view changes.
     pub fn fingerprint(&self) -> u64 {
         self.backend.fingerprint()
     }
@@ -512,19 +581,70 @@ mod tests {
     #[test]
     fn builder_tracks_fault_state() {
         let chip = Chip::new(tiny_mlp()).array_n(8).inject(10, 3);
-        assert_eq!(chip.fault_map().faulty_mac_count(), 10);
+        assert_eq!(chip.known_map().faulty_mac_count(), 10);
         assert_eq!(chip.true_fault_map().faulty_mac_count(), 10);
         assert!(chip.detected().is_none());
+        assert_eq!(chip.escaped_faulty_macs(), 0);
         let chip = chip.detect().unwrap();
         let det = chip.detected().unwrap();
-        // the controller now mitigates the *detected* map: a subset of the
-        // truth at MAC granularity (localization is probabilistic-exact)
-        assert_eq!(chip.fault_map().faulty_mac_count(), det);
+        // the controller now mitigates the *detected* MAC set: a subset
+        // of the truth (localization is probabilistic-exact); the truth
+        // map is untouched — it is what the backends execute
+        assert_eq!(chip.known_faulty_macs(), det);
+        assert_eq!(chip.true_fault_map().faulty_mac_count(), 10);
         assert!(det > 0 && det <= 10);
         let truth = chip.true_fault_map().faulty_macs();
-        for mac in chip.fault_map().faulty_macs() {
+        for mac in chip.known_map().faulty_macs() {
             assert!(truth.contains(&mac), "false positive at {mac:?}");
         }
+        assert_eq!(chip.escaped_faulty_macs(), 10 - det);
+    }
+
+    #[test]
+    fn forced_escapes_leave_known_view_partial() {
+        let chip = Chip::new(tiny_mlp())
+            .array_n(8)
+            .inject(6, 9)
+            .detect_with(TestPatterns { escape_prob: 1.0, ..Default::default() })
+            .unwrap();
+        // every fault escaped: controller sees a clean chip, silicon not
+        assert_eq!(chip.detected(), Some(0));
+        assert_eq!(chip.known_faulty_macs(), 0);
+        assert_eq!(chip.true_fault_map().faulty_mac_count(), 6);
+        assert_eq!(chip.escaped_faulty_macs(), 6);
+        // sessions on such a chip still build (and execute the truth)
+        let mut s = chip.session(Backend::Plan).unwrap();
+        assert_eq!(s.kind(), MaskKind::Unmitigated);
+        assert!(s.forward_logits(&[0.0; 12], 1).is_err()); // no model yet
+    }
+
+    #[test]
+    fn blind_chip_counts_every_fault_as_escaped() {
+        let chip = Chip::new(tiny_mlp()).array_n(8).inject(7, 4).assume_blind();
+        // without assume_blind, known: None means perfect knowledge
+        assert_eq!(chip.known_faulty_macs(), 0);
+        assert_eq!(chip.known_map().faulty_mac_count(), 0);
+        assert_eq!(chip.escaped_faulty_macs(), 7);
+        assert!(chip.detected().is_none());
+        // the blind view changes accounting only: unmitigated execution
+        // bit-matches the perfect-knowledge session (nothing bypasses
+        // under Unmitigated either way)
+        let arch = tiny_mlp();
+        let mut rng = Rng::new(31);
+        let params = rand_params(&arch, &mut rng);
+        let x: Vec<f32> = (0..4 * 12).map(|_| rng.normal()).collect();
+        let calib = calibrate_mlp(&arch, &params, &x, 4);
+        let seen = Chip::new(arch).array_n(8).inject(7, 4);
+        let mut sb = chip.session(Backend::Plan).unwrap();
+        let mut ss = seen.session(Backend::Plan).unwrap();
+        sb.load_model(params.clone(), calib.clone());
+        ss.load_model(params, calib);
+        assert_ne!(sb.fingerprint(), ss.fingerprint(), "blindness is part of chip identity");
+        let lb: Vec<u32> =
+            sb.forward_logits(&x, 4).unwrap().iter().map(|v| v.to_bits()).collect();
+        let ls: Vec<u32> =
+            ss.forward_logits(&x, 4).unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(lb, ls, "unmitigated datapath must not depend on the known view");
     }
 
     #[test]
@@ -628,7 +748,13 @@ mod tests {
 
         // weight-compiled shared plan, as the fleet provisioner builds it
         let qw = crate::exec::quantize_mlp_weights(&arch, &params, &calib);
-        let plan = Arc::new(ChipPlan::compile_mlp(&arch, chip.fault_map(), chip.kind(), &qw));
+        let plan = Arc::new(ChipPlan::compile_mlp_views(
+            &arch,
+            chip.true_fault_map(),
+            &chip.known_map(),
+            chip.kind(),
+            &qw,
+        ));
         let pool = Arc::new(WorkerPool::new(2));
         let mut shared = chip.session_shared(Backend::Plan, plan.clone(), pool.clone()).unwrap();
         shared.load_model(params.clone(), calib.clone());

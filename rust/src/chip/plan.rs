@@ -24,7 +24,7 @@
 use super::backend::ForwardBackend;
 use super::pipeline::{quantized_mlp_forward_scratch, ForwardScratch};
 use crate::exec::{quantize_mlp_weights, qweights_fingerprint, ChipPlan, MatmulPlan, WorkerPool};
-use crate::faults::FaultMap;
+use crate::faults::{FaultMap, KnownMap};
 use crate::mapping::MaskKind;
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
@@ -44,7 +44,10 @@ enum LayerPlans {
 
 pub struct PlanBackend {
     arch: Arch,
-    fm: FaultMap,
+    /// The chip as fabricated — corruption is lowered from this.
+    truth: FaultMap,
+    /// The controller's detected view — bypass masks come from this.
+    known: KnownMap,
     kind: MaskKind,
     /// Persistent execution lanes (spawn-once; see [`WorkerPool`]).
     pool: Arc<WorkerPool>,
@@ -62,15 +65,17 @@ pub struct PlanBackend {
 impl PlanBackend {
     pub fn new(
         arch: Arch,
-        fm: FaultMap,
+        truth: FaultMap,
+        known: KnownMap,
         kind: MaskKind,
         chip_plan: Arc<ChipPlan>,
         pool: Arc<WorkerPool>,
     ) -> PlanBackend {
-        debug_assert!(chip_plan.matches(&fm));
+        debug_assert!(chip_plan.matches_views(&truth, &known));
         PlanBackend {
             arch,
-            fm,
+            truth,
+            known,
             kind,
             pool,
             chip_plan,
@@ -116,7 +121,14 @@ impl PlanBackend {
                 .zip(&qweights)
                 .map(|(l, qw)| {
                     let Layer::Fc(f) = l else { unreachable!("MLP arch") };
-                    MatmulPlan::compile(&self.fm, self.kind, qw, f.din, f.dout)
+                    MatmulPlan::compile_views(
+                        &self.truth,
+                        &self.known,
+                        self.kind,
+                        qw,
+                        f.din,
+                        f.dout,
+                    )
                 })
                 .collect(),
         );
@@ -158,7 +170,7 @@ impl ForwardBackend for PlanBackend {
     }
 
     fn fingerprint(&self) -> u64 {
-        self.chip_plan.fingerprint()
+        self.chip_plan.session_fingerprint()
     }
 
     fn kind(&self) -> MaskKind {

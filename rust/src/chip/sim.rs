@@ -1,13 +1,16 @@
 //! [`SimBackend`] — the cycle-level oracle behind the [`super::Backend::Sim`]
 //! session: every matmul walks the bit-accurate PE chains of
-//! [`crate::systolic::TiledMatmul`] with the chip's stuck-at faults (and,
-//! under FAP, the bypass muxes) live. Slow by design; it is the reference
-//! the compiled-plan backend is verified against.
+//! [`crate::systolic::TiledMatmul`] with the chip's **fabricated**
+//! stuck-at faults live and, under FAP, the bypass muxes closed on
+//! exactly the MACs the controller's **known** view names — a fault that
+//! escaped localization keeps corrupting through the bypassed schedule.
+//! Slow by design; it is the reference the compiled-plan backend is
+//! verified against.
 
 use super::backend::ForwardBackend;
 use super::pipeline::{quantized_mlp_forward_scratch, ForwardScratch};
 use crate::exec::quantize_mlp_weights;
-use crate::faults::FaultMap;
+use crate::faults::{chip_fingerprint, FaultMap, KnownMap};
 use crate::mapping::MaskKind;
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Params};
@@ -27,11 +30,11 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
-    pub fn new(arch: Arch, fm: FaultMap, kind: MaskKind) -> SimBackend {
-        let tm = TiledMatmul::new(&fm, kind == MaskKind::FapBypass);
+    pub fn new(arch: Arch, truth: FaultMap, known: KnownMap, kind: MaskKind) -> SimBackend {
+        let tm = TiledMatmul::with_views(&truth, &known, kind == MaskKind::FapBypass);
         SimBackend {
             arch,
-            fingerprint: fm.fingerprint(),
+            fingerprint: chip_fingerprint(truth.fingerprint(), known.fingerprint()),
             kind,
             tm,
             qweights: None,

@@ -99,7 +99,7 @@ impl ForwardBackend for XlaBackend<'_> {
     }
 
     fn fingerprint(&self) -> u64 {
-        self.chip_plan.fingerprint()
+        self.chip_plan.session_fingerprint()
     }
 
     fn kind(&self) -> MaskKind {

@@ -377,7 +377,7 @@ impl<'rt> Harness<'rt> {
                     // retrain epoch reuse the same compiled masks
                     let plan = self.engine.plans.get_or_compile(
                         &a,
-                        chip.fault_map(),
+                        chip.true_fault_map(),
                         MaskKind::FapBypass,
                     );
                     let (fap_params, _rep) = apply_fap_planned(&baseline, &plan);
@@ -474,7 +474,7 @@ impl<'rt> Harness<'rt> {
                 .inject(k, self.cfg.seed ^ 0xF165)
                 .mitigate(MaskKind::FapBypass);
             let plan =
-                self.engine.plans.get_or_compile(&a, chip.fault_map(), MaskKind::FapBypass);
+                self.engine.plans.get_or_compile(&a, chip.true_fault_map(), MaskKind::FapBypass);
             let (fap_params, _) = apply_fap_planned(&baseline, &plan);
             let fap_acc = self.engine.float_accuracy(&a, &fap_params, &test)?;
 

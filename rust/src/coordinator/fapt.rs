@@ -165,12 +165,17 @@ pub fn fapt_retrain_native(
 /// artifact every downstream step (pruning, retrain masks, deployment)
 /// reads from.
 pub struct ProvisionOutcome {
+    /// The chip as fabricated (ground truth) — what the datapath executes.
     pub fault_map: FaultMap,
+    /// What localization told the controller (MAC granularity); the prune
+    /// and bypass masks in `plan` derive from exactly this view.
+    pub known: crate::faults::KnownMap,
     pub detected: usize,
     pub fap_report: super::fap::FapReport,
     pub result: FaptResult,
-    /// The chip's compiled plan — ship it with the model; its fingerprint
-    /// pins the exact fault map the retrained weights were tuned for.
+    /// The chip's compiled plan — ship it with the model; its `(truth,
+    /// known)` fingerprints pin the exact chip and controller view the
+    /// retrained weights were tuned for.
     pub plan: crate::exec::ChipPlan,
 }
 
@@ -197,16 +202,23 @@ pub fn provision_chip_engine(
     cfg: &FaptConfig,
 ) -> Result<ProvisionOutcome> {
     // post-fab test: localize the faults (the paper assumes this step);
-    // the controller then mitigates the *detected* map at MAC granularity
+    // the controller then mitigates the *detected* MAC set while the
+    // truth map keeps driving the datapath — the plan is compiled from
+    // both roles, never from a reconstructed marker map
     let chip = crate::chip::Chip::new(arch.clone())
         .with_fault_map(fm.clone())
         .detect()?
         .mitigate(crate::mapping::MaskKind::FapBypass);
-    let known = chip.fault_map().clone();
+    let known = chip.known_map();
     let detected = chip.detected().unwrap_or(0);
     // compile once; FAP and every retrain epoch reuse the plan's masks
-    let plan = crate::exec::ChipPlan::compile(arch, &known, crate::mapping::MaskKind::FapBypass);
+    let plan = crate::exec::ChipPlan::compile_views(
+        arch,
+        fm,
+        &known,
+        crate::mapping::MaskKind::FapBypass,
+    );
     let (fap_params, fap_report) = super::fap::apply_fap_planned(baseline, &plan);
     let result = engine.retrain(arch, &fap_params, &plan.masks().prune, train, cfg)?;
-    Ok(ProvisionOutcome { fault_map: known, detected, fap_report, result, plan })
+    Ok(ProvisionOutcome { fault_map: fm.clone(), known, detected, fap_report, result, plan })
 }

@@ -6,11 +6,13 @@
 //! far too slow to be the campaign hot path. This layer treats the faulty
 //! chip as a *compile-once, run-many* target:
 //!
-//! 1. [`plan::MatmulPlan::compile`] lowers `(FaultMap, MaskKind, weights)`
-//!    into per-tile programs: pre-masked dense weight tiles for a blocked
-//!    i32 GEMM core, exact additive fault-correction constants where the
-//!    algebra allows, and straight-line chain programs for the few columns
-//!    a live fault forces off the GEMM core.
+//! 1. [`plan::MatmulPlan::compile_views`] lowers `(truth FaultMap, known
+//!    KnownMap, MaskKind, weights)` into per-tile programs: pre-masked
+//!    dense weight tiles for a blocked i32 GEMM core (bypass decisions
+//!    from the controller's *known* view), exact additive
+//!    fault-correction constants and straight-line chain programs from
+//!    the fabricated *truth* — a fault that escaped localization stays
+//!    live in the lowered program, exactly as on silicon.
 //! 2. [`gemm`] executes the dense part with a cache-blocked,
 //!    register-tiled **packed-panel microkernel**: dense weight columns
 //!    are packed panel-major once at compile time and run as 4x4 output
@@ -25,8 +27,9 @@
 //! 4. [`plan::ChipPlan`] bundles per-layer masks + tile programs for a
 //!    whole network, and [`plan::PlanCache`] (LRU-bounded, `Arc`-shared)
 //!    reuses compiled plans across sweep points, seeds, retrain epochs
-//!    and worker threads, keyed by the fault map's fingerprint so a new
-//!    fault map can never execute a stale plan.
+//!    and worker threads, keyed by the `(truth, known, kind)` fingerprints
+//!    so neither a new fault map nor a refreshed controller view can ever
+//!    execute a stale plan.
 //!
 //! New dataflows and mitigations plug in here: add a lowering rule in
 //! [`plan`] and every campaign inherits it.

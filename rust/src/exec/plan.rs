@@ -24,7 +24,7 @@
 
 use super::gemm;
 use super::pool::WorkerPool;
-use crate::faults::FaultMap;
+use crate::faults::{chip_fingerprint, FaultMap, KnownMap};
 use crate::mapping::{LayerMasks, MaskKind};
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
@@ -95,8 +95,10 @@ pub struct TileProgram {
 }
 
 impl TileProgram {
+    #[allow(clippy::too_many_arguments)]
     fn compile(
         fm: &FaultMap,
+        known: &KnownMap,
         kind: MaskKind,
         w: &[i32],
         k: usize,
@@ -113,14 +115,16 @@ impl TileProgram {
         let mut chain_cols = Vec::new();
 
         for c in 0..mw {
-            // effective weights + live (non-bypassed) fault rows
+            // effective weights + live (non-bypassed) fault rows: bypass
+            // decisions come from the controller's *known* view, the
+            // corruption masks from the fabricated *truth* — a truth
+            // fault that escaped the known view stays live
             let mut col_w = Vec::with_capacity(kh);
             let mut live = Vec::new();
             for r in 0..kh {
-                let faulty = fm.is_faulty(r, c);
-                let bypass = kind == MaskKind::FapBypass && faulty;
+                let bypass = kind == MaskKind::FapBypass && known.is_faulty(r, c);
                 col_w.push(if bypass { 0 } else { w[(k0 + r) * m + (m0 + c)] });
-                if faulty && !bypass {
+                if fm.is_faulty(r, c) && !bypass {
                     live.push(r);
                 }
             }
@@ -194,6 +198,7 @@ pub struct MatmulPlan {
     m: usize,
     kind: MaskKind,
     fingerprint: u64,
+    known_fingerprint: u64,
     tiles: Vec<TileProgram>,
     stats: PlanStats,
 }
@@ -203,18 +208,35 @@ pub struct MatmulPlan {
 const BATCH_BLOCK: usize = 32;
 
 impl MatmulPlan {
-    /// Lower `w` (`[k][m]` row-major, already quantized to the datapath's
-    /// int range) for the chip described by `fm` under mitigation `kind`.
+    /// [`MatmulPlan::compile_views`] under perfect controller knowledge
+    /// (`known == fm`'s MAC set) — campaigns that skip localization.
     pub fn compile(fm: &FaultMap, kind: MaskKind, w: &[i32], k: usize, m: usize) -> MatmulPlan {
+        MatmulPlan::compile_views(fm, &KnownMap::perfect(fm), kind, w, k, m)
+    }
+
+    /// Lower `w` (`[k][m]` row-major, already quantized to the datapath's
+    /// int range) for the chip whose fabricated faults are `truth` and
+    /// whose controller knows `known`, under mitigation `kind`.
+    /// Corruption (chain programs, folded constants) is compiled from
+    /// `truth`; bypass (zeroed effective weights) from `known`.
+    pub fn compile_views(
+        truth: &FaultMap,
+        known: &KnownMap,
+        kind: MaskKind,
+        w: &[i32],
+        k: usize,
+        m: usize,
+    ) -> MatmulPlan {
         assert_eq!(w.len(), k * m);
-        let n = fm.n();
+        assert_eq!(truth.n(), known.n(), "truth and known views must share the grid");
+        let n = truth.n();
         let mut tiles = Vec::new();
         let mut stats = PlanStats::default();
         let mut k0 = 0;
         while k0 < k {
             let mut m0 = 0;
             while m0 < m {
-                let t = TileProgram::compile(fm, kind, w, k, m, k0, m0, n);
+                let t = TileProgram::compile(truth, known, kind, w, k, m, k0, m0, n);
                 stats.tiles += 1;
                 stats.dense_cols += t.dense_cols.len();
                 stats.folded_cols += t.base.iter().filter(|&&b| b != 0).count();
@@ -225,7 +247,16 @@ impl MatmulPlan {
             }
             k0 += n;
         }
-        MatmulPlan { n, k, m, kind, fingerprint: fm.fingerprint(), tiles, stats }
+        MatmulPlan {
+            n,
+            k,
+            m,
+            kind,
+            fingerprint: truth.fingerprint(),
+            known_fingerprint: known.fingerprint(),
+            tiles,
+            stats,
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -248,13 +279,22 @@ impl MatmulPlan {
         self.stats
     }
 
-    /// Fingerprint of the fault map this plan was compiled against.
+    /// Fingerprint of the **truth** fault map this plan was compiled
+    /// against (corruption source).
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
     }
 
-    /// Is this plan still valid for `fm`? A freshly injected fault map has
-    /// a different fingerprint, invalidating every plan compiled before it.
+    /// Fingerprint of the **known** view this plan's bypass masks were
+    /// compiled from.
+    pub fn known_fingerprint(&self) -> u64 {
+        self.known_fingerprint
+    }
+
+    /// Is this plan still valid for truth map `fm`? A freshly injected
+    /// fault map has a different fingerprint, invalidating every plan
+    /// compiled before it. Callers holding a controller view too should
+    /// check [`MatmulPlan::known_fingerprint`] as well.
     pub fn matches(&self, fm: &FaultMap) -> bool {
         self.n == fm.n() && self.fingerprint == fm.fingerprint()
     }
@@ -452,9 +492,14 @@ pub struct ChipPlan {
     arch_name: String,
     n: usize,
     kind: MaskKind,
+    /// Truth-map fingerprint (corruption source).
     fingerprint: u64,
+    /// Known-view fingerprint (bypass/prune source).
+    known_fp: u64,
     faulty_macs: usize,
     fault_rate: f64,
+    /// Truth faults the known view does not cover (escaped localization).
+    escaped_macs: usize,
     masks: LayerMasks,
     layer_plans: Vec<Option<MatmulPlan>>,
     /// [`qweights_fingerprint`] of the weights the tile programs were
@@ -463,41 +508,69 @@ pub struct ChipPlan {
 }
 
 impl ChipPlan {
-    /// Compile the mask-level plan for `(arch, fm, kind)` — the form the
-    /// XLA campaign path consumes. Layer tile programs are left empty; use
-    /// [`ChipPlan::compile_mlp`] when the native int executor is needed.
+    /// [`ChipPlan::compile_views`] under perfect controller knowledge.
     pub fn compile(arch: &Arch, fm: &FaultMap, kind: MaskKind) -> ChipPlan {
-        let masks = LayerMasks::build(arch, fm, kind);
+        ChipPlan::compile_views(arch, fm, &KnownMap::perfect(fm), kind)
+    }
+
+    /// Compile the mask-level plan for `(arch, truth, known, kind)` — the
+    /// form the XLA campaign path consumes: AND/OR corruption masks from
+    /// `truth`, prune/bypass masks from `known`. Layer tile programs are
+    /// left empty; use [`ChipPlan::compile_mlp_views`] when the native int
+    /// executor is needed.
+    pub fn compile_views(
+        arch: &Arch,
+        truth: &FaultMap,
+        known: &KnownMap,
+        kind: MaskKind,
+    ) -> ChipPlan {
+        let masks = LayerMasks::build_views(arch, truth, known, kind);
         ChipPlan {
             arch_name: arch.name.to_string(),
-            n: fm.n(),
+            n: truth.n(),
             kind,
-            fingerprint: fm.fingerprint(),
-            faulty_macs: fm.faulty_mac_count(),
-            fault_rate: fm.fault_rate(),
+            fingerprint: truth.fingerprint(),
+            known_fp: known.fingerprint(),
+            faulty_macs: truth.faulty_mac_count(),
+            fault_rate: truth.fault_rate(),
+            escaped_macs: known.escaped_from(truth),
             masks,
             layer_plans: arch.weighted_layers().iter().map(|_| None).collect(),
             weights_fp: None,
         }
     }
 
-    /// Compile masks *and* per-FC-layer tile programs from quantized layer
-    /// weights (`qweights[li]` row-major `[din][dout]`, see
-    /// [`quantize_mlp_weights`]).
+    /// [`ChipPlan::compile_mlp_views`] under perfect controller knowledge.
     pub fn compile_mlp(
         arch: &Arch,
         fm: &FaultMap,
         kind: MaskKind,
         qweights: &[Vec<i32>],
     ) -> ChipPlan {
-        let mut plan = ChipPlan::compile(arch, fm, kind);
+        ChipPlan::compile_mlp_views(arch, fm, &KnownMap::perfect(fm), kind, qweights)
+    }
+
+    /// Compile masks *and* per-FC-layer tile programs from quantized layer
+    /// weights (`qweights[li]` row-major `[din][dout]`, see
+    /// [`quantize_mlp_weights`]), splitting the two fault-map roles like
+    /// [`ChipPlan::compile_views`].
+    pub fn compile_mlp_views(
+        arch: &Arch,
+        truth: &FaultMap,
+        known: &KnownMap,
+        kind: MaskKind,
+        qweights: &[Vec<i32>],
+    ) -> ChipPlan {
+        let mut plan = ChipPlan::compile_views(arch, truth, known, kind);
         let weighted = arch.weighted_layers();
         assert_eq!(qweights.len(), weighted.len());
         plan.layer_plans = weighted
             .iter()
             .zip(qweights)
             .map(|(l, qw)| match l {
-                Layer::Fc(f) => Some(MatmulPlan::compile(fm, kind, qw, f.din, f.dout)),
+                Layer::Fc(f) => {
+                    Some(MatmulPlan::compile_views(truth, known, kind, qw, f.din, f.dout))
+                }
                 _ => None,
             })
             .collect();
@@ -517,12 +590,32 @@ impl ChipPlan {
         self.kind
     }
 
+    /// Truth-map fingerprint (corruption source).
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
     }
 
+    /// Known-view fingerprint (bypass/prune source).
+    pub fn known_fingerprint(&self) -> u64 {
+        self.known_fp
+    }
+
+    /// The session-level chip identity this plan executes:
+    /// [`chip_fingerprint`] over (truth, known). Two plans with the same
+    /// truth but different controller views are different sessions.
+    pub fn session_fingerprint(&self) -> u64 {
+        chip_fingerprint(self.fingerprint, self.known_fp)
+    }
+
+    /// Physically faulty MACs of the truth map.
     pub fn faulty_macs(&self) -> usize {
         self.faulty_macs
+    }
+
+    /// Truth-faulty MACs the known view missed — mitigation derived from
+    /// this plan leaves their corruption live (silent data corruption).
+    pub fn escaped_macs(&self) -> usize {
+        self.escaped_macs
     }
 
     pub fn fault_rate(&self) -> f64 {
@@ -548,18 +641,29 @@ impl ChipPlan {
         self.weights_fp
     }
 
-    /// Is this plan still valid for `fm`?
+    /// Is this plan still valid for truth map `fm`? (Truth role only —
+    /// prefer [`ChipPlan::matches_views`] when a controller view exists.)
     pub fn matches(&self, fm: &FaultMap) -> bool {
         self.n == fm.n() && self.fingerprint == fm.fingerprint()
     }
+
+    /// Is this plan valid for the `(truth, known)` pair? A stale plan
+    /// compiled under either an old truth map *or* an old controller view
+    /// must never be reused.
+    pub fn matches_views(&self, truth: &FaultMap, known: &KnownMap) -> bool {
+        self.matches(truth) && self.known_fp == known.fingerprint()
+    }
 }
 
-/// Compile-once cache over `(arch, fault-map fingerprint, mitigation)`.
+/// Compile-once cache over `(arch, truth fingerprint, known fingerprint,
+/// mitigation)`.
 ///
 /// Campaigns hit this once per chip and reuse the plan across every sweep
 /// point, seed and retrain epoch that touches the same chip; injecting a
-/// new fault map changes the fingerprint, so stale plans are structurally
-/// unreachable (invalidation by construction).
+/// new fault map — or refreshing the controller's detected view — changes
+/// the key, so stale plans are structurally unreachable (invalidation by
+/// construction). A plan compiled under either an outdated truth map or
+/// an outdated known view can never be served.
 ///
 /// Capacity is bounded with **LRU eviction**: a long sweep injects a
 /// fresh chip per iteration, and each cached plan retains full per-layer
@@ -574,7 +678,7 @@ impl ChipPlan {
 /// shared across the worker pool's threads and the fleet's serving
 /// workers instead of being recompiled per thread.
 pub struct PlanCache {
-    map: HashMap<(String, u64, u8), CacheEntry>,
+    map: HashMap<(String, u64, u64, u8), CacheEntry>,
     capacity: usize,
     /// Logical clock bumped per access; entries carry their last-touched
     /// tick, and eviction removes the minimum.
@@ -607,17 +711,31 @@ impl PlanCache {
         PlanCache { map: HashMap::new(), capacity, tick: 0, hits: 0, misses: 0 }
     }
 
+    /// [`PlanCache::get_or_compile_views`] under perfect controller
+    /// knowledge. Note the key still carries the (perfect) known
+    /// fingerprint, so this shares entries with a detection pass that
+    /// achieved full recall — same knowledge, same plan.
     pub fn get_or_compile(&mut self, arch: &Arch, fm: &FaultMap, kind: MaskKind) -> Arc<ChipPlan> {
-        let key = (arch.name.to_string(), fm.fingerprint(), kind as u8);
+        self.get_or_compile_views(arch, fm, &KnownMap::perfect(fm), kind)
+    }
+
+    pub fn get_or_compile_views(
+        &mut self,
+        arch: &Arch,
+        truth: &FaultMap,
+        known: &KnownMap,
+        kind: MaskKind,
+    ) -> Arc<ChipPlan> {
+        let key = (arch.name.to_string(), truth.fingerprint(), known.fingerprint(), kind as u8);
         self.tick += 1;
         if let Some(entry) = self.map.get_mut(&key) {
             self.hits += 1;
             entry.last_used = self.tick;
-            debug_assert!(entry.plan.matches(fm));
+            debug_assert!(entry.plan.matches_views(truth, known));
             return entry.plan.clone();
         }
         self.misses += 1;
-        let plan = Arc::new(ChipPlan::compile(arch, fm, kind));
+        let plan = Arc::new(ChipPlan::compile_views(arch, truth, known, kind));
         if self.capacity > 0 {
             if self.map.len() >= self.capacity {
                 self.evict_lru();
@@ -637,9 +755,11 @@ impl PlanCache {
         }
     }
 
-    /// Is this plan currently cached? (Does not touch LRU state.)
+    /// Is this plan currently cached? (Does not touch LRU state; assumes
+    /// the perfect-knowledge view like [`PlanCache::get_or_compile`].)
     pub fn contains(&self, arch: &Arch, fm: &FaultMap, kind: MaskKind) -> bool {
-        self.map.contains_key(&(arch.name.to_string(), fm.fingerprint(), kind as u8))
+        let known_fp = KnownMap::perfect(fm).fingerprint();
+        self.map.contains_key(&(arch.name.to_string(), fm.fingerprint(), known_fp, kind as u8))
     }
 
     pub fn len(&self) -> usize {
@@ -704,6 +824,54 @@ mod tests {
             let want = TiledMatmul::new(&fm, byp).matmul(&a, &w, batch, k, m);
             assert_eq!(plan.execute(&a, batch), want, "kind {kind:?}");
         }
+    }
+
+    #[test]
+    fn views_split_matches_sim_and_diverges_from_perfect_knowledge() {
+        // one detected + one escaped fault: the compiled plan must execute
+        // the truth (escaped corruption live) while bypassing only the
+        // known MAC — bit-exact with the cycle-level with_views oracle
+        let n = 4;
+        let mut truth = FaultMap::healthy(n);
+        truth.add(StuckAt { row: 0, col: 1, bit: 28, value: true }); // detected
+        truth.add(StuckAt { row: 2, col: 3, bit: 30, value: true }); // escaped
+        let known = KnownMap::from_macs(n, [(0, 1)]);
+        let mut rng = Rng::new(5);
+        let (k, m, batch) = (10, 9, 3);
+        let (a, w) = rand_case(&mut rng, k, m, batch);
+        for (kind, byp) in [(MaskKind::Unmitigated, false), (MaskKind::FapBypass, true)] {
+            let plan = MatmulPlan::compile_views(&truth, &known, kind, &w, k, m);
+            let want = TiledMatmul::with_views(&truth, &known, byp).matmul(&a, &w, batch, k, m);
+            assert_eq!(plan.execute(&a, batch), want, "kind {kind:?}");
+            // and differs from the perfect-knowledge lowering under FAP
+            // (the escaped fault is neither bypassed nor harmless)
+            if byp {
+                let perfect = MatmulPlan::compile(&truth, kind, &w, k, m);
+                assert_ne!(plan.execute(&a, batch), perfect.execute(&a, batch));
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cache_keys_on_known_view_too() {
+        let a = mnist();
+        let mut cache = PlanCache::new();
+        let truth = inject_uniform(FaultSpec::new(16), 8, &mut Rng::new(4));
+        let full = KnownMap::perfect(&truth);
+        let partial = KnownMap::from_macs(16, truth.faulty_macs().into_iter().take(4));
+        let p1 = cache.get_or_compile_views(&a, &truth, &full, MaskKind::FapBypass);
+        let p2 = cache.get_or_compile_views(&a, &truth, &partial, MaskKind::FapBypass);
+        assert!(!Arc::ptr_eq(&p1, &p2), "a different controller view is a different plan");
+        assert_eq!(p2.escaped_macs(), 4);
+        assert_ne!(p1.session_fingerprint(), p2.session_fingerprint());
+        // perfect-knowledge wrapper and full-recall detection share a key
+        let p3 = cache.get_or_compile(&a, &truth, MaskKind::FapBypass);
+        assert!(Arc::ptr_eq(&p1, &p3));
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        // matches_views enforces both roles
+        assert!(p1.matches_views(&truth, &full));
+        assert!(!p1.matches_views(&truth, &partial));
+        assert!(p2.matches_views(&truth, &partial));
     }
 
     #[test]

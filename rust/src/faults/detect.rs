@@ -15,7 +15,7 @@
 //! exercise the low bits and the sign-extension region), the per-fault
 //! escape probability is ~2^-p.
 
-use super::model::FaultMap;
+use super::model::{FaultMap, StuckAt};
 use crate::systolic::SystolicArray;
 use crate::util::Rng;
 
@@ -24,14 +24,78 @@ use crate::util::Rng;
 pub struct TestPatterns {
     /// Random activation patterns per range probe.
     pub random_patterns: usize,
-    /// RNG seed for pattern generation.
+    /// RNG seed for pattern generation (and for the per-fault escape
+    /// draws, so a given fault's observability is stable across re-tests
+    /// with the same test program).
     pub seed: u64,
+    /// Per-fault escape probability in `[0, 1]` — the paper's ~2^-p
+    /// observability model made explicit: a stuck-at bit is visible only
+    /// when some pattern's correct partial sum differs at that bit, so
+    /// with `p` random patterns a fault escapes with probability ~2^-p.
+    /// `0.0` (default) models exhaustive coverage; campaigns that study
+    /// silent data corruption set this directly instead of shrinking the
+    /// pattern set. Escapes are drawn per *fault* (deterministically from
+    /// `seed` + the fault's identity), applied by [`localize_from_map`].
+    pub escape_prob: f64,
 }
 
 impl Default for TestPatterns {
     fn default() -> Self {
-        TestPatterns { random_patterns: 8, seed: 0xD1A6 }
+        TestPatterns { random_patterns: 8, seed: 0xD1A6, escape_prob: 0.0 }
     }
+}
+
+impl TestPatterns {
+    /// The observability model's escape probability for this pattern
+    /// count: ~2^-p for `p` random patterns.
+    pub fn model_escape_prob(&self) -> f64 {
+        0.5f64.powi(self.random_patterns as i32)
+    }
+}
+
+/// The chip's *canonical physical* faults, reconstructed from the
+/// AND/OR masks: one stuck-at per (MAC, bit) that actually perturbs the
+/// datapath. Escape draws run over these, never the raw insertion list —
+/// a stuck-at-0 shadowed by a stuck-at-1 on the same bit is physically
+/// inert (`FaultMap::add` canonicalization) and must not be able to make
+/// its MAC observable when the shadowing fault escaped the test program.
+fn canonical_faults(fm: &FaultMap) -> Vec<StuckAt> {
+    let mut out = Vec::new();
+    for r in 0..fm.n() {
+        for c in 0..fm.n() {
+            if !fm.is_faulty(r, c) {
+                continue;
+            }
+            let (and, or) = (fm.and_at(r, c), fm.or_at(r, c));
+            for bit in 0..32u8 {
+                let m = 1i32 << bit;
+                if or & m != 0 {
+                    out.push(StuckAt { row: r as u16, col: c as u16, bit, value: true });
+                } else if and & m == 0 {
+                    out.push(StuckAt { row: r as u16, col: c as u16, bit, value: false });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Does fault `f` escape the test program? Deterministic in
+/// `(seed, fault identity)`: the same fault keeps escaping (or keeps
+/// being caught by) the same test program across re-detections — exactly
+/// how a structurally unobservable stuck-at behaves in the field.
+fn fault_escapes(seed: u64, f: &StuckAt, p: f64) -> bool {
+    if p <= 0.0 {
+        return false;
+    }
+    if p >= 1.0 {
+        return true;
+    }
+    let id = (f.row as u64) << 48
+        | (f.col as u64) << 32
+        | (f.bit as u64) << 8
+        | f.value as u64;
+    Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15)).f64() < p
 }
 
 /// Localization result.
@@ -41,6 +105,24 @@ pub struct DetectReport {
     pub faulty: Vec<(usize, usize)>,
     /// Total array runs (test cost).
     pub array_runs: usize,
+    /// Per-fault escape probability the test program ran under.
+    pub escape_prob: f64,
+    /// Controller-side estimate of how many faults escaped this test
+    /// program: `detected * p / (1 - p)` (the controller knows its test
+    /// coverage `p` and the detected count — never the ground truth).
+    pub escaped_estimate: f64,
+}
+
+impl DetectReport {
+    fn with_escapes(mut self, p: f64) -> DetectReport {
+        self.escape_prob = p;
+        self.escaped_estimate = if p < 1.0 {
+            self.faulty.len() as f64 * p / (1.0 - p)
+        } else {
+            f64::INFINITY
+        };
+        self
+    }
 }
 
 /// Localize faulty MACs on the device under test.
@@ -50,6 +132,15 @@ pub struct DetectReport {
 /// uses the public test interface: weight load, bypass-range control, run,
 /// observe outputs.
 pub fn localize_faults(dut: &mut SystolicArray, cfg: TestPatterns) -> DetectReport {
+    // The raw-DUT path cannot model localization escapes — the DUT's
+    // faults *are* its observable behaviour. Callers wanting the escape
+    // model go through [`localize_from_map`], which pre-filters the
+    // observable map and stamps the report itself.
+    debug_assert!(
+        cfg.escape_prob == 0.0,
+        "localize_faults cannot model escapes (escape_prob {}); use localize_from_map",
+        cfg.escape_prob
+    );
     let n = dut.n();
     let mut rng = Rng::new(cfg.seed);
 
@@ -117,13 +208,36 @@ pub fn localize_faults(dut: &mut SystolicArray, cfg: TestPatterns) -> DetectRepo
     // restore mission mode
     dut.clear_bypass();
     faulty.sort_unstable();
-    DetectReport { faulty, array_runs: runs }
+    DetectReport { faulty, array_runs: runs, escape_prob: 0.0, escaped_estimate: 0.0 }
 }
 
 /// Convenience: localize directly from a fault map (builds the DUT).
+///
+/// This is where [`TestPatterns::escape_prob`] applies: each *canonical
+/// physical* fault of the truth map (one stuck-at per perturbed bit —
+/// shadowed entries of the insertion list don't participate)
+/// independently escapes the test program with that probability
+/// (deterministic per `(seed, fault)`, so re-running the same program on
+/// the same chip reproduces the same escapes); escaped faults are
+/// invisible to every probe, exactly as if no pattern ever excited their
+/// stuck bit. The raw-DUT path ([`localize_faults`]) cannot model escapes
+/// — the DUT's faults *are* its observable behaviour.
 pub fn localize_from_map(fm: &FaultMap, cfg: TestPatterns) -> DetectReport {
-    let mut dut = SystolicArray::with_faults(fm);
-    localize_faults(&mut dut, cfg)
+    let observable = if cfg.escape_prob > 0.0 {
+        FaultMap::from_faults(
+            fm.n(),
+            canonical_faults(fm)
+                .into_iter()
+                .filter(|f| !fault_escapes(cfg.seed, f, cfg.escape_prob)),
+        )
+    } else {
+        fm.clone()
+    };
+    let mut dut = SystolicArray::with_faults(&observable);
+    // escapes were applied above by filtering the observable map; hand
+    // the raw localization a program with the field cleared
+    localize_faults(&mut dut, TestPatterns { escape_prob: 0.0, ..cfg })
+        .with_escapes(cfg.escape_prob)
 }
 
 #[cfg(test)]
@@ -175,6 +289,65 @@ mod tests {
             assert!(truth.contains(f), "false positive at {f:?}");
         }
         assert_eq!(rep.faulty, truth, "missed faults");
+    }
+
+    #[test]
+    fn forced_escapes_suppress_detection_deterministically() {
+        let fm = inject_uniform(FaultSpec::new(16), 30, &mut Rng::new(12));
+        let truth = fm.faulty_macs();
+        // escape_prob 1.0: every fault escapes, nothing is detected
+        let all = TestPatterns { escape_prob: 1.0, ..Default::default() };
+        let rep = localize_from_map(&fm, all);
+        assert!(rep.faulty.is_empty());
+        assert_eq!(rep.escape_prob, 1.0);
+        // partial escapes: detected ⊆ truth, strictly fewer at p=0.5
+        let half = TestPatterns { escape_prob: 0.5, ..Default::default() };
+        let rep1 = localize_from_map(&fm, half);
+        assert!(rep1.faulty.len() < truth.len());
+        for f in &rep1.faulty {
+            assert!(truth.contains(f), "false positive at {f:?}");
+        }
+        // same chip + same test program => same escapes on re-detection
+        let rep2 = localize_from_map(&fm, half);
+        assert_eq!(rep1.faulty, rep2.faulty);
+        // the controller-side estimate is detected * p / (1 - p)
+        assert!((rep1.escaped_estimate - rep1.faulty.len() as f64).abs() < 1e-9);
+        // escape_prob 0 keeps the exhaustive-coverage behaviour
+        let rep0 = localize_from_map(&fm, TestPatterns::default());
+        assert_eq!(rep0.faulty, truth);
+        assert_eq!(rep0.escaped_estimate, 0.0);
+    }
+
+    #[test]
+    fn shadowed_stuck_at_0_does_not_perturb_escapes() {
+        // both polarities on one bit: physically a pure stuck-at-1
+        // (FaultMap::add canonicalization), so detection under escapes
+        // must behave exactly like the pure map for every test program —
+        // the inert stuck-at-0 must never make the MAC observable when
+        // the real stuck-at-1 escaped
+        let sa1 = StuckAt { row: 3, col: 2, bit: 7, value: true };
+        let sa0 = StuckAt { row: 3, col: 2, bit: 7, value: false };
+        let shadowed = FaultMap::from_faults(8, [sa0, sa1]);
+        let pure = FaultMap::from_faults(8, [sa1]);
+        let (mut caught, mut escaped) = (0, 0);
+        for seed in 0..32 {
+            let cfg = TestPatterns { escape_prob: 0.5, seed, ..Default::default() };
+            let a = localize_from_map(&shadowed, cfg);
+            let b = localize_from_map(&pure, cfg);
+            assert_eq!(a.faulty, b.faulty, "seed {seed}: shadowed stuck-at-0 must be inert");
+            match a.faulty.as_slice() {
+                [] => escaped += 1,
+                [(3, 2)] => caught += 1,
+                other => panic!("unexpected detection {other:?} at seed {seed}"),
+            }
+        }
+        assert!(caught > 0 && escaped > 0, "both outcomes must occur over 32 programs");
+    }
+
+    #[test]
+    fn model_escape_prob_is_two_to_minus_p() {
+        let cfg = TestPatterns { random_patterns: 8, ..Default::default() };
+        assert!((cfg.model_escape_prob() - 1.0 / 256.0).abs() < 1e-12);
     }
 
     #[test]

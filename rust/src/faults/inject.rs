@@ -75,7 +75,40 @@ pub fn inject_clustered(
     let mut fm = FaultMap::healthy(spec.n);
     let mut marked = vec![false; total];
     let mut count = 0;
+    let place = |fm: &mut FaultMap, rng: &mut Rng, r: usize, c: usize| {
+        for _ in 0..spec.faults_per_mac {
+            fm.add(StuckAt {
+                row: r as u16,
+                col: c as u16,
+                bit: rng.below(32) as u8,
+                value: rng.bool(0.5),
+            });
+        }
+    };
+    // Consecutive seeds that placed nothing: near grid saturation the
+    // remaining budget can exceed the unmarked cells reachable from any
+    // sampled seed, and the rejection loop alone would spin the outer
+    // `while` unboundedly. After this many dry seeds we fall back to a
+    // deterministic fill of the remaining budget.
+    const MAX_DRY_SEEDS: usize = 16;
+    let mut dry_seeds = 0;
     while count < faulty_macs {
+        if dry_seeds >= MAX_DRY_SEEDS {
+            // saturation fallback: place the remaining faults
+            // deterministically in row-major order over unmarked cells
+            for idx in 0..total {
+                if count >= faulty_macs {
+                    break;
+                }
+                if marked[idx] {
+                    continue;
+                }
+                marked[idx] = true;
+                place(&mut fm, rng, idx / spec.n, idx % spec.n);
+                count += 1;
+            }
+            break;
+        }
         // drop a cluster seed, then walk outward marking cells until the
         // cluster budget (or the global budget) is spent
         let cr = rng.below(spec.n);
@@ -97,17 +130,11 @@ pub fn inject_clustered(
                 continue;
             }
             marked[idx] = true;
-            for _ in 0..spec.faults_per_mac {
-                fm.add(StuckAt {
-                    row: r as u16,
-                    col: c as u16,
-                    bit: rng.below(32) as u8,
-                    value: rng.bool(0.5),
-                });
-            }
+            place(&mut fm, rng, r as usize, c as usize);
             placed += 1;
             count += 1;
         }
+        dry_seeds = if placed == 0 { dry_seeds + 1 } else { 0 };
     }
     fm
 }
@@ -161,6 +188,23 @@ mod tests {
         let mut rng = Rng::new(4);
         let fm = inject_clustered(FaultSpec::new(32), 50, 3, &mut rng);
         assert_eq!(fm.faulty_mac_count(), 50);
+    }
+
+    #[test]
+    fn clustered_terminates_at_full_grid_saturation() {
+        // regression: faulty_macs == n*n with a small radius used to spin
+        // the outer loop once reachable cells around sampled seeds were
+        // exhausted; the saturation fallback must fill the grid exactly
+        for (n, radius) in [(8usize, 1usize), (6, 0), (12, 2)] {
+            let mut rng = Rng::new(9 + n as u64);
+            let fm = inject_clustered(FaultSpec::new(n), n * n, radius, &mut rng);
+            assert_eq!(fm.faulty_mac_count(), n * n, "n={n} radius={radius}");
+            assert_eq!(fm.fault_rate(), 1.0);
+        }
+        // near-saturation (all but one cell) terminates too
+        let mut rng = Rng::new(77);
+        let fm = inject_clustered(FaultSpec::new(10), 99, 1, &mut rng);
+        assert_eq!(fm.faulty_mac_count(), 99);
     }
 
     #[test]

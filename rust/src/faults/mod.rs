@@ -5,6 +5,13 @@
 //! nodes of the MAC datapath; we model them bit-accurately at the MAC
 //! output register (see DESIGN.md "Fault model"): a fault is a bit of the
 //! PE's int32 accumulator output stuck at 0 or 1.
+//!
+//! Two distinct roles, two distinct types (DESIGN.md "Truth vs known"):
+//! * [`FaultMap`] — the chip **as fabricated** (bit-level AND/OR masks);
+//!   every backend corrupts the datapath from this, and only this.
+//! * [`KnownMap`] — what the controller learned from localization (MAC
+//!   granularity, possibly incomplete when faults escape the test
+//!   program); every bypass/prune mask derives from this, and only this.
 
 pub mod aging;
 pub mod detect;
@@ -12,6 +19,6 @@ pub mod inject;
 pub mod model;
 
 pub use aging::{AgingChip, AgingModel};
-pub use detect::{localize_faults, DetectReport, TestPatterns};
+pub use detect::{localize_faults, localize_from_map, DetectReport, TestPatterns};
 pub use inject::{inject_clustered, inject_uniform, FaultSpec};
-pub use model::{FaultMap, StuckAt};
+pub use model::{chip_fingerprint, FaultMap, KnownMap, StuckAt};

@@ -12,7 +12,9 @@ pub struct StuckAt {
     pub value: bool,
 }
 
-/// Per-chip fault map over an `n x n` MAC grid.
+/// Per-chip fault map over an `n x n` MAC grid — the chip **as
+/// fabricated** (ground truth). Execution corruption always comes from
+/// here; controller-side mitigation masks come from a [`KnownMap`].
 ///
 /// Stored densely as per-MAC AND/OR masks — exactly the form the datapath
 /// applies every cycle (`out = (acc + w*a) & and | or`) and the form the
@@ -20,6 +22,15 @@ pub struct StuckAt {
 /// * `and_mask[i] == -1` and `or_mask[i] == 0`  ⇒  MAC `i` is healthy.
 /// * a stuck-at-0 at bit b clears bit b of `and_mask`;
 /// * a stuck-at-1 at bit b sets bit b of `or_mask`.
+///
+/// **Conflicting-fault precedence**: when both polarities land on the same
+/// bit of the same MAC (possible with `faults_per_mac > 1` and aging
+/// superset maps), stuck-at-1 wins — the OR stage is applied last in the
+/// datapath, so `(acc & and) | or` forces the bit to 1 regardless of the
+/// AND mask. [`FaultMap::add`] canonicalizes the masks to that precedence
+/// (an OR bit set implies the AND bit set), so two maps with identical
+/// datapath behaviour always carry identical masks and
+/// [`FaultMap::fingerprint`]s.
 #[derive(Clone, Debug)]
 pub struct FaultMap {
     n: usize,
@@ -52,11 +63,18 @@ impl FaultMap {
         assert!((f.row as usize) < self.n && (f.col as usize) < self.n);
         assert!(f.bit < 32);
         let idx = f.row as usize * self.n + f.col as usize;
+        let bit = 1i32 << f.bit;
         if f.value {
-            self.or_mask[idx] |= 1i32 << f.bit;
-        } else {
-            self.and_mask[idx] &= !(1i32 << f.bit);
+            // stuck-at-1: the OR stage runs last, so it dominates any
+            // stuck-at-0 on the same bit; canonicalize by re-setting the
+            // AND bit so masks (and fingerprints) match the datapath
+            self.or_mask[idx] |= bit;
+            self.and_mask[idx] |= bit;
+        } else if self.or_mask[idx] & bit == 0 {
+            self.and_mask[idx] &= !bit;
         }
+        // else: a stuck-at-1 already owns this bit — the stuck-at-0 is
+        // shadowed in the datapath, so it must not perturb the masks
         self.faults.push(f);
     }
 
@@ -130,6 +148,134 @@ impl FaultMap {
         }
         h
     }
+}
+
+/// Controller-side knowledge of a chip's faults, at **MAC granularity
+/// only** — post-fabrication localization (paper §5.1) observes corrupted
+/// column sums through the DFT bypass search; it can say *which MAC* is
+/// broken, never which accumulator bit is stuck or at which polarity.
+///
+/// Every mitigation mask (FAP bypass, weight prune) derives from this
+/// view. Corruption masks must **never** be built from it: they come from
+/// the [`FaultMap`] truth the fab actually delivered. Keeping the two
+/// roles as distinct types makes that split structural — a `KnownMap` has
+/// no AND/OR masks to corrupt with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KnownMap {
+    n: usize,
+    faulty: Vec<bool>,
+    count: usize,
+}
+
+impl KnownMap {
+    /// A controller that believes the chip is defect-free.
+    pub fn empty(n: usize) -> KnownMap {
+        assert!(n > 0 && n <= u16::MAX as usize);
+        KnownMap { n, faulty: vec![false; n * n], count: 0 }
+    }
+
+    /// Perfect knowledge: the controller knows exactly the truth's faulty
+    /// MACs (campaigns that skip the localization step assume this).
+    pub fn perfect(truth: &FaultMap) -> KnownMap {
+        let n = truth.n();
+        let mut km = KnownMap::empty(n);
+        for r in 0..n {
+            for c in 0..n {
+                if truth.is_faulty(r, c) {
+                    km.mark(r, c);
+                }
+            }
+        }
+        km
+    }
+
+    /// Knowledge from a localization result (MAC coordinates).
+    pub fn from_macs(n: usize, macs: impl IntoIterator<Item = (usize, usize)>) -> KnownMap {
+        let mut km = KnownMap::empty(n);
+        for (r, c) in macs {
+            km.mark(r, c);
+        }
+        km
+    }
+
+    /// Record MAC `(row, col)` as known-faulty.
+    pub fn mark(&mut self, row: usize, col: usize) {
+        assert!(row < self.n && col < self.n);
+        let cell = &mut self.faulty[row * self.n + col];
+        if !*cell {
+            *cell = true;
+            self.count += 1;
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_faulty(&self, row: usize, col: usize) -> bool {
+        self.faulty[row * self.n + col]
+    }
+
+    pub fn faulty_mac_count(&self) -> usize {
+        self.count
+    }
+
+    /// Coordinates of every known-faulty MAC, row-major order.
+    pub fn faulty_macs(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.count);
+        for r in 0..self.n {
+            for c in 0..self.n {
+                if self.is_faulty(r, c) {
+                    out.push((r, c));
+                }
+            }
+        }
+        out
+    }
+
+    /// Truth-faulty MACs this view does **not** know about — the faults
+    /// that escaped localization and will silently corrupt the datapath
+    /// (no bypass, no prune) under any mitigation derived from this view.
+    pub fn escaped_from(&self, truth: &FaultMap) -> usize {
+        assert_eq!(self.n, truth.n());
+        let mut escaped = 0;
+        for r in 0..self.n {
+            for c in 0..self.n {
+                if truth.is_faulty(r, c) && !self.is_faulty(r, c) {
+                    escaped += 1;
+                }
+            }
+        }
+        escaped
+    }
+
+    /// Content fingerprint (FNV-1a over the packed faulty bits + n).
+    /// Two views that know the same MAC set hash equal regardless of how
+    /// the knowledge was built ([`KnownMap::perfect`] vs detection).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ (self.n as u64).rotate_left(17);
+        let mut word = 0u64;
+        for (i, &f) in self.faulty.iter().enumerate() {
+            word = (word << 1) | f as u64;
+            if i % 64 == 63 {
+                h ^= word;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+                word = 0;
+            }
+        }
+        h ^= word ^ (self.faulty.len() as u64);
+        h.wrapping_mul(0x0000_0100_0000_01B3)
+    }
+}
+
+/// The session-level chip identity: one value that changes when *either*
+/// fault-map role changes. Compiled execution state is valid only for one
+/// `(truth, known)` pair — truth decides the corruption the datapath
+/// applies, known decides the bypass/prune masks — so backends fingerprint
+/// sessions with this combination, never with either map alone.
+pub fn chip_fingerprint(truth_fp: u64, known_fp: u64) -> u64 {
+    truth_fp ^ known_fp.rotate_left(23).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 #[cfg(test)]
@@ -210,6 +356,76 @@ mod tests {
     #[should_panic]
     fn out_of_range_fault_rejected() {
         FaultMap::from_faults(2, [StuckAt { row: 2, col: 0, bit: 0, value: true }]);
+    }
+
+    #[test]
+    fn conflicting_polarities_canonicalize_to_stuck_at_1() {
+        let sa0 = StuckAt { row: 1, col: 1, bit: 7, value: false };
+        let sa1 = StuckAt { row: 1, col: 1, bit: 7, value: true };
+        let a = FaultMap::from_faults(4, [sa0, sa1]);
+        let b = FaultMap::from_faults(4, [sa1, sa0]);
+        let pure = FaultMap::from_faults(4, [sa1]);
+        // datapath: the OR stage runs last, so bit 7 reads 1 either way
+        for v in [0i32, -1, 0x80, 123456] {
+            assert_eq!(a.corrupt(1, 1, v), v | (1 << 7));
+            assert_eq!(b.corrupt(1, 1, v), a.corrupt(1, 1, v));
+            assert_eq!(pure.corrupt(1, 1, v), a.corrupt(1, 1, v));
+        }
+        // canonical masks: fingerprint agrees with datapath behaviour in
+        // every insertion order, and matches the pure stuck-at-1 map
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), pure.fingerprint());
+        // non-conflicting bits keep composing
+        let mixed = FaultMap::from_faults(
+            4,
+            [sa1, sa0, StuckAt { row: 1, col: 1, bit: 2, value: false }],
+        );
+        assert_eq!(mixed.corrupt(1, 1, 0b1000_0100), (0b1000_0000) | (1 << 7));
+    }
+
+    #[test]
+    fn known_map_tracks_mac_knowledge() {
+        let truth = FaultMap::from_faults(
+            8,
+            [
+                StuckAt { row: 1, col: 2, bit: 30, value: true },
+                StuckAt { row: 5, col: 0, bit: 3, value: false },
+            ],
+        );
+        let perfect = KnownMap::perfect(&truth);
+        assert_eq!(perfect.faulty_mac_count(), 2);
+        assert!(perfect.is_faulty(1, 2) && perfect.is_faulty(5, 0));
+        assert_eq!(perfect.escaped_from(&truth), 0);
+        // detection-built knowledge of the same MAC set is the same view
+        let detected = KnownMap::from_macs(8, [(1, 2), (5, 0)]);
+        assert_eq!(detected.fingerprint(), perfect.fingerprint());
+        assert_eq!(detected.faulty_macs(), vec![(1, 2), (5, 0)]);
+        // a partial view counts what escaped it
+        let partial = KnownMap::from_macs(8, [(1, 2)]);
+        assert_eq!(partial.escaped_from(&truth), 1);
+        assert_ne!(partial.fingerprint(), perfect.fingerprint());
+        // marking is idempotent
+        let mut km = partial.clone();
+        km.mark(1, 2);
+        assert_eq!(km.faulty_mac_count(), 1);
+    }
+
+    #[test]
+    fn chip_fingerprint_mixes_both_roles() {
+        let truth = FaultMap::from_faults(
+            4,
+            [StuckAt { row: 0, col: 0, bit: 30, value: true }],
+        );
+        let perfect = KnownMap::perfect(&truth);
+        let blind = KnownMap::empty(4);
+        let full = chip_fingerprint(truth.fingerprint(), perfect.fingerprint());
+        let escaped = chip_fingerprint(truth.fingerprint(), blind.fingerprint());
+        assert_ne!(full, escaped, "known view must reach the session identity");
+        assert_ne!(
+            chip_fingerprint(FaultMap::healthy(4).fingerprint(), blind.fingerprint()),
+            escaped,
+            "truth must reach the session identity"
+        );
     }
 
     #[test]

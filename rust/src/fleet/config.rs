@@ -3,6 +3,7 @@
 //! scaled per profile.
 
 use crate::coordinator::experiment::Profile;
+use crate::faults::TestPatterns;
 use crate::util::Rng;
 use anyhow::{bail, Result};
 
@@ -131,6 +132,12 @@ pub struct FleetConfig {
     /// `true` = FAP + FAP+T health management; `false` = unmitigated fleet
     /// (no detection, no masking, no retraining, no retirement).
     pub managed: bool,
+    /// Per-fault probability that a fault escapes the health monitor's
+    /// localization step (the paper's ~2^-p observability model; see
+    /// [`TestPatterns::escape_prob`]). Escaped faults are never bypassed
+    /// or pruned — the chip serves silent data corruption, which
+    /// `fleet.json` accounts separately.
+    pub escape_prob: f64,
 }
 
 impl Default for FleetConfig {
@@ -154,11 +161,24 @@ impl Default for FleetConfig {
             retrain_downtime_hours: 200.0,
             max_retrains: 8,
             managed: true,
+            escape_prob: 0.0,
         }
     }
 }
 
 impl FleetConfig {
+    /// The test program chip `id`'s health checks run: seeded per chip so
+    /// a fault that escapes one health check keeps escaping re-detection
+    /// (the test program does not change between checks) while different
+    /// chips draw independent escapes.
+    pub fn test_patterns(&self, chip_id: usize) -> TestPatterns {
+        TestPatterns {
+            escape_prob: self.escape_prob,
+            seed: self.seed ^ 0xD7EC_7000 ^ ((chip_id as u64) << 24),
+            ..Default::default()
+        }
+    }
+
     /// Scale the lifetime-loop knobs per profile (CLI `--profile`): `quick`
     /// is CI-sized, `paper` runs the long campaign.
     pub fn scaled(mut self, profile: Profile) -> FleetConfig {

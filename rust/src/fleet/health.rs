@@ -55,6 +55,15 @@ pub struct FleetOutcome {
     pub total_requests: usize,
     pub total_samples: usize,
     pub total_correct: usize,
+    /// Samples served by chips whose escaped (undetected, hence unpruned)
+    /// faults were live at serve time — the fleet's silent-data-corruption
+    /// exposure. Disjoint accounting from accuracy: these samples may
+    /// still classify correctly, but they ran on silicon the controller
+    /// believed cleaner than it was.
+    pub sdc_samples: usize,
+    /// Truth faults that had escaped detection across the fleet at the
+    /// end of life (sum over chips of the last health-check view).
+    pub escaped_faults_eol: usize,
     /// Wall-clock seconds spent inside the scheduler.
     pub serve_secs: f64,
     pub sim_cycles: u64,
@@ -66,6 +75,11 @@ impl FleetOutcome {
     /// Accuracy over all traffic actually served across the fleet's life.
     pub fn served_accuracy(&self) -> f64 {
         self.total_correct as f64 / self.total_samples.max(1) as f64
+    }
+
+    /// Fraction of all served traffic exposed to silent data corruption.
+    pub fn sdc_fraction(&self) -> f64 {
+        self.sdc_samples as f64 / self.total_samples.max(1) as f64
     }
 
     pub fn samples_per_sec(&self) -> f64 {
@@ -115,9 +129,13 @@ pub fn health_check(
 
     if !cfg.managed {
         // blind controller: the true (undetected) faults corrupt the
-        // datapath, the monitor only records how bad it got
+        // datapath, the monitor only records how bad it got. The view is
+        // explicitly blind (empty known map, not the perfect-knowledge
+        // default), so every truth fault counts as escaped and the served
+        // traffic is accounted as SDC-exposed.
         chip.view = Chip::new(arch.clone())
             .with_fault_map(snapshot)
+            .assume_blind()
             .mitigate(MaskKind::Unmitigated)
             .threads(1);
         chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
@@ -125,15 +143,24 @@ pub fn health_check(
     }
 
     // managed: re-run localization exactly like the post-fab flow, then
-    // re-mask the deployed weights against the newly detected map (aging
-    // maps are supersets, so pruning only grows)
+    // re-mask the deployed weights against the newly detected view (aging
+    // maps are supersets, so pruning only grows). The snapshot is the
+    // fabricated truth and keeps driving the datapath; the detected view
+    // only decides what gets bypassed/pruned — faults that escape the
+    // test program (cfg.escape_prob) stay physically live and serve
+    // silent data corruption.
     chip.view = Chip::new(arch.clone())
         .with_fault_map(snapshot)
-        .detect()?
+        .detect_with(cfg.test_patterns(id))?
         .mitigate(MaskKind::FapBypass)
         .threads(1);
-    let known = chip.view.fault_map().clone();
-    let plan = engine.plans.get_or_compile(arch, &known, MaskKind::FapBypass);
+    let known = chip.view.known_map();
+    let plan = engine.plans.get_or_compile_views(
+        arch,
+        chip.view.true_fault_map(),
+        &known,
+        MaskKind::FapBypass,
+    );
     let (remasked, _) = apply_fap_planned(&chip.params, &plan);
     chip.params = remasked;
     chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
@@ -193,6 +220,8 @@ pub fn run_lifetime(
         total_requests: 0,
         total_samples: 0,
         total_correct: 0,
+        sdc_samples: 0,
+        escaped_faults_eol: 0,
         serve_secs: 0.0,
         sim_cycles: 0,
         latencies_us: Vec::new(),
@@ -218,6 +247,12 @@ pub fn run_lifetime(
                 let chip = fleet.chips.iter_mut().find(|c| c.id == s.chip_id).unwrap();
                 chip.served_samples += s.samples;
                 chip.served_correct += s.correct;
+                // SDC exposure: this chip served the step's traffic with
+                // faults its controller view never caught
+                if chip.escaped_faulty_macs() > 0 {
+                    chip.sdc_samples += s.samples;
+                    out.sdc_samples += s.samples;
+                }
             }
             out.total_requests += w.requests;
             out.total_samples += w.samples;
@@ -237,6 +272,7 @@ pub fn run_lifetime(
         });
     }
     out.latencies_us.sort_by(|a, b| a.total_cmp(b));
+    out.escaped_faults_eol = fleet.chips.iter().map(|c| c.escaped_faulty_macs()).sum();
     Ok(out)
 }
 

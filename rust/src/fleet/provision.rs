@@ -61,6 +61,10 @@ pub struct FleetChip {
     /// Samples served over life (filled in by the scheduler).
     pub served_samples: usize,
     pub served_correct: usize,
+    /// Samples this chip served while at least one of its truth faults
+    /// had escaped the controller's detected view — traffic exposed to
+    /// silent data corruption (nothing bypassed or pruned those faults).
+    pub sdc_samples: usize,
 }
 
 impl FleetChip {
@@ -70,7 +74,13 @@ impl FleetChip {
 
     /// Detected fault count of the current controller view.
     pub fn known_faulty_macs(&self) -> usize {
-        self.view.fault_map().faulty_mac_count()
+        self.view.known_faulty_macs()
+    }
+
+    /// Truth faults of the last health-check snapshot that escaped the
+    /// controller's localization (see [`crate::chip::Chip::escaped_faulty_macs`]).
+    pub fn escaped_faulty_macs(&self) -> usize {
+        self.view.escaped_faulty_macs()
     }
 }
 
@@ -154,6 +164,7 @@ pub fn provision_fleet(
             initial_defects: defects,
             served_samples: 0,
             served_correct: 0,
+            sdc_samples: 0,
         });
     }
 

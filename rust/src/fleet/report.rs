@@ -38,11 +38,13 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
                 .field("final_faulty_macs", Json::num(final_faulty as f64))
                 .field("final_fault_rate", Json::num(c.aging.fault_rate()))
                 .field("detected_faulty_macs", Json::num(c.known_faulty_macs() as f64))
+                .field("escaped_faulty_macs", Json::num(c.escaped_faulty_macs() as f64))
                 .field("accuracy", Json::num(c.accuracy))
                 .field("status", Json::str(status))
                 .field("retired_at_hours", retired_at)
                 .field("served_samples", Json::num(c.served_samples as f64))
                 .field("served_correct", Json::num(c.served_correct as f64))
+                .field("sdc_samples", Json::num(c.sdc_samples as f64))
                 .field("downtime_hours", Json::num(c.downtime_hours))
                 .field("retrain_events", Json::Arr(retrains)),
         );
@@ -92,6 +94,10 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
         .field("provision_yield", Json::num(outcome.provision_yield))
         .field("effective_yield", Json::num(fleet.effective_yield()))
         .field("fleet_accuracy", Json::num(outcome.served_accuracy()))
+        .field("escape_prob", Json::num(cfg.escape_prob))
+        .field("sdc_samples", Json::num(outcome.sdc_samples as f64))
+        .field("sdc_fraction", Json::num(outcome.sdc_fraction()))
+        .field("escaped_faults_eol", Json::num(outcome.escaped_faults_eol as f64))
         .field("total_requests", Json::num(outcome.total_requests as f64))
         .field("total_samples", Json::num(outcome.total_samples as f64))
         .field("samples_per_sec", Json::num(outcome.samples_per_sec()))
@@ -135,6 +141,16 @@ pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
         outcome.p99_latency_us(),
         outcome.served_accuracy() * 100.0
     );
+    if outcome.sdc_samples > 0 || fleet.cfg.escape_prob > 0.0 {
+        println!(
+            "  SDC exposure: {} samples ({:.2}%) served by chips with escaped faults \
+             ({} escaped faults fleet-wide at end of life, escape prob {:.3})",
+            outcome.sdc_samples,
+            outcome.sdc_fraction() * 100.0,
+            outcome.escaped_faults_eol,
+            fleet.cfg.escape_prob
+        );
+    }
     let rows: Vec<Vec<String>> = fleet
         .chips
         .iter()
@@ -143,6 +159,7 @@ pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
                 c.id.to_string(),
                 c.initial_defects.to_string(),
                 format!("{:.2}%", c.aging.fault_rate() * 100.0),
+                c.escaped_faulty_macs().to_string(),
                 format!("{:.2}%", c.accuracy * 100.0),
                 c.served_samples.to_string(),
                 c.retrains.len().to_string(),
@@ -156,7 +173,17 @@ pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
         .collect();
     print_table(
         "fleet per-chip lifetime summary",
-        &["chip", "fab defects", "eol faults", "acc", "served", "retrains", "downtime h", "status"],
+        &[
+            "chip",
+            "fab defects",
+            "eol faults",
+            "escaped",
+            "acc",
+            "served",
+            "retrains",
+            "downtime h",
+            "status",
+        ],
         &rows,
     );
 }

@@ -166,8 +166,16 @@ pub fn serve(
                     for (u, slot) in uc.iter().zip(pc.iter_mut()) {
                         let arch = u.chip.arch();
                         let qw = quantize_mlp_weights(arch, u.params, calib);
-                        let plan =
-                            ChipPlan::compile_mlp(arch, u.chip.fault_map(), u.chip.kind(), &qw);
+                        // execute the fabricated truth, mask with the
+                        // controller's detected view — a fault that
+                        // escaped localization serves corrupted sums
+                        let plan = ChipPlan::compile_mlp_views(
+                            arch,
+                            u.chip.true_fault_map(),
+                            &u.chip.known_map(),
+                            u.chip.kind(),
+                            &qw,
+                        );
                         *slot = Some(Arc::new(plan));
                     }
                 });
@@ -323,8 +331,7 @@ fn worker_loop(
                 None => u.chip.session(cfg.backend)?,
             };
             sess.load_model(u.params.clone(), calib.clone());
-            let cycles_per_batch =
-                batch_sim_cycles(sess.arch(), u.chip.fault_map().n(), cfg.batch);
+            let cycles_per_batch = batch_sim_cycles(sess.arch(), u.chip.n(), cfg.batch);
             lanes.push(Lane {
                 unit_idx: i,
                 rx,

@@ -33,7 +33,6 @@ use repro::mapping::MaskKind;
 use repro::model::quant::calibrate_mlp;
 use repro::model::{arch, Params};
 use repro::runtime::Runtime;
-use repro::systolic::SystolicArray;
 use repro::util::Rng;
 use std::collections::HashMap;
 
@@ -63,10 +62,10 @@ fn allowed_opts(cmd: &str) -> Option<&'static [&'static str]> {
         "fleet" => Some(&[
             "model", "chips", "array-n", "seed", "policy", "hours", "backend", "out",
             "profile", "slo", "defect-rate", "eol-rate", "batch", "life-steps", "managed",
-            "queue-depth", "workers", "train-n", "test-n", "steps",
+            "queue-depth", "workers", "train-n", "test-n", "steps", "escape-prob",
         ]),
         "aging" => Some(&["tau", "beta", "n", "faults", "seed", "points", "hours", "eol-rate"]),
-        "detect" => Some(&["n", "faults", "seed"]),
+        "detect" => Some(&["n", "faults", "seed", "escape-prob"]),
         "smoke" => Some(&["artifacts"]),
         _ => None,
     }
@@ -297,7 +296,9 @@ fn main() -> Result<()> {
             };
             let out = provision_chip_engine(&engine, &a, &baseline, &fm, &train, &fcfg)?;
             let fap_acc = {
-                let (p, _, _) = repro::coordinator::fap::apply_fap(&a, &baseline, &out.fault_map);
+                // prune from the provisioned plan: its masks derive from
+                // the controller's *detected* view, not the raw truth map
+                let (p, _) = repro::coordinator::fap::apply_fap_planned(&baseline, &out.plan);
                 engine.float_accuracy(&a, &p, &test)?
             };
             let fapt_acc = engine.float_accuracy(&a, &out.result.params, &test)?;
@@ -365,8 +366,10 @@ fn main() -> Result<()> {
                     logits.len(),
                     total_macs as f64 / dt.as_secs_f64().max(1e-12)
                 );
-                // per-layer lowering stats from the compiled plan
-                let cp = ChipPlan::compile_mlp(&a, chip.fault_map(), kind, &qweights);
+                // per-layer lowering stats from the compiled plan (no
+                // detection ran here: the controller view is the perfect
+                // knowledge of the truth map)
+                let cp = ChipPlan::compile_mlp(&a, chip.true_fault_map(), kind, &qweights);
                 for li in 0..a.weighted_layers().len() {
                     let Some(lp) = cp.layer_plan(li) else { continue };
                     let s = lp.stats();
@@ -430,9 +433,15 @@ fn main() -> Result<()> {
                 slo_frac: args.f64("slo", 0.9)?,
                 managed: args.bool("managed", true)?,
                 workers: args.usize("workers", 0)?,
+                escape_prob: args.f64("escape-prob", 0.0)?,
                 ..FleetConfig::default()
             }
             .scaled(profile);
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&fcfg.escape_prob),
+                "--escape-prob must be in [0, 1], got {}",
+                fcfg.escape_prob
+            );
             fcfg.batch = args.usize("batch", fcfg.batch)?;
             fcfg.life_steps = args.usize("life-steps", fcfg.life_steps)?;
             fcfg.queue_depth = args.usize("queue-depth", fcfg.queue_depth)?;
@@ -536,15 +545,27 @@ fn main() -> Result<()> {
             let n = args.usize("n", 64)?;
             let faults = args.usize("faults", 20)?;
             let seed = args.u64("seed", 42)?;
+            let escape_prob = args.f64("escape-prob", 0.0)?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&escape_prob),
+                "--escape-prob must be in [0, 1], got {escape_prob}"
+            );
             let fm = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(seed));
-            let mut dut = SystolicArray::with_faults(&fm);
-            let rep = detect::localize_faults(&mut dut, Default::default());
+            let cfg = repro::faults::TestPatterns { escape_prob, ..Default::default() };
+            let rep = detect::localize_from_map(&fm, cfg);
             let truth = fm.faulty_macs();
             let hits = rep.faulty.iter().filter(|f| truth.contains(f)).count();
             println!(
                 "detect: {}x{n} array, {} injected, {} reported, {} correct, {} array runs",
                 n, truth.len(), rep.faulty.len(), hits, rep.array_runs
             );
+            if escape_prob > 0.0 {
+                println!(
+                    "  escape prob {escape_prob}: {} truly escaped, controller estimate {:.1}",
+                    truth.len() - hits,
+                    rep.escaped_estimate
+                );
+            }
         }
         "smoke" => {
             let rt = Runtime::new(&artifacts_dir)?;
@@ -614,6 +635,9 @@ FLEET OPTIONS (repro fleet):
   --batch B         samples per request batch (profile-scaled)
   --queue-depth D   bounded per-chip queue depth (default: 4)
   --workers W       scheduler worker threads (default: min(chips, cores))
+  --escape-prob P   per-fault localization escape probability (default: 0;
+                    escaped faults serve silent data corruption, reported
+                    as sdc_samples / sdc_fraction in results/fleet.json)
 ";
 
 #[cfg(test)]

@@ -10,7 +10,7 @@
 //!   to `*_faulty_fwd` to model FAP running on the faulty chip itself.
 
 use super::{conv, fc};
-use crate::faults::FaultMap;
+use crate::faults::{FaultMap, KnownMap};
 use crate::model::{Arch, Layer, Params};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,7 +35,27 @@ pub struct LayerMasks {
 }
 
 impl LayerMasks {
+    /// [`LayerMasks::build_views`] under perfect controller knowledge
+    /// (`known == truth`'s MAC set) — the campaigns that skip the
+    /// localization step.
     pub fn build(arch: &Arch, fm: &FaultMap, kind: MaskKind) -> LayerMasks {
+        LayerMasks::build_views(arch, fm, &KnownMap::perfect(fm), kind)
+    }
+
+    /// Build the per-layer masks from the two fault-map roles: the AND/OR
+    /// **fault masks come from `truth`** (the datapath the fab delivered),
+    /// the **prune/bypass masks come from `known`** (what localization
+    /// told the controller). A truth fault that escaped `known` keeps its
+    /// corruption masks live while nothing bypasses or prunes it — the
+    /// silent-data-corruption case the artifacts must execute faithfully.
+    pub fn build_views(
+        arch: &Arch,
+        truth: &FaultMap,
+        known: &KnownMap,
+        kind: MaskKind,
+    ) -> LayerMasks {
+        assert_eq!(truth.n(), known.n(), "truth and known views must share the grid");
+        let fm = truth;
         let n = fm.n();
         let mut prune = Vec::new();
         let mut and_m = Vec::new();
@@ -57,12 +77,12 @@ impl LayerMasks {
                         for j in 0..f.dout {
                             let c = j % n;
                             let idx = r * f.dout + j;
-                            let faulty = fm.is_faulty(r, c);
-                            prune_rows[idx] = if faulty { 0.0 } else { 1.0 };
+                            let known_faulty = known.is_faulty(r, c);
+                            prune_rows[idx] = if known_faulty { 0.0 } else { 1.0 };
                             am_rows[idx] = fm.and_at(r, c);
                             om_rows[idx] = fm.or_at(r, c);
                             bp_rows[idx] =
-                                (kind == MaskKind::FapBypass && faulty) as i32;
+                                (kind == MaskKind::FapBypass && known_faulty) as i32;
                         }
                     }
                     let len = f.din * f.dout;
@@ -97,11 +117,11 @@ impl LayerMasks {
                         for do_ in 0..cv.dout {
                             let (r, c) = conv::conv_mac_of(di, do_, n);
                             let idx = di * cv.dout + do_;
-                            let faulty = fm.is_faulty(r, c);
-                            pr_s[idx] = if faulty { 0.0 } else { 1.0 };
+                            let known_faulty = known.is_faulty(r, c);
+                            pr_s[idx] = if known_faulty { 0.0 } else { 1.0 };
                             am_s[idx] = fm.and_at(r, c);
                             om_s[idx] = fm.or_at(r, c);
-                            bp_s[idx] = (kind == MaskKind::FapBypass && faulty) as i32;
+                            bp_s[idx] = (kind == MaskKind::FapBypass && known_faulty) as i32;
                         }
                     }
                     let taps = cv.kh * cv.kw;
@@ -270,6 +290,41 @@ mod tests {
         let mut qw2: Vec<Vec<i32>> = um.bypass.iter().map(|b| vec![7i32; b.len()]).collect();
         um.fold_into_qweights(&mut qw2);
         assert!(qw2.iter().all(|l| l.iter().all(|&w| w == 7)));
+    }
+
+    #[test]
+    fn escaped_fault_keeps_corruption_but_gets_no_prune_or_bypass() {
+        use crate::faults::KnownMap;
+        let arch = mnist();
+        let fm = FaultMap::from_faults(
+            16,
+            [
+                StuckAt { row: 2, col: 3, bit: 30, value: true }, // detected
+                StuckAt { row: 7, col: 1, bit: 29, value: true }, // escaped
+            ],
+        );
+        let known = KnownMap::from_macs(16, [(2, 3)]);
+        let m = LayerMasks::build_views(&arch, &fm, &known, MaskKind::FapBypass);
+        let f = match arch.weighted_layers()[0] {
+            crate::model::Layer::Fc(f) => *f,
+            _ => unreachable!(),
+        };
+        // detected MAC: pruned + bypassed; escaped MAC: corruption masks
+        // live, nothing pruned or bypassed
+        let idx = |r: usize, c: usize| r * f.dout + c;
+        assert_eq!(m.prune[0][idx(2, 3)], 0.0);
+        assert_eq!(m.bypass[0][idx(2, 3)], 1);
+        assert_eq!(m.prune[0][idx(7, 1)], 1.0, "escaped fault must not be pruned");
+        assert_eq!(m.bypass[0][idx(7, 1)], 0, "escaped fault must not be bypassed");
+        assert_eq!(m.or_m[0][idx(7, 1)], 1 << 29, "escaped corruption must stay live");
+        // perfect knowledge degenerates to the single-map build
+        let perfect = LayerMasks::build(&arch, &fm, MaskKind::FapBypass);
+        let via_views =
+            LayerMasks::build_views(&arch, &fm, &KnownMap::perfect(&fm), MaskKind::FapBypass);
+        assert_eq!(perfect.prune, via_views.prune);
+        assert_eq!(perfect.bypass, via_views.bypass);
+        assert_eq!(perfect.and_m, via_views.and_m);
+        assert_eq!(perfect.or_m, via_views.or_m);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! masks only to active logical rows (DESIGN.md "Fault model").
 
 use super::pe::Pe;
-use crate::faults::FaultMap;
+use crate::faults::{FaultMap, KnownMap};
 
 #[derive(Clone, Debug)]
 pub struct SystolicArray {
@@ -73,11 +73,29 @@ impl SystolicArray {
         }
     }
 
-    /// Set the FAP bypass latch on every faulty MAC (paper §5.1).
+    /// Set the FAP bypass latch on every faulty MAC (paper §5.1) —
+    /// assumes the controller knows every physical fault (perfect
+    /// localization). Controllers with an explicit detected view use
+    /// [`SystolicArray::bypass_known`] instead.
     pub fn bypass_faulty(&mut self) {
         for pe in &mut self.pes {
             if pe.is_faulty() {
                 pe.bypass = true;
+            }
+        }
+    }
+
+    /// Set the FAP bypass latch on exactly the MACs the controller
+    /// *knows* to be faulty. Physical faults that escaped localization
+    /// keep corrupting — the bypass mux only closes where the known map
+    /// says so.
+    pub fn bypass_known(&mut self, known: &KnownMap) {
+        assert_eq!(known.n(), self.n, "known view must match the array size");
+        for r in 0..self.n {
+            for c in 0..self.n {
+                if known.is_faulty(r, c) {
+                    self.pes[r * self.n + c].bypass = true;
+                }
             }
         }
     }

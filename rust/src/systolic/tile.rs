@@ -7,7 +7,7 @@
 //! stuck-at fault only corrupts the pass its MAC participates in.
 
 use super::array::SystolicArray;
-use crate::faults::FaultMap;
+use crate::faults::{FaultMap, KnownMap};
 
 /// A full matmul schedule over the physical array.
 pub struct TiledMatmul {
@@ -17,10 +17,25 @@ pub struct TiledMatmul {
 }
 
 impl TiledMatmul {
+    /// [`TiledMatmul::with_views`] under perfect controller knowledge:
+    /// FAP (when requested) bypasses every *physical* fault.
     pub fn new(fault_map: &FaultMap, fap_bypass: bool) -> Self {
         let mut array = SystolicArray::with_faults(fault_map);
         if fap_bypass {
             array.bypass_faulty();
+        }
+        TiledMatmul { array, fap_bypass }
+    }
+
+    /// Build the schedule from the two fault-map roles: the PE grid gets
+    /// the **truth** faults (they corrupt whether anyone knows or not);
+    /// FAP, when requested, closes bypass latches on exactly the
+    /// **known** MACs. Truth faults that escaped the known view keep
+    /// corrupting through the bypassed schedule.
+    pub fn with_views(truth: &FaultMap, known: &KnownMap, fap_bypass: bool) -> Self {
+        let mut array = SystolicArray::with_faults(truth);
+        if fap_bypass {
+            array.bypass_known(known);
         }
         TiledMatmul { array, fap_bypass }
     }
@@ -176,6 +191,29 @@ mod tests {
         assert!(got[0] > 2 * (1 << 26) - 100, "both passes corrupted: {}", got[0]);
         // healthy columns untouched
         assert_eq!(&got[1..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn escaped_fault_corrupts_through_known_bypass() {
+        use crate::faults::KnownMap;
+        let (n, k, m, batch) = (4usize, 4usize, 4usize, 2usize);
+        let mut fm = FaultMap::healthy(n);
+        fm.add(StuckAt { row: 0, col: 1, bit: 28, value: true }); // detected
+        fm.add(StuckAt { row: 2, col: 3, bit: 27, value: true }); // escaped
+        let known = KnownMap::from_macs(n, [(0, 1)]);
+        let a = vec![1i32; batch * k];
+        let w = vec![1i32; k * m];
+        let mut tm = TiledMatmul::with_views(&fm, &known, true);
+        let got = tm.matmul(&a, &w, batch, k, m);
+        // column 1: detected fault bypassed => pruned-weight semantics
+        assert_eq!(got[1], 3, "bypassed column must lose exactly the bypassed MAC");
+        // column 3: escaped fault stays physically live
+        assert!(got[3] >= (1 << 27), "escaped fault must corrupt: {}", got[3]);
+        // perfect knowledge == the single-map constructor
+        let want = TiledMatmul::new(&fm, true).matmul(&a, &w, batch, k, m);
+        let via = TiledMatmul::with_views(&fm, &KnownMap::perfect(&fm), true)
+            .matmul(&a, &w, batch, k, m);
+        assert_eq!(want, via);
     }
 
     #[test]

@@ -47,9 +47,38 @@ impl BenchResult {
     }
 }
 
-/// Write a bench summary to `<path>` as `{ "bench": name, ...meta,
-/// "results": [...] }` — the stable record perf trajectories are tracked
-/// from (e.g. `BENCH_exec.json` from `perf_hotpath`).
+/// Resolve where bench records land. Relative paths are anchored at a
+/// **stable repo-root location** instead of the process CWD: cargo runs
+/// bench binaries with the *package* directory (`rust/`) as CWD, which
+/// used to scatter `BENCH_*.json` under `rust/` where the recorded perf
+/// trajectory never picked them up. Precedence:
+/// 1. `REPRO_BENCH_DIR` (explicit override, e.g. a CI artifact dir);
+/// 2. the workspace root — `CARGO_MANIFEST_DIR`'s parent when that parent
+///    holds a `Cargo.toml` (our workspace layout);
+/// 3. the CWD, unchanged (running the binary outside cargo).
+pub fn bench_output_path(file_name: &str) -> std::path::PathBuf {
+    let p = std::path::Path::new(file_name);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    if let Some(dir) = std::env::var_os("REPRO_BENCH_DIR") {
+        return std::path::Path::new(&dir).join(file_name);
+    }
+    if let Ok(manifest) = std::env::var("CARGO_MANIFEST_DIR") {
+        if let Some(parent) = std::path::Path::new(&manifest).parent() {
+            if parent.join("Cargo.toml").is_file() {
+                return parent.join(file_name);
+            }
+        }
+        return std::path::Path::new(&manifest).join(file_name);
+    }
+    p.to_path_buf()
+}
+
+/// Write a bench summary to [`bench_output_path`]`(path)` as `{ "bench":
+/// name, ...meta, "results": [...] }` — the stable record perf
+/// trajectories are tracked from (e.g. `BENCH_exec.json` from
+/// `perf_hotpath`; CI uploads these as artifacts per PR).
 pub fn write_bench_json(
     path: &str,
     name: &str,
@@ -63,8 +92,9 @@ pub fn write_bench_json(
         }
     }
     let out = out.field("results", Json::Arr(results));
-    std::fs::write(path, out.render())?;
-    println!("wrote {path}");
+    let dest = bench_output_path(path);
+    std::fs::write(&dest, out.render())?;
+    println!("wrote {}", dest.display());
     Ok(())
 }
 
@@ -118,6 +148,27 @@ mod tests {
             assert!(s.contains(key), "missing {key} in {s}");
         }
         assert!(r.throughput(40) > 0.0);
+    }
+
+    #[test]
+    fn bench_output_path_anchors_relative_paths_at_workspace_root() {
+        let p = bench_output_path("BENCH_test.json");
+        assert!(p.ends_with("BENCH_test.json"), "{p:?}");
+        // under cargo (no override), the destination directory is a
+        // manifest root — the stable place the perf trajectory reads
+        if std::env::var("CARGO_MANIFEST_DIR").is_ok()
+            && std::env::var_os("REPRO_BENCH_DIR").is_none()
+        {
+            assert!(
+                p.parent().unwrap().join("Cargo.toml").is_file(),
+                "not a manifest root: {p:?}"
+            );
+        }
+        // absolute paths pass through untouched
+        assert_eq!(
+            bench_output_path("/tmp/BENCH_abs.json"),
+            std::path::PathBuf::from("/tmp/BENCH_abs.json")
+        );
     }
 
     #[test]

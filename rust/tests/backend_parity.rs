@@ -6,6 +6,9 @@
 //! story for unsupported (backend, arch) combinations.
 
 use repro::chip::{Backend, Chip, Engine, Scenario};
+use repro::faults::{
+    inject_uniform, localize_from_map, FaultMap, FaultSpec, StuckAt, TestPatterns,
+};
 use repro::mapping::MaskKind;
 use repro::model::arch::{alexnet32, mnist};
 use repro::model::quant::calibrate_mlp;
@@ -188,6 +191,94 @@ fn pool_determinism_same_seed_same_logits_across_thread_counts() {
     let mut s2 = engine.session(&chip).unwrap();
     s2.load_model(params.clone(), calib.clone());
     assert_eq!(bits(&s2.forward_logits(&x, batch).unwrap()), single);
+}
+
+/// Truth-vs-known divergence: a detected chip with an escaped fault must
+/// execute the *fabricated* fault map on every backend — Sim and Plan
+/// bit-identical to each other, and (because the escaped stuck-at sits on
+/// a high accumulator bit) different from a healthy chip. Before the
+/// truth/known split, the escaped fault silently stopped existing: the
+/// session executed a reconstructed marker map instead of the silicon.
+#[test]
+fn escaped_fault_executes_truth_on_every_backend() {
+    let arch = tiny_mlp();
+    let mut rng = Rng::new(0xE5CA);
+    let params = rand_params(&arch, &mut rng);
+    let batch = 6;
+    let x: Vec<f32> = (0..batch * arch.input_len()).map(|_| rng.normal()).collect();
+    let calib = calibrate_mlp(&arch, &params, &x, batch);
+
+    // a high-bit stuck-at the controller will never hear about
+    let truth = FaultMap::from_faults(
+        4,
+        [
+            StuckAt { row: 1, col: 2, bit: 30, value: true },
+            StuckAt { row: 3, col: 0, bit: 29, value: true },
+        ],
+    );
+    for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
+        let chip = Chip::new(arch.clone())
+            .with_fault_map(truth.clone())
+            .detect_with(TestPatterns { escape_prob: 1.0, ..Default::default() })
+            .unwrap()
+            .mitigate(kind);
+        assert_eq!(chip.detected(), Some(0), "every fault must escape");
+        assert_eq!(chip.escaped_faulty_macs(), 2);
+
+        let mut sim = chip.session(Backend::Sim).unwrap();
+        let mut plan = chip.session(Backend::Plan).unwrap();
+        sim.load_model(params.clone(), calib.clone());
+        plan.load_model(params.clone(), calib.clone());
+        assert_eq!(sim.fingerprint(), plan.fingerprint());
+        let ls = sim.forward_logits(&x, batch).unwrap();
+        let lp = plan.forward_logits(&x, batch).unwrap();
+        assert_eq!(bits(&ls), bits(&lp), "kind {kind:?}: Sim/Plan must bit-agree");
+
+        // and the escaped faults are physically present: logits differ
+        // from the healthy chip's
+        let healthy = Chip::new(arch.clone()).array_n(4).mitigate(kind);
+        let mut href = healthy.session(Backend::Plan).unwrap();
+        href.load_model(params.clone(), calib.clone());
+        let lh = href.forward_logits(&x, batch).unwrap();
+        assert_ne!(
+            bits(&ls),
+            bits(&lh),
+            "kind {kind:?}: escaped faults must corrupt the logits"
+        );
+
+        // the session identity reflects the controller view too: the same
+        // truth under perfect knowledge is a *different* session
+        let perfect = Chip::new(arch.clone()).with_fault_map(truth.clone()).mitigate(kind);
+        let psess = perfect.session(Backend::Plan).unwrap();
+        assert_ne!(psess.fingerprint(), plan.fingerprint(), "kind {kind:?}");
+    }
+}
+
+/// Under forced escapes the detected set is always a subset of the truth
+/// (never a false positive), detection is deterministic per test program,
+/// and escape_prob = 0 recovers full recall.
+#[test]
+fn prop_detect_report_subset_of_truth_under_escapes() {
+    prop::check("detect_escape_subset", 0xE5C2, 30, |rng| {
+        let n = 4 + rng.below(13);
+        let faults = 1 + rng.below(2 * n);
+        let truth = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(rng.next_u64()));
+        let truth_macs = truth.faulty_macs();
+        let p = rng.f64();
+        let cfg = TestPatterns { escape_prob: p, seed: rng.next_u64(), ..Default::default() };
+        let rep = localize_from_map(&truth, cfg);
+        prop_assert!(rep.faulty.len() <= truth_macs.len(), "n={n} p={p}");
+        for f in &rep.faulty {
+            prop_assert!(truth_macs.contains(f), "false positive at {f:?} (n={n} p={p})");
+        }
+        // deterministic per test program
+        let rep2 = localize_from_map(&truth, cfg);
+        prop_assert!(rep.faulty == rep2.faulty, "detection must be deterministic");
+        // exhaustive coverage recovers everything
+        let full = localize_from_map(&truth, TestPatterns { escape_prob: 0.0, ..cfg });
+        prop_assert!(full.faulty == truth_macs, "p=0 must reach full recall");
+        Ok(())
+    });
 }
 
 /// Capability rejection: the matrix lives in `Backend::supports` and the

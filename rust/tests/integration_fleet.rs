@@ -170,6 +170,7 @@ fn managed_fleet_beats_unmitigated_at_25pct_eol() {
         retrain_downtime_hours: 100.0,
         max_retrains: 4,
         managed: true,
+        escape_prob: 0.0,
     };
     let run = |managed: bool| {
         let mut engine = Engine::new(Backend::Plan, None).unwrap();
@@ -205,7 +206,79 @@ fn managed_fleet_beats_unmitigated_at_25pct_eol() {
         "\"effective_yield\"",
         "\"retrain_events\"",
         "\"sim_cycles\"",
+        "\"escape_prob\"",
+        "\"sdc_samples\"",
+        "\"sdc_fraction\"",
+        "\"escaped_faulty_macs\"",
     ] {
         assert!(json.contains(key), "fleet.json missing {key}");
     }
+    // at escape_prob 0 localization is (near-)exhaustive: SDC exposure
+    // stays a sliver of the served traffic, not a systematic leak
+    assert!(
+        mout.sdc_fraction() < 0.5,
+        "unexpected SDC exposure without forced escapes: {}",
+        mout.sdc_fraction()
+    );
+
+    // the blind fleet is the opposite pole: its controller never ran
+    // localization, so with every chip fabbed faulty (Fixed(2) defects)
+    // all of its served traffic is SDC-exposed — the view must not
+    // default to perfect knowledge and report zero escapes
+    for c in &ufleet.chips {
+        assert_eq!(c.known_faulty_macs(), 0, "blind chip {} must know nothing", c.id);
+        assert!(c.escaped_faulty_macs() >= 2, "blind chip {} hides its defects", c.id);
+    }
+    assert_eq!(uout.sdc_samples, uout.total_samples, "blind fleet must be fully SDC-exposed");
+    assert!((uout.sdc_fraction() - 1.0).abs() < 1e-12);
+}
+
+/// Escaped-fault SDC accounting: when every fault escapes the health
+/// monitor's localization, the managed fleet believes its chips clean,
+/// prunes nothing, and every served sample is exposed to silent data
+/// corruption — which `fleet.json` must report alongside served accuracy.
+#[test]
+fn escaped_faults_are_accounted_as_sdc_traffic() {
+    let (arch, golden, calib, train, test) = bundle();
+    let cfg = FleetConfig {
+        chips: 3,
+        array_n: 8,
+        seed: 21,
+        policy: RoutingPolicy::RoundRobin,
+        hours: 10_000.0,
+        life_steps: 2,
+        yield_dist: YieldDist::Fixed(2),
+        eol_fault_rate: 0.2,
+        aging_beta: 2.0,
+        // SLO low enough that corrupted chips keep serving: the scenario
+        // is about exposure accounting, not retirement
+        slo_frac: 0.05,
+        batch: 16,
+        queue_depth: 2,
+        batches_per_chip: 2,
+        workers: 2,
+        retrain_epochs: 1,
+        retrain_downtime_hours: 50.0,
+        max_retrains: 2,
+        managed: true,
+        escape_prob: 1.0,
+    };
+    let mut engine = Engine::new(Backend::Plan, None).unwrap();
+    let mut fleet =
+        provision_fleet(&mut engine, cfg, &arch, &golden, &calib, &train, &test).unwrap();
+    let out = run_lifetime(&mut engine, &mut fleet, &golden, &train, &test).unwrap();
+
+    assert!(out.total_samples > 0, "fleet must have served traffic");
+    // every chip fabbed with 2 defects and escape_prob 1.0: the
+    // controller never detects anything, so all traffic is SDC-exposed
+    for c in &fleet.chips {
+        assert_eq!(c.known_faulty_macs(), 0, "chip {}: nothing must be detected", c.id);
+        assert!(c.escaped_faulty_macs() >= 2, "chip {}: fab defects must escape", c.id);
+        assert_eq!(c.sdc_samples, c.served_samples, "chip {}", c.id);
+    }
+    assert_eq!(out.sdc_samples, out.total_samples);
+    assert!((out.sdc_fraction() - 1.0).abs() < 1e-12);
+    assert!(out.escaped_faults_eol >= 3 * 2);
+    let json = fleet_json(&fleet, &out, "plan").render();
+    assert!(json.contains("\"escape_prob\": 1"), "missing escape_prob: {json}");
 }
