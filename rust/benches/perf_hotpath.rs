@@ -5,12 +5,15 @@
 //!   simulator on the paper's 256×256 array, across a fault-rate sweep,
 //!   single-threaded and pooled (MAC/s + speedup, emitted as
 //!   `BENCH_exec.json` so the perf trajectory is tracked PR over PR).
-//! * GEMM kernel: packed-panel 4×4 microkernel vs the column-at-a-time
-//!   `dot_wrapping` baseline at the fig2a mnist MLP shapes, plus
-//!   pool-vs-scope dispatch rows at serving batch sizes
-//!   (`BENCH_gemm.json`). **Parity-gated**: every timed variant's output
-//!   is compared bit-for-bit and a mismatch exits nonzero — the CI
-//!   quick-bench smoke fails on parity, never on timing.
+//! * GEMM kernel: the dispatched packed-panel microkernel (AVX2/NEON/
+//!   scalar, i8 panels) vs the column-at-a-time `dot_wrapping` baseline
+//!   at the fig2a mnist MLP shapes, `simd_vs_scalar` rows against the
+//!   PR-4 scalar 4×4 microkernel, `i8_vs_i32_panel` rows isolating the
+//!   narrow-panel win, plus pool-vs-scope dispatch rows at serving batch
+//!   sizes (`BENCH_gemm.json`; meta records the dispatched ISA).
+//!   **Parity-gated**: every timed variant's output is compared
+//!   bit-for-bit and a mismatch exits nonzero — the CI quick-bench smoke
+//!   fails on parity, never on timing.
 //! * L3 sim: functional systolic matmul (MAC/s) — target ≥100M MAC/s/core.
 //! * L3 masks: LayerMasks synthesis for the TIMIT model on a 256 grid.
 //! * RT (needs `artifacts/`): PJRT fwd latency/throughput (mnist + timit),
@@ -23,7 +26,9 @@
 use repro::chip::{Backend, Chip, Engine};
 use repro::coordinator::trainer::{ones_masks, train_step, TrainState};
 use repro::data;
-use repro::exec::{default_threads, dot_wrapping, MatmulPlan, WorkerPool};
+use repro::exec::{
+    default_threads, dot_wrapping, kernel, Kernel, MatmulPlan, PanelOptions, WorkerPool,
+};
 use repro::faults::{inject_uniform, FaultMap, FaultSpec};
 use repro::fleet::{percentile, serve, ChipUnit, RoutingPolicy, WorkloadConfig};
 use repro::mapping::{LayerMasks, MaskKind};
@@ -150,11 +155,12 @@ fn dot_gemm_into(a: &[i32], wcols: &[i32], b: usize, k: usize, m: usize, out: &m
     }
 }
 
-/// Microkernel-vs-dot rows at the fig2a mnist MLP shapes, plus
-/// pool-vs-scope dispatch rows at serving batch sizes — `BENCH_gemm.json`.
-/// Every variant is parity-gated bit-for-bit (in quick mode additionally
-/// against the cycle-level oracle); a mismatch aborts the bench with a
-/// nonzero exit, which is what the CI smoke asserts.
+/// Microkernel-vs-dot, SIMD-vs-scalar and i8-vs-i32-panel rows at the
+/// fig2a mnist MLP shapes, plus pool-vs-scope dispatch rows at serving
+/// batch sizes — `BENCH_gemm.json` (meta records the dispatched ISA and
+/// panel width). Every variant is parity-gated bit-for-bit (in quick
+/// mode additionally against the cycle-level oracle); a mismatch aborts
+/// the bench with a nonzero exit, which is what the CI smoke asserts.
 fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Json>)> {
     let n = if quick { 32 } else { 256 };
     let batch = if quick { 16usize } else { 64 };
@@ -162,7 +168,13 @@ fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Jso
     let shapes: &[(usize, usize)] =
         if quick { &[(96, 64), (64, 10)] } else { &[(784, 256), (256, 256), (256, 10)] };
     let (wu, it) = if quick { (1, 3) } else { (2, 10) };
-    println!("\n# gemm: packed 4x4 microkernel vs column-dot baseline (n={n}, batch {batch})");
+    let kr = kernel();
+    let scalar_kr = Kernel::scalar_fallback();
+    println!(
+        "\n# gemm: dispatched microkernel ({} x{}) vs column-dot baseline (n={n}, batch {batch})",
+        kr.isa().name(),
+        kr.nr()
+    );
 
     let mut rows = Vec::new();
     for &(k, m) in shapes {
@@ -194,9 +206,15 @@ fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Jso
             });
             dot.report_throughput(macs, "MAC");
 
+            // the default compile: dispatched panel width, i8 panels (the
+            // quantized-range weights above always qualify)
             let plan = MatmulPlan::compile(&fm, kind, &w, k, m);
+            anyhow::ensure!(
+                plan.stats().i8_tiles == plan.stats().tiles,
+                "quantized-range weights must pack i8 panels"
+            );
             let mut out_packed = vec![0i32; batch * m];
-            let packed = bench::bench(&format!("packed 4x4 {k}x{m} ({label})"), wu, it, || {
+            let packed = bench::bench(&format!("packed simd {k}x{m} ({label})"), wu, it, || {
                 plan.execute_into(&a, batch, &mut out_packed);
                 bench::black_box(&mut out_packed);
             });
@@ -221,6 +239,7 @@ fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Jso
             rows.push(
                 Json::obj()
                     .field("row", Json::str("micro_vs_dot"))
+                    .field("isa", Json::str(kr.isa().name()))
                     .field("k", Json::num(k as f64))
                     .field("m", Json::num(m as f64))
                     .field("batch", Json::num(batch as f64))
@@ -232,6 +251,87 @@ fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Jso
                     .field("dot_macs_per_s", Json::num(dot.throughput(macs)))
                     .field("packed_macs_per_s", Json::num(packed.throughput(macs)))
                     .field("speedup_packed", Json::num(speedup)),
+            );
+
+            // SIMD vs the PR-4 scalar 4x4 microkernel: same fault folding,
+            // panels re-packed at the scalar width — exactly what every
+            // build before runtime dispatch executed
+            let plan_pr4 = MatmulPlan::compile_opts(
+                &fm,
+                kind,
+                &w,
+                k,
+                m,
+                PanelOptions { nr: scalar_kr.nr(), allow_i8: false },
+            );
+            let mut out_scalar = vec![0i32; batch * m];
+            let scalar = bench::bench(&format!("scalar 4x4 {k}x{m} ({label})"), wu, it, || {
+                plan_pr4.execute_with_kernel_into(&scalar_kr, &a, batch, &mut out_scalar);
+                bench::black_box(&mut out_scalar);
+            });
+            scalar.report_throughput(macs, "MAC");
+            anyhow::ensure!(
+                out_scalar == out_packed,
+                "parity: scalar 4x4 != dispatched at {k}x{m} ({label})"
+            );
+            let speedup_simd = scalar.median.as_secs_f64() / packed.median.as_secs_f64().max(1e-12);
+            println!("  -> {} speedup over scalar 4x4 = {speedup_simd:.2}", kr.isa().name());
+            rows.push(
+                Json::obj()
+                    .field("row", Json::str("simd_vs_scalar"))
+                    .field("isa", Json::str(kr.isa().name()))
+                    .field("panel_nr", Json::num(kr.nr() as f64))
+                    .field("k", Json::num(k as f64))
+                    .field("m", Json::num(m as f64))
+                    .field("batch", Json::num(batch as f64))
+                    .field("faulty_macs", Json::num(faults as f64))
+                    .field("mitigation", Json::str(label))
+                    .field("macs", Json::num(macs as f64))
+                    .field("scalar", scalar.to_json())
+                    .field("simd", packed.to_json())
+                    .field("scalar_macs_per_s", Json::num(scalar.throughput(macs)))
+                    .field("simd_macs_per_s", Json::num(packed.throughput(macs)))
+                    .field("speedup_simd", Json::num(speedup_simd)),
+            );
+
+            // i8 vs i32 panels at the dispatched width: isolates the
+            // narrow-panel (memory traffic) win from the lane-count win
+            let plan_i32 = MatmulPlan::compile_opts(
+                &fm,
+                kind,
+                &w,
+                k,
+                m,
+                PanelOptions { nr: kr.nr(), allow_i8: false },
+            );
+            let mut out_i32 = vec![0i32; batch * m];
+            let wide = bench::bench(&format!("i32 panels {k}x{m} ({label})"), wu, it, || {
+                plan_i32.execute_into(&a, batch, &mut out_i32);
+                bench::black_box(&mut out_i32);
+            });
+            wide.report_throughput(macs, "MAC");
+            anyhow::ensure!(
+                out_i32 == out_packed,
+                "parity: i32 panels != i8 panels at {k}x{m} ({label})"
+            );
+            let speedup_i8 = wide.median.as_secs_f64() / packed.median.as_secs_f64().max(1e-12);
+            println!("  -> i8-panel speedup over i32 panels = {speedup_i8:.2}");
+            rows.push(
+                Json::obj()
+                    .field("row", Json::str("i8_vs_i32_panel"))
+                    .field("isa", Json::str(kr.isa().name()))
+                    .field("panel_nr", Json::num(kr.nr() as f64))
+                    .field("k", Json::num(k as f64))
+                    .field("m", Json::num(m as f64))
+                    .field("batch", Json::num(batch as f64))
+                    .field("faulty_macs", Json::num(faults as f64))
+                    .field("mitigation", Json::str(label))
+                    .field("macs", Json::num(macs as f64))
+                    .field("i32_panel", wide.to_json())
+                    .field("i8_panel", packed.to_json())
+                    .field("i32_panel_macs_per_s", Json::num(wide.throughput(macs)))
+                    .field("i8_panel_macs_per_s", Json::num(packed.throughput(macs)))
+                    .field("speedup_i8", Json::num(speedup_i8)),
             );
         }
     }
@@ -284,6 +384,8 @@ fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Jso
         .field("array_n", Json::num(n as f64))
         .field("batch", Json::num(batch as f64))
         .field("threads", Json::num(threads as f64))
+        .field("simd_isa", Json::str(kr.isa().name()))
+        .field("panel_nr", Json::num(kr.nr() as f64))
         .field("quick", Json::num(if quick { 1.0 } else { 0.0 }));
     Ok((meta, rows))
 }

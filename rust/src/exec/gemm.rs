@@ -4,57 +4,95 @@
 //! saturates), and wrapping addition is associative + commutative — so any
 //! summation order is bit-exact against the sequential PE chain. That
 //! freedom is what lets the executor run multi-lane dot products, a
-//! register-tiled microkernel, and batch sharding across threads without
-//! diverging from the cycle-level oracle.
+//! register-tiled microkernel, SIMD vector kernels, and batch sharding
+//! across threads without diverging from the cycle-level oracle.
 //!
 //! The hot path is the **packed-panel microkernel**: dense weight columns
 //! are packed once at plan-compile time into panel-major layout
-//! ([`pack_panels`]: [`PANEL_NR`] columns interleaved per reduction step,
-//! one contiguous panel per column group) and executed as
-//! [`MICRO_MR`]`x`[`PANEL_NR`] register tiles ([`micro_gemm_4x4`]) — every
-//! loaded activation feeds 4 columns and every loaded weight feeds 4 batch
-//! rows, cutting loads per MAC ~4x over the column-at-a-time
-//! [`dot_wrapping`] walk (which stays as the chain-segment kernel and the
-//! bench baseline).
+//! ([`pack_panels`]: `nr` columns interleaved per reduction step, one
+//! contiguous panel per column group) and executed as [`MICRO_MR`]`x nr`
+//! register tiles — every loaded activation feeds `nr` columns and every
+//! loaded weight feeds 4 batch rows. The panel width `nr` is chosen by the
+//! dispatched SIMD kernel ([`super::simd::kernel`]): 8 lanes on AVX2, 4 on
+//! NEON and for the scalar fallback ([`PANEL_NR`]). Quantized weights
+//! additionally pack as **i8 panels** ([`pack_panels_i8`]) — 4x narrower
+//! through the reduction loop, widened to i32 lanes in-register by the
+//! kernels (sign-extension is exact, so results are bit-identical).
+//!
+//! The scalar 4x4 register tiles ([`micro_gemm_4x4`], [`micro_gemm_1x4`]
+//! and their i8 twins) stay always-compiled: they are the dispatch
+//! fallback on hosts without SIMD and the parity oracle the vector
+//! kernels are tested against (which in turn keeps `dot_wrapping` as the
+//! chain-segment kernel and the bench baseline).
 //!
 //! Threading: [`for_each_batch_shard`] (per-call `std::thread::scope`;
 //! kept as the pool's bench baseline) and the spawn-once
-//! [`super::WorkerPool`] both shard batches into contiguous row ranges,
-//! each lane owning a disjoint slice of the output, so no synchronization
-//! is needed beyond the join/completion barrier.
+//! [`super::WorkerPool`] both shard batches into contiguous,
+//! [`MICRO_MR`]-aligned row ranges, each lane owning a disjoint slice of
+//! the output, so no synchronization is needed beyond the join/completion
+//! barrier — and shard interiors are full register tiles, never avoidable
+//! single-row edges.
 
-/// Columns per packed weight panel (the microkernel's N register tile).
+/// Panel width of the scalar fallback kernels (the dispatched SIMD kernel
+/// picks its own width, up to [`super::simd::MAX_NR`]).
 pub const PANEL_NR: usize = 4;
 
-/// Batch rows per microkernel invocation (the M register tile).
+/// Batch rows per microkernel invocation (the M register tile) — fixed
+/// across every ISA; only the panel width varies.
 pub const MICRO_MR: usize = 4;
 
 /// Pack `slots` column-major weight columns (each `kh` contiguous values
-/// in `slot_major`) into panel-major layout: panel `p` holds columns
-/// `p*PANEL_NR ..`, stored interleaved so reduction step `kk` reads the
-/// `PANEL_NR` lane weights from `panel[kk*PANEL_NR ..]` as one contiguous
+/// in `slot_major`) into panel-major layout at panel width `nr`: panel `p`
+/// holds columns `p*nr ..`, stored interleaved so reduction step `kk`
+/// reads the `nr` lane weights from `panel[kk*nr ..]` as one contiguous
 /// (SIMD-friendly) load. Tail panels zero-pad missing lanes — a zero
-/// weight contributes an exact wrapping zero, so padded lanes are inert.
-pub fn pack_panels(slot_major: &[i32], kh: usize, slots: usize) -> Vec<i32> {
+/// weight contributes an exact wrapping zero, so padded lanes are inert,
+/// and the executor's writeback never reads them (it iterates real
+/// columns only; see the tail-alias regression tests in `exec::plan`).
+pub fn pack_panels(slot_major: &[i32], kh: usize, slots: usize, nr: usize) -> Vec<i32> {
     debug_assert_eq!(slot_major.len(), kh * slots);
-    let panels = slots.div_ceil(PANEL_NR);
-    let mut packed = vec![0i32; panels * kh * PANEL_NR];
+    let panels = slots.div_ceil(nr);
+    let mut packed = vec![0i32; panels * kh * nr];
     for s in 0..slots {
-        let (p, lane) = (s / PANEL_NR, s % PANEL_NR);
+        let (p, lane) = (s / nr, s % nr);
         let src = &slot_major[s * kh..(s + 1) * kh];
-        let dst = &mut packed[p * kh * PANEL_NR..(p + 1) * kh * PANEL_NR];
+        let dst = &mut packed[p * kh * nr..(p + 1) * kh * nr];
         for (kk, &w) in src.iter().enumerate() {
-            dst[kk * PANEL_NR + lane] = w;
+            dst[kk * nr + lane] = w;
         }
     }
     packed
 }
 
-/// The 4x4 register-tiled microkernel: accumulate `MICRO_MR` batch rows of
-/// `a` (rows at stride `row_stride`, `kh` active values each) against one
-/// packed panel (`kh * PANEL_NR` weights, see [`pack_panels`]), returning
-/// the 16 wrapping dot products row-major (`acc[r * PANEL_NR + j]` = row
-/// `r` x lane `j`).
+/// [`pack_panels`], but into i8 panel elements — 4x narrower panel memory
+/// for the reduction loop. Returns `None` if any weight is outside i8
+/// range (the quantized datapath clamps to ±127, so every real model
+/// qualifies; synthetic wide weights fall back to i32 panels). Widening
+/// i8 lane weights back to i32 in the kernels is exact, so both panel
+/// flavours produce bit-identical results.
+pub fn pack_panels_i8(slot_major: &[i32], kh: usize, slots: usize, nr: usize) -> Option<Vec<i8>> {
+    debug_assert_eq!(slot_major.len(), kh * slots);
+    if slot_major.iter().any(|&w| i8::try_from(w).is_err()) {
+        return None;
+    }
+    let panels = slots.div_ceil(nr);
+    let mut packed = vec![0i8; panels * kh * nr];
+    for s in 0..slots {
+        let (p, lane) = (s / nr, s % nr);
+        let src = &slot_major[s * kh..(s + 1) * kh];
+        let dst = &mut packed[p * kh * nr..(p + 1) * kh * nr];
+        for (kk, &w) in src.iter().enumerate() {
+            dst[kk * nr + lane] = w as i8;
+        }
+    }
+    Some(packed)
+}
+
+/// The 4x4 register-tiled scalar microkernel: accumulate [`MICRO_MR`]
+/// batch rows of `a` (rows at stride `row_stride`, `kh` active values
+/// each) against one packed panel (`kh * PANEL_NR` weights, see
+/// [`pack_panels`] at `nr = PANEL_NR`), returning the 16 wrapping dot
+/// products row-major (`acc[r * PANEL_NR + j]` = row `r` x lane `j`).
 ///
 /// Bit-exact with [`dot_wrapping`] per (row, lane) pair: wrapping i32
 /// addition is associative + commutative, so the straight `kk`-order sum
@@ -104,6 +142,53 @@ pub fn micro_gemm_1x4(a_row: &[i32], kh: usize, panel: &[i32]) -> [i32; 4] {
     acc
 }
 
+/// [`micro_gemm_4x4`] over an i8 panel ([`pack_panels_i8`]): lane weights
+/// widen to i32 before the wrapping multiply — exact for every i8 value,
+/// so bit-identical to the i32-panel kernel on in-range weights.
+#[inline]
+pub fn micro_gemm_4x4_i8(a: &[i32], row_stride: usize, kh: usize, panel: &[i8]) -> [i32; 16] {
+    let r0 = &a[..kh];
+    let r1 = &a[row_stride..row_stride + kh];
+    let r2 = &a[2 * row_stride..2 * row_stride + kh];
+    let r3 = &a[3 * row_stride..3 * row_stride + kh];
+    let mut acc = [0i32; 16];
+    let rows = r0.iter().zip(r1).zip(r2).zip(r3);
+    for ((((&a0, &a1), &a2), &a3), w) in rows.zip(panel.chunks_exact(PANEL_NR)) {
+        let (w0, w1, w2, w3) = (w[0] as i32, w[1] as i32, w[2] as i32, w[3] as i32);
+        acc[0] = acc[0].wrapping_add(a0.wrapping_mul(w0));
+        acc[1] = acc[1].wrapping_add(a0.wrapping_mul(w1));
+        acc[2] = acc[2].wrapping_add(a0.wrapping_mul(w2));
+        acc[3] = acc[3].wrapping_add(a0.wrapping_mul(w3));
+        acc[4] = acc[4].wrapping_add(a1.wrapping_mul(w0));
+        acc[5] = acc[5].wrapping_add(a1.wrapping_mul(w1));
+        acc[6] = acc[6].wrapping_add(a1.wrapping_mul(w2));
+        acc[7] = acc[7].wrapping_add(a1.wrapping_mul(w3));
+        acc[8] = acc[8].wrapping_add(a2.wrapping_mul(w0));
+        acc[9] = acc[9].wrapping_add(a2.wrapping_mul(w1));
+        acc[10] = acc[10].wrapping_add(a2.wrapping_mul(w2));
+        acc[11] = acc[11].wrapping_add(a2.wrapping_mul(w3));
+        acc[12] = acc[12].wrapping_add(a3.wrapping_mul(w0));
+        acc[13] = acc[13].wrapping_add(a3.wrapping_mul(w1));
+        acc[14] = acc[14].wrapping_add(a3.wrapping_mul(w2));
+        acc[15] = acc[15].wrapping_add(a3.wrapping_mul(w3));
+    }
+    acc
+}
+
+/// [`micro_gemm_1x4`] over an i8 panel — the single-row edge kernel of
+/// the i8 path.
+#[inline]
+pub fn micro_gemm_1x4_i8(a_row: &[i32], kh: usize, panel: &[i8]) -> [i32; 4] {
+    let mut acc = [0i32; 4];
+    for (&av, w) in a_row[..kh].iter().zip(panel.chunks_exact(PANEL_NR)) {
+        acc[0] = acc[0].wrapping_add(av.wrapping_mul(w[0] as i32));
+        acc[1] = acc[1].wrapping_add(av.wrapping_mul(w[1] as i32));
+        acc[2] = acc[2].wrapping_add(av.wrapping_mul(w[2] as i32));
+        acc[3] = acc[3].wrapping_add(av.wrapping_mul(w[3] as i32));
+    }
+    acc
+}
+
 /// Wrapping dot product, 4 independent lanes so LLVM can vectorize.
 ///
 /// Lane order is free: wrapping i32 addition is associative, so the result
@@ -138,6 +223,10 @@ pub fn default_threads() -> usize {
 /// into up to `threads` contiguous chunks and run `f(a_chunk, out_chunk,
 /// rows)` on each, in parallel via `std::thread::scope`.
 ///
+/// Shard sizes are rounded up to [`MICRO_MR`] so every shard interior is
+/// full register tiles — only the true batch tail (not an artifact of the
+/// chunking) ever runs the single-row edge kernel.
+///
 /// Each thread owns a disjoint `&mut` slice of `out`, so `f` needs no
 /// internal synchronization. With `threads <= 1` (or a single-row batch)
 /// `f` runs inline on the calling thread.
@@ -165,7 +254,9 @@ pub fn for_each_batch_shard<F>(
         f(a, out, batch);
         return;
     }
-    let shard = batch.div_ceil(t);
+    // MICRO_MR-aligned shards: chunk boundaries never split a register
+    // tile, so only the true batch tail runs the 1-row edge kernel
+    let shard = batch.div_ceil(t).next_multiple_of(MICRO_MR);
     let fref = &f;
     std::thread::scope(|s| {
         let mut a_rest = a;
@@ -234,6 +325,29 @@ mod tests {
     }
 
     #[test]
+    fn shards_are_micro_mr_aligned() {
+        // every shard except the last must be a multiple of MICRO_MR rows
+        use std::sync::Mutex;
+        let (batch, k, m) = (27usize, 2usize, 1usize);
+        let a: Vec<i32> = vec![0; batch * k];
+        let mut out = vec![0i32; batch * m];
+        for threads in [2usize, 3, 5, 8] {
+            let sizes = Mutex::new(Vec::new());
+            for_each_batch_shard(&a, k, &mut out, m, batch, threads, |_, _, rows| {
+                sizes.lock().unwrap().push(rows);
+            });
+            let sizes = sizes.into_inner().unwrap();
+            let total: usize = sizes.iter().sum();
+            assert_eq!(total, batch, "threads={threads}");
+            let full = sizes.iter().filter(|&&r| r % MICRO_MR == 0).count();
+            assert!(
+                full >= sizes.len() - 1,
+                "threads={threads}: more than one unaligned shard in {sizes:?}"
+            );
+        }
+    }
+
+    #[test]
     fn zero_batch_is_a_noop() {
         let mut out: Vec<i32> = vec![];
         for_each_batch_shard(&[], 4, &mut out, 3, 0, 8, |_, _, rows| {
@@ -243,19 +357,41 @@ mod tests {
 
     #[test]
     fn pack_panels_layout_and_padding() {
-        // 3 columns of kh=2: tail panel pads lane 3 with zeros
+        // 3 columns of kh=2 at nr=4: tail panel pads lane 3 with zeros
         let slot_major = [1, 2, 10, 20, 100, 200]; // cols: [1,2] [10,20] [100,200]
-        let packed = pack_panels(&slot_major, 2, 3);
+        let packed = pack_panels(&slot_major, 2, 3, PANEL_NR);
         assert_eq!(packed.len(), 1 * 2 * PANEL_NR);
         assert_eq!(packed, vec![1, 10, 100, 0, 2, 20, 200, 0]);
         // 5 columns: two panels, second mostly padded
         let slot_major: Vec<i32> = (0..5).flat_map(|c| [c * 10 + 1, c * 10 + 2]).collect();
-        let packed = pack_panels(&slot_major, 2, 5);
+        let packed = pack_panels(&slot_major, 2, 5, PANEL_NR);
         assert_eq!(packed.len(), 2 * 2 * PANEL_NR);
         assert_eq!(&packed[..8], &[1, 11, 21, 31, 2, 12, 22, 32]);
         assert_eq!(&packed[8..], &[41, 0, 0, 0, 42, 0, 0, 0]);
+        // same 5 columns at nr=8 (the AVX2 width): one panel, 3 padded lanes
+        let packed = pack_panels(&slot_major, 2, 5, 8);
+        assert_eq!(packed.len(), 1 * 2 * 8);
+        assert_eq!(&packed[..8], &[1, 11, 21, 31, 41, 0, 0, 0]);
+        assert_eq!(&packed[8..], &[2, 12, 22, 32, 42, 0, 0, 0]);
         // empty slots pack to nothing
-        assert!(pack_panels(&[], 3, 0).is_empty());
+        assert!(pack_panels(&[], 3, 0, PANEL_NR).is_empty());
+    }
+
+    #[test]
+    fn pack_panels_i8_matches_i32_layout_and_gates_range() {
+        let slot_major: Vec<i32> = vec![1, -2, 127, -128, 0, 77]; // 3 cols, kh=2
+        for nr in [4usize, 8] {
+            let p32 = pack_panels(&slot_major, 2, 3, nr);
+            let p8 = pack_panels_i8(&slot_major, 2, 3, nr).expect("all in i8 range");
+            assert_eq!(p32.len(), p8.len());
+            for (a, b) in p32.iter().zip(&p8) {
+                assert_eq!(*a, *b as i32, "nr={nr}");
+            }
+        }
+        // one out-of-range weight disqualifies the whole block
+        assert!(pack_panels_i8(&[1, 128], 1, 2, 4).is_none());
+        assert!(pack_panels_i8(&[-129, 0], 1, 2, 4).is_none());
+        assert_eq!(pack_panels_i8(&[], 3, 0, 4), Some(vec![]));
     }
 
     #[test]
@@ -269,7 +405,7 @@ mod tests {
                 let slot_major: Vec<i32> = (0..slots * kh)
                     .map(|_| rng.below(1 << 16) as i32 - (1 << 15))
                     .collect();
-                let packed = pack_panels(&slot_major, kh, slots);
+                let packed = pack_panels(&slot_major, kh, slots, PANEL_NR);
                 for (p, panel) in packed.chunks_exact(kh * PANEL_NR).enumerate() {
                     let acc4 = micro_gemm_4x4(&a, stride, kh, panel);
                     for r in 0..MICRO_MR {
@@ -296,14 +432,49 @@ mod tests {
     }
 
     #[test]
+    fn i8_kernels_match_i32_kernels() {
+        let mut rng = Rng::new(22);
+        for kh in [1usize, 3, 4, 7, 16] {
+            let stride = kh + 1;
+            // extreme activations: the i8 restriction is on weights only
+            let a: Vec<i32> = (0..4 * stride)
+                .map(|i| if i % 5 == 0 { i32::MAX } else { rng.below(1 << 16) as i32 - (1 << 15) })
+                .collect();
+            for slots in 1..=5usize {
+                let slot_major: Vec<i32> =
+                    (0..slots * kh).map(|_| rng.below(255) as i32 - 127).collect();
+                let p32 = pack_panels(&slot_major, kh, slots, PANEL_NR);
+                let p8 = pack_panels_i8(&slot_major, kh, slots, PANEL_NR).unwrap();
+                for (panel32, panel8) in
+                    p32.chunks_exact(kh * PANEL_NR).zip(p8.chunks_exact(kh * PANEL_NR))
+                {
+                    assert_eq!(
+                        micro_gemm_4x4(&a, stride, kh, panel32),
+                        micro_gemm_4x4_i8(&a, stride, kh, panel8),
+                        "4x4 kh={kh} slots={slots}"
+                    );
+                    assert_eq!(
+                        micro_gemm_1x4(&a[..kh], kh, panel32),
+                        micro_gemm_1x4_i8(&a[..kh], kh, panel8),
+                        "1x4 kh={kh} slots={slots}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn micro_kernel_wraps_like_the_datapath() {
         // saturating values through the packed path: wrap, never saturate
         let a = [i32::MAX, i32::MAX, 0, 0, 0, 0, 0, 0]; // 4 rows, stride 2, kh 2
         let slot_major = [2, 3, 0, 0, 0, 0, 0, 0]; // 4 cols of kh 2
-        let packed = pack_panels(&slot_major, 2, 4);
+        let packed = pack_panels(&slot_major, 2, 4, PANEL_NR);
         let acc = micro_gemm_4x4(&a, 2, 2, &packed);
         let want = i32::MAX.wrapping_mul(2).wrapping_add(i32::MAX.wrapping_mul(3));
         assert_eq!(acc[0], want);
         assert_eq!(acc[1], 0);
+        // and identically through the i8 panel path
+        let packed8 = pack_panels_i8(&slot_major, 2, 4, PANEL_NR).unwrap();
+        assert_eq!(micro_gemm_4x4_i8(&a, 2, 2, &packed8), acc);
     }
 }

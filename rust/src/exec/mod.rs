@@ -13,13 +13,16 @@
 //!    fault-correction constants and straight-line chain programs from
 //!    the fabricated *truth* — a fault that escaped localization stays
 //!    live in the lowered program, exactly as on silicon.
-//! 2. [`gemm`] executes the dense part with a cache-blocked,
-//!    register-tiled **packed-panel microkernel**: dense weight columns
-//!    are packed panel-major once at compile time and run as 4x4 output
-//!    tiles, so each loaded activation feeds 4 columns and each loaded
-//!    weight feeds 4 batch rows. Wrapping i32 arithmetic keeps every
-//!    reordering bit-exact with the sequential PE chain, which stays in
-//!    the tree as the correctness oracle (see `rust/tests/proptest_exec.rs`).
+//! 2. [`simd`] + [`gemm`] execute the dense part with a cache-blocked
+//!    **packed-panel microkernel** behind one-time runtime SIMD dispatch:
+//!    dense weight columns are packed panel-major once at compile time —
+//!    at the dispatched kernel's width (8 lanes on AVX2, 4 on NEON and
+//!    the scalar fallback) and as i8 panels when the quantized weights
+//!    fit — and run as `MICRO_MR x nr` register tiles, so each loaded
+//!    activation feeds `nr` columns and each loaded weight feeds 4 batch
+//!    rows. Wrapping i32 arithmetic keeps every reordering (and every
+//!    ISA) bit-exact with the sequential PE chain, which stays in the
+//!    tree as the correctness oracle (see `rust/tests/proptest_exec.rs`).
 //! 3. [`pool::WorkerPool`] shards batches across **spawn-once** worker
 //!    threads (chunk-queue claims; the vendored registry has no rayon) —
 //!    the steady-state forward pays no thread spawns, unlike the per-call
@@ -37,13 +40,15 @@
 pub mod gemm;
 pub mod plan;
 pub mod pool;
+pub mod simd;
 
 pub use gemm::{
-    default_threads, dot_wrapping, for_each_batch_shard, micro_gemm_1x4, micro_gemm_4x4,
-    pack_panels, MICRO_MR, PANEL_NR,
+    default_threads, dot_wrapping, for_each_batch_shard, micro_gemm_1x4, micro_gemm_1x4_i8,
+    micro_gemm_4x4, micro_gemm_4x4_i8, pack_panels, pack_panels_i8, MICRO_MR, PANEL_NR,
 };
 pub use plan::{
-    quantize_mlp_weights, qweights_fingerprint, ChipPlan, ExecScratch, MatmulPlan, PlanCache,
-    PlanStats, TileProgram,
+    quantize_mlp_weights, qweights_fingerprint, ChipPlan, ExecScratch, MatmulPlan, PanelOptions,
+    PlanCache, PlanStats, TileProgram,
 };
 pub use pool::WorkerPool;
+pub use simd::{kernel, Isa, Kernel, PanelRef, MAX_NR};

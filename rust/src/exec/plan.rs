@@ -24,6 +24,7 @@
 
 use super::gemm;
 use super::pool::WorkerPool;
+use super::simd::{self, Kernel, PanelRef};
 use crate::faults::{chip_fingerprint, FaultMap, KnownMap};
 use crate::mapping::{LayerMasks, MaskKind};
 use crate::model::quant::Calibration;
@@ -68,6 +69,53 @@ impl ChainCol {
     }
 }
 
+/// Packed panel storage for one tile, in either element width. i8 panels
+/// carry the same values 4x narrower (the kernels widen in-register —
+/// exact), chosen per tile when every effective weight fits i8.
+#[derive(Clone, Debug)]
+enum PanelData {
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+impl PanelData {
+    #[inline]
+    fn slice(&self, start: usize, end: usize) -> PanelRef<'_> {
+        match self {
+            PanelData::I32(v) => PanelRef::I32(&v[start..end]),
+            PanelData::I8(v) => PanelRef::I8(&v[start..end]),
+        }
+    }
+
+    fn is_i8(&self) -> bool {
+        matches!(self, PanelData::I8(_))
+    }
+}
+
+/// Panel layout choices for plan compilation. The width must match the
+/// kernel that will execute the plan; [`PanelOptions::dispatched`] (the
+/// default used by [`MatmulPlan::compile_views`]) reads it from the
+/// process-wide dispatched SIMD kernel, so compiled layout and executing
+/// kernel can never disagree. Explicit options exist for benches and
+/// tests that pin a specific width/element size (e.g. the PR-4 scalar
+/// baseline, or exercising the AVX2 layout via the scalar reference
+/// kernel on non-AVX2 hosts).
+#[derive(Clone, Copy, Debug)]
+pub struct PanelOptions {
+    /// Panel width: columns interleaved per reduction step.
+    pub nr: usize,
+    /// Pack i8 panels for tiles whose effective weights all fit i8
+    /// (always true for quantized models — the datapath clamps to ±127).
+    pub allow_i8: bool,
+}
+
+impl PanelOptions {
+    /// The options matching [`simd::kernel`], the process-wide dispatch.
+    pub fn dispatched() -> PanelOptions {
+        PanelOptions { nr: simd::kernel().nr(), allow_i8: true }
+    }
+}
+
 /// Compiled program for one weight tile (one partial-height pass of the
 /// physical array): pre-masked transposed weights for the GEMM core plus
 /// chain programs for the columns a live fault forces off it.
@@ -81,11 +129,11 @@ pub struct TileProgram {
     pub kh: usize,
     pub mw: usize,
     /// Pre-masked dense weights in panel-major layout
-    /// ([`gemm::pack_panels`]): groups of [`gemm::PANEL_NR`] dense slots
-    /// interleaved per reduction step, packed **once at plan-compile
-    /// time** so the packing cost amortizes across every sweep point,
-    /// seed and retrain epoch that reuses the plan.
-    panels: Vec<i32>,
+    /// ([`gemm::pack_panels`] / [`gemm::pack_panels_i8`]): groups of `nr`
+    /// dense slots interleaved per reduction step, packed **once at
+    /// plan-compile time** so the packing cost amortizes across every
+    /// sweep point, seed and retrain epoch that reuses the plan.
+    panels: PanelData,
     /// Tile-local output column of each dense slot.
     dense_cols: Vec<u32>,
     /// Additive fault-correction constant per dense slot (0 = healthy;
@@ -106,6 +154,7 @@ impl TileProgram {
         k0: usize,
         m0: usize,
         n: usize,
+        opts: PanelOptions,
     ) -> TileProgram {
         let kh = (k - k0).min(n);
         let mw = (m - m0).min(n);
@@ -166,8 +215,16 @@ impl TileProgram {
             }
         }
         // pack the slot-major dense weights into panel-major layout here,
-        // at compile time — execution never repacks
-        let panels = gemm::pack_panels(&wt, kh, dense_cols.len());
+        // at compile time — execution never repacks; i8 panels when the
+        // tile qualifies and the caller allows them
+        let panels = if opts.allow_i8 {
+            match gemm::pack_panels_i8(&wt, kh, dense_cols.len(), opts.nr) {
+                Some(p) => PanelData::I8(p),
+                None => PanelData::I32(gemm::pack_panels(&wt, kh, dense_cols.len(), opts.nr)),
+            }
+        } else {
+            PanelData::I32(gemm::pack_panels(&wt, kh, dense_cols.len(), opts.nr))
+        };
         TileProgram { k0, m0, kh, mw, panels, dense_cols, base, chain_cols }
     }
 }
@@ -184,6 +241,8 @@ pub struct PlanStats {
     /// Columns lowered to chain programs.
     pub chain_cols: usize,
     pub chain_segs: usize,
+    /// Tiles whose dense panels packed as i8 (4x narrower panel memory).
+    pub i8_tiles: usize,
 }
 
 /// Compiled blocked schedule for one `K x M` weight matrix on one chip.
@@ -199,6 +258,9 @@ pub struct MatmulPlan {
     kind: MaskKind,
     fingerprint: u64,
     known_fingerprint: u64,
+    /// Panel width every tile was packed at; the executing kernel's
+    /// `nr()` must equal this (asserted at execution).
+    panel_nr: usize,
     tiles: Vec<TileProgram>,
     stats: PlanStats,
 }
@@ -218,7 +280,8 @@ impl MatmulPlan {
     /// int range) for the chip whose fabricated faults are `truth` and
     /// whose controller knows `known`, under mitigation `kind`.
     /// Corruption (chain programs, folded constants) is compiled from
-    /// `truth`; bypass (zeroed effective weights) from `known`.
+    /// `truth`; bypass (zeroed effective weights) from `known`. Panels
+    /// pack at the dispatched kernel's width ([`PanelOptions::dispatched`]).
     pub fn compile_views(
         truth: &FaultMap,
         known: &KnownMap,
@@ -227,8 +290,37 @@ impl MatmulPlan {
         k: usize,
         m: usize,
     ) -> MatmulPlan {
+        MatmulPlan::compile_views_opts(truth, known, kind, w, k, m, PanelOptions::dispatched())
+    }
+
+    /// [`MatmulPlan::compile_opts`] under perfect controller knowledge.
+    pub fn compile_opts(
+        fm: &FaultMap,
+        kind: MaskKind,
+        w: &[i32],
+        k: usize,
+        m: usize,
+        opts: PanelOptions,
+    ) -> MatmulPlan {
+        MatmulPlan::compile_views_opts(fm, &KnownMap::perfect(fm), kind, w, k, m, opts)
+    }
+
+    /// [`MatmulPlan::compile_views`] with explicit panel layout options —
+    /// the plan must then be executed with a kernel whose width matches
+    /// `opts.nr` (see [`MatmulPlan::execute_with_kernel_into`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile_views_opts(
+        truth: &FaultMap,
+        known: &KnownMap,
+        kind: MaskKind,
+        w: &[i32],
+        k: usize,
+        m: usize,
+        opts: PanelOptions,
+    ) -> MatmulPlan {
         assert_eq!(w.len(), k * m);
         assert_eq!(truth.n(), known.n(), "truth and known views must share the grid");
+        assert!((1..=simd::MAX_NR).contains(&opts.nr), "panel width {} out of range", opts.nr);
         let n = truth.n();
         let mut tiles = Vec::new();
         let mut stats = PlanStats::default();
@@ -236,12 +328,13 @@ impl MatmulPlan {
         while k0 < k {
             let mut m0 = 0;
             while m0 < m {
-                let t = TileProgram::compile(truth, known, kind, w, k, m, k0, m0, n);
+                let t = TileProgram::compile(truth, known, kind, w, k, m, k0, m0, n, opts);
                 stats.tiles += 1;
                 stats.dense_cols += t.dense_cols.len();
                 stats.folded_cols += t.base.iter().filter(|&&b| b != 0).count();
                 stats.chain_cols += t.chain_cols.len();
                 stats.chain_segs += t.chain_cols.iter().map(|c| c.segs.len()).sum::<usize>();
+                stats.i8_tiles += t.panels.is_i8() as usize;
                 tiles.push(t);
                 m0 += n;
             }
@@ -254,6 +347,7 @@ impl MatmulPlan {
             kind,
             fingerprint: truth.fingerprint(),
             known_fingerprint: known.fingerprint(),
+            panel_nr: opts.nr,
             tiles,
             stats,
         }
@@ -279,6 +373,12 @@ impl MatmulPlan {
         self.stats
     }
 
+    /// Panel width this plan's tiles were packed at (the executing
+    /// kernel's lane count).
+    pub fn panel_nr(&self) -> usize {
+        self.panel_nr
+    }
+
     /// Fingerprint of the **truth** fault map this plan was compiled
     /// against (corruption source).
     pub fn fingerprint(&self) -> u64 {
@@ -301,16 +401,19 @@ impl MatmulPlan {
 
     /// Accumulate the planned matmul into `out` (callers must pre-zero).
     ///
-    /// Dense columns run on the packed-panel microkernel
-    /// ([`gemm::micro_gemm_4x4`]): within each `BATCH_BLOCK` of activation
-    /// rows, every panel of [`gemm::PANEL_NR`] columns is streamed against
-    /// [`gemm::MICRO_MR`]-row register tiles, so each loaded activation
-    /// feeds 4 columns and each loaded weight feeds 4 rows. Chain columns
-    /// keep the exact chain programs. Bit-exact with the column-at-a-time
-    /// [`gemm::dot_wrapping`] walk (wrapping adds reorder freely).
-    fn accumulate(&self, a: &[i32], out: &mut [i32], batch: usize) {
+    /// Dense columns run on `kr`'s packed-panel microkernels (dispatched
+    /// SIMD or scalar; width must equal [`MatmulPlan::panel_nr`]): within
+    /// each `BATCH_BLOCK` of activation rows, every panel of `nr` columns
+    /// is streamed against [`gemm::MICRO_MR`]-row register tiles, so each
+    /// loaded activation feeds `nr` columns and each loaded weight feeds
+    /// 4 rows. Chain columns keep the exact chain programs. Bit-exact
+    /// with the column-at-a-time [`gemm::dot_wrapping`] walk regardless
+    /// of ISA (wrapping adds reorder freely).
+    fn accumulate(&self, kr: &Kernel, a: &[i32], out: &mut [i32], batch: usize) {
         const MR: usize = gemm::MICRO_MR;
-        const NR: usize = gemm::PANEL_NR;
+        let nr = self.panel_nr;
+        debug_assert_eq!(kr.nr(), nr);
+        let mut acc = [0i32; gemm::MICRO_MR * simd::MAX_NR];
         for tile in &self.tiles {
             let mut bb = 0;
             while bb < batch {
@@ -318,27 +421,27 @@ impl MatmulPlan {
                 let nslots = tile.dense_cols.len();
                 let mut ps = 0;
                 while ps < nslots {
-                    let lanes = (nslots - ps).min(NR);
-                    let pbase = (ps / NR) * tile.kh * NR;
-                    let panel = &tile.panels[pbase..pbase + tile.kh * NR];
+                    let lanes = (nslots - ps).min(nr);
+                    let pbase = (ps / nr) * tile.kh * nr;
+                    let panel = tile.panels.slice(pbase, pbase + tile.kh * nr);
                     let cols = &tile.dense_cols[ps..ps + lanes];
                     let bases = &tile.base[ps..ps + lanes];
                     let mut b = bb;
                     while b + MR <= bhi {
                         let a_base = &a[b * self.k + tile.k0..];
-                        let acc = gemm::micro_gemm_4x4(a_base, self.k, tile.kh, panel);
+                        kr.micro4(a_base, self.k, tile.kh, panel, &mut acc);
                         for r in 0..MR {
                             let orow = &mut out[(b + r) * self.m + tile.m0..];
                             for (j, (&c, &cst)) in cols.iter().zip(bases).enumerate() {
                                 let o = &mut orow[c as usize];
-                                *o = o.wrapping_add(cst.wrapping_add(acc[r * NR + j]));
+                                *o = o.wrapping_add(cst.wrapping_add(acc[r * nr + j]));
                             }
                         }
                         b += MR;
                     }
                     while b < bhi {
                         let a_row = &a[b * self.k + tile.k0..b * self.k + tile.k0 + tile.kh];
-                        let acc = gemm::micro_gemm_1x4(a_row, tile.kh, panel);
+                        kr.micro1(a_row, tile.kh, panel, &mut acc);
                         let orow = &mut out[b * self.m + tile.m0..];
                         for (j, (&c, &cst)) in cols.iter().zip(bases).enumerate() {
                             let o = &mut orow[c as usize];
@@ -346,7 +449,7 @@ impl MatmulPlan {
                         }
                         b += 1;
                     }
-                    ps += NR;
+                    ps += nr;
                 }
                 for cc in &tile.chain_cols {
                     for b in bb..bhi {
@@ -360,12 +463,41 @@ impl MatmulPlan {
         }
     }
 
-    /// Single-thread execution into a caller-owned buffer (overwrites).
+    /// Single-thread execution into a caller-owned buffer (overwrites)
+    /// with the process-wide dispatched kernel ([`simd::kernel`]).
     pub fn execute_into(&self, a: &[i32], batch: usize, out: &mut [i32]) {
+        self.execute_with_kernel_into(simd::kernel(), a, batch, out);
+    }
+
+    /// Single-thread execution with an explicit kernel, whose panel width
+    /// must match the plan's layout — the bench/test hook for pinning a
+    /// specific ISA (e.g. the PR-4 scalar baseline, or executing a SIMD
+    /// panel layout via [`Kernel::scalar_reference`] on any host).
+    pub fn execute_with_kernel_into(
+        &self,
+        kr: &Kernel,
+        a: &[i32],
+        batch: usize,
+        out: &mut [i32],
+    ) {
+        assert_eq!(
+            kr.nr(),
+            self.panel_nr,
+            "kernel width {} != plan panel width {}",
+            kr.nr(),
+            self.panel_nr
+        );
         assert_eq!(a.len(), batch * self.k);
         assert_eq!(out.len(), batch * self.m);
         out.fill(0);
-        self.accumulate(a, out, batch);
+        self.accumulate(kr, a, out, batch);
+    }
+
+    /// [`MatmulPlan::execute_with_kernel_into`] into a fresh buffer.
+    pub fn execute_with_kernel(&self, kr: &Kernel, a: &[i32], batch: usize) -> Vec<i32> {
+        let mut out = vec![0i32; batch * self.m];
+        self.execute_with_kernel_into(kr, a, batch, &mut out);
+        out
     }
 
     /// Single-thread execution. `a` row-major `[batch][k]`, returns
@@ -381,9 +513,13 @@ impl MatmulPlan {
     pub fn execute_threaded_into(&self, a: &[i32], batch: usize, threads: usize, out: &mut [i32]) {
         assert_eq!(a.len(), batch * self.k);
         assert_eq!(out.len(), batch * self.m);
+        // resolve once, outside the shard closure: the dispatched kernel
+        // is a &'static of plain fn pointers, freely shared across lanes
+        let kr = simd::kernel();
+        assert_eq!(kr.nr(), self.panel_nr, "plan packed for a different kernel width");
         out.fill(0);
         gemm::for_each_batch_shard(a, self.k, out, self.m, batch, threads, |ac, oc, rows| {
-            self.accumulate(ac, oc, rows);
+            self.accumulate(kr, ac, oc, rows);
         });
     }
 
@@ -403,9 +539,11 @@ impl MatmulPlan {
     pub fn execute_pooled_into(&self, a: &[i32], batch: usize, pool: &WorkerPool, out: &mut [i32]) {
         assert_eq!(a.len(), batch * self.k);
         assert_eq!(out.len(), batch * self.m);
+        let kr = simd::kernel();
+        assert_eq!(kr.nr(), self.panel_nr, "plan packed for a different kernel width");
         out.fill(0);
         pool.for_each_batch_shard(a, self.k, out, self.m, batch, |ac, oc, rows| {
-            self.accumulate(ac, oc, rows);
+            self.accumulate(kr, ac, oc, rows);
         });
     }
 
@@ -824,6 +962,104 @@ mod tests {
             let want = TiledMatmul::new(&fm, byp).matmul(&a, &w, batch, k, m);
             assert_eq!(plan.execute(&a, batch), want, "kind {kind:?}");
         }
+    }
+
+    /// Regression (panel tails): `slots % nr != 0` zero-pads tail lanes
+    /// of the last panel. A padded lane must never alias a real column —
+    /// in particular not a fault-bypassed one, whose effective weights
+    /// are all zero and whose output would silently absorb a stray lane
+    /// value. Pin it with bypass masks on the last panel's real columns,
+    /// across both panel widths and both element widths, against the
+    /// cycle-level bypassed-chain oracle.
+    #[test]
+    fn panel_tail_lanes_never_alias_bypassed_columns() {
+        let n = 6;
+        let mut truth = FaultMap::healthy(n);
+        // faults on the grid's last columns -> bypass lands on the final
+        // panel of each tile row
+        truth.add(StuckAt { row: 1, col: 5, bit: 27, value: true });
+        truth.add(StuckAt { row: 3, col: 4, bit: 29, value: false });
+        let known = KnownMap::perfect(&truth);
+        let mut rng = Rng::new(31);
+        // m % n != 0 -> a partial-width tile; 6 % 4 and 6 % 8 != 0 ->
+        // every full tile also ends in a partial panel
+        let (k, m, batch) = (11, 13, 6);
+        let (a, w) = rand_case(&mut rng, k, m, batch);
+        let want = TiledMatmul::with_views(&truth, &known, true).matmul(&a, &w, batch, k, m);
+        for nr in [4usize, 8] {
+            for allow_i8 in [false, true] {
+                let opts = PanelOptions { nr, allow_i8 };
+                let plan = MatmulPlan::compile_views_opts(
+                    &truth,
+                    &known,
+                    MaskKind::FapBypass,
+                    &w,
+                    k,
+                    m,
+                    opts,
+                );
+                assert_eq!(plan.panel_nr(), nr);
+                if allow_i8 {
+                    // rand_case weights are all in ±127 -> every tile i8
+                    assert_eq!(plan.stats().i8_tiles, plan.stats().tiles);
+                } else {
+                    assert_eq!(plan.stats().i8_tiles, 0);
+                }
+                let kr = Kernel::scalar_reference(nr);
+                let got = plan.execute_with_kernel(&kr, &a, batch);
+                assert_eq!(got, want, "nr={nr} i8={allow_i8}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_weights_fall_back_to_i32_panels() {
+        let fm = FaultMap::healthy(4);
+        let mut rng = Rng::new(32);
+        let (k, m, batch) = (8, 8, 3);
+        let (a, mut w) = rand_case(&mut rng, k, m, batch);
+        w[5] = 4000; // outside i8 range: tile (k0=0, m0=4) must stay i32
+        let opts = PanelOptions { nr: 4, allow_i8: true };
+        let plan = MatmulPlan::compile_opts(&fm, MaskKind::Unmitigated, &w, k, m, opts);
+        assert_eq!(plan.stats().tiles, 4);
+        assert_eq!(plan.stats().i8_tiles, 3, "only the wide-weight tile falls back");
+        let want = TiledMatmul::new(&fm, false).matmul(&a, &w, batch, k, m);
+        let got = plan.execute_with_kernel(&Kernel::scalar_reference(4), &a, batch);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn default_compile_matches_dispatched_kernel_width() {
+        let fm = inject_uniform(FaultSpec::new(8), 10, &mut Rng::new(9));
+        let mut rng = Rng::new(33);
+        let (k, m, batch) = (20, 17, 13);
+        let (a, w) = rand_case(&mut rng, k, m, batch);
+        let plan = MatmulPlan::compile(&fm, MaskKind::FapBypass, &w, k, m);
+        assert_eq!(plan.panel_nr(), simd::kernel().nr(), "default layout follows dispatch");
+        // quantized-range weights always pack i8 under the default opts
+        assert_eq!(plan.stats().i8_tiles, plan.stats().tiles);
+        // dispatched execution == scalar reference at the same width ==
+        // cycle-level sim
+        let got = plan.execute(&a, batch);
+        let reference =
+            plan.execute_with_kernel(&Kernel::scalar_reference(plan.panel_nr()), &a, batch);
+        assert_eq!(got, reference, "isa={:?}", simd::kernel().isa());
+        let want = TiledMatmul::new(&fm, true).matmul(&a, &w, batch, k, m);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn kernel_width_mismatch_is_rejected() {
+        let fm = FaultMap::healthy(4);
+        let w = vec![1i32; 4 * 4];
+        let other = if simd::kernel().nr() == 8 { 4 } else { 8 };
+        let opts = PanelOptions { nr: other, allow_i8: true };
+        let plan = MatmulPlan::compile_opts(&fm, MaskKind::Unmitigated, &w, 4, 4, opts);
+        let a = vec![1i32; 4];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = plan.execute(&a, 1);
+        }));
+        assert!(result.is_err(), "mismatched panel width must fail loudly, not corrupt");
     }
 
     #[test]

@@ -250,8 +250,13 @@ impl WorkerPool {
             return;
         }
         // a few more shards than lanes so the chunk queue can balance
-        // uneven shard costs; contiguous ranges keep outputs disjoint
-        let rows_per = batch.div_ceil((self.lanes * 2).min(batch));
+        // uneven shard costs; contiguous ranges keep outputs disjoint.
+        // Shard sizes round up to MICRO_MR so chunk boundaries never
+        // split a register tile — only the true batch tail runs the
+        // executor's 1-row edge kernel.
+        let rows_per = batch
+            .div_ceil((self.lanes * 2).min(batch))
+            .next_multiple_of(super::gemm::MICRO_MR);
         let shards = batch.div_ceil(rows_per);
         // addresses as usize so the closure is Sync without raw-pointer
         // fields; shard ranges are disjoint, so the &mut slices never alias

@@ -1,0 +1,805 @@
+//! Runtime-dispatched SIMD microkernels for the packed-panel GEMM core.
+//!
+//! The datapath is wrapping int32, and wrapping adds reorder freely — so a
+//! vector kernel that computes the same per-(row, column) sums in a
+//! different lane order is *bit-exact* against the scalar walk and the
+//! cycle-level PE-chain oracle. That invariant (the one PR 4 exploited for
+//! register tiling) is what lets this module swap whole ISAs under the
+//! executor without touching its correctness story.
+//!
+//! Three kernel families live behind one dispatch table ([`Kernel`]):
+//!
+//! * **AVX2** (x86_64, runtime-detected): 8-lane i32 panels,
+//!   `_mm256_mullo_epi32` + `_mm256_add_epi32` — both wrap exactly like
+//!   `wrapping_mul`/`wrapping_add`.
+//! * **NEON** (aarch64 little-endian, baseline feature): 4-lane i32
+//!   panels via `vmlaq_n_s32`.
+//! * **Scalar** (always compiled): the PR-4 register-tiled 4×4 kernels
+//!   ([`crate::exec::gemm::micro_gemm_4x4`]) as the dispatch fallback,
+//!   plus runtime-width reference kernels ([`scalar_micro4_i32`] etc.)
+//!   that execute *any* panel width — the parity oracle for the SIMD
+//!   layouts on hosts that cannot run them.
+//!
+//! Each family comes in an **i32** and an **i8→i32** panel flavour: plans
+//! whose effective weights all fit `i8` (every quantized model — the
+//! datapath clamps to ±127) pack 4× narrower panels and the kernels widen
+//! to i32 lanes in-register (`_mm256_cvtepi8_epi32` / `vmovl_s8`), cutting
+//! panel memory traffic for the serving path. Sign-extension is exact, so
+//! the i8 path is bit-identical to the i32 path for in-range weights.
+//!
+//! Dispatch is resolved **once per process** ([`kernel`], `OnceLock`): CPU
+//! feature detection never runs on the hot path, and every plan compiled
+//! in the process packs panels at the selected width — pack-time layout
+//! and run-time kernel can never disagree. `REPRO_SIMD=scalar|avx2|neon`
+//! forces an arm (used by CI to keep the fallback green); unavailable or
+//! unknown requests degrade to scalar/auto rather than erroring.
+
+use super::gemm::{self, MICRO_MR};
+use std::sync::OnceLock;
+
+/// Widest panel any compiled-in kernel uses; callers can size stack
+/// accumulators as `MICRO_MR * MAX_NR` for every dispatch outcome.
+pub const MAX_NR: usize = 8;
+
+/// Instruction set a [`Kernel`] executes with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Always-compiled fallback (and the parity oracle).
+    Scalar,
+    /// x86_64 with runtime-detected AVX2: 8-lane i32 vectors.
+    Avx2,
+    /// aarch64 NEON (baseline feature): 4-lane i32 vectors.
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// A borrowed packed panel in either element width (see
+/// [`gemm::pack_panels`] / [`gemm::pack_panels_i8`]).
+#[derive(Clone, Copy, Debug)]
+pub enum PanelRef<'a> {
+    I32(&'a [i32]),
+    I8(&'a [i8]),
+}
+
+// Uniform raw-kernel signatures. `nr` rides along so the runtime-width
+// scalar reference kernels share the table with fixed-width SIMD kernels
+// (which debug-assert it matches their lane count). The fns are `unsafe`
+// because the SIMD implementations require their ISA to be available;
+// [`Kernel`]'s constructors only ever pair a pointer with a verified ISA.
+type Micro4I32 = unsafe fn(&[i32], usize, usize, &[i32], usize, &mut [i32]);
+type Micro1I32 = unsafe fn(&[i32], usize, &[i32], usize, &mut [i32]);
+type Micro4I8 = unsafe fn(&[i32], usize, usize, &[i8], usize, &mut [i32]);
+type Micro1I8 = unsafe fn(&[i32], usize, &[i8], usize, &mut [i32]);
+
+/// One resolved microkernel set: an ISA, its panel width, and the four
+/// kernel entry points (i32/i8 panels × 4-row/1-row tiles).
+///
+/// Execution is `&self` and the struct is plain fn pointers, so a
+/// `&'static Kernel` (from [`kernel`]) is freely shared across the worker
+/// pool's lanes.
+#[derive(Clone, Copy)]
+pub struct Kernel {
+    isa: Isa,
+    nr: usize,
+    m4_i32: Micro4I32,
+    m1_i32: Micro1I32,
+    m4_i8: Micro4I8,
+    m1_i8: Micro1I8,
+}
+
+impl std::fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernel").field("isa", &self.isa).field("nr", &self.nr).finish()
+    }
+}
+
+impl Kernel {
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Panel width (columns per packed panel) this kernel executes.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// The dispatch fallback: the PR-4 register-tiled scalar 4×4/1×4
+    /// kernels at [`gemm::PANEL_NR`] = 4 — what every non-SIMD host runs,
+    /// and the `simd_vs_scalar` bench baseline.
+    pub fn scalar_fallback() -> Kernel {
+        Kernel {
+            isa: Isa::Scalar,
+            nr: gemm::PANEL_NR,
+            m4_i32: fallback_micro4_i32,
+            m1_i32: fallback_micro1_i32,
+            m4_i8: fallback_micro4_i8,
+            m1_i8: fallback_micro1_i8,
+        }
+    }
+
+    /// A runtime-width scalar kernel for any `nr` in `1..=MAX_NR` — the
+    /// parity oracle that can execute SIMD-width panel layouts on any
+    /// host (slower than [`Kernel::scalar_fallback`]; tests only).
+    pub fn scalar_reference(nr: usize) -> Kernel {
+        assert!((1..=MAX_NR).contains(&nr), "panel width {nr} out of range");
+        Kernel {
+            isa: Isa::Scalar,
+            nr,
+            m4_i32: scalar_micro4_i32,
+            m1_i32: scalar_micro1_i32,
+            m4_i8: scalar_micro4_i8,
+            m1_i8: scalar_micro1_i8,
+        }
+    }
+
+    /// The AVX2 kernel set, if this host can run it.
+    pub fn avx2() -> Option<Kernel> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Some(Kernel {
+                    isa: Isa::Avx2,
+                    nr: avx2::NR,
+                    m4_i32: avx2::micro4_i32,
+                    m1_i32: avx2::micro1_i32,
+                    m4_i8: avx2::micro4_i8,
+                    m1_i8: avx2::micro1_i8,
+                });
+            }
+        }
+        None
+    }
+
+    /// The NEON kernel set, if this host can run it (baseline on
+    /// little-endian aarch64, so no runtime probe is needed).
+    // allow(unreachable_code): on aarch64 the cfg block returns
+    // unconditionally, leaving the `None` tail formally unreachable there.
+    #[allow(unreachable_code)]
+    pub fn neon() -> Option<Kernel> {
+        #[cfg(all(target_arch = "aarch64", target_endian = "little"))]
+        {
+            return Some(Kernel {
+                isa: Isa::Neon,
+                nr: neon::NR,
+                m4_i32: neon::micro4_i32,
+                m1_i32: neon::micro1_i32,
+                m4_i8: neon::micro4_i8,
+                m1_i8: neon::micro1_i8,
+            });
+        }
+        None
+    }
+
+    /// Resolve a kernel for this host. `force` is the `REPRO_SIMD` value:
+    /// `scalar` pins the fallback, `avx2`/`neon` request that ISA
+    /// (degrading to scalar when unavailable), anything else auto-selects
+    /// the best available ISA.
+    pub(crate) fn resolve(force: Option<&str>) -> Kernel {
+        match force {
+            Some("scalar") => Kernel::scalar_fallback(),
+            Some("avx2") => Kernel::avx2().unwrap_or_else(Kernel::scalar_fallback),
+            Some("neon") => Kernel::neon().unwrap_or_else(Kernel::scalar_fallback),
+            _ => Kernel::avx2().or_else(Kernel::neon).unwrap_or_else(Kernel::scalar_fallback),
+        }
+    }
+
+    /// Compute the full `MICRO_MR x nr` register tile: `MICRO_MR` batch
+    /// rows of `a` (stride `row_stride`, `kh` active values each) against
+    /// one packed panel, overwriting `acc[r * nr + j]` with the wrapping
+    /// dot product of row `r` and panel lane `j`.
+    #[inline]
+    pub fn micro4(
+        &self,
+        a: &[i32],
+        row_stride: usize,
+        kh: usize,
+        panel: PanelRef<'_>,
+        acc: &mut [i32],
+    ) {
+        assert!(acc.len() >= MICRO_MR * self.nr, "acc buffer too small");
+        assert!(
+            kh == 0 || a.len() >= (MICRO_MR - 1) * row_stride + kh,
+            "activation slice too short for {MICRO_MR} rows"
+        );
+        // SAFETY: the fn pointers were constructed for an ISA verified
+        // available on this host (or scalar), and the bounds asserted here
+        // and below cover every access the kernels make.
+        match panel {
+            PanelRef::I32(p) => {
+                assert!(p.len() >= kh * self.nr, "panel too short");
+                unsafe { (self.m4_i32)(a, row_stride, kh, p, self.nr, acc) }
+            }
+            PanelRef::I8(p) => {
+                assert!(p.len() >= kh * self.nr, "panel too short");
+                unsafe { (self.m4_i8)(a, row_stride, kh, p, self.nr, acc) }
+            }
+        }
+    }
+
+    /// Single-row edge tile: one batch row against one packed panel,
+    /// overwriting `acc[..nr]`. Same contract as [`Kernel::micro4`].
+    #[inline]
+    pub fn micro1(&self, a_row: &[i32], kh: usize, panel: PanelRef<'_>, acc: &mut [i32]) {
+        assert!(acc.len() >= self.nr, "acc buffer too small");
+        assert!(a_row.len() >= kh, "activation row too short");
+        // SAFETY: as in `micro4`.
+        match panel {
+            PanelRef::I32(p) => {
+                assert!(p.len() >= kh * self.nr, "panel too short");
+                unsafe { (self.m1_i32)(a_row, kh, p, self.nr, acc) }
+            }
+            PanelRef::I8(p) => {
+                assert!(p.len() >= kh * self.nr, "panel too short");
+                unsafe { (self.m1_i8)(a_row, kh, p, self.nr, acc) }
+            }
+        }
+    }
+}
+
+/// The process-wide dispatched kernel, resolved exactly once (CPU feature
+/// detection and the `REPRO_SIMD` override never run per call). Every
+/// plan compiled in this process packs panels at `kernel().nr()`, so the
+/// packed layout and the executing kernel can never disagree.
+pub fn kernel() -> &'static Kernel {
+    static KERNEL: OnceLock<Kernel> = OnceLock::new();
+    KERNEL.get_or_init(|| Kernel::resolve(std::env::var("REPRO_SIMD").ok().as_deref()))
+}
+
+// ---------------------------------------------------------------------------
+// Scalar fallback: thin adapters around the PR-4 register-tiled kernels.
+// ---------------------------------------------------------------------------
+
+fn fallback_micro4_i32(
+    a: &[i32],
+    row_stride: usize,
+    kh: usize,
+    panel: &[i32],
+    nr: usize,
+    acc: &mut [i32],
+) {
+    debug_assert_eq!(nr, gemm::PANEL_NR);
+    acc[..MICRO_MR * gemm::PANEL_NR]
+        .copy_from_slice(&gemm::micro_gemm_4x4(a, row_stride, kh, panel));
+}
+
+fn fallback_micro1_i32(a_row: &[i32], kh: usize, panel: &[i32], nr: usize, acc: &mut [i32]) {
+    debug_assert_eq!(nr, gemm::PANEL_NR);
+    acc[..gemm::PANEL_NR].copy_from_slice(&gemm::micro_gemm_1x4(a_row, kh, panel));
+}
+
+fn fallback_micro4_i8(
+    a: &[i32],
+    row_stride: usize,
+    kh: usize,
+    panel: &[i8],
+    nr: usize,
+    acc: &mut [i32],
+) {
+    debug_assert_eq!(nr, gemm::PANEL_NR);
+    acc[..MICRO_MR * gemm::PANEL_NR]
+        .copy_from_slice(&gemm::micro_gemm_4x4_i8(a, row_stride, kh, panel));
+}
+
+fn fallback_micro1_i8(a_row: &[i32], kh: usize, panel: &[i8], nr: usize, acc: &mut [i32]) {
+    debug_assert_eq!(nr, gemm::PANEL_NR);
+    acc[..gemm::PANEL_NR].copy_from_slice(&gemm::micro_gemm_1x4_i8(a_row, kh, panel));
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels: runtime panel width, any layout. These are the
+// parity oracles for the SIMD layouts (and what `Kernel::scalar_reference`
+// executes); the straight kk-order sum is bit-exact with every reordering
+// because wrapping i32 addition is associative + commutative.
+// ---------------------------------------------------------------------------
+
+/// Runtime-width scalar reference: the full `MICRO_MR x nr` tile over an
+/// i32 panel, overwriting `acc[r * nr + j]`.
+pub fn scalar_micro4_i32(
+    a: &[i32],
+    row_stride: usize,
+    kh: usize,
+    panel: &[i32],
+    nr: usize,
+    acc: &mut [i32],
+) {
+    let acc = &mut acc[..MICRO_MR * nr];
+    acc.fill(0);
+    for kk in 0..kh {
+        let w = &panel[kk * nr..(kk + 1) * nr];
+        for r in 0..MICRO_MR {
+            let av = a[r * row_stride + kk];
+            let row = &mut acc[r * nr..(r + 1) * nr];
+            for (o, &wv) in row.iter_mut().zip(w) {
+                *o = o.wrapping_add(av.wrapping_mul(wv));
+            }
+        }
+    }
+}
+
+/// Runtime-width scalar reference: one row over an i32 panel.
+pub fn scalar_micro1_i32(a_row: &[i32], kh: usize, panel: &[i32], nr: usize, acc: &mut [i32]) {
+    let acc = &mut acc[..nr];
+    acc.fill(0);
+    for kk in 0..kh {
+        let av = a_row[kk];
+        let w = &panel[kk * nr..(kk + 1) * nr];
+        for (o, &wv) in acc.iter_mut().zip(w) {
+            *o = o.wrapping_add(av.wrapping_mul(wv));
+        }
+    }
+}
+
+/// Runtime-width scalar reference over an i8 panel (weights widened to
+/// i32 before the wrapping multiply — exact for every i8 value).
+pub fn scalar_micro4_i8(
+    a: &[i32],
+    row_stride: usize,
+    kh: usize,
+    panel: &[i8],
+    nr: usize,
+    acc: &mut [i32],
+) {
+    let acc = &mut acc[..MICRO_MR * nr];
+    acc.fill(0);
+    for kk in 0..kh {
+        let w = &panel[kk * nr..(kk + 1) * nr];
+        for r in 0..MICRO_MR {
+            let av = a[r * row_stride + kk];
+            let row = &mut acc[r * nr..(r + 1) * nr];
+            for (o, &wv) in row.iter_mut().zip(w) {
+                *o = o.wrapping_add(av.wrapping_mul(wv as i32));
+            }
+        }
+    }
+}
+
+/// Runtime-width scalar reference: one row over an i8 panel.
+pub fn scalar_micro1_i8(a_row: &[i32], kh: usize, panel: &[i8], nr: usize, acc: &mut [i32]) {
+    let acc = &mut acc[..nr];
+    acc.fill(0);
+    for kk in 0..kh {
+        let av = a_row[kk];
+        let w = &panel[kk * nr..(kk + 1) * nr];
+        for (o, &wv) in acc.iter_mut().zip(w) {
+            *o = o.wrapping_add(av.wrapping_mul(wv as i32));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2: 8-lane i32 vectors. `_mm256_mullo_epi32` keeps the low 32 bits of
+// the product and `_mm256_add_epi32` wraps — exactly `wrapping_mul` /
+// `wrapping_add` per lane, so the vector sums are bit-identical to the
+// scalar reference at nr = 8.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::MICRO_MR;
+    use std::arch::x86_64::*;
+
+    pub const NR: usize = 8;
+
+    /// # Safety
+    /// Requires AVX2 (checked at dispatch). `a` must hold
+    /// `(MICRO_MR - 1) * row_stride + kh` values, `panel` at least
+    /// `kh * NR`, `acc` at least `MICRO_MR * NR`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro4_i32_impl(
+        a: &[i32],
+        row_stride: usize,
+        kh: usize,
+        panel: &[i32],
+        acc: &mut [i32],
+    ) {
+        unsafe {
+            let pa = a.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = _mm256_setzero_si256();
+            let mut acc1 = _mm256_setzero_si256();
+            let mut acc2 = _mm256_setzero_si256();
+            let mut acc3 = _mm256_setzero_si256();
+            for kk in 0..kh {
+                let w = _mm256_loadu_si256(pp.add(kk * NR) as *const __m256i);
+                let a0 = _mm256_set1_epi32(*pa.add(kk));
+                let a1 = _mm256_set1_epi32(*pa.add(row_stride + kk));
+                let a2 = _mm256_set1_epi32(*pa.add(2 * row_stride + kk));
+                let a3 = _mm256_set1_epi32(*pa.add(3 * row_stride + kk));
+                acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(a0, w));
+                acc1 = _mm256_add_epi32(acc1, _mm256_mullo_epi32(a1, w));
+                acc2 = _mm256_add_epi32(acc2, _mm256_mullo_epi32(a2, w));
+                acc3 = _mm256_add_epi32(acc3, _mm256_mullo_epi32(a3, w));
+            }
+            let po = acc.as_mut_ptr();
+            _mm256_storeu_si256(po as *mut __m256i, acc0);
+            _mm256_storeu_si256(po.add(NR) as *mut __m256i, acc1);
+            _mm256_storeu_si256(po.add(2 * NR) as *mut __m256i, acc2);
+            _mm256_storeu_si256(po.add(3 * NR) as *mut __m256i, acc3);
+        }
+        debug_assert!(acc.len() >= MICRO_MR * NR);
+    }
+
+    /// # Safety
+    /// As [`micro4_i32_impl`], single row (`a_row` holds `kh` values).
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro1_i32_impl(a_row: &[i32], kh: usize, panel: &[i32], acc: &mut [i32]) {
+        unsafe {
+            let pa = a_row.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = _mm256_setzero_si256();
+            for kk in 0..kh {
+                let w = _mm256_loadu_si256(pp.add(kk * NR) as *const __m256i);
+                let av = _mm256_set1_epi32(*pa.add(kk));
+                acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(av, w));
+            }
+            _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, acc0);
+        }
+    }
+
+    /// # Safety
+    /// As [`micro4_i32_impl`] with an i8 panel of at least `kh * NR`
+    /// bytes; each step loads its 8 lane weights as one 64-bit load and
+    /// sign-extends in-register (`_mm256_cvtepi8_epi32`) — exact.
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro4_i8_impl(
+        a: &[i32],
+        row_stride: usize,
+        kh: usize,
+        panel: &[i8],
+        acc: &mut [i32],
+    ) {
+        unsafe {
+            let pa = a.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = _mm256_setzero_si256();
+            let mut acc1 = _mm256_setzero_si256();
+            let mut acc2 = _mm256_setzero_si256();
+            let mut acc3 = _mm256_setzero_si256();
+            for kk in 0..kh {
+                let w8 = _mm_loadl_epi64(pp.add(kk * NR) as *const __m128i);
+                let w = _mm256_cvtepi8_epi32(w8);
+                let a0 = _mm256_set1_epi32(*pa.add(kk));
+                let a1 = _mm256_set1_epi32(*pa.add(row_stride + kk));
+                let a2 = _mm256_set1_epi32(*pa.add(2 * row_stride + kk));
+                let a3 = _mm256_set1_epi32(*pa.add(3 * row_stride + kk));
+                acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(a0, w));
+                acc1 = _mm256_add_epi32(acc1, _mm256_mullo_epi32(a1, w));
+                acc2 = _mm256_add_epi32(acc2, _mm256_mullo_epi32(a2, w));
+                acc3 = _mm256_add_epi32(acc3, _mm256_mullo_epi32(a3, w));
+            }
+            let po = acc.as_mut_ptr();
+            _mm256_storeu_si256(po as *mut __m256i, acc0);
+            _mm256_storeu_si256(po.add(NR) as *mut __m256i, acc1);
+            _mm256_storeu_si256(po.add(2 * NR) as *mut __m256i, acc2);
+            _mm256_storeu_si256(po.add(3 * NR) as *mut __m256i, acc3);
+        }
+    }
+
+    /// # Safety
+    /// As [`micro4_i8_impl`], single row.
+    #[target_feature(enable = "avx2")]
+    unsafe fn micro1_i8_impl(a_row: &[i32], kh: usize, panel: &[i8], acc: &mut [i32]) {
+        unsafe {
+            let pa = a_row.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = _mm256_setzero_si256();
+            for kk in 0..kh {
+                let w8 = _mm_loadl_epi64(pp.add(kk * NR) as *const __m128i);
+                let w = _mm256_cvtepi8_epi32(w8);
+                let av = _mm256_set1_epi32(*pa.add(kk));
+                acc0 = _mm256_add_epi32(acc0, _mm256_mullo_epi32(av, w));
+            }
+            _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, acc0);
+        }
+    }
+
+    // Plain `unsafe fn` shims so the dispatch table stores ordinary fn
+    // pointers (no target_feature coercion subtleties). The call overhead
+    // amortizes over the whole kh loop inside.
+
+    pub unsafe fn micro4_i32(
+        a: &[i32],
+        row_stride: usize,
+        kh: usize,
+        panel: &[i32],
+        nr: usize,
+        acc: &mut [i32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe { micro4_i32_impl(a, row_stride, kh, panel, acc) }
+    }
+
+    pub unsafe fn micro1_i32(a_row: &[i32], kh: usize, panel: &[i32], nr: usize, acc: &mut [i32]) {
+        debug_assert_eq!(nr, NR);
+        unsafe { micro1_i32_impl(a_row, kh, panel, acc) }
+    }
+
+    pub unsafe fn micro4_i8(
+        a: &[i32],
+        row_stride: usize,
+        kh: usize,
+        panel: &[i8],
+        nr: usize,
+        acc: &mut [i32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe { micro4_i8_impl(a, row_stride, kh, panel, acc) }
+    }
+
+    pub unsafe fn micro1_i8(a_row: &[i32], kh: usize, panel: &[i8], nr: usize, acc: &mut [i32]) {
+        debug_assert_eq!(nr, NR);
+        unsafe { micro1_i8_impl(a_row, kh, panel, acc) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON: 4-lane i32 vectors. NEON integer multiply-accumulate
+// (`vmlaq_n_s32`) wraps per lane like the scalar datapath. NEON is a
+// baseline aarch64 feature, so no runtime probe is needed; the module is
+// gated to little-endian targets because the i8 widening path reinterprets
+// a 4-byte memory load as lane order.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "aarch64", target_endian = "little"))]
+mod neon {
+    use std::arch::aarch64::*;
+
+    pub const NR: usize = 4;
+
+    /// # Safety
+    /// `a` must hold `(MICRO_MR - 1) * row_stride + kh` values, `panel`
+    /// at least `kh * NR`, `acc` at least `MICRO_MR * NR`.
+    pub unsafe fn micro4_i32(
+        a: &[i32],
+        row_stride: usize,
+        kh: usize,
+        panel: &[i32],
+        nr: usize,
+        acc: &mut [i32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe {
+            let pa = a.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = vdupq_n_s32(0);
+            let mut acc1 = vdupq_n_s32(0);
+            let mut acc2 = vdupq_n_s32(0);
+            let mut acc3 = vdupq_n_s32(0);
+            for kk in 0..kh {
+                let w = vld1q_s32(pp.add(kk * NR));
+                acc0 = vmlaq_n_s32(acc0, w, *pa.add(kk));
+                acc1 = vmlaq_n_s32(acc1, w, *pa.add(row_stride + kk));
+                acc2 = vmlaq_n_s32(acc2, w, *pa.add(2 * row_stride + kk));
+                acc3 = vmlaq_n_s32(acc3, w, *pa.add(3 * row_stride + kk));
+            }
+            let po = acc.as_mut_ptr();
+            vst1q_s32(po, acc0);
+            vst1q_s32(po.add(NR), acc1);
+            vst1q_s32(po.add(2 * NR), acc2);
+            vst1q_s32(po.add(3 * NR), acc3);
+        }
+    }
+
+    /// # Safety
+    /// As [`micro4_i32`], single row.
+    pub unsafe fn micro1_i32(a_row: &[i32], kh: usize, panel: &[i32], nr: usize, acc: &mut [i32]) {
+        debug_assert_eq!(nr, NR);
+        unsafe {
+            let pp = panel.as_ptr();
+            let mut acc0 = vdupq_n_s32(0);
+            for kk in 0..kh {
+                let w = vld1q_s32(pp.add(kk * NR));
+                acc0 = vmlaq_n_s32(acc0, w, *a_row.as_ptr().add(kk));
+            }
+            vst1q_s32(acc.as_mut_ptr(), acc0);
+        }
+    }
+
+    /// Widen one panel step's 4 i8 lane weights to an i32 vector: a
+    /// 4-byte unaligned load reinterpreted as `int8x8_t` (low half), then
+    /// sign-extended twice — exact for every i8 value.
+    ///
+    /// # Safety
+    /// `p` must be readable for 4 bytes.
+    #[inline]
+    unsafe fn widen4_i8(p: *const i8) -> int32x4_t {
+        unsafe {
+            let bytes = (p as *const u32).read_unaligned();
+            let w8 = vcreate_s8(bytes as u64);
+            vmovl_s16(vget_low_s16(vmovl_s8(w8)))
+        }
+    }
+
+    /// # Safety
+    /// As [`micro4_i32`] with an i8 panel of at least `kh * NR` bytes.
+    pub unsafe fn micro4_i8(
+        a: &[i32],
+        row_stride: usize,
+        kh: usize,
+        panel: &[i8],
+        nr: usize,
+        acc: &mut [i32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe {
+            let pa = a.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = vdupq_n_s32(0);
+            let mut acc1 = vdupq_n_s32(0);
+            let mut acc2 = vdupq_n_s32(0);
+            let mut acc3 = vdupq_n_s32(0);
+            for kk in 0..kh {
+                let w = widen4_i8(pp.add(kk * NR));
+                acc0 = vmlaq_n_s32(acc0, w, *pa.add(kk));
+                acc1 = vmlaq_n_s32(acc1, w, *pa.add(row_stride + kk));
+                acc2 = vmlaq_n_s32(acc2, w, *pa.add(2 * row_stride + kk));
+                acc3 = vmlaq_n_s32(acc3, w, *pa.add(3 * row_stride + kk));
+            }
+            let po = acc.as_mut_ptr();
+            vst1q_s32(po, acc0);
+            vst1q_s32(po.add(NR), acc1);
+            vst1q_s32(po.add(2 * NR), acc2);
+            vst1q_s32(po.add(3 * NR), acc3);
+        }
+    }
+
+    /// # Safety
+    /// As [`micro4_i8`], single row.
+    pub unsafe fn micro1_i8(a_row: &[i32], kh: usize, panel: &[i8], nr: usize, acc: &mut [i32]) {
+        debug_assert_eq!(nr, NR);
+        unsafe {
+            let pp = panel.as_ptr();
+            let mut acc0 = vdupq_n_s32(0);
+            for kk in 0..kh {
+                let w = widen4_i8(pp.add(kk * NR));
+                acc0 = vmlaq_n_s32(acc0, w, *a_row.as_ptr().add(kk));
+            }
+            vst1q_s32(acc.as_mut_ptr(), acc0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vals(rng: &mut Rng, n: usize, extreme: bool) -> Vec<i32> {
+        (0..n)
+            .map(|_| {
+                if extreme && rng.bool(0.2) {
+                    if rng.bool(0.5) {
+                        i32::MAX
+                    } else {
+                        i32::MIN
+                    }
+                } else {
+                    rng.below(1 << 16) as i32 - (1 << 15)
+                }
+            })
+            .collect()
+    }
+
+    /// Reference dot product for one (row, lane) pair straight from the
+    /// slot-major weights.
+    fn want_tile(a: &[i32], stride: usize, kh: usize, cols: &[Vec<i32>], nr: usize) -> Vec<i32> {
+        let mut out = vec![0i32; MICRO_MR * nr];
+        for (r, o_row) in out.chunks_mut(nr).enumerate() {
+            for (j, col) in cols.iter().enumerate() {
+                let row = &a[r * stride..r * stride + kh];
+                o_row[j] = gemm::dot_wrapping(row, col);
+            }
+        }
+        out
+    }
+
+    /// Every constructible kernel agrees with the scalar reference on its
+    /// own panel width, for both panel element widths, including wrapping
+    /// extremes — the dispatch table's core bit-exactness property. On
+    /// x86_64 CI hosts this exercises the real AVX2 kernels.
+    #[test]
+    fn all_kernels_match_scalar_reference() {
+        let mut kernels = vec![Kernel::scalar_fallback(), *kernel()];
+        if let Some(k) = Kernel::avx2() {
+            kernels.push(k);
+        }
+        if let Some(k) = Kernel::neon() {
+            kernels.push(k);
+        }
+        let mut rng = Rng::new(0x51D);
+        for kr in kernels {
+            let nr = kr.nr();
+            let reference = Kernel::scalar_reference(nr);
+            for kh in [1usize, 2, 5, 8, 17, 64] {
+                let stride = kh + 3;
+                for extreme in [false, true] {
+                    let a = rand_vals(&mut rng, MICRO_MR * stride, extreme);
+                    // i8-rangeable weights so both panel flavours exist
+                    let cols: Vec<Vec<i32>> = (0..nr)
+                        .map(|_| (0..kh).map(|_| rng.below(255) as i32 - 127).collect())
+                        .collect();
+                    let slot_major: Vec<i32> = cols.iter().flatten().copied().collect();
+                    let p32 = gemm::pack_panels(&slot_major, kh, nr, nr);
+                    let p8 = gemm::pack_panels_i8(&slot_major, kh, nr, nr).unwrap();
+                    let want = want_tile(&a, stride, kh, &cols, nr);
+
+                    let mut acc = [0i32; MICRO_MR * MAX_NR];
+                    for panel in [PanelRef::I32(&p32), PanelRef::I8(&p8)] {
+                        kr.micro4(&a, stride, kh, panel, &mut acc);
+                        assert_eq!(
+                            &acc[..MICRO_MR * nr],
+                            &want[..],
+                            "{:?} micro4 {panel:?} kh={kh} extreme={extreme}",
+                            kr.isa()
+                        );
+                        reference.micro4(&a, stride, kh, panel, &mut acc);
+                        assert_eq!(&acc[..MICRO_MR * nr], &want[..], "reference micro4");
+
+                        kr.micro1(&a[..kh], kh, panel, &mut acc);
+                        assert_eq!(&acc[..nr], &want[..nr], "{:?} micro1 kh={kh}", kr.isa());
+                    }
+                }
+            }
+        }
+    }
+
+    /// i32 panels carry weights outside i8 range (where no i8 panel
+    /// exists): the kernels must wrap exactly like the scalar datapath.
+    #[test]
+    fn wide_weights_wrap_exactly() {
+        for kr in [Kernel::scalar_fallback(), *kernel()] {
+            let nr = kr.nr();
+            let kh = 3;
+            let stride = kh;
+            let a: Vec<i32> = (0..MICRO_MR * stride).map(|i| i32::MAX - i as i32).collect();
+            let cols: Vec<Vec<i32>> =
+                (0..nr).map(|j| vec![i32::MIN + j as i32, 99_999, -7]).collect();
+            let slot_major: Vec<i32> = cols.iter().flatten().copied().collect();
+            assert!(gemm::pack_panels_i8(&slot_major, kh, nr, nr).is_none());
+            let p32 = gemm::pack_panels(&slot_major, kh, nr, nr);
+            let want = want_tile(&a, stride, kh, &cols, nr);
+            let mut acc = [0i32; MICRO_MR * MAX_NR];
+            kr.micro4(&a, stride, kh, PanelRef::I32(&p32), &mut acc);
+            assert_eq!(&acc[..MICRO_MR * nr], &want[..], "{:?}", kr.isa());
+        }
+    }
+
+    #[test]
+    fn resolve_honors_forced_scalar_and_degrades_gracefully() {
+        assert_eq!(Kernel::resolve(Some("scalar")).isa(), Isa::Scalar);
+        assert_eq!(Kernel::resolve(Some("scalar")).nr(), gemm::PANEL_NR);
+        // requesting an ISA yields it when available, scalar otherwise
+        let avx2 = Kernel::resolve(Some("avx2"));
+        match Kernel::avx2() {
+            Some(k) => {
+                assert_eq!(avx2.isa(), Isa::Avx2);
+                assert_eq!(k.nr(), 8);
+            }
+            None => assert_eq!(avx2.isa(), Isa::Scalar),
+        }
+        let neon = Kernel::resolve(Some("neon"));
+        match Kernel::neon() {
+            Some(k) => {
+                assert_eq!(neon.isa(), Isa::Neon);
+                assert_eq!(k.nr(), 4);
+            }
+            None => assert_eq!(neon.isa(), Isa::Scalar),
+        }
+        // unknown values auto-select rather than erroring
+        let auto = Kernel::resolve(Some("definitely-not-an-isa"));
+        assert_eq!(auto.isa(), Kernel::resolve(None).isa());
+        // the process-wide dispatch is stable across calls
+        let first = (kernel().isa(), kernel().nr());
+        assert_eq!((kernel().isa(), kernel().nr()), first);
+        assert!(kernel().nr() <= MAX_NR);
+    }
+}

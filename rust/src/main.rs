@@ -350,6 +350,12 @@ fn main() -> Result<()> {
                  batch {batch}, {threads} threads, {} backend",
                 backend
             );
+            let kr = repro::exec::kernel();
+            println!(
+                "gemm dispatch: {} (panel width {}, set REPRO_SIMD=scalar|avx2|neon to force)",
+                kr.isa().name(),
+                kr.nr()
+            );
             for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
                 let chip = chip.clone().mitigate(kind);
                 let mut sess = engine.session(&chip)?;
@@ -374,10 +380,12 @@ fn main() -> Result<()> {
                     let Some(lp) = cp.layer_plan(li) else { continue };
                     let s = lp.stats();
                     println!(
-                        "  layer {li} {}x{}: {} tiles, {} dense / {} folded / {} chain cols",
+                        "  layer {li} {}x{}: {} tiles ({} i8-packed), {} dense / {} folded \
+                         / {} chain cols",
                         lp.k(),
                         lp.m(),
                         s.tiles,
+                        s.i8_tiles,
                         s.dense_cols,
                         s.folded_cols,
                         s.chain_cols

@@ -254,6 +254,56 @@ fn escaped_fault_executes_truth_on_every_backend() {
     }
 }
 
+/// SIMD dispatch parity on a faulty chip with escaped faults: whatever
+/// kernel [`repro::exec::kernel`] resolved on this host (AVX2, NEON or
+/// the scalar fallback), Sim and Plan logits stay bit-identical — the
+/// array size (9) and tiny_mlp dims force partial tiles and tail panels,
+/// and the stuck-ats sit on the array's last columns so the FAP bypass
+/// masks land exactly where the zero-padded tail lanes live.
+#[test]
+fn simd_dispatch_sim_plan_parity_with_escaped_faults() {
+    let isa = repro::exec::kernel().isa();
+    let arch = tiny_mlp();
+    let mut rng = Rng::new(0x51D0);
+    let params = rand_params(&arch, &mut rng);
+    let batch = 7; // not a multiple of MICRO_MR: edge-row kernel is live
+    let x: Vec<f32> = (0..batch * arch.input_len()).map(|_| rng.normal()).collect();
+    let calib = calibrate_mlp(&arch, &params, &x, batch);
+
+    // faults on the last columns of a 9-wide array: the bypass mask (when
+    // localized) and the escaped corruption (when not) both sit in the
+    // final, partially-filled weight panel of each tile row
+    let truth = FaultMap::from_faults(
+        9,
+        [
+            StuckAt { row: 2, col: 8, bit: 27, value: true },
+            StuckAt { row: 5, col: 7, bit: 29, value: true },
+            StuckAt { row: 7, col: 8, bit: 4, value: true },
+        ],
+    );
+    for escape_prob in [0.0, 1.0] {
+        for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
+            let chip = Chip::new(arch.clone())
+                .with_fault_map(truth.clone())
+                .detect_with(TestPatterns { escape_prob, ..Default::default() })
+                .unwrap()
+                .mitigate(kind);
+            let mut sim = chip.session(Backend::Sim).unwrap();
+            let mut plan = chip.session(Backend::Plan).unwrap();
+            sim.load_model(params.clone(), calib.clone());
+            plan.load_model(params.clone(), calib.clone());
+            let ls = sim.forward_logits(&x, batch).unwrap();
+            let lp = plan.forward_logits(&x, batch).unwrap();
+            assert_eq!(
+                bits(&ls),
+                bits(&lp),
+                "isa={isa:?} escape_prob={escape_prob} kind={kind:?}: \
+                 dispatched kernel diverged from the cycle-level sim"
+            );
+        }
+    }
+}
+
 /// Under forced escapes the detected set is always a subset of the truth
 /// (never a false positive), detection is deterministic per test program,
 /// and escape_prob = 0 recovers full recall.

@@ -6,7 +6,9 @@
 //! Uses the in-repo harness (`rust/src/util/prop.rs`; the offline registry
 //! has no proptest). Failing cases replay with `PROP_REPLAY=<seed>`.
 
-use repro::exec::{dot_wrapping, ChipPlan, ExecScratch, MatmulPlan, WorkerPool};
+use repro::exec::{
+    dot_wrapping, kernel, ChipPlan, ExecScratch, Kernel, MatmulPlan, PanelOptions, WorkerPool,
+};
 use repro::faults::{FaultMap, StuckAt};
 use repro::mapping::MaskKind;
 use repro::model::arch::mnist;
@@ -157,6 +159,120 @@ fn prop_packed_microkernel_matches_dot_wrapping() {
         let got = plan.execute(&a, batch);
         let want = TiledMatmul::new(&fm, false).matmul(&a, &w, batch, k, m);
         prop_assert!(got == want, "chain mix: n={n} k={k} m={m} batch={batch}");
+        Ok(())
+    });
+}
+
+/// The dispatched SIMD kernel, the runtime-width scalar reference at the
+/// same panel width, and the cycle-level sim agree bit-for-bit across
+/// random shapes, fault maps, mitigations, chain-segment mixes, partial
+/// tiles and batch = 1. On AVX2/NEON hosts this pins the real vector
+/// kernels against the scalar oracle on every case.
+#[test]
+fn prop_simd_matches_scalar_reference_and_sim() {
+    prop::check("simd_vs_scalar", 0xE9, 50, |rng| {
+        let n = 2 + rng.below(7);
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        // batch = 1 often: the 1-row SIMD edge kernel needs equal coverage
+        let batch = if rng.bool(0.3) { 1 } else { 1 + rng.below(9) };
+        let fm = random_fault_map(rng, n, 8);
+        let (a, w) = random_case(rng, k, m, batch);
+        for (kind, byp) in [(MaskKind::Unmitigated, false), (MaskKind::FapBypass, true)] {
+            let plan = MatmulPlan::compile(&fm, kind, &w, k, m);
+            let got = plan.execute(&a, batch);
+            let oracle = Kernel::scalar_reference(plan.panel_nr());
+            let reference = plan.execute_with_kernel(&oracle, &a, batch);
+            prop_assert!(
+                got == reference,
+                "{kind:?} isa={:?}: n={n} k={k} m={m} b={batch}",
+                kernel().isa()
+            );
+            let want = TiledMatmul::new(&fm, byp).matmul(&a, &w, batch, k, m);
+            prop_assert!(got == want, "{kind:?} vs sim: n={n} k={k} m={m} b={batch}");
+        }
+        Ok(())
+    });
+}
+
+/// Every panel layout the dispatcher can pick — both widths (4 = NEON/
+/// scalar, 8 = AVX2) in both element widths — executes bit-exact through
+/// the runtime-width scalar reference kernel on any host, so the AVX2
+/// panel format stays pinned even where AVX2 cannot run.
+#[test]
+fn prop_panel_layouts_bit_exact_at_all_widths() {
+    prop::check("panel_widths", 0xEA, 30, |rng| {
+        let n = 2 + rng.below(6);
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        let batch = 1 + rng.below(6);
+        let fm = random_fault_map(rng, n, 6);
+        let (a, w) = random_case(rng, k, m, batch);
+        for (kind, byp) in [(MaskKind::Unmitigated, false), (MaskKind::FapBypass, true)] {
+            let want = TiledMatmul::new(&fm, byp).matmul(&a, &w, batch, k, m);
+            for nr in [4usize, 8] {
+                for allow_i8 in [false, true] {
+                    let opts = PanelOptions { nr, allow_i8 };
+                    let plan = MatmulPlan::compile_opts(&fm, kind, &w, k, m, opts);
+                    let got = plan.execute_with_kernel(&Kernel::scalar_reference(nr), &a, batch);
+                    prop_assert!(
+                        got == want,
+                        "{kind:?} nr={nr} i8={allow_i8}: n={n} k={k} m={m} b={batch}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Wrapping-overflow extremes: activations saturating the i32 range
+/// (`i32::MIN`/`i32::MAX` accumulands) through both panel element widths
+/// — quantized-range weights exercise the i8 widening path, wide weights
+/// force i32 panels — all bit-exact with the scalar reference and the
+/// cycle-level sim (wrap, never saturate, on every ISA).
+#[test]
+fn prop_wrapping_extremes_bit_exact() {
+    prop::check("simd_extremes", 0xEB, 30, |rng| {
+        let n = 2 + rng.below(5);
+        let k = 1 + rng.below(2 * n);
+        let m = 1 + rng.below(2 * n);
+        let batch = 1 + rng.below(5);
+        let fm = random_fault_map(rng, n, 6);
+        let a: Vec<i32> = (0..batch * k)
+            .map(|_| match rng.below(4) {
+                0 => i32::MAX,
+                1 => i32::MIN,
+                _ => rng.below(1 << 16) as i32 - (1 << 15),
+            })
+            .collect();
+        // i8-range weights (the quantized datapath) -> i8 panels
+        let w8: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+        // wide weights (incl. near-i32::MIN) -> i32 panels
+        let w32: Vec<i32> = (0..k * m)
+            .map(|_| {
+                if rng.bool(0.3) {
+                    i32::MIN + rng.below(1000) as i32
+                } else {
+                    rng.below(1 << 20) as i32 - (1 << 19)
+                }
+            })
+            .collect();
+        for (w, tag) in [(&w8, "i8"), (&w32, "i32")] {
+            let plan = MatmulPlan::compile(&fm, MaskKind::Unmitigated, w, k, m);
+            if tag == "i8" {
+                prop_assert!(
+                    plan.stats().i8_tiles == plan.stats().tiles,
+                    "quantized-range weights must pack i8 panels"
+                );
+            }
+            let got = plan.execute(&a, batch);
+            let oracle = Kernel::scalar_reference(plan.panel_nr());
+            let reference = plan.execute_with_kernel(&oracle, &a, batch);
+            prop_assert!(got == reference, "{tag}: n={n} k={k} m={m} b={batch}");
+            let want = TiledMatmul::new(&fm, false).matmul(&a, w, batch, k, m);
+            prop_assert!(got == want, "{tag} vs sim: n={n} k={k} m={m} b={batch}");
+        }
         Ok(())
     });
 }
