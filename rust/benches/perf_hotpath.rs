@@ -30,7 +30,10 @@ use repro::exec::{
     default_threads, dot_wrapping, kernel, Kernel, MatmulPlan, PanelOptions, WorkerPool,
 };
 use repro::faults::{inject_uniform, FaultMap, FaultSpec};
-use repro::fleet::{percentile, serve, ChipUnit, RoutingPolicy, WorkloadConfig};
+use repro::fleet::{
+    percentile, serve, serve_open, ArrivalProcess, BatcherConfig, ChipUnit, OpenLoopStats,
+    OpenWorkloadConfig, RoutingPolicy, WorkloadConfig,
+};
 use repro::mapping::{LayerMasks, MaskKind};
 use repro::model::arch;
 use repro::model::quant::calibrate_mlp;
@@ -451,15 +454,53 @@ fn bench_backend_sessions(rng: &mut Rng, quick: bool) -> anyhow::Result<Vec<Json
     Ok(rows)
 }
 
-/// Fleet scheduler throughput: 4 faulty chips behind the batched
-/// dispatcher, one row per routing policy (samples/s + latency
-/// percentiles), emitted as `BENCH_fleet.json` so the serving-layer perf
-/// trajectory is tracked PR over PR like the exec engine's.
+/// One open-loop serving row: knobs + every headline serving statistic.
+fn open_row(mode: &str, cfg: &OpenWorkloadConfig, o: &OpenLoopStats) -> Json {
+    Json::obj()
+        .field("mode", Json::str(mode))
+        .field("arrival", Json::str(cfg.arrival.name()))
+        .field("batch_max", Json::num(cfg.batcher.batch_max as f64))
+        .field("batch_age_us", Json::num(cfg.batcher.max_batch_age_us))
+        .field("queue_timeout_us", Json::num(cfg.batcher.queue_timeout_us))
+        .field("offered", Json::num(o.offered as f64))
+        .field("served", Json::num(o.served as f64))
+        .field("shed", Json::num(o.shed as f64))
+        .field("timed_out", Json::num(o.timed_out as f64))
+        .field("offered_load_rps", Json::num(o.offered_load_rps()))
+        .field("goodput_rps", Json::num(o.goodput_rps()))
+        .field("mean_batch_fill", Json::num(o.mean_batch_fill()))
+        .field("p50_latency_us", Json::num(o.p50_latency_us()))
+        .field("p99_latency_us", Json::num(o.p99_latency_us()))
+        .field("p999_latency_us", Json::num(o.p999_latency_us()))
+}
+
+/// Fleet serving benchmarks, emitted as `BENCH_fleet.json` so the
+/// serving-layer perf trajectory is tracked PR over PR like the exec
+/// engine's. Three row families over the same 4x 32x32 faulty-chip fleet:
+///
+/// * `closed`: the closed-loop batched dispatcher, one row per routing
+///   policy (wall samples/s + latency percentiles);
+/// * `open`: open-loop arrival streams (Poisson + bursty MMPP) through
+///   the dynamic batcher — virtual-clock DES only, at millions of
+///   requests in the full run — plus one executed `open_exec` row for
+///   wall-clock samples/s and served accuracy;
+/// * `sweep`: the batching-window sweep at one offered load, fixed-batch
+///   (age = inf) against dynamic windows. **Goodput-gated**: the bench
+///   exits nonzero if any dynamic window fails to beat fixed-batch
+///   serving on both served count and goodput.
 fn bench_fleet_scheduler(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Json>)> {
     println!("\n# fleet scheduler (mnist, 4x 32x32 chips, 5% faults, FAP bypass)");
     let a = arch::by_name("mnist").unwrap();
     let (chips_n, array_n) = (4usize, 32usize);
     let (batch, requests) = if quick { (16usize, 8usize) } else { (64, 32) };
+    // the DES costs no forwards, so the full bench offers millions of
+    // requests per open-loop row; the executed row stays moderate
+    let (open_offered, exec_offered) =
+        if quick { (20_000usize, 512usize) } else { (2_000_000, 8_192) };
+    // +8 keeps every chip's round-robin share from dividing batch_max, so
+    // fixed-batch mode provably strands a tail partial window per chip
+    let sweep_offered = open_offered + 8;
+    let sweep_rate = 2.0e5;
     let mut params = Params::zeros_like(&a);
     for (w, b) in &mut params.layers {
         w.iter_mut().for_each(|v| *v = rng.normal() * 0.05);
@@ -476,18 +517,17 @@ fn bench_fleet_scheduler(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Ve
                 .threads(1)
         })
         .collect();
+    let units: Vec<ChipUnit<'_>> = chips
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ChipUnit { id: i, chip: c, params: &params, weight: 1.0 - 0.1 * i as f64 })
+        .collect();
 
+    // ---- closed loop: one row per routing policy ------------------------
     let mut rows = Vec::new();
     for policy in
         [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::AccuracyWeighted]
     {
-        let units: Vec<ChipUnit<'_>> = chips
-            .iter()
-            .enumerate()
-            .map(|(i, c)| {
-                ChipUnit { id: i, chip: c, params: &params, weight: 1.0 - 0.1 * i as f64 }
-            })
-            .collect();
         let cfg = WorkloadConfig {
             backend: Backend::Plan,
             policy,
@@ -501,11 +541,12 @@ fn bench_fleet_scheduler(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Ve
         let lats = rep.sorted_latencies_us();
         let (p50, p99) = (percentile(&lats, 0.5), percentile(&lats, 0.99));
         println!(
-            "fleet {policy:<18} {:>10.0} samples/s  p50 {p50:>8.0}us  p99 {p99:>8.0}us",
+            "fleet closed {policy:<18} {:>10.0} samples/s  p50 {p50:>8.0}us  p99 {p99:>8.0}us",
             rep.samples_per_sec()
         );
         rows.push(
             Json::obj()
+                .field("mode", Json::str("closed"))
                 .field("policy", Json::str(policy.name()))
                 .field("chips", Json::num(chips_n as f64))
                 .field("array_n", Json::num(array_n as f64))
@@ -518,12 +559,103 @@ fn bench_fleet_scheduler(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Ve
                 .field("p99_latency_us", Json::num(p99)),
         );
     }
+
+    let mk_open = |arrival, rate_rps, offered, age_us, execute| OpenWorkloadConfig {
+        backend: Backend::Plan,
+        policy: RoutingPolicy::RoundRobin,
+        arrival,
+        rate_rps,
+        offered,
+        batcher: BatcherConfig {
+            batch_max: batch,
+            max_batch_age_us: age_us,
+            queue_timeout_us: 5_000.0,
+            queue_depth: 4,
+        },
+        workers: 0,
+        execute,
+        seed: 71,
+    };
+
+    // ---- open loop: Poisson + bursty DES rows at auto (~70%) load -------
+    for arrival in [ArrivalProcess::Poisson, ArrivalProcess::Bursty] {
+        let cfg = mk_open(arrival, 0.0, open_offered, 200.0, false);
+        let rep = serve_open(&units, &calib, &workload, &cfg)?;
+        let o = rep.open.as_ref().unwrap();
+        anyhow::ensure!(o.conservation_ok(), "open-loop conservation violated ({})", arrival);
+        println!(
+            "fleet open {:<7} offered {:>8} served {:>8} shed {:>6} timeout {:>6}  \
+             goodput {:>9.0} rps  fill {:>3.0}%",
+            arrival.name(),
+            o.offered,
+            o.served,
+            o.shed,
+            o.timed_out,
+            o.goodput_rps(),
+            o.mean_batch_fill() * 100.0
+        );
+        rows.push(open_row("open", &cfg, o));
+    }
+
+    // ---- open loop, executed: wall samples/s + served accuracy ----------
+    let cfg = mk_open(ArrivalProcess::Poisson, 0.0, exec_offered, 200.0, true);
+    let rep = serve_open(&units, &calib, &workload, &cfg)?;
+    let o = rep.open.as_ref().unwrap();
+    println!(
+        "fleet open executed: {} served at {:>8.0} samples/s wall, accuracy {:.2}%",
+        rep.requests,
+        rep.samples_per_sec(),
+        rep.accuracy() * 100.0
+    );
+    rows.push(
+        open_row("open_exec", &cfg, o)
+            .field("samples", Json::num(rep.samples as f64))
+            .field("accuracy", Json::num(rep.accuracy()))
+            .field("samples_per_sec", Json::num(rep.samples_per_sec())),
+    );
+
+    // ---- batching-window sweep: fixed-batch vs dynamic, same load -------
+    let (mut fixed_served, mut fixed_goodput) = (0usize, 0.0f64);
+    for age_us in [f64::INFINITY, 50.0, 200.0, 1000.0] {
+        let cfg = mk_open(ArrivalProcess::Poisson, sweep_rate, sweep_offered, age_us, false);
+        let rep = serve_open(&units, &calib, &workload, &cfg)?;
+        let o = rep.open.as_ref().unwrap();
+        anyhow::ensure!(o.conservation_ok(), "open-loop conservation violated (window sweep)");
+        let window = if age_us.is_finite() { format!("{age_us:.0}us") } else { "fixed".into() };
+        println!(
+            "fleet window {:<6} served {:>8}/{:>8} timeout {:>5}  goodput {:>9.0} rps  \
+             fill {:>3.0}%",
+            window,
+            o.served,
+            o.offered,
+            o.timed_out,
+            o.goodput_rps(),
+            o.mean_batch_fill() * 100.0
+        );
+        if age_us.is_infinite() {
+            (fixed_served, fixed_goodput) = (o.served, o.goodput_rps());
+        } else {
+            anyhow::ensure!(
+                o.served > fixed_served && o.goodput_rps() > fixed_goodput,
+                "dynamic batching (age {window}) must beat fixed-batch serving: served {} vs \
+                 {fixed_served}, goodput {:.0} vs {fixed_goodput:.0} rps",
+                o.served,
+                o.goodput_rps()
+            );
+        }
+        rows.push(open_row("sweep", &cfg, o).field("window", Json::str(window)));
+    }
+
     let meta = Json::obj()
         .field("model", Json::str("mnist"))
         .field("chips", Json::num(chips_n as f64))
         .field("array_n", Json::num(array_n as f64))
         .field("batch", Json::num(batch as f64))
-        .field("requests", Json::num(requests as f64));
+        .field("requests", Json::num(requests as f64))
+        .field("open_offered", Json::num(open_offered as f64))
+        .field("exec_offered", Json::num(exec_offered as f64))
+        .field("sweep_offered", Json::num(sweep_offered as f64))
+        .field("sweep_rate_rps", Json::num(sweep_rate));
     Ok((meta, rows))
 }
 

@@ -2,6 +2,7 @@
 //! out of the fab, how requests are routed, and how the lifetime loop is
 //! scaled per profile.
 
+use super::loadgen::ArrivalProcess;
 use crate::coordinator::experiment::Profile;
 use crate::faults::TestPatterns;
 use crate::util::Rng;
@@ -115,12 +116,30 @@ pub struct FleetConfig {
     /// SLO as a fraction of the golden (fault-free quantized) accuracy;
     /// chips below it get retrained (managed) or merely recorded.
     pub slo_frac: f64,
-    /// Samples per request batch.
+    /// Samples per request batch — `batch_max` of the open-loop dynamic
+    /// batching window (a batch dispatches early when the oldest pending
+    /// request ages past `max_batch_age_us`).
     pub batch: usize,
-    /// Bounded per-chip queue depth (batches).
+    /// Bounded per-chip queue depth (batches); arrivals beyond
+    /// `queue_depth * batch` pending requests are shed.
     pub queue_depth: usize,
-    /// Request batches dispatched per active chip per life step.
+    /// Request batches dispatched per active chip per life step; the
+    /// open-loop offered request count is `batches_per_chip * batch` per
+    /// active chip.
     pub batches_per_chip: usize,
+    /// Open-loop arrival process for each life step's serving window.
+    pub arrival: ArrivalProcess,
+    /// Mean offered arrival rate, requests per virtual second
+    /// (0 = auto-calibrate to ~70% of the active fleet's capacity).
+    pub rate_rps: f64,
+    /// Oldest-request age (virtual µs) that forces a partial batch out.
+    pub max_batch_age_us: f64,
+    /// Admission deadline (virtual µs) from intended arrival; pending
+    /// requests past it are shed as timeouts, never silently dropped.
+    pub queue_timeout_us: f64,
+    /// Serving-latency SLO on open-loop p99.9 (virtual µs); infinite
+    /// disables the latency term of the health check.
+    pub latency_slo_us: f64,
     /// Scheduler worker threads (0 = min(chips, cores)).
     pub workers: usize,
     /// FAP+T epochs per retrain event.
@@ -156,6 +175,11 @@ impl Default for FleetConfig {
             batch: 64,
             queue_depth: 4,
             batches_per_chip: 4,
+            arrival: ArrivalProcess::Poisson,
+            rate_rps: 0.0,
+            max_batch_age_us: 200.0,
+            queue_timeout_us: 5_000.0,
+            latency_slo_us: f64::INFINITY,
             workers: 0,
             retrain_epochs: 2,
             retrain_downtime_hours: 200.0,

@@ -19,9 +19,10 @@
 //! the controller is blind, chips serve the golden weights on their faulty
 //! arrays, the monitor only records the accuracy trajectory.
 
+use super::batcher::BatcherConfig;
 use super::config::FleetConfig;
 use super::provision::{ChipStatus, Fleet, FleetChip, RetrainEvent};
-use super::scheduler::{self, ChipUnit, WorkloadConfig, WorkloadReport};
+use super::scheduler::{self, ChipUnit, OpenWorkloadConfig, WorkloadReport};
 use crate::chip::{Chip, Engine};
 use crate::coordinator::fap::apply_fap_planned;
 use crate::coordinator::fapt::FaptConfig;
@@ -42,8 +43,13 @@ pub struct LifeStep {
     /// FAP+T retrain events the health monitor queued this step.
     pub retrains: usize,
     pub retired: usize,
+    /// Whether the step's open-loop p99.9 latency met `cfg.latency_slo_us`
+    /// (vacuously true when the fleet is dark or the SLO is disabled) —
+    /// with accuracy, the second axis of the serving SLO.
+    pub latency_slo_ok: bool,
     /// Traffic served after the health pass (`None` once every chip is
-    /// retired — the fleet is dark).
+    /// retired — the fleet is dark). Served through the open-loop path:
+    /// arrivals, batching windows, and admission on the virtual clock.
     pub workload: Option<WorkloadReport>,
 }
 
@@ -67,8 +73,23 @@ pub struct FleetOutcome {
     /// Wall-clock seconds spent inside the scheduler.
     pub serve_secs: f64,
     pub sim_cycles: u64,
-    /// Every batch latency over the whole life, ascending.
+    /// Every served request's latency over the whole life, ascending
+    /// (virtual µs, measured from intended arrival time).
     pub latencies_us: Vec<f64>,
+    /// Open-loop admission accounting, summed over steps: every offered
+    /// request is served, shed, or timed out — exactly once.
+    pub total_offered: usize,
+    pub total_shed: usize,
+    pub total_timed_out: usize,
+    /// Batches dispatched and the slots they carried (`batches * batch_max`
+    /// per step), for the mean fill ratio.
+    pub total_batches: usize,
+    pub total_batch_slots: usize,
+    /// Virtual serving time summed over steps (the open-loop denominator
+    /// for offered load and goodput).
+    pub virtual_secs: f64,
+    /// Life steps whose open-loop p99.9 latency breached the latency SLO.
+    pub latency_breach_steps: usize,
 }
 
 impl FleetOutcome {
@@ -92,6 +113,38 @@ impl FleetOutcome {
 
     pub fn p99_latency_us(&self) -> f64 {
         scheduler::percentile(&self.latencies_us, 0.99)
+    }
+
+    pub fn p999_latency_us(&self) -> f64 {
+        scheduler::percentile(&self.latencies_us, 0.999)
+    }
+
+    /// Offered arrival rate over the whole life, requests per virtual sec.
+    pub fn offered_load_rps(&self) -> f64 {
+        self.total_offered as f64 / self.virtual_secs.max(1e-12)
+    }
+
+    /// Requests actually served per virtual second.
+    pub fn goodput_rps(&self) -> f64 {
+        self.total_requests as f64 / self.virtual_secs.max(1e-12)
+    }
+
+    pub fn shed_fraction(&self) -> f64 {
+        self.total_shed as f64 / self.total_offered.max(1) as f64
+    }
+
+    pub fn timeout_fraction(&self) -> f64 {
+        self.total_timed_out as f64 / self.total_offered.max(1) as f64
+    }
+
+    /// Mean dispatched batch size as a fraction of the window's capacity.
+    pub fn mean_batch_fill(&self) -> f64 {
+        self.total_requests as f64 / self.total_batch_slots.max(1) as f64
+    }
+
+    /// Every offered request accounted exactly once across the whole life.
+    pub fn conservation_ok(&self) -> bool {
+        self.total_requests + self.total_shed + self.total_timed_out == self.total_offered
     }
 }
 
@@ -225,6 +278,13 @@ pub fn run_lifetime(
         serve_secs: 0.0,
         sim_cycles: 0,
         latencies_us: Vec::new(),
+        total_offered: 0,
+        total_shed: 0,
+        total_timed_out: 0,
+        total_batches: 0,
+        total_batch_slots: 0,
+        virtual_secs: 0.0,
+        latency_breach_steps: 0,
     };
 
     for step in 1..=cfg.life_steps {
@@ -242,6 +302,7 @@ pub fn run_lifetime(
         let retired = (fleet.chips.len() - fleet.active_chips()) - retired_before;
 
         let workload = serve_step(engine, fleet, eval, &cfg, step as u64)?;
+        let mut latency_slo_ok = true;
         if let Some(w) = &workload {
             for s in &w.per_chip {
                 let chip = fleet.chips.iter_mut().find(|c| c.id == s.chip_id).unwrap();
@@ -260,6 +321,18 @@ pub fn run_lifetime(
             out.serve_secs += w.wall_secs;
             out.sim_cycles += w.sim_cycles;
             out.latencies_us.extend(w.sorted_latencies_us());
+            if let Some(open) = &w.open {
+                out.total_offered += open.offered;
+                out.total_shed += open.shed;
+                out.total_timed_out += open.timed_out;
+                out.total_batches += open.batches;
+                out.total_batch_slots += open.batches * open.batch_max;
+                out.virtual_secs += open.virtual_secs;
+                latency_slo_ok = open.p999_latency_us() <= cfg.latency_slo_us;
+                if !latency_slo_ok {
+                    out.latency_breach_steps += 1;
+                }
+            }
         }
         out.steps.push(LifeStep {
             step,
@@ -268,6 +341,7 @@ pub fn run_lifetime(
             new_faults,
             retrains,
             retired,
+            latency_slo_ok,
             workload,
         });
     }
@@ -276,7 +350,10 @@ pub fn run_lifetime(
     Ok(out)
 }
 
-/// Serve one life step's traffic over the currently active chips.
+/// Serve one life step's traffic over the currently active chips, through
+/// the open-loop path: a seeded arrival stream hits per-chip dynamic
+/// batching windows and admission control on the virtual clock, and the
+/// planned batches really execute for accuracy/SDC accounting.
 fn serve_step(
     engine: &Engine<'_>,
     fleet: &Fleet,
@@ -292,14 +369,26 @@ fn serve_step(
         .iter()
         .map(|c| ChipUnit { id: c.id, chip: &c.view, params: &c.params, weight: c.accuracy })
         .collect();
-    let wcfg = WorkloadConfig {
+    let wcfg = OpenWorkloadConfig {
         backend: engine.backend(),
         policy: cfg.policy,
-        batch: cfg.batch,
-        queue_depth: cfg.queue_depth,
-        requests: cfg.batches_per_chip * units.len(),
-        workers: cfg.workers,
+        arrival: cfg.arrival,
+        rate_rps: cfg.rate_rps,
+        // same traffic volume the closed loop offered: batches_per_chip
+        // full batches' worth of individual requests per active chip
+        offered: cfg.batches_per_chip * cfg.batch * units.len(),
+        batcher: BatcherConfig {
+            batch_max: cfg.batch,
+            max_batch_age_us: cfg.max_batch_age_us,
+            queue_timeout_us: cfg.queue_timeout_us,
+            queue_depth: cfg.queue_depth,
+        },
+        // the fleet shrinks as chips retire: a fixed worker request is
+        // deliberately adjusted down to the active-chip count (this is a
+        // fleet-size change over time, not a silent config clamp)
+        workers: cfg.workers.min(units.len()),
+        execute: true,
         seed: cfg.seed ^ (step << 32) ^ 0x5EB5,
     };
-    scheduler::serve(&units, &fleet.calib, eval, &wcfg).map(Some)
+    scheduler::serve_open(&units, &fleet.calib, eval, &wcfg).map(Some)
 }

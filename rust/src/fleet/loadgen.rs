@@ -1,0 +1,297 @@
+//! Open-loop request generation on a virtual clock.
+//!
+//! A serving system's offered load is set by its *users*, not by its own
+//! completion rate: requests keep arriving whether or not the fleet keeps
+//! up. The closed-loop scheduler ([`super::scheduler::serve`]) cannot
+//! express that — it dispatches the next batch only after the queue
+//! accepts the previous one, so saturation silently slows the arrival
+//! process and the measured latency "coordinates" with the server
+//! (coordinated omission). [`LoadGen`] instead emits *individual requests
+//! with intended arrival timestamps* on a deterministic virtual clock;
+//! every latency downstream is measured from the intended arrival time,
+//! so queueing delay under overload is visible instead of hidden.
+//!
+//! The virtual clock ticks in nanoseconds at the paper's synthesized
+//! 658 MHz array clock ([`NS_PER_CYCLE`]): service times derive from the
+//! §3.2 timing model, so the whole serving simulation — arrivals, batching
+//! windows, admission, latency percentiles — is exactly reproducible from
+//! the seed, independent of host speed.
+//!
+//! Two arrival processes:
+//! * [`ArrivalProcess::Poisson`] — exponential inter-arrival gaps at a
+//!   constant rate, the classic open-loop model.
+//! * [`ArrivalProcess::Bursty`] — a two-state Markov-modulated Poisson
+//!   process (MMPP-2): bursts at [`BURST_FACTOR`]× the mean rate for an
+//!   [`ON_FRACTION`] of the time, a trickle otherwise, same long-run mean
+//!   rate. Bursts are what stress a batching window's tail latency.
+
+use crate::systolic::synthesis::PAPER_FREQ_HZ;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+
+/// Virtual nanoseconds per array cycle (the paper's 658 MHz clock).
+pub const NS_PER_CYCLE: f64 = 1e9 / PAPER_FREQ_HZ;
+
+/// Burst-state arrival rate as a multiple of the mean rate.
+pub const BURST_FACTOR: f64 = 4.0;
+/// Long-run fraction of virtual time spent bursting.
+pub const ON_FRACTION: f64 = 0.2;
+/// Mean burst length in burst-rate arrivals (sets the dwell-time scale).
+const BURST_LEN_ARRIVALS: f64 = 256.0;
+
+/// How request arrivals are spaced on the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Constant-rate Poisson process (exponential inter-arrival gaps).
+    Poisson,
+    /// MMPP-2: alternating burst / idle states, each exponentially
+    /// distributed in duration, with the same long-run mean rate.
+    Bursty,
+}
+
+impl ArrivalProcess {
+    pub fn parse(s: &str) -> Result<ArrivalProcess> {
+        match s {
+            "poisson" => Ok(ArrivalProcess::Poisson),
+            "burst" | "bursty" | "mmpp" => Ok(ArrivalProcess::Bursty),
+            other => bail!("unknown arrival process {other:?} (use poisson | burst)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty => "burst",
+        }
+    }
+}
+
+impl std::fmt::Display for ArrivalProcess {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One inference request: an id (dense `0..offered`), the virtual instant
+/// the user issued it, and the dataset sample it asks for.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: usize,
+    /// Intended arrival time on the virtual clock — the latency origin.
+    pub arrival_ns: u64,
+    /// Sample index into the workload dataset.
+    pub sample: u32,
+}
+
+/// Deterministic open-loop request stream (an iterator over [`Request`]s
+/// in nondecreasing arrival order). Seeded by the fleet seed; the stream
+/// never depends on anything downstream, which is exactly what makes it
+/// open-loop.
+pub struct LoadGen {
+    rng: Rng,
+    process: ArrivalProcess,
+    /// Mean arrival rate, requests per virtual second.
+    rate_rps: f64,
+    remaining: usize,
+    next_id: usize,
+    clock_ns: f64,
+    data_len: usize,
+    // MMPP-2 state (unused for Poisson).
+    bursting: bool,
+    state_until_ns: f64,
+}
+
+impl LoadGen {
+    /// A stream of `offered` requests at mean `rate_rps`, drawing sample
+    /// indices uniformly from `[0, data_len)`.
+    pub fn new(
+        process: ArrivalProcess,
+        rate_rps: f64,
+        offered: usize,
+        data_len: usize,
+        seed: u64,
+    ) -> Result<LoadGen> {
+        ensure_rate(rate_rps)?;
+        anyhow::ensure!(data_len > 0, "loadgen: empty workload dataset");
+        let mut gen = LoadGen {
+            rng: Rng::new(seed ^ 0x10AD_6E4E),
+            process,
+            rate_rps,
+            remaining: offered,
+            next_id: 0,
+            clock_ns: 0.0,
+            data_len,
+            bursting: false,
+            state_until_ns: 0.0,
+        };
+        if process == ArrivalProcess::Bursty {
+            // start idle; the first dwell draw below schedules the burst
+            gen.state_until_ns = gen.exp_ns(1.0 / gen.dwell_ns(false));
+        }
+        Ok(gen)
+    }
+
+    /// Burst-state rate (requests / virtual second).
+    fn burst_rate(&self) -> f64 {
+        self.rate_rps * BURST_FACTOR
+    }
+
+    /// Idle-state rate, chosen so the long-run mean is `rate_rps`:
+    /// `mean = ON·burst + (1-ON)·idle`.
+    fn idle_rate(&self) -> f64 {
+        self.rate_rps * (1.0 - ON_FRACTION * BURST_FACTOR) / (1.0 - ON_FRACTION)
+    }
+
+    /// Mean dwell time (ns) of a state, scaled so a burst spans about
+    /// [`BURST_LEN_ARRIVALS`] arrivals at the burst rate.
+    fn dwell_ns(&self, bursting: bool) -> f64 {
+        let on_ns = BURST_LEN_ARRIVALS / self.burst_rate() * 1e9;
+        if bursting {
+            on_ns
+        } else {
+            on_ns * (1.0 - ON_FRACTION) / ON_FRACTION
+        }
+    }
+
+    /// Exponential draw with rate `lambda` (per ns), in ns.
+    fn exp_ns(&mut self, lambda_per_ns: f64) -> f64 {
+        let u = loop {
+            let u = self.rng.f64();
+            if u < 1.0 {
+                break u;
+            }
+        };
+        -(1.0 - u).ln() / lambda_per_ns
+    }
+
+    /// Advance the virtual clock to the next arrival instant.
+    fn advance(&mut self) {
+        match self.process {
+            ArrivalProcess::Poisson => {
+                let lambda = self.rate_rps / 1e9;
+                self.clock_ns += self.exp_ns(lambda);
+            }
+            ArrivalProcess::Bursty => loop {
+                let rate = if self.bursting { self.burst_rate() } else { self.idle_rate() };
+                // a zero-rate idle state only ever leaves by dwell expiry
+                let gap = if rate > 0.0 { self.exp_ns(rate / 1e9) } else { f64::INFINITY };
+                if self.clock_ns + gap <= self.state_until_ns {
+                    self.clock_ns += gap;
+                    return;
+                }
+                // memoryless: jump to the state switch and redraw there
+                self.clock_ns = self.state_until_ns;
+                self.bursting = !self.bursting;
+                let dwell = self.dwell_ns(self.bursting);
+                self.state_until_ns = self.clock_ns + self.exp_ns(1.0 / dwell);
+            },
+        }
+    }
+}
+
+impl Iterator for LoadGen {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        self.advance();
+        let req = Request {
+            id: self.next_id,
+            arrival_ns: self.clock_ns as u64,
+            sample: self.rng.below(self.data_len) as u32,
+        };
+        self.next_id += 1;
+        Some(req)
+    }
+}
+
+fn ensure_rate(rate_rps: f64) -> Result<()> {
+    anyhow::ensure!(
+        rate_rps.is_finite() && rate_rps > 0.0,
+        "loadgen: arrival rate must be a positive finite requests/sec (got {rate_rps})"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_rejects() {
+        assert_eq!(ArrivalProcess::parse("poisson").unwrap(), ArrivalProcess::Poisson);
+        assert_eq!(ArrivalProcess::parse("burst").unwrap(), ArrivalProcess::Bursty);
+        assert_eq!(ArrivalProcess::parse("mmpp").unwrap(), ArrivalProcess::Bursty);
+        assert!(ArrivalProcess::parse("uniform").is_err());
+    }
+
+    #[test]
+    fn poisson_stream_is_deterministic_and_ordered() {
+        let collect = || {
+            LoadGen::new(ArrivalProcess::Poisson, 1e6, 500, 100, 7)
+                .unwrap()
+                .collect::<Vec<Request>>()
+        };
+        let (a, b) = (collect(), collect());
+        assert_eq!(a.len(), 500);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.arrival_ns, rb.arrival_ns);
+            assert_eq!(ra.sample, rb.sample);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_ns <= w[1].arrival_ns, "arrivals out of order");
+            assert_eq!(w[0].id + 1, w[1].id);
+        }
+        assert!(a.iter().all(|r| (r.sample as usize) < 100));
+    }
+
+    #[test]
+    fn poisson_mean_rate_tracks_target() {
+        let n = 20_000usize;
+        let rate = 2e6; // 2M req/s
+        let last = LoadGen::new(ArrivalProcess::Poisson, rate, n, 10, 3).unwrap().last().unwrap();
+        let measured = n as f64 / (last.arrival_ns as f64 / 1e9);
+        assert!(
+            (measured - rate).abs() / rate < 0.05,
+            "poisson rate {measured:.0} vs target {rate:.0}"
+        );
+    }
+
+    #[test]
+    fn bursty_mean_rate_tracks_target_but_burstier() {
+        let n = 60_000usize;
+        let rate = 1e6;
+        let arrivals: Vec<u64> = LoadGen::new(ArrivalProcess::Bursty, rate, n, 10, 11)
+            .unwrap()
+            .map(|r| r.arrival_ns)
+            .collect();
+        let span_s = *arrivals.last().unwrap() as f64 / 1e9;
+        let measured = n as f64 / span_s;
+        assert!(
+            (measured - rate).abs() / rate < 0.15,
+            "mmpp mean rate {measured:.0} vs target {rate:.0}"
+        );
+        // burstiness: the index-of-dispersion of counts in fixed windows
+        // must exceed the Poisson value of ~1
+        let window_ns = 1e9 / rate * 100.0; // ~100 mean arrivals per window
+        let mut counts = vec![0usize; (*arrivals.last().unwrap() as f64 / window_ns) as usize + 1];
+        for &a in &arrivals {
+            counts[(a as f64 / window_ns) as usize] += 1;
+        }
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
+        let var = counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>()
+            / counts.len() as f64;
+        assert!(var / mean > 2.0, "MMPP dispersion {:.2} not bursty", var / mean);
+    }
+
+    #[test]
+    fn rejects_bad_rates_and_empty_data() {
+        assert!(LoadGen::new(ArrivalProcess::Poisson, 0.0, 10, 10, 1).is_err());
+        assert!(LoadGen::new(ArrivalProcess::Poisson, -5.0, 10, 10, 1).is_err());
+        assert!(LoadGen::new(ArrivalProcess::Poisson, f64::INFINITY, 10, 10, 1).is_err());
+        assert!(LoadGen::new(ArrivalProcess::Poisson, 1e6, 10, 0, 1).is_err());
+    }
+}

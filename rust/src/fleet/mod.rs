@@ -11,30 +11,46 @@
 //!   wear-out process ([`crate::faults::AgingChip`]), run the post-fab
 //!   pass (detect → FAP → FAP+T if needed) through the shared
 //!   [`crate::chip::Engine`]; fab rejects count against provision yield.
-//! * [`scheduler`] — batched request dispatch into bounded per-chip
-//!   queues; worker threads own disjoint chip subsets and drive one
-//!   [`crate::chip::ChipSession`] per chip; round-robin / least-loaded /
-//!   accuracy-weighted routing.
+//! * [`loadgen`] — deterministic open-loop request generation on a
+//!   virtual clock (Poisson and bursty/MMPP-2 arrivals, per-request
+//!   intended arrival timestamps).
+//! * [`batcher`] — per-chip dynamic batching windows and admission
+//!   control: coalesce up to `batch_max` or `max_batch_age`, shed on a
+//!   full pool, expire on `queue_timeout`, all accounted exactly.
+//! * [`scheduler`] — request dispatch across worker threads that own
+//!   disjoint chip subsets and drive one [`crate::chip::ChipSession`] per
+//!   chip; round-robin / least-loaded / accuracy-weighted routing;
+//!   closed-loop ([`scheduler::serve`]) and open-loop
+//!   ([`scheduler::serve_open`], coordinated-omission-free latency).
 //! * [`health`] — the lifetime loop: simulated hours advance, faults
 //!   accrue monotonically, the monitor re-runs localization, re-masks,
 //!   queues FAP+T retraining below the SLO and retires chips that can no
 //!   longer meet it.
-//! * [`report`] — `results/fleet.json`: throughput (samples/sec +
-//!   simulated cycles), p50/p99 batch latency, aggregate served accuracy,
-//!   effective yield, per-chip retrain/downtime history.
+//! * [`report`] — `results/fleet.json`: offered load / goodput /
+//!   shed+timeout fractions / batch fill, p50/p99/p99.9 latency from
+//!   intended arrival, throughput (samples/sec + simulated cycles),
+//!   aggregate served accuracy, effective yield, per-chip
+//!   retrain/downtime history.
 //!
 //! Entry point: `repro fleet --chips N --backend sim|plan --policy P
 //! --hours H --profile quick|default|paper` (see `main.rs`), or
 //! [`provision::provision_fleet`] + [`health::run_lifetime`] from code.
 
+pub mod batcher;
 pub mod config;
 pub mod health;
+pub mod loadgen;
 pub mod provision;
 pub mod report;
 pub mod scheduler;
 
+pub use batcher::{BatcherConfig, OpenLoopStats, RequestOutcome, ServingPlan};
 pub use config::{FleetConfig, RoutingPolicy, YieldDist};
 pub use health::{run_lifetime, FleetOutcome, LifeStep};
+pub use loadgen::{ArrivalProcess, LoadGen, Request};
 pub use provision::{provision_fleet, ChipStatus, Fleet, FleetChip, RetrainEvent};
 pub use report::{fleet_json, print_summary};
-pub use scheduler::{percentile, serve, ChipUnit, WorkloadConfig, WorkloadReport};
+pub use scheduler::{
+    percentile, serve, serve_open, ChipUnit, OpenWorkloadConfig, WorkloadConfig, WorkloadReport,
+    WrrPicker,
+};

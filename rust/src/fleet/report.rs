@@ -1,7 +1,8 @@
 //! Fleet-level reporting: the `results/fleet.json` record and the console
-//! summary table — throughput (samples/sec and simulated cycles), batch
-//! latency percentiles, aggregate served accuracy, effective yield, and
-//! the per-chip retrain/downtime history.
+//! summary table — open-loop serving (offered load, goodput, shed/timeout
+//! fractions, mean batch fill, p50/p99/p99.9 latency from intended arrival
+//! time), throughput (samples/sec and simulated cycles), aggregate served
+//! accuracy, effective yield, and the per-chip retrain/downtime history.
 
 use super::health::FleetOutcome;
 use super::provision::{ChipStatus, Fleet};
@@ -68,6 +69,16 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
                     .field("accuracy", Json::num(w.accuracy()))
                     .field("samples_per_sec", Json::num(w.samples_per_sec()))
                     .field("sim_cycles", Json::num(w.sim_cycles as f64));
+                if let Some(o) = &w.open {
+                    j = j
+                        .field("offered", Json::num(o.offered as f64))
+                        .field("shed", Json::num(o.shed as f64))
+                        .field("timed_out", Json::num(o.timed_out as f64))
+                        .field("goodput_rps", Json::num(o.goodput_rps()))
+                        .field("mean_batch_fill", Json::num(o.mean_batch_fill()))
+                        .field("p999_latency_us", Json::num(o.p999_latency_us()))
+                        .field("latency_slo_ok", Json::Bool(s.latency_slo_ok));
+                }
             }
             j
         })
@@ -89,6 +100,12 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
         .field("aging_beta", Json::num(cfg.aging_beta))
         .field("seed", Json::num(cfg.seed as f64))
         .field("batch", Json::num(cfg.batch as f64))
+        .field("arrival", Json::str(cfg.arrival.name()))
+        .field("rate_rps", Json::num(cfg.rate_rps))
+        .field("max_batch_age_us", Json::num(cfg.max_batch_age_us))
+        .field("queue_timeout_us", Json::num(cfg.queue_timeout_us))
+        .field("queue_depth", Json::num(cfg.queue_depth as f64))
+        .field("latency_slo_us", Json::num(cfg.latency_slo_us))
         .field("golden_accuracy", Json::num(fleet.golden_acc))
         .field("slo_accuracy", Json::num(fleet.slo))
         .field("provision_yield", Json::num(outcome.provision_yield))
@@ -98,12 +115,24 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
         .field("sdc_samples", Json::num(outcome.sdc_samples as f64))
         .field("sdc_fraction", Json::num(outcome.sdc_fraction()))
         .field("escaped_faults_eol", Json::num(outcome.escaped_faults_eol as f64))
+        .field("total_offered", Json::num(outcome.total_offered as f64))
         .field("total_requests", Json::num(outcome.total_requests as f64))
+        .field("total_shed", Json::num(outcome.total_shed as f64))
+        .field("total_timed_out", Json::num(outcome.total_timed_out as f64))
+        .field("conservation_ok", Json::Bool(outcome.conservation_ok()))
         .field("total_samples", Json::num(outcome.total_samples as f64))
+        .field("offered_load_rps", Json::num(outcome.offered_load_rps()))
+        .field("goodput_rps", Json::num(outcome.goodput_rps()))
+        .field("shed_fraction", Json::num(outcome.shed_fraction()))
+        .field("timeout_fraction", Json::num(outcome.timeout_fraction()))
+        .field("mean_batch_fill", Json::num(outcome.mean_batch_fill()))
+        .field("virtual_secs", Json::num(outcome.virtual_secs))
         .field("samples_per_sec", Json::num(outcome.samples_per_sec()))
         .field("sim_cycles", Json::num(outcome.sim_cycles as f64))
-        .field("p50_batch_latency_us", Json::num(outcome.p50_latency_us()))
-        .field("p99_batch_latency_us", Json::num(outcome.p99_latency_us()))
+        .field("p50_latency_us", Json::num(outcome.p50_latency_us()))
+        .field("p99_latency_us", Json::num(outcome.p99_latency_us()))
+        .field("p999_latency_us", Json::num(outcome.p999_latency_us()))
+        .field("latency_breach_steps", Json::num(outcome.latency_breach_steps as f64))
         .field("total_retrains", Json::num(total_retrains as f64))
         .field("total_downtime_hours", Json::num(total_downtime))
         .field("steps", Json::Arr(steps))
@@ -131,14 +160,27 @@ pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
         fleet.effective_yield() * 100.0
     );
     println!(
-        "  served {} samples in {} batches at {:.0} samples/s ({:.3e} sim cycles), \
-         latency p50 {:.0}us p99 {:.0}us, fleet accuracy {:.2}%",
-        outcome.total_samples,
+        "  open loop ({} arrivals): offered {} served {} shed {} timed-out {} \
+         ({:.0} rps offered, {:.0} rps goodput, batch fill {:.0}%)",
+        fleet.cfg.arrival,
+        outcome.total_offered,
         outcome.total_requests,
+        outcome.total_shed,
+        outcome.total_timed_out,
+        outcome.offered_load_rps(),
+        outcome.goodput_rps(),
+        outcome.mean_batch_fill() * 100.0,
+    );
+    println!(
+        "  served {} samples in {} batches at {:.0} samples/s ({:.3e} sim cycles), \
+         latency p50 {:.0}us p99 {:.0}us p99.9 {:.0}us, fleet accuracy {:.2}%",
+        outcome.total_samples,
+        outcome.total_batches,
         outcome.samples_per_sec(),
         outcome.sim_cycles as f64,
         outcome.p50_latency_us(),
         outcome.p99_latency_us(),
+        outcome.p999_latency_us(),
         outcome.served_accuracy() * 100.0
     );
     if outcome.sdc_samples > 0 || fleet.cfg.escape_prob > 0.0 {

@@ -1,22 +1,33 @@
-//! Batched request scheduling across the fleet's chips.
+//! Request scheduling across the fleet's chips — closed-loop and open-loop.
 //!
-//! The dispatcher routes fixed-size request batches into bounded per-chip
-//! queues (`std::sync::mpsc::sync_channel`, so a full queue back-pressures
-//! the dispatcher exactly like a real serving stack); worker threads own
-//! disjoint subsets of the chips and drain their queues until the
-//! dispatcher hangs up. Under the plan backend every chip's
+//! [`serve`] is the original closed loop: the dispatcher routes fixed-size
+//! pre-built batches into bounded per-chip queues and blocks when they are
+//! full, so the arrival process coordinates with the server. [`serve_open`]
+//! is the serving path proper: an open-loop arrival stream
+//! ([`super::loadgen`]) is run through per-chip dynamic batching windows
+//! and admission control ([`super::batcher`]) on the deterministic virtual
+//! clock, and the planned batches are then really executed across worker
+//! threads for accuracy/SDC accounting. Latency in the open loop is
+//! measured from intended arrival time (coordinated-omission-free).
+//!
+//! Worker coordination uses no busy-waiting: a [`std::sync::Barrier`]
+//! gates the serving clock on session build, each worker blocks on its own
+//! channel, and bounded per-chip admission is a `Mutex`+`Condvar` gauge
+//! ([`Depths`]). Under the plan backend every chip's
 //! [`crate::exec::ChipPlan`] is **compiled (weights packed and all) once
-//! on the dispatcher thread** and handed to the owning worker as an
-//! `Arc` — workers adopt the shared packed tile programs instead of
-//! re-lowering per thread, and all sessions execute inline on one shared
-//! single-lane [`crate::exec::WorkerPool`]. Parallelism is chip-level:
-//! the fleet scales across workers instead of oversubscribing cores.
+//! up front** and handed to the owning worker as an `Arc` — workers adopt
+//! the shared packed tile programs instead of re-lowering per thread, and
+//! all sessions execute inline on one shared single-lane
+//! [`crate::exec::WorkerPool`]. Parallelism is chip-level: the fleet
+//! scales across workers instead of oversubscribing cores.
 //!
 //! Three routing policies (issue/EXPERIMENTS.md §Fleet): round-robin,
 //! least-loaded (live queue depths), and accuracy-weighted (smooth
 //! weighted round-robin over the chips' last health-check accuracies).
 
+use super::batcher::{self, BatcherConfig, OpenLoopStats, PlannedBatch, ServingPlan};
 use super::config::RoutingPolicy;
+use super::loadgen::{ArrivalProcess, LoadGen, NS_PER_CYCLE};
 use crate::chip::{Backend, Chip};
 use crate::coordinator::evaluate::count_correct;
 use crate::data::Dataset;
@@ -26,9 +37,8 @@ use crate::model::{Arch, Layer, Params};
 use crate::systolic::timing;
 use crate::util::Rng;
 use anyhow::{anyhow, ensure, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::time::Instant;
 
 /// One serving lane the scheduler can route to: a chip's controller view,
@@ -41,7 +51,7 @@ pub struct ChipUnit<'a> {
     pub weight: f64,
 }
 
-/// Scheduler knobs for one serving window.
+/// Scheduler knobs for one closed-loop serving window.
 #[derive(Clone, Copy, Debug)]
 pub struct WorkloadConfig {
     pub backend: Backend,
@@ -57,7 +67,64 @@ pub struct WorkloadConfig {
     pub seed: u64,
 }
 
+impl WorkloadConfig {
+    /// Reject nonsensical knobs loudly instead of silently clamping them.
+    pub fn validate(&self, chips: usize) -> Result<()> {
+        ensure!(
+            self.queue_depth >= 1,
+            "scheduler: queue_depth must be >= 1 (got 0; every chip needs at least one \
+             queue slot — did you mean --queue-depth 1?)"
+        );
+        ensure!(
+            self.workers == 0 || self.workers <= chips,
+            "scheduler: {} workers for {chips} chip(s) — extra workers would own no \
+             chips; use --workers <= {chips}, or 0 for auto",
+            self.workers
+        );
+        Ok(())
+    }
+}
+
+/// Open-loop scheduler knobs for one serving window.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenWorkloadConfig {
+    pub backend: Backend,
+    pub policy: RoutingPolicy,
+    pub arrival: ArrivalProcess,
+    /// Mean offered arrival rate, requests per virtual second
+    /// (0 = auto-calibrate to ~70% of the fleet's full-batch capacity).
+    pub rate_rps: f64,
+    /// Total requests the load generator offers.
+    pub offered: usize,
+    pub batcher: BatcherConfig,
+    /// Worker threads for the execution phase (0 = min(chips, cores)).
+    pub workers: usize,
+    /// Really execute the planned batches (accuracy accounting). `false`
+    /// runs the virtual-clock simulation only — the serving stats are
+    /// identical either way; execution adds accuracy and wall-clock cost.
+    pub execute: bool,
+    pub seed: u64,
+}
+
+impl OpenWorkloadConfig {
+    pub fn validate(&self, chips: usize) -> Result<()> {
+        ensure!(
+            self.workers == 0 || self.workers <= chips,
+            "scheduler: {} workers for {chips} chip(s) — extra workers would own no \
+             chips; use --workers <= {chips}, or 0 for auto",
+            self.workers
+        );
+        ensure!(
+            self.rate_rps >= 0.0 && self.rate_rps.is_finite(),
+            "scheduler: arrival rate must be a finite requests/sec >= 0 (0 = auto), got {}",
+            self.rate_rps
+        );
+        self.batcher.validate()
+    }
+}
+
 struct WorkItem {
+    unit_idx: usize,
     req_id: usize,
     /// First sample index of the batch in the workload dataset.
     lo: usize,
@@ -68,13 +135,15 @@ struct WorkItem {
 pub struct ChipServeStats {
     pub chip_id: usize,
     /// Every request id this chip served (conservation: the union over
-    /// chips is exactly `0..requests`, each id once).
+    /// chips is exactly the served set, each id once).
     pub request_ids: Vec<usize>,
     pub samples: usize,
     pub correct: usize,
     /// Simulated array cycles spent (paper timing model).
     pub sim_cycles: u64,
-    /// Enqueue→completion latency per served batch, microseconds.
+    /// Latency per served unit, microseconds: enqueue→completion wall time
+    /// in the closed loop, intended-arrival→completion virtual time per
+    /// request in the open loop.
     pub latencies_us: Vec<f64>,
 }
 
@@ -86,6 +155,8 @@ pub struct WorkloadReport {
     pub wall_secs: f64,
     pub sim_cycles: u64,
     pub per_chip: Vec<ChipServeStats>,
+    /// Open-loop serving stats (None for the closed-loop path).
+    pub open: Option<OpenLoopStats>,
 }
 
 impl WorkloadReport {
@@ -98,7 +169,7 @@ impl WorkloadReport {
         self.samples as f64 / self.wall_secs.max(1e-12)
     }
 
-    /// All batch latencies, sorted ascending (for percentiles).
+    /// All latencies, sorted ascending (for percentiles).
     pub fn sorted_latencies_us(&self) -> Vec<f64> {
         let mut all: Vec<f64> =
             self.per_chip.iter().flat_map(|c| c.latencies_us.iter().copied()).collect();
@@ -117,6 +188,36 @@ pub fn percentile(sorted_ascending: &[f64], p: f64) -> f64 {
     sorted_ascending[rank - 1]
 }
 
+/// Smooth weighted round-robin: each pick adds every lane's weight to its
+/// credit, picks the highest credit, and subtracts the weight sum from the
+/// winner. Deterministic, and long-run traffic shares converge to the
+/// normalized weights (proptested in the integration suite).
+pub struct WrrPicker {
+    credits: Vec<f64>,
+    weights: Vec<f64>,
+    wsum: f64,
+}
+
+impl WrrPicker {
+    /// Weights are floored at 1e-3 so a zero-accuracy chip still drains.
+    pub fn new(weights: &[f64]) -> WrrPicker {
+        let weights: Vec<f64> = weights.iter().map(|w| w.max(1e-3)).collect();
+        let wsum = weights.iter().sum();
+        WrrPicker { credits: vec![0.0; weights.len()], weights, wsum }
+    }
+
+    pub fn pick(&mut self) -> usize {
+        for (c, w) in self.credits.iter_mut().zip(&self.weights) {
+            *c += w;
+        }
+        let i = (0..self.credits.len())
+            .max_by(|&a, &b| self.credits[a].total_cmp(&self.credits[b]))
+            .unwrap();
+        self.credits[i] -= self.wsum;
+        i
+    }
+}
+
 /// Simulated array cycles one `batch`-sample MLP forward costs on an
 /// `n x n` array under the paper's timing model (per-layer tiled passes).
 pub fn batch_sim_cycles(arch: &Arch, n: usize, batch: usize) -> u64 {
@@ -129,11 +230,97 @@ pub fn batch_sim_cycles(arch: &Arch, n: usize, batch: usize) -> u64 {
         .sum()
 }
 
-/// Serve `cfg.requests` batches across `units`, returning per-chip and
-/// fleet-level stats. Deterministic in `cfg.seed` for the request stream
-/// and (for round-robin / accuracy-weighted) the routing itself;
-/// least-loaded routing depends on live queue depths, but every request is
-/// still served exactly once (conservation is policy-independent).
+/// Bounded per-chip admission gauge: a `Mutex`'d depth vector plus a
+/// `Condvar`, so the dispatcher *blocks* (no spinning) while a chip's
+/// queue is at capacity and wakes exactly when a worker finishes a batch.
+struct Depths {
+    state: Mutex<Vec<usize>>,
+    freed: Condvar,
+    cap: usize,
+}
+
+impl Depths {
+    fn new(chips: usize, cap: usize) -> Depths {
+        Depths { state: Mutex::new(vec![0; chips]), freed: Condvar::new(), cap }
+    }
+
+    /// Block until chip `i` has a free slot, then take it.
+    fn acquire(&self, i: usize) {
+        let mut d = self.state.lock().unwrap();
+        while d[i] >= self.cap {
+            d = self.freed.wait(d).unwrap();
+        }
+        d[i] += 1;
+    }
+
+    fn release(&self, i: usize) {
+        let mut d = self.state.lock().unwrap();
+        d[i] -= 1;
+        drop(d);
+        self.freed.notify_all();
+    }
+
+    /// Chip with the fewest in-flight batches, ties to the lowest index.
+    fn least_loaded(&self) -> usize {
+        let d = self.state.lock().unwrap();
+        (0..d.len()).min_by_key(|&i| (d[i], i)).unwrap()
+    }
+}
+
+/// Compile every chip's plan once, up front, before the serving clock
+/// starts: the packed weight tile programs are shared into the owning
+/// worker as an `Arc`, so workers adopt one compiled plan instead of
+/// re-lowering per thread. Compilation itself fans out over the worker
+/// budget (a big fleet should not pay a serial provision pass).
+fn compile_shared_plans(
+    units: &[ChipUnit<'_>],
+    calib: &Calibration,
+    backend: Backend,
+    workers: usize,
+) -> Vec<Option<Arc<ChipPlan>>> {
+    if backend != Backend::Plan {
+        return vec![None; units.len()];
+    }
+    let mut plans: Vec<Option<Arc<ChipPlan>>> = vec![None; units.len()];
+    let chunk = units.len().div_ceil(workers.max(1));
+    std::thread::scope(|s| {
+        for (uc, pc) in units.chunks(chunk).zip(plans.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (u, slot) in uc.iter().zip(pc.iter_mut()) {
+                    let arch = u.chip.arch();
+                    let qw = quantize_mlp_weights(arch, u.params, calib);
+                    // execute the fabricated truth, mask with the
+                    // controller's detected view — a fault that escaped
+                    // localization serves corrupted sums
+                    let plan = ChipPlan::compile_mlp_views(
+                        arch,
+                        u.chip.true_fault_map(),
+                        &u.chip.known_map(),
+                        u.chip.kind(),
+                        &qw,
+                    );
+                    *slot = Some(Arc::new(plan));
+                }
+            });
+        }
+    });
+    plans
+}
+
+fn resolve_workers(requested: usize, chips: usize) -> usize {
+    if requested == 0 {
+        chips.min(default_threads())
+    } else {
+        requested
+    }
+}
+
+/// Serve `cfg.requests` fixed-size batches across `units` (closed loop),
+/// returning per-chip and fleet-level stats. Deterministic in `cfg.seed`
+/// for the request stream and (for round-robin / accuracy-weighted) the
+/// routing itself; least-loaded routing depends on live queue depths, but
+/// every request is still served exactly once (conservation is
+/// policy-independent).
 pub fn serve(
     units: &[ChipUnit<'_>],
     calib: &Calibration,
@@ -146,84 +333,60 @@ pub fn serve(
         cfg.backend != Backend::Xla,
         "fleet scheduler drives the native backends (sim | plan) only"
     );
+    cfg.validate(units.len())?;
 
-    let workers = if cfg.workers == 0 {
-        units.len().min(default_threads())
-    } else {
-        cfg.workers.min(units.len())
-    };
-    // Compile every chip's plan once, up front, before the serving clock
-    // starts: the packed weight tile programs are shared into the owning
-    // worker as an Arc, so workers adopt one compiled plan instead of
-    // re-lowering per thread. Compilation itself fans out over the worker
-    // budget (a big fleet should not pay a serial provision pass).
-    let shared_plans: Vec<Option<Arc<ChipPlan>>> = if cfg.backend == Backend::Plan {
-        let mut plans: Vec<Option<Arc<ChipPlan>>> = vec![None; units.len()];
-        let chunk = units.len().div_ceil(workers.max(1));
-        std::thread::scope(|s| {
-            for (uc, pc) in units.chunks(chunk).zip(plans.chunks_mut(chunk)) {
-                s.spawn(move || {
-                    for (u, slot) in uc.iter().zip(pc.iter_mut()) {
-                        let arch = u.chip.arch();
-                        let qw = quantize_mlp_weights(arch, u.params, calib);
-                        // execute the fabricated truth, mask with the
-                        // controller's detected view — a fault that
-                        // escaped localization serves corrupted sums
-                        let plan = ChipPlan::compile_mlp_views(
-                            arch,
-                            u.chip.true_fault_map(),
-                            &u.chip.known_map(),
-                            u.chip.kind(),
-                            &qw,
-                        );
-                        *slot = Some(Arc::new(plan));
-                    }
-                });
-            }
-        });
-        plans
-    } else {
-        vec![None; units.len()]
-    };
+    let workers = resolve_workers(cfg.workers, units.len());
+    let shared_plans = compile_shared_plans(units, calib, cfg.backend, workers);
     // One shared inline pool: fleet sessions run single-threaded (the
     // fleet scales across workers, not within a forward), and a 1-lane
     // pool spawns no threads at all.
     let exec_pool = Arc::new(WorkerPool::new(1));
-    let depth: Vec<AtomicUsize> = (0..units.len()).map(|_| AtomicUsize::new(0)).collect();
-    // workers bump this once their sessions are built (success or not), so
+    let depths = Depths::new(units.len(), cfg.queue_depth);
+    // Workers wait here once their sessions are built (success or not), so
     // the serving clock starts when the fleet is actually ready — plan
-    // compilation must not pollute throughput/latency numbers
-    let ready = AtomicUsize::new(0);
-    let (txs, rxs): (Vec<_>, Vec<_>) =
-        (0..units.len()).map(|_| sync_channel::<WorkItem>(cfg.queue_depth.max(1))).unzip();
+    // compilation must not pollute throughput/latency numbers.
+    let ready = Barrier::new(workers + 1);
+    // One channel per *worker*: each worker blocks on its own receiver (no
+    // polling across chip queues), and the per-chip bound is enforced by
+    // the `Depths` gauge instead of channel capacity. A worker owning `k`
+    // chips can therefore have at most `k * queue_depth` items in flight,
+    // which is exactly the channel capacity — sends never block once the
+    // gauge admits.
+    let owned_per_worker: Vec<Vec<usize>> =
+        (0..workers).map(|w| (w..units.len()).step_by(workers).collect()).collect();
+    let (txs, rxs): (Vec<_>, Vec<_>) = owned_per_worker
+        .iter()
+        .map(|owned| sync_channel::<WorkItem>(owned.len() * cfg.queue_depth))
+        .unzip();
 
     let serve_result: Result<(Vec<Vec<ChipServeStats>>, f64)> = std::thread::scope(|s| {
-        let depth = &depth;
+        let depths = &depths;
         let ready = &ready;
         let shared_plans = &shared_plans;
         let exec_pool = &exec_pool;
-        let mut rx_slots: Vec<Option<Receiver<WorkItem>>> = rxs.into_iter().map(Some).collect();
         let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let owned: Vec<(usize, Receiver<WorkItem>)> = (w..units.len())
-                .step_by(workers)
-                .map(|i| (i, rx_slots[i].take().unwrap()))
-                .collect();
+        for (owned, rx) in owned_per_worker.iter().zip(rxs) {
             handles.push(s.spawn(move || {
-                worker_loop(owned, units, calib, data, cfg, depth, ready, shared_plans, exec_pool)
+                worker_loop(
+                    owned,
+                    rx,
+                    units,
+                    calib,
+                    data,
+                    cfg,
+                    depths,
+                    ready,
+                    shared_plans,
+                    exec_pool,
+                )
             }));
         }
 
-        // Barrier: wait until every worker has built (or failed to build)
-        // its sessions before starting the serving clock. A failed worker
-        // still counts — its dropped receivers surface as a dispatch error.
-        while ready.load(Ordering::SeqCst) < workers {
-            std::thread::sleep(std::time::Duration::from_micros(50));
-        }
+        ready.wait();
         let t0 = Instant::now();
 
         // Dispatcher (scope main thread): route every request per policy.
-        let dispatch = dispatch_all(&txs, units, data, cfg, depth);
+        let dispatch = dispatch_all(&txs, units, data, cfg, depths, workers);
         drop(txs); // hang up: workers drain and exit
 
         let mut all = Vec::with_capacity(workers);
@@ -241,24 +404,23 @@ pub fn serve(
     let samples: usize = per_chip.iter().map(|c| c.samples).sum();
     let correct: usize = per_chip.iter().map(|c| c.correct).sum();
     let sim_cycles: u64 = per_chip.iter().map(|c| c.sim_cycles).sum();
-    Ok(WorkloadReport { requests, samples, correct, wall_secs, sim_cycles, per_chip })
+    Ok(WorkloadReport { requests, samples, correct, wall_secs, sim_cycles, per_chip, open: None })
 }
 
 /// Route every request to a chip queue per the configured policy; blocks
-/// on full queues (bounded-queue backpressure). Errors when a target
-/// chip's worker has already exited.
+/// on the admission gauge when the target chip is at depth (bounded-queue
+/// backpressure). Errors when a target worker has already exited.
 fn dispatch_all(
     txs: &[SyncSender<WorkItem>],
     units: &[ChipUnit<'_>],
     data: &Dataset,
     cfg: &WorkloadConfig,
-    depth: &[AtomicUsize],
+    depths: &Depths,
+    workers: usize,
 ) -> Result<()> {
     let mut rng = Rng::new(cfg.seed ^ 0xD15F_A7C4);
     let mut rr = 0usize;
-    let mut credits = vec![0.0f64; units.len()];
-    let weights: Vec<f64> = units.iter().map(|u| u.weight.max(1e-3)).collect();
-    let wsum: f64 = weights.iter().sum();
+    let mut wrr = WrrPicker::new(&units.iter().map(|u| u.weight).collect::<Vec<_>>());
     for req_id in 0..cfg.requests {
         let i = match cfg.policy {
             RoutingPolicy::RoundRobin => {
@@ -266,27 +428,16 @@ fn dispatch_all(
                 rr += 1;
                 i
             }
-            RoutingPolicy::LeastLoaded => {
-                // lowest in-flight count, ties to the lowest index
-                (0..units.len()).min_by_key(|&i| (depth[i].load(Ordering::SeqCst), i)).unwrap()
-            }
-            RoutingPolicy::AccuracyWeighted => {
-                // smooth weighted round-robin: deterministic and
-                // proportional to the accuracy weights
-                for (c, w) in credits.iter_mut().zip(&weights) {
-                    *c += w;
-                }
-                let i =
-                    (0..units.len()).max_by(|&a, &b| credits[a].total_cmp(&credits[b])).unwrap();
-                credits[i] -= wsum;
-                i
-            }
+            // lowest in-flight count, ties to the lowest index
+            RoutingPolicy::LeastLoaded => depths.least_loaded(),
+            // smooth weighted round-robin: deterministic and proportional
+            // to the accuracy weights
+            RoutingPolicy::AccuracyWeighted => wrr.pick(),
         };
         let lo = rng.below(data.len() - cfg.batch + 1);
-        depth[i].fetch_add(1, Ordering::SeqCst);
-        // blocking send on a full queue: bounded-queue backpressure
-        txs[i]
-            .send(WorkItem { req_id, lo, enqueued: Instant::now() })
+        depths.acquire(i); // blocks while chip i is at queue_depth
+        txs[i % workers]
+            .send(WorkItem { unit_idx: i, req_id, lo, enqueued: Instant::now() })
             .map_err(|_| anyhow!("chip {} worker exited early", units[i].id))?;
     }
     Ok(())
@@ -294,25 +445,26 @@ fn dispatch_all(
 
 /// One worker: open sessions for its owned chips (adopting the shared
 /// precompiled plans + shared inline pool under the plan backend), then
-/// round-robin over their queues until every dispatcher handle is dropped.
+/// block on its channel until the dispatcher hangs up. On an execution
+/// error the worker keeps draining its channel (releasing admission slots)
+/// so the dispatcher can never deadlock on the gauge, then reports the
+/// error at join.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    owned: Vec<(usize, Receiver<WorkItem>)>,
+    owned: &[usize],
+    rx: Receiver<WorkItem>,
     units: &[ChipUnit<'_>],
     calib: &Calibration,
     data: &Dataset,
     cfg: &WorkloadConfig,
-    depth: &[AtomicUsize],
-    ready: &AtomicUsize,
+    depths: &Depths,
+    ready: &Barrier,
     shared_plans: &[Option<Arc<ChipPlan>>],
     exec_pool: &Arc<WorkerPool>,
 ) -> Result<Vec<ChipServeStats>> {
     struct Lane<'rt> {
-        unit_idx: usize,
-        rx: Receiver<WorkItem>,
         sess: crate::chip::ChipSession<'rt>,
         cycles_per_batch: u64,
-        open: bool,
         stats: ChipServeStats,
     }
 
@@ -320,7 +472,7 @@ fn worker_loop(
     let classes = data.num_classes;
     let build = || -> Result<Vec<Lane<'static>>> {
         let mut lanes = Vec::with_capacity(owned.len());
-        for (i, rx) in owned {
+        for &i in owned {
             let u = &units[i];
             let mut sess = match &shared_plans[i] {
                 // adopt the dispatcher's precompiled packed plan + the
@@ -333,11 +485,8 @@ fn worker_loop(
             sess.load_model(u.params.clone(), calib.clone());
             let cycles_per_batch = batch_sim_cycles(sess.arch(), u.chip.n(), cfg.batch);
             lanes.push(Lane {
-                unit_idx: i,
-                rx,
                 sess,
                 cycles_per_batch,
-                open: true,
                 stats: ChipServeStats {
                     chip_id: u.id,
                     request_ids: Vec::new(),
@@ -350,46 +499,251 @@ fn worker_loop(
         }
         Ok(lanes)
     };
-    // signal readiness whether the build succeeded or not — the serve
-    // barrier must never wait on a worker that already failed
+    // map unit index -> lane position for this worker
+    let mut lane_of = vec![usize::MAX; units.len()];
+    for (pos, &i) in owned.iter().enumerate() {
+        lane_of[i] = pos;
+    }
+    // reach the barrier whether the build succeeded or not — the serving
+    // clock must never wait on a worker that already failed
     let built = build();
-    ready.fetch_add(1, Ordering::SeqCst);
-    let mut lanes = built?;
+    ready.wait();
+    let mut lanes = match built {
+        Ok(lanes) => lanes,
+        Err(e) => {
+            // keep the admission gauge live so the dispatcher never blocks
+            // on slots this dead worker would have freed
+            for item in rx.iter() {
+                depths.release(item.unit_idx);
+            }
+            return Err(e);
+        }
+    };
 
-    loop {
-        let mut progressed = false;
-        let mut any_open = false;
-        for lane in &mut lanes {
-            if !lane.open {
-                continue;
-            }
-            match lane.rx.try_recv() {
-                Ok(item) => {
-                    let (lo, b) = (item.lo, cfg.batch);
-                    let x = &data.x[lo * dim..(lo + b) * dim];
-                    let logits = lane.sess.forward_logits(x, b)?;
-                    let correct = count_correct(&logits, &data.y[lo..lo + b], classes, b);
-                    depth[lane.unit_idx].fetch_sub(1, Ordering::SeqCst);
-                    lane.stats.request_ids.push(item.req_id);
-                    lane.stats.samples += b;
-                    lane.stats.correct += correct;
-                    lane.stats.sim_cycles += lane.cycles_per_batch;
-                    lane.stats.latencies_us.push(item.enqueued.elapsed().as_secs_f64() * 1e6);
-                    progressed = true;
-                    any_open = true;
-                }
-                Err(TryRecvError::Empty) => any_open = true,
-                Err(TryRecvError::Disconnected) => lane.open = false,
-            }
+    let mut failure: Option<anyhow::Error> = None;
+    for item in rx.iter() {
+        // blocking receive: the loop ends when the dispatcher drops its
+        // sender — no polling, no sleeps
+        if failure.is_some() {
+            depths.release(item.unit_idx);
+            continue; // drain mode after an error
         }
-        if !any_open {
-            break;
-        }
-        if !progressed {
-            std::thread::sleep(std::time::Duration::from_micros(20));
+        let lane = &mut lanes[lane_of[item.unit_idx]];
+        let (lo, b) = (item.lo, cfg.batch);
+        let x = &data.x[lo * dim..(lo + b) * dim];
+        match lane.sess.forward_logits(x, b) {
+            Ok(logits) => {
+                let correct = count_correct(&logits, &data.y[lo..lo + b], classes, b);
+                depths.release(item.unit_idx);
+                lane.stats.request_ids.push(item.req_id);
+                lane.stats.samples += b;
+                lane.stats.correct += correct;
+                lane.stats.sim_cycles += lane.cycles_per_batch;
+                lane.stats.latencies_us.push(item.enqueued.elapsed().as_secs_f64() * 1e6);
+            }
+            Err(e) => {
+                depths.release(item.unit_idx);
+                failure = Some(e);
+            }
         }
     }
-    Ok(lanes.into_iter().map(|l| l.stats).collect())
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(lanes.into_iter().map(|l| l.stats).collect()),
+    }
+}
+
+/// Serve an open-loop arrival stream across `units`: simulate arrivals,
+/// batching windows, and admission on the virtual clock (phase 1, fully
+/// deterministic in `cfg.seed`), then really execute the planned batches
+/// across worker threads for accuracy accounting (phase 2, skipped when
+/// `cfg.execute` is false). Every serving statistic — offered load,
+/// goodput, shed/timeout fractions, batch fill, latency percentiles — is
+/// a phase-1 quantity and therefore bit-reproducible from the seed.
+pub fn serve_open(
+    units: &[ChipUnit<'_>],
+    calib: &Calibration,
+    data: &Dataset,
+    cfg: &OpenWorkloadConfig,
+) -> Result<WorkloadReport> {
+    ensure!(!units.is_empty(), "scheduler: no active chips to route to");
+    ensure!(
+        cfg.backend != Backend::Xla,
+        "fleet scheduler drives the native backends (sim | plan) only"
+    );
+    cfg.validate(units.len())?;
+    ensure!(
+        cfg.batcher.batch_max <= data.len(),
+        "scheduler: batch_max {} exceeds the workload dataset ({} samples)",
+        cfg.batcher.batch_max,
+        data.len()
+    );
+
+    // Virtual service-time table: svc_ns[chip][k-1] is the paper-model
+    // cost of a k-request batch on that chip's array, in virtual ns.
+    let svc_table: Vec<Vec<u64>> = units
+        .iter()
+        .map(|u| {
+            (1..=cfg.batcher.batch_max)
+                .map(|k| {
+                    let cycles = batch_sim_cycles(u.chip.arch(), u.chip.n(), k);
+                    ((cycles as f64 * NS_PER_CYCLE) as u64).max(1)
+                })
+                .collect()
+        })
+        .collect();
+    // Auto rate: ~70% of the fleet's aggregate full-batch capacity — a
+    // loaded-but-stable operating point for default runs.
+    let rate_rps = if cfg.rate_rps > 0.0 {
+        cfg.rate_rps
+    } else {
+        let capacity: f64 = svc_table
+            .iter()
+            .map(|t| cfg.batcher.batch_max as f64 / (*t.last().unwrap() as f64 / 1e9))
+            .sum();
+        0.7 * capacity
+    };
+
+    // Phase 1: deterministic virtual-clock serving simulation.
+    let gen = LoadGen::new(cfg.arrival, rate_rps, cfg.offered, data.len(), cfg.seed)?;
+    let weights: Vec<f64> = units.iter().map(|u| u.weight).collect();
+    let plan = batcher::simulate(
+        units.len(),
+        cfg.policy,
+        &weights,
+        gen,
+        |chip, k| svc_table[chip][k - 1],
+        &cfg.batcher,
+    )?;
+
+    // Phase 2: execute the planned batches for real (accuracy/SDC).
+    let (per_chip, wall_secs) = if cfg.execute {
+        execute_plan(units, calib, data, cfg, &plan)?
+    } else {
+        (planned_stats(units, &plan), 0.0)
+    };
+
+    let samples: usize = per_chip.iter().map(|c| c.samples).sum();
+    let correct: usize = per_chip.iter().map(|c| c.correct).sum();
+    let sim_cycles: u64 = per_chip.iter().map(|c| c.sim_cycles).sum();
+    Ok(WorkloadReport {
+        requests: plan.stats.served,
+        samples,
+        correct,
+        wall_secs,
+        sim_cycles,
+        per_chip,
+        open: Some(plan.stats),
+    })
+}
+
+fn batch_cycles(b: &PlannedBatch) -> u64 {
+    (b.service_ns as f64 / NS_PER_CYCLE).round() as u64
+}
+
+/// Per-chip stats straight from the plan, without executing (phase 2
+/// skipped): request ids, virtual latencies, and sim cycles are planned
+/// quantities; samples/correct stay zero because nothing ran.
+fn planned_stats(units: &[ChipUnit<'_>], plan: &ServingPlan) -> Vec<ChipServeStats> {
+    units
+        .iter()
+        .zip(&plan.per_chip)
+        .map(|(u, batches)| ChipServeStats {
+            chip_id: u.id,
+            request_ids: batches.iter().flat_map(|b| b.reqs.iter().map(|r| r.id)).collect(),
+            samples: 0,
+            correct: 0,
+            sim_cycles: batches.iter().map(batch_cycles).sum(),
+            latencies_us: batches
+                .iter()
+                .flat_map(|b| b.reqs.iter().map(|r| r.latency_us))
+                .collect(),
+        })
+        .collect()
+}
+
+/// Execute every planned batch on its chip across worker threads. Work
+/// assignment is static (the plan already fixed each batch's chip), so
+/// workers need no channels at all: each one just walks its owned chips'
+/// batch lists in dispatch order.
+fn execute_plan(
+    units: &[ChipUnit<'_>],
+    calib: &Calibration,
+    data: &Dataset,
+    cfg: &OpenWorkloadConfig,
+    plan: &ServingPlan,
+) -> Result<(Vec<ChipServeStats>, f64)> {
+    let workers = resolve_workers(cfg.workers, units.len());
+    let shared_plans = compile_shared_plans(units, calib, cfg.backend, workers);
+    let exec_pool = Arc::new(WorkerPool::new(1));
+    let dim = data.sample_dim;
+    let classes = data.num_classes;
+
+    let t0 = Instant::now();
+    let result: Result<Vec<Vec<ChipServeStats>>> = std::thread::scope(|s| {
+        let shared_plans = &shared_plans;
+        let exec_pool = &exec_pool;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                s.spawn(move || -> Result<Vec<ChipServeStats>> {
+                    let mut out = Vec::new();
+                    for i in (w..units.len()).step_by(workers) {
+                        let u = &units[i];
+                        let mut sess = match &shared_plans[i] {
+                            Some(p) => u.chip.session_shared(
+                                cfg.backend,
+                                p.clone(),
+                                exec_pool.clone(),
+                            )?,
+                            None => u.chip.session(cfg.backend)?,
+                        };
+                        sess.load_model(u.params.clone(), calib.clone());
+                        let mut stats = ChipServeStats {
+                            chip_id: u.id,
+                            request_ids: Vec::new(),
+                            samples: 0,
+                            correct: 0,
+                            sim_cycles: 0,
+                            latencies_us: Vec::new(),
+                        };
+                        let mut x = Vec::new();
+                        let mut y = Vec::new();
+                        for b in &plan.per_chip[i] {
+                            let k = b.reqs.len();
+                            // gather the batch: open-loop requests name
+                            // arbitrary samples, so rows are non-contiguous
+                            x.clear();
+                            y.clear();
+                            for r in &b.reqs {
+                                let s = r.sample as usize;
+                                x.extend_from_slice(&data.x[s * dim..(s + 1) * dim]);
+                                y.push(data.y[s]);
+                            }
+                            let logits = sess.forward_logits(&x, k)?;
+                            stats.correct += count_correct(&logits, &y, classes, k);
+                            stats.samples += k;
+                            stats.sim_cycles += batch_cycles(b);
+                            for r in &b.reqs {
+                                stats.request_ids.push(r.id);
+                                stats.latencies_us.push(r.latency_us);
+                            }
+                        }
+                        out.push(stats);
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(workers);
+        for h in handles {
+            all.push(h.join().expect("fleet worker panicked")?);
+        }
+        Ok(all)
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let mut per_chip: Vec<ChipServeStats> = result?.into_iter().flatten().collect();
+    per_chip.sort_by_key(|c| c.chip_id);
+    Ok((per_chip, wall_secs))
 }
 
 #[cfg(test)]
@@ -405,6 +759,83 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
         assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn percentile_p999_on_small_and_skewed_samples() {
+        // tiny samples: nearest rank pins p99.9 to the max, never panics
+        assert_eq!(percentile(&[7.0], 0.999), 7.0);
+        let small: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&small, 0.999), 10.0);
+        // at exactly 1000 samples the p99.9 rank is 999, not the max
+        let v: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.999), 999.0);
+        // heavily skewed: a single outlier moves p100 but not p50/p99.9
+        let mut skew = vec![1.0; 999];
+        skew.push(1e6);
+        assert_eq!(percentile(&skew, 0.5), 1.0);
+        assert_eq!(percentile(&skew, 0.999), 1.0);
+        assert_eq!(percentile(&skew, 1.0), 1e6);
+    }
+
+    #[test]
+    fn wrr_shares_track_weights() {
+        let mut p = WrrPicker::new(&[3.0, 1.0]);
+        let picks: Vec<usize> = (0..8).map(|_| p.pick()).collect();
+        assert_eq!(picks.iter().filter(|&&i| i == 0).count(), 6);
+        assert_eq!(picks.iter().filter(|&&i| i == 1).count(), 2);
+        // smoothness: the heavy lane is never starved for long stretches
+        assert!(picks.windows(2).all(|w| !(w[0] == 1 && w[1] == 1)));
+    }
+
+    #[test]
+    fn workload_config_rejects_bad_knobs_loudly() {
+        let base = WorkloadConfig {
+            backend: Backend::Sim,
+            policy: RoutingPolicy::RoundRobin,
+            batch: 8,
+            queue_depth: 4,
+            requests: 10,
+            workers: 0,
+            seed: 1,
+        };
+        let err = WorkloadConfig { queue_depth: 0, ..base }.validate(4).unwrap_err().to_string();
+        assert!(err.contains("queue_depth must be >= 1"), "{err}");
+        assert!(err.contains("--queue-depth 1"), "did-you-mean hint missing: {err}");
+        let err = WorkloadConfig { workers: 9, ..base }.validate(4).unwrap_err().to_string();
+        assert!(err.contains("9 workers for 4 chip(s)"), "{err}");
+        assert!(err.contains("0 for auto"), "{err}");
+        assert!(WorkloadConfig { workers: 4, ..base }.validate(4).is_ok());
+        assert!(base.validate(4).is_ok(), "auto workers always fits");
+    }
+
+    #[test]
+    fn open_workload_config_rejects_bad_knobs() {
+        let base = OpenWorkloadConfig {
+            backend: Backend::Sim,
+            policy: RoutingPolicy::RoundRobin,
+            arrival: ArrivalProcess::Poisson,
+            rate_rps: 0.0,
+            offered: 100,
+            batcher: BatcherConfig {
+                batch_max: 8,
+                max_batch_age_us: 200.0,
+                queue_timeout_us: 5_000.0,
+                queue_depth: 4,
+            },
+            workers: 0,
+            execute: false,
+            seed: 1,
+        };
+        assert!(base.validate(4).is_ok());
+        assert!(OpenWorkloadConfig { workers: 5, ..base }.validate(4).is_err());
+        assert!(OpenWorkloadConfig { rate_rps: -1.0, ..base }.validate(4).is_err());
+        assert!(OpenWorkloadConfig { rate_rps: f64::NAN, ..base }.validate(4).is_err());
+        let bad = OpenWorkloadConfig {
+            batcher: BatcherConfig { queue_depth: 0, ..base.batcher },
+            ..base
+        };
+        assert!(bad.validate(4).unwrap_err().to_string().contains("queue_depth"));
     }
 
     #[test]

@@ -63,6 +63,8 @@ fn allowed_opts(cmd: &str) -> Option<&'static [&'static str]> {
             "model", "chips", "array-n", "seed", "policy", "hours", "backend", "out",
             "profile", "slo", "defect-rate", "eol-rate", "batch", "life-steps", "managed",
             "queue-depth", "workers", "train-n", "test-n", "steps", "escape-prob",
+            "arrival", "rate", "batch-max", "batch-age-us", "queue-timeout-us",
+            "latency-slo-us",
         ]),
         "aging" => Some(&["tau", "beta", "n", "faults", "seed", "points", "hours", "eol-rate"]),
         "detect" => Some(&["n", "faults", "seed", "escape-prob"]),
@@ -453,6 +455,39 @@ fn main() -> Result<()> {
             fcfg.batch = args.usize("batch", fcfg.batch)?;
             fcfg.life_steps = args.usize("life-steps", fcfg.life_steps)?;
             fcfg.queue_depth = args.usize("queue-depth", fcfg.queue_depth)?;
+            // open-loop serving knobs: --batch-max is an alias for --batch
+            // (it names the dynamic window's ceiling, which is the same
+            // knob); the rest shape arrivals and admission
+            if args.get("batch-max").is_some() {
+                anyhow::ensure!(
+                    args.get("batch").is_none(),
+                    "--batch and --batch-max set the same window ceiling — pass one"
+                );
+                fcfg.batch = args.usize("batch-max", fcfg.batch)?;
+            }
+            fcfg.arrival =
+                repro::fleet::ArrivalProcess::parse(args.get("arrival").unwrap_or("poisson"))?;
+            fcfg.rate_rps = args.f64("rate", fcfg.rate_rps)?;
+            fcfg.max_batch_age_us = args.f64("batch-age-us", fcfg.max_batch_age_us)?;
+            fcfg.queue_timeout_us = args.f64("queue-timeout-us", fcfg.queue_timeout_us)?;
+            fcfg.latency_slo_us = args.f64("latency-slo-us", fcfg.latency_slo_us)?;
+            anyhow::ensure!(
+                fcfg.rate_rps >= 0.0 && fcfg.rate_rps.is_finite(),
+                "--rate must be a finite requests/sec >= 0 (0 = auto), got {}",
+                fcfg.rate_rps
+            );
+            anyhow::ensure!(
+                fcfg.latency_slo_us > 0.0,
+                "--latency-slo-us must be > 0 (omit it to disable the latency SLO), got {}",
+                fcfg.latency_slo_us
+            );
+            repro::fleet::BatcherConfig {
+                batch_max: fcfg.batch,
+                max_batch_age_us: fcfg.max_batch_age_us,
+                queue_timeout_us: fcfg.queue_timeout_us,
+                queue_depth: fcfg.queue_depth,
+            }
+            .validate()?;
             anyhow::ensure!(
                 fcfg.eol_fault_rate > 0.0 && fcfg.eol_fault_rate < 1.0,
                 "--eol-rate must be in (0, 1), got {}",
@@ -641,8 +676,23 @@ FLEET OPTIONS (repro fleet):
   --managed B       true = FAP+T health management, false = unmitigated
   --life-steps S    health-check epochs (profile-scaled)
   --batch B         samples per request batch (profile-scaled)
-  --queue-depth D   bounded per-chip queue depth (default: 4)
+  --queue-depth D   bounded per-chip queue depth (default: 4); arrivals
+                    beyond depth*batch pending requests are shed
   --workers W       scheduler worker threads (default: min(chips, cores))
+  --arrival A       open-loop arrival process: poisson | burst (default:
+                    poisson; burst = MMPP-2, 4x rate bursts 20% of the time)
+  --rate R          offered arrival rate, requests per virtual second
+                    (default: 0 = auto, ~70% of fleet capacity)
+  --batch-max B     dynamic batching window ceiling (alias of --batch)
+  --batch-age-us A  oldest-request age forcing a partial batch out
+                    (virtual us, default: 200; inf = fixed-batch mode)
+  --queue-timeout-us T
+                    per-request admission deadline from intended arrival
+                    (virtual us, default: 5000; expired requests are
+                    accounted as timed out, never silently dropped)
+  --latency-slo-us L
+                    p99.9 open-loop latency SLO per life step (virtual us,
+                    default: disabled)
   --escape-prob P   per-fault localization escape probability (default: 0;
                     escaped faults serve silent data corruption, reported
                     as sdc_samples / sdc_fraction in results/fleet.json)

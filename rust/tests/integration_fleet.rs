@@ -1,5 +1,6 @@
 //! Fleet serving end-to-end: scheduler conservation (every request routed
-//! exactly once, on every policy), deterministic routing in the seed, and
+//! exactly once, on every policy, closed and open loop), deterministic
+//! serving in the seed, open-loop admission accounting under overload, and
 //! the acceptance scenario — a FAP+T-managed fleet beats an unmitigated
 //! fleet on served accuracy when aging drives chips to a 25% end-of-life
 //! fault rate.
@@ -8,12 +9,15 @@ use repro::chip::{Backend, Chip, Engine};
 use repro::coordinator::trainer::{train_baseline_native, TrainConfig};
 use repro::data::Dataset;
 use repro::fleet::{
-    fleet_json, provision_fleet, run_lifetime, serve, ChipUnit, FleetConfig, RoutingPolicy,
-    WorkloadConfig, YieldDist,
+    fleet_json, provision_fleet, run_lifetime, serve, serve_open, ArrivalProcess, BatcherConfig,
+    ChipUnit, FleetConfig, OpenWorkloadConfig, RequestOutcome, RoutingPolicy, WorkloadConfig,
+    WrrPicker, YieldDist,
 };
 use repro::mapping::MaskKind;
 use repro::model::quant::{calibrate_mlp, Calibration};
 use repro::model::{Arch, Layer, Params};
+use repro::prop_assert;
+use repro::util::prop;
 use repro::util::Rng;
 
 fn tiny_arch() -> Arch {
@@ -171,6 +175,7 @@ fn managed_fleet_beats_unmitigated_at_25pct_eol() {
         max_retrains: 4,
         managed: true,
         escape_prob: 0.0,
+        ..FleetConfig::default()
     };
     let run = |managed: bool| {
         let mut engine = Engine::new(Backend::Plan, None).unwrap();
@@ -201,8 +206,16 @@ fn managed_fleet_beats_unmitigated_at_25pct_eol() {
     for key in [
         "\"fleet_accuracy\"",
         "\"samples_per_sec\"",
-        "\"p50_batch_latency_us\"",
-        "\"p99_batch_latency_us\"",
+        "\"p50_latency_us\"",
+        "\"p99_latency_us\"",
+        "\"p999_latency_us\"",
+        "\"offered_load_rps\"",
+        "\"goodput_rps\"",
+        "\"shed_fraction\"",
+        "\"timeout_fraction\"",
+        "\"mean_batch_fill\"",
+        "\"conservation_ok\": true",
+        "\"arrival\": \"poisson\"",
         "\"effective_yield\"",
         "\"retrain_events\"",
         "\"sim_cycles\"",
@@ -262,6 +275,7 @@ fn escaped_faults_are_accounted_as_sdc_traffic() {
         max_retrains: 2,
         managed: true,
         escape_prob: 1.0,
+        ..FleetConfig::default()
     };
     let mut engine = Engine::new(Backend::Plan, None).unwrap();
     let mut fleet =
@@ -281,4 +295,178 @@ fn escaped_faults_are_accounted_as_sdc_traffic() {
     assert!(out.escaped_faults_eol >= 3 * 2);
     let json = fleet_json(&fleet, &out, "plan").render();
     assert!(json.contains("\"escape_prob\": 1"), "missing escape_prob: {json}");
+}
+
+fn open_chips(arch: &Arch, n: usize) -> Vec<Chip> {
+    (0..n)
+        .map(|i| {
+            Chip::new(arch.clone())
+                .array_n(8)
+                .inject(3 + i, 200 + i as u64)
+                .detect()
+                .unwrap()
+                .mitigate(MaskKind::FapBypass)
+                .threads(1)
+        })
+        .collect()
+}
+
+fn open_cfg(rate_rps: f64, offered: usize, execute: bool) -> OpenWorkloadConfig {
+    OpenWorkloadConfig {
+        backend: Backend::Plan,
+        policy: RoutingPolicy::RoundRobin,
+        arrival: ArrivalProcess::Poisson,
+        rate_rps,
+        offered,
+        batcher: BatcherConfig {
+            batch_max: 8,
+            max_batch_age_us: 100.0,
+            queue_timeout_us: 5_000.0,
+            queue_depth: 1,
+        },
+        workers: 2,
+        execute,
+        seed: 13,
+    }
+}
+
+/// Open-loop admission accounting under forced overload: every offered
+/// request is served, shed, or timed out — exactly once — and the served
+/// set really executes (samples and accuracy counted over it).
+#[test]
+fn open_loop_conserves_requests_under_shedding() {
+    let (arch, golden, calib, _train, test) = bundle();
+    let chips = open_chips(&arch, 2);
+    let units: Vec<ChipUnit<'_>> = chips
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ChipUnit { id: i, chip: c, params: &golden, weight: 1.0 })
+        .collect();
+    // 1e10 req/s: the whole stream lands faster than any chip can drain
+    // its 8-slot pool, so admission control must shed most of it
+    let rep = serve_open(&units, &calib, &test, &open_cfg(1e10, 400, true)).unwrap();
+    let open = rep.open.as_ref().unwrap();
+    assert!(open.conservation_ok(), "served+shed+timed_out != offered");
+    assert_eq!(open.offered, 400);
+    assert!(open.shed > 0, "overload must shed");
+    assert!(open.served > 0, "overload must still serve admitted traffic");
+    assert!(open.shed_fraction() > 0.5, "shed fraction {}", open.shed_fraction());
+    // each outcome appears exactly once, and Served ids match the per-chip
+    // execution records one-for-one
+    let mut served_ids: Vec<usize> =
+        rep.per_chip.iter().flat_map(|c| c.request_ids.iter().copied()).collect();
+    served_ids.sort_unstable();
+    let mut expect: Vec<usize> = open
+        .outcomes
+        .iter()
+        .enumerate()
+        .filter(|(_, o)| matches!(o, RequestOutcome::Served { .. }))
+        .map(|(id, _)| id)
+        .collect();
+    expect.sort_unstable();
+    assert_eq!(served_ids, expect, "executed requests must be exactly the Served outcomes");
+    assert_eq!(rep.samples, open.served, "one sample per served request");
+    assert_eq!(rep.requests, open.served);
+    assert!(rep.correct > 0, "served traffic must classify");
+}
+
+/// The open-loop serving stats are bit-identical across runs with the same
+/// seed: arrivals, routing, batching, admission, and every latency are
+/// virtual-clock quantities.
+#[test]
+fn open_loop_serving_is_deterministic_in_seed() {
+    let (arch, golden, calib, _train, test) = bundle();
+    let chips = open_chips(&arch, 3);
+    let run = || {
+        let units: Vec<ChipUnit<'_>> = chips
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                ChipUnit { id: i, chip: c, params: &golden, weight: 0.4 + 0.2 * i as f64 }
+            })
+            .collect();
+        let mut cfg = open_cfg(0.0, 300, true); // auto rate
+        cfg.policy = RoutingPolicy::AccuracyWeighted;
+        serve_open(&units, &calib, &test, &cfg).unwrap()
+    };
+    let (a, b) = (run(), run());
+    let (oa, ob) = (a.open.as_ref().unwrap(), b.open.as_ref().unwrap());
+    assert_eq!(oa.outcomes, ob.outcomes, "request outcomes changed across runs");
+    assert_eq!(oa.latencies_us, ob.latencies_us, "latency distribution changed");
+    assert_eq!(oa.virtual_secs, ob.virtual_secs);
+    assert_eq!(oa.batches, ob.batches);
+    assert_eq!(a.correct, b.correct, "same plan must execute the same traffic");
+    assert_eq!(a.samples, b.samples);
+    assert!(oa.p999_latency_us() >= oa.p99_latency_us());
+    assert!(oa.p99_latency_us() >= oa.p50_latency_us());
+}
+
+/// The tentpole's serving claim in miniature: at the same offered load, a
+/// dynamic batching window (dispatch on `max_batch_age`) serves strictly
+/// more traffic than fixed-batch serving (full batches only), because a
+/// trickle never fills a 16-slot window before requests hit the deadline.
+#[test]
+fn dynamic_batching_beats_fixed_batch_goodput() {
+    let (arch, golden, calib, _train, test) = bundle();
+    let chips = open_chips(&arch, 1);
+    let units: Vec<ChipUnit<'_>> = chips
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ChipUnit { id: i, chip: c, params: &golden, weight: 1.0 })
+        .collect();
+    let run = |age_us: f64| {
+        let mut cfg = open_cfg(5e4, 600, false); // 20 µs gaps: a trickle
+        cfg.batcher =
+            BatcherConfig { batch_max: 16, max_batch_age_us: age_us, ..cfg.batcher };
+        let rep = serve_open(&units, &calib, &test, &cfg).unwrap();
+        rep.open.unwrap()
+    };
+    let dynamic = run(50.0);
+    let fixed = run(f64::INFINITY);
+    assert!(dynamic.conservation_ok() && fixed.conservation_ok());
+    assert!(
+        dynamic.served > fixed.served,
+        "dynamic window must serve more of the trickle: {} vs {}",
+        dynamic.served,
+        fixed.served
+    );
+    assert!(
+        dynamic.goodput_rps() > fixed.goodput_rps(),
+        "dynamic goodput {} must beat fixed {}",
+        dynamic.goodput_rps(),
+        fixed.goodput_rps()
+    );
+    assert!(fixed.timed_out > 0, "fixed-batch stragglers must be accounted as timeouts");
+    assert_eq!(fixed.served % 16, 0, "fixed mode dispatches full batches only");
+}
+
+/// Smooth weighted round-robin converges to the accuracy weights: over T
+/// picks, every lane's traffic share lands within O(1/T) of its normalized
+/// weight, for random weight vectors.
+#[test]
+fn wrr_traffic_shares_converge_to_weights() {
+    prop::check("wrr_shares", 0xF1EE7, 40, |rng| {
+        let lanes = 2 + rng.below(5);
+        let weights: Vec<f64> = (0..lanes).map(|_| 0.05 + rng.f64()).collect();
+        let wsum: f64 = weights.iter().sum();
+        let picks = 600usize;
+        let mut counts = vec![0usize; lanes];
+        let mut picker = WrrPicker::new(&weights);
+        for _ in 0..picks {
+            counts[picker.pick()] += 1;
+        }
+        prop_assert!(
+            counts.iter().sum::<usize>() == picks,
+            "every pick lands on exactly one lane"
+        );
+        for (i, (&c, w)) in counts.iter().zip(&weights).enumerate() {
+            let expect = picks as f64 * w / wsum;
+            let err = (c as f64 - expect).abs();
+            prop_assert!(
+                err <= 1.0 + lanes as f64,
+                "lane {i}: {c} picks vs expected {expect:.1} (weights {weights:?})"
+            );
+        }
+        Ok(())
+    });
 }
