@@ -339,6 +339,60 @@ fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Jso
         }
     }
 
+    // observability overhead: the exec hot path is instrumented with a
+    // relaxed-atomic enabled check (repro::obs); this row proves that even
+    // with recording ON the simd_vs_scalar shape pays <2% (so the disabled
+    // default, which only pays the check, is strictly cheaper). Gated like
+    // the parity checks: a regression exits nonzero.
+    {
+        let (k, m) = *shapes.last().unwrap();
+        let a: Vec<i32> = (0..batch * k).map(|_| rng.below(255) as i32 - 127).collect();
+        let w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+        let plan =
+            MatmulPlan::compile(&FaultMap::healthy(n), MaskKind::Unmitigated, &w, k, m);
+        let (wu3, it3) = if quick { (2, 9) } else { (3, 21) };
+        println!("# obs: instrumentation overhead on the {k}x{m} hot path");
+        let mut out_dis = vec![0i32; batch * m];
+        let dis = bench::bench(&format!("obs off {k}x{m} (batch {batch})"), wu3, it3, || {
+            plan.execute_into(&a, batch, &mut out_dis);
+            bench::black_box(&mut out_dis);
+        });
+        dis.report_throughput(timing::mac_ops(batch, k, m), "MAC");
+        repro::obs::set_enabled(true);
+        let mut out_en = vec![0i32; batch * m];
+        let en = bench::bench(&format!("obs on  {k}x{m} (batch {batch})"), wu3, it3, || {
+            plan.execute_into(&a, batch, &mut out_en);
+            bench::black_box(&mut out_en);
+        });
+        repro::obs::set_enabled(false);
+        repro::obs::reset_metrics();
+        en.report_throughput(timing::mac_ops(batch, k, m), "MAC");
+        anyhow::ensure!(out_en == out_dis, "parity: obs-on != obs-off at {k}x{m}");
+        let overhead = en.min.as_secs_f64() / dis.min.as_secs_f64().max(1e-12) - 1.0;
+        println!("  -> obs-enabled overhead = {:.2}%", overhead * 100.0);
+        // 2% relative gate with a small absolute floor so timer jitter on
+        // sub-100us shapes cannot flake the smoke run
+        anyhow::ensure!(
+            overhead < 0.02
+                || en.min.saturating_sub(dis.min) < std::time::Duration::from_micros(2),
+            "obs instrumentation overhead {:.2}% exceeds the 2% gate \
+             (off {:?} vs on {:?})",
+            overhead * 100.0,
+            dis.min,
+            en.min
+        );
+        rows.push(
+            Json::obj()
+                .field("row", Json::str("obs_overhead"))
+                .field("k", Json::num(k as f64))
+                .field("m", Json::num(m as f64))
+                .field("batch", Json::num(batch as f64))
+                .field("disabled", dis.to_json())
+                .field("enabled", en.to_json())
+                .field("overhead_frac", Json::num(overhead)),
+        );
+    }
+
     // pool vs scope: dispatch overhead at serving batch sizes, where
     // per-call thread spawns dominate small forwards
     let threads = default_threads().max(2);
@@ -395,8 +449,13 @@ fn bench_gemm_micro(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Jso
 
 /// End-to-end `ChipSession` forward passes, one row per backend (`sim`,
 /// `plan`, and `xla` when an artifacts directory is present): the mnist
-/// MLP on a 10%-faulty 64×64 chip under FAP bypass.
-fn bench_backend_sessions(rng: &mut Rng, quick: bool) -> anyhow::Result<Vec<Json>> {
+/// MLP on a 10%-faulty 64×64 chip under FAP bypass. Also returns the
+/// engines' aggregated plan-cache stats `(live, hits, misses, evictions)`
+/// for the `BENCH_exec.json` meta.
+fn bench_backend_sessions(
+    rng: &mut Rng,
+    quick: bool,
+) -> anyhow::Result<(Vec<Json>, (usize, usize, usize, usize))> {
     let (array_n, faults, batch) = if quick { (32usize, 102, 16) } else { (64, 410, 64) };
     println!("\n# chip-session backends (mnist, {array_n}x{array_n}, 10% faults, FAP bypass)");
     let a = arch::by_name("mnist").unwrap();
@@ -413,6 +472,7 @@ fn bench_backend_sessions(rng: &mut Rng, quick: bool) -> anyhow::Result<Vec<Json
 
     let rt = Runtime::new("artifacts").ok();
     let mut rows = Vec::new();
+    let mut cache = (0usize, 0usize, 0usize, 0usize);
     for backend in [Backend::Sim, Backend::Plan, Backend::Xla] {
         if backend == Backend::Xla && rt.is_none() {
             println!("(skipping xla backend row: no artifacts)");
@@ -450,8 +510,10 @@ fn bench_backend_sessions(rng: &mut Rng, quick: bool) -> anyhow::Result<Vec<Json
                 .field("session_fwd", r.to_json())
                 .field("macs_per_s", Json::num(r.throughput(macs))),
         );
+        let (live, hits, misses, evictions) = engine.plan_stats();
+        cache = (cache.0 + live, cache.1 + hits, cache.2 + misses, cache.3 + evictions);
     }
-    Ok(rows)
+    Ok((rows, cache))
 }
 
 /// One open-loop serving row: knobs + every headline serving statistic.
@@ -673,8 +735,17 @@ fn main() -> anyhow::Result<()> {
 
     // ---- chip-session backends: one row per ForwardBackend (rows carry
     // their own shape fields; the file meta describes the exec sweep) ----
-    results.extend(bench_backend_sessions(&mut rng, quick)?);
+    let (session_rows, (pc_live, pc_hits, pc_misses, pc_evictions)) =
+        bench_backend_sessions(&mut rng, quick)?;
+    results.extend(session_rows);
 
+    // plan-cache traffic of the session rows (one engine per backend,
+    // aggregated) — the PR-over-PR record of cache effectiveness
+    let meta = meta
+        .field("plan_cache_live", Json::num(pc_live as f64))
+        .field("plan_cache_hits", Json::num(pc_hits as f64))
+        .field("plan_cache_misses", Json::num(pc_misses as f64))
+        .field("plan_cache_evictions", Json::num(pc_evictions as f64));
     bench::write_bench_json("BENCH_exec.json", "exec_plan_vs_naive", meta, results)?;
 
     // ---- fleet scheduler: serving-layer rows, own bench record ----------

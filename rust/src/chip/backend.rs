@@ -112,6 +112,11 @@ pub trait ForwardBackend {
     /// Mitigation compiled into this backend.
     fn kind(&self) -> MaskKind;
 
+    /// Physical array dimension (`n`) of the chip this backend executes —
+    /// feeds the virtual-cycle timing model behind the per-forward obs
+    /// histograms ([`crate::obs`]).
+    fn array_n(&self) -> usize;
+
     /// Logits `[batch][num_classes]` of the faulty quantized forward pass
     /// for `x` row-major `[batch][input_len]`.
     fn forward_logits(

@@ -53,11 +53,48 @@ use crate::exec::{default_threads, ChipPlan, PlanCache, WorkerPool};
 use crate::faults::{detect, inject_uniform, FaultMap, FaultSpec, KnownMap, TestPatterns};
 use crate::mapping::MaskKind;
 use crate::model::quant::{calibrate_mlp, mlp_forward, Calibration};
-use crate::model::{Arch, Params};
+use crate::model::{Arch, Layer, Params};
+use crate::obs::LazyCounter;
 use crate::runtime::Runtime;
+use crate::systolic::timing;
 use crate::util::Rng;
 use anyhow::{bail, ensure, Context, Result};
 use std::sync::Arc;
+
+/// Localization runs and the faulty MACs they reported.
+static M_DETECT: LazyCounter = LazyCounter::new("chip.detect.count");
+static M_DETECT_FAULTY: LazyCounter = LazyCounter::new("chip.detect.faulty_macs");
+/// FAP+T retraining invocations through [`Engine::retrain`].
+static M_RETRAIN: LazyCounter = LazyCounter::new("chip.retrain.count");
+/// Whole-dataset evaluations through [`ChipSession::evaluate`].
+static M_EVALUATE: LazyCounter = LazyCounter::new("chip.evaluate.count");
+
+/// Virtual-cycle bucket bounds of the per-forward chip histograms.
+const FWD_CYCLE_BOUNDS: [f64; 8] = [1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10];
+
+/// Record one faulty forward in the obs registry: per-backend forward and
+/// sample counts plus the paper timing model's virtual cycles for the
+/// batch on this chip's `n x n` array. Counts and virtual-clock durations
+/// only — never wall time — so `results/metrics.json` stays
+/// seed-deterministic (see DESIGN.md "Observability layer").
+fn record_forward(backend: &str, arch: &Arch, n: usize, batch: usize) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let cycles: u64 = arch
+        .weighted_layers()
+        .iter()
+        .map(|l| match l {
+            Layer::Fc(f) => timing::tiled_cycles(n, batch, f.din, f.dout),
+            _ => 0,
+        })
+        .sum();
+    let r = crate::obs::registry();
+    r.counter(&format!("chip.forward.count.{backend}")).inc();
+    r.counter(&format!("chip.forward.samples.{backend}")).add(batch as u64);
+    r.histogram(&format!("chip.forward.cycles.{backend}"), &FWD_CYCLE_BOUNDS)
+        .record(cycles as f64);
+}
 
 /// Builder for one physical chip: architecture, array size, fault state
 /// and mitigation. Consume it with [`Chip::session`] /
@@ -145,6 +182,8 @@ impl Chip {
     /// known view is a strict subset of the truth's MAC set.
     pub fn detect_with(mut self, cfg: TestPatterns) -> Result<Chip> {
         let rep = detect::localize_from_map(&self.truth, cfg);
+        M_DETECT.inc();
+        M_DETECT_FAULTY.add(rep.faulty.len() as u64);
         self.detected = Some(rep.faulty.len());
         self.known = Some(KnownMap::from_macs(self.array_n, rep.faulty.iter().copied()));
         Ok(self)
@@ -403,6 +442,7 @@ impl ChipSession<'_> {
         let Some((params, calib)) = self.model.as_ref() else {
             bail!("ChipSession: load_model before forward_logits");
         };
+        record_forward(self.backend.name(), &self.arch, self.backend.array_n(), batch);
         self.backend.forward_logits(params, calib, x, batch)
     }
 
@@ -419,6 +459,7 @@ impl ChipSession<'_> {
         let Some((params, calib)) = self.model.as_ref() else {
             bail!("ChipSession: load_model before evaluate");
         };
+        M_EVALUATE.inc();
         self.backend.evaluate(params, calib, data)
     }
 }
@@ -488,9 +529,9 @@ impl<'rt> Engine<'rt> {
         }
     }
 
-    /// Plan-cache statistics `(cached plans, hits, misses)`.
-    pub fn plan_stats(&self) -> (usize, usize, usize) {
-        (self.plans.len(), self.plans.hits(), self.plans.misses())
+    /// Plan-cache statistics `(cached plans, hits, misses, evictions)`.
+    pub fn plan_stats(&self) -> (usize, usize, usize, usize) {
+        (self.plans.len(), self.plans.hits(), self.plans.misses(), self.plans.evictions())
     }
 
     /// Open a [`ChipSession`] on this engine's backend, sharing the plan
@@ -541,6 +582,7 @@ impl<'rt> Engine<'rt> {
         cfg: &FaptConfig,
     ) -> Result<FaptResult> {
         self.backend.supports(arch, Scenario::Train)?;
+        M_RETRAIN.inc();
         match self.backend {
             Backend::Xla => {
                 fapt_retrain(self.rt.unwrap(), arch, fap_params, prune_masks, train, cfg)
@@ -719,8 +761,8 @@ mod tests {
         let chip = Chip::new(arch).array_n(4).inject(2, 1);
         let _s1 = engine.session(&chip).unwrap();
         let _s2 = engine.session(&chip).unwrap();
-        let (plans, hits, misses) = engine.plan_stats();
-        assert_eq!((plans, hits, misses), (1, 1, 1));
+        let (plans, hits, misses, evictions) = engine.plan_stats();
+        assert_eq!((plans, hits, misses, evictions), (1, 1, 1, 0));
     }
 
     #[test]

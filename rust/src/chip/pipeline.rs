@@ -24,8 +24,15 @@
 
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
+use crate::obs::LazyCounter;
 use crate::systolic::fixed;
 use anyhow::{ensure, Result};
+
+/// Values quantized on the way into the int core (per-layer activations)
+/// vs values dequantized on the way out (per-layer accumulator outputs) —
+/// the quantize/dequantize split of the native forward pipeline.
+static M_QUANT_VALUES: LazyCounter = LazyCounter::new("chip.quantize.values");
+static M_DEQUANT_VALUES: LazyCounter = LazyCounter::new("chip.dequantize.values");
 
 /// Reusable working buffers of the quantized forward: current activations,
 /// next-layer activations, quantized activations and the int32 accumulator.
@@ -90,6 +97,10 @@ where
         fixed::quantize_into(&scratch.act, a_s, &mut scratch.q);
         scratch.acc.resize(batch * fc.dout, 0);
         matmul(li, &scratch.q, batch, fc.din, fc.dout, &mut scratch.acc);
+        if crate::obs::enabled() {
+            M_QUANT_VALUES.add(scratch.q.len() as u64);
+            M_DEQUANT_VALUES.add((batch * fc.dout) as u64);
+        }
         scratch.next.resize(batch * fc.dout, 0.0);
         for bi in 0..batch {
             let row = &scratch.acc[bi * fc.dout..(bi + 1) * fc.dout];

@@ -177,6 +177,10 @@ impl ForwardBackend for PlanBackend {
         self.kind
     }
 
+    fn array_n(&self) -> usize {
+        self.truth.n()
+    }
+
     fn forward_logits(
         &mut self,
         params: &Params,

@@ -85,6 +85,10 @@ impl ForwardBackend for SimBackend {
         self.kind
     }
 
+    fn array_n(&self) -> usize {
+        self.tm.n()
+    }
+
     fn forward_logits(
         &mut self,
         params: &Params,

@@ -106,6 +106,10 @@ impl ForwardBackend for XlaBackend<'_> {
         self.chip_plan.kind()
     }
 
+    fn array_n(&self) -> usize {
+        self.chip_plan.n()
+    }
+
     fn forward_logits(
         &mut self,
         params: &Params,

@@ -96,9 +96,9 @@ impl<'rt> Harness<'rt> {
         &self.engine
     }
 
-    /// Plan-cache statistics `(cached plans, hits, misses)` — campaign
-    /// diagnostics surfaced after `run`.
-    pub fn plan_cache_stats(&self) -> (usize, usize, usize) {
+    /// Plan-cache statistics `(cached plans, hits, misses, evictions)` —
+    /// campaign diagnostics surfaced after `run`.
+    pub fn plan_cache_stats(&self) -> (usize, usize, usize, usize) {
         self.engine.plan_stats()
     }
 
@@ -609,11 +609,11 @@ impl<'rt> Harness<'rt> {
             other => bail!("unknown experiment id {other:?} \
                 (use table1|fig2a|fig2b|fig4a|fig4b|fig5a|fig5b|synthesis|all)"),
         }
-        let (plans, hits, misses) = self.plan_cache_stats();
+        let (plans, hits, misses, evictions) = self.plan_cache_stats();
         if plans > 0 {
             eprintln!(
                 "[plans] {} backend: {plans} compiled chip plans, {hits} cache hits, \
-                 {misses} misses",
+                 {misses} misses, {evictions} evictions",
                 self.engine.backend()
             );
         }

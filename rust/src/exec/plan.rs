@@ -29,9 +29,20 @@ use crate::faults::{chip_fingerprint, FaultMap, KnownMap};
 use crate::mapping::{LayerMasks, MaskKind};
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
+use crate::obs::LazyCounter;
 use crate::systolic::fixed;
 use std::collections::HashMap;
 use std::sync::Arc;
+
+// Exec-layer instrumentation. Each plan execution pays one enabled check
+// before any counter touch — never inside the tile loops.
+static M_DISPATCH: LazyCounter = LazyCounter::new("exec.kernel.dispatch");
+static M_TILES: LazyCounter = LazyCounter::new("exec.kernel.tiles");
+static M_I8_TILES: LazyCounter = LazyCounter::new("exec.kernel.i8_tiles");
+static M_COMPILE: LazyCounter = LazyCounter::new("exec.plan.compile");
+static M_CACHE_HIT: LazyCounter = LazyCounter::new("exec.plan_cache.hit");
+static M_CACHE_MISS: LazyCounter = LazyCounter::new("exec.plan_cache.miss");
+static M_CACHE_EVICT: LazyCounter = LazyCounter::new("exec.plan_cache.evict");
 
 /// One dot-segment of a chain column: accumulate `weights · a[start..]`,
 /// then apply the fault mask of the segment's terminal MAC.
@@ -379,6 +390,18 @@ impl MatmulPlan {
         self.panel_nr
     }
 
+    /// Count one plan execution in the obs registry: dispatches, tiles
+    /// walked, and how many of them packed i8 panels. One enabled check
+    /// up front; the disabled cost is a single relaxed load + branch.
+    #[inline]
+    fn record_dispatch(&self) {
+        if crate::obs::enabled() {
+            M_DISPATCH.inc();
+            M_TILES.add(self.stats.tiles as u64);
+            M_I8_TILES.add(self.stats.i8_tiles as u64);
+        }
+    }
+
     /// Fingerprint of the **truth** fault map this plan was compiled
     /// against (corruption source).
     pub fn fingerprint(&self) -> u64 {
@@ -489,6 +512,7 @@ impl MatmulPlan {
         );
         assert_eq!(a.len(), batch * self.k);
         assert_eq!(out.len(), batch * self.m);
+        self.record_dispatch();
         out.fill(0);
         self.accumulate(kr, a, out, batch);
     }
@@ -517,6 +541,7 @@ impl MatmulPlan {
         // is a &'static of plain fn pointers, freely shared across lanes
         let kr = simd::kernel();
         assert_eq!(kr.nr(), self.panel_nr, "plan packed for a different kernel width");
+        self.record_dispatch();
         out.fill(0);
         gemm::for_each_batch_shard(a, self.k, out, self.m, batch, threads, |ac, oc, rows| {
             self.accumulate(kr, ac, oc, rows);
@@ -541,6 +566,7 @@ impl MatmulPlan {
         assert_eq!(out.len(), batch * self.m);
         let kr = simd::kernel();
         assert_eq!(kr.nr(), self.panel_nr, "plan packed for a different kernel width");
+        self.record_dispatch();
         out.fill(0);
         pool.for_each_batch_shard(a, self.k, out, self.m, batch, |ac, oc, rows| {
             self.accumulate(kr, ac, oc, rows);
@@ -662,6 +688,7 @@ impl ChipPlan {
         known: &KnownMap,
         kind: MaskKind,
     ) -> ChipPlan {
+        M_COMPILE.inc();
         let masks = LayerMasks::build_views(arch, truth, known, kind);
         ChipPlan {
             arch_name: arch.name.to_string(),
@@ -823,6 +850,7 @@ pub struct PlanCache {
     tick: u64,
     hits: usize,
     misses: usize,
+    evictions: usize,
 }
 
 struct CacheEntry {
@@ -846,7 +874,7 @@ impl PlanCache {
 
     /// A cache bounded to `capacity` live plans (0 disables caching).
     pub fn with_capacity(capacity: usize) -> PlanCache {
-        PlanCache { map: HashMap::new(), capacity, tick: 0, hits: 0, misses: 0 }
+        PlanCache { map: HashMap::new(), capacity, tick: 0, hits: 0, misses: 0, evictions: 0 }
     }
 
     /// [`PlanCache::get_or_compile_views`] under perfect controller
@@ -868,11 +896,13 @@ impl PlanCache {
         self.tick += 1;
         if let Some(entry) = self.map.get_mut(&key) {
             self.hits += 1;
+            M_CACHE_HIT.inc();
             entry.last_used = self.tick;
             debug_assert!(entry.plan.matches_views(truth, known));
             return entry.plan.clone();
         }
         self.misses += 1;
+        M_CACHE_MISS.inc();
         let plan = Arc::new(ChipPlan::compile_views(arch, truth, known, kind));
         if self.capacity > 0 {
             if self.map.len() >= self.capacity {
@@ -890,6 +920,8 @@ impl PlanCache {
             self.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| k.clone())
         {
             self.map.remove(&victim);
+            self.evictions += 1;
+            M_CACHE_EVICT.inc();
         }
     }
 
@@ -914,6 +946,11 @@ impl PlanCache {
 
     pub fn misses(&self) -> usize {
         self.misses
+    }
+
+    /// Plans evicted by the LRU bound over this cache's lifetime.
+    pub fn evictions(&self) -> usize {
+        self.evictions
     }
 
     /// Drop every cached plan (e.g. after a re-fabrication sweep retires

@@ -25,10 +25,20 @@
 //! scoped-dispatch pool: one `Mutex<State>` + two condvars + three
 //! atomics.
 
+use crate::obs::{LazyCounter, LazyHistogram};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+// Pool occupancy metrics. Only *claim-side* quantities are recorded (job
+// count, shards per job, inline dispatches) — realized thread concurrency
+// is scheduling-dependent and would break the deterministic-snapshot
+// contract of the obs layer.
+static M_JOBS: LazyCounter = LazyCounter::new("exec.pool.jobs");
+static M_INLINE: LazyCounter = LazyCounter::new("exec.pool.inline_jobs");
+static M_SHARDS: LazyHistogram =
+    LazyHistogram::new("exec.pool.shards_per_job", &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]);
 
 /// One dispatched job: a borrowed task closure (lifetime erased — see the
 /// safety argument on [`WorkerPool::run`]) and its shard count.
@@ -160,6 +170,13 @@ impl WorkerPool {
         if tasks == 0 {
             return;
         }
+        if crate::obs::enabled() {
+            M_JOBS.inc();
+            M_SHARDS.record(tasks as f64);
+            if self.handles.is_empty() || tasks == 1 {
+                M_INLINE.inc();
+            }
+        }
         if self.handles.is_empty() || tasks == 1 {
             for i in 0..tasks {
                 task(i);
@@ -246,6 +263,11 @@ impl WorkerPool {
             return;
         }
         if self.handles.is_empty() || batch == 1 || m == 0 {
+            if crate::obs::enabled() {
+                M_JOBS.inc();
+                M_INLINE.inc();
+                M_SHARDS.record(1.0);
+            }
             f(a, out, batch);
             return;
         }

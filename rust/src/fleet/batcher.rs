@@ -24,9 +24,27 @@
 use super::config::RoutingPolicy;
 use super::loadgen::Request;
 use super::scheduler::{percentile, WrrPicker};
+use crate::obs::{LazyCounter, LazyHistogram, Trace};
 use anyhow::{ensure, Result};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+
+// Fleet-layer serving metrics. Counter increments mirror the simulation's
+// own accounting one-for-one, so the metrics snapshot obeys the same
+// conservation invariant the DES enforces:
+// offered == admitted + shed, served + shed + timed_out == offered.
+static M_OFFERED: LazyCounter = LazyCounter::new("fleet.requests.offered");
+static M_ADMITTED: LazyCounter = LazyCounter::new("fleet.requests.admitted");
+static M_SERVED: LazyCounter = LazyCounter::new("fleet.requests.served");
+static M_SHED: LazyCounter = LazyCounter::new("fleet.requests.shed");
+static M_TIMED_OUT: LazyCounter = LazyCounter::new("fleet.requests.timed_out");
+static M_BATCHES: LazyCounter = LazyCounter::new("fleet.batches.dispatched");
+static M_BATCH_FILL: LazyHistogram =
+    LazyHistogram::new("fleet.batch.fill", &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0]);
+static M_QUEUE_DEPTH: LazyHistogram = LazyHistogram::new(
+    "fleet.queue.depth",
+    &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0],
+);
 
 /// Dynamic-batching and admission knobs for one serving window.
 #[derive(Clone, Copy, Debug)]
@@ -194,6 +212,15 @@ pub struct ServingPlan {
     pub stats: OpenLoopStats,
 }
 
+/// Where [`simulate_traced`] emits its per-request timeline: the trace
+/// buffer plus the track id each sim-local chip index renders on (fleet
+/// chip ids when called from the scheduler, so tracks stay stable as
+/// chips retire and the active subset re-indexes).
+pub struct TraceSink<'a> {
+    pub trace: &'a mut Trace,
+    pub tracks: Vec<u32>,
+}
+
 struct ChipState {
     pending: VecDeque<Request>,
     /// Virtual completion time of the in-flight batch, if any.
@@ -237,6 +264,7 @@ fn wake(
     now: u64,
     cfg: &BatcherConfig,
     svc_ns: &impl Fn(usize, usize) -> u64,
+    mut sink: Option<&mut TraceSink<'_>>,
 ) {
     let st = &mut sim.chips[chip];
     if st.busy_until.is_some_and(|b| b <= now) {
@@ -245,9 +273,14 @@ fn wake(
     // expire the oldest-first prefix whose deadline has passed
     while let Some(front) = st.pending.front() {
         if front.arrival_ns.saturating_add(cfg.timeout_ns()) <= now {
-            sim.outcomes[front.id] = RequestOutcome::TimedOut;
+            let id = front.id;
+            sim.outcomes[id] = RequestOutcome::TimedOut;
             sim.timed_out += 1;
             st.pending.pop_front();
+            M_TIMED_OUT.inc();
+            if let Some(s) = sink.as_deref_mut() {
+                s.trace.instant(s.tracks[chip], now, "timeout", "fleet", vec![("req", id as f64)]);
+            }
         } else {
             break;
         }
@@ -273,6 +306,20 @@ fn wake(
         st.busy_until = Some(completion);
         sim.served += k;
         sim.batches += 1;
+        M_SERVED.add(k as u64);
+        M_BATCHES.inc();
+        M_BATCH_FILL.record(k as f64);
+        if let Some(s) = sink.as_deref_mut() {
+            // the Perfetto slice: this chip busy serving a k-request batch
+            s.trace.complete(
+                s.tracks[chip],
+                now,
+                service_ns,
+                "batch",
+                "fleet",
+                vec![("k", k as f64), ("queued", st.pending.len() as f64)],
+            );
+        }
         sim.end_ns = sim.end_ns.max(completion);
         sim.push_event(completion, chip);
         // leftover pending requests are handled at the completion wake
@@ -296,6 +343,23 @@ pub fn simulate(
     arrivals: impl Iterator<Item = Request>,
     svc_ns: impl Fn(usize, usize) -> u64,
     cfg: &BatcherConfig,
+) -> Result<ServingPlan> {
+    simulate_traced(chips, policy, weights, arrivals, svc_ns, cfg, None)
+}
+
+/// [`simulate`] with an optional trace sink: every dispatch becomes a
+/// complete slice on its chip's track, sheds/timeouts become instants,
+/// and each arrival samples its chip's queue-depth counter track. All
+/// timestamps are the DES's virtual clock, so the emitted events are a
+/// pure function of (seed, config).
+pub fn simulate_traced(
+    chips: usize,
+    policy: RoutingPolicy,
+    weights: &[f64],
+    arrivals: impl Iterator<Item = Request>,
+    svc_ns: impl Fn(usize, usize) -> u64,
+    cfg: &BatcherConfig,
+    mut sink: Option<&mut TraceSink<'_>>,
 ) -> Result<ServingPlan> {
     ensure!(chips > 0, "batcher: no chips to serve on");
     ensure!(weights.len() == chips, "batcher: {} weights for {chips} chips", weights.len());
@@ -333,7 +397,7 @@ pub fn simulate(
             (a, Some(t)) if a.is_none() || t <= a.unwrap() => {
                 let Reverse((t, _, chip)) = sim.events.pop().unwrap();
                 sim.end_ns = sim.end_ns.max(t);
-                wake(&mut sim, chip, t, cfg, &svc_ns);
+                wake(&mut sim, chip, t, cfg, &svc_ns, sink.as_deref_mut());
             }
             _ => {
                 let req = arrivals.next().unwrap();
@@ -341,6 +405,7 @@ pub fn simulate(
                 sim.end_ns = sim.end_ns.max(now);
                 debug_assert_eq!(req.id, sim.outcomes.len(), "request ids must be dense");
                 sim.outcomes.push(RequestOutcome::Shed); // placeholder until routed
+                M_OFFERED.inc();
                 let chip = match policy {
                     RoutingPolicy::RoundRobin => {
                         let i = rr % chips;
@@ -352,11 +417,33 @@ pub fn simulate(
                         .unwrap(),
                     RoutingPolicy::AccuracyWeighted => wrr.pick(),
                 };
+                M_QUEUE_DEPTH.record(sim.chips[chip].pending.len() as f64);
                 if sim.chips[chip].pending.len() >= cfg.pool_cap() {
                     sim.shed += 1; // outcome already Shed
+                    M_SHED.inc();
+                    if let Some(s) = sink.as_deref_mut() {
+                        s.trace.instant(
+                            s.tracks[chip],
+                            now,
+                            "shed",
+                            "fleet",
+                            vec![("req", req.id as f64)],
+                        );
+                    }
                 } else {
                     sim.chips[chip].pending.push_back(req);
-                    wake(&mut sim, chip, now, cfg, &svc_ns);
+                    M_ADMITTED.inc();
+                    if let Some(s) = sink.as_deref_mut() {
+                        // one admission event per request: the chip's
+                        // queue-depth counter track sampled at arrival
+                        s.trace.counter(
+                            s.tracks[chip],
+                            now,
+                            format!("queue_depth chip {}", s.tracks[chip]),
+                            sim.chips[chip].pending.len() as f64,
+                        );
+                    }
+                    wake(&mut sim, chip, now, cfg, &svc_ns, sink.as_deref_mut());
                 }
             }
         }

@@ -142,6 +142,11 @@ pub struct FleetConfig {
     pub latency_slo_us: f64,
     /// Scheduler worker threads (0 = min(chips, cores)).
     pub workers: usize,
+    /// Really execute each step's planned batches (phase 2 of the open
+    /// loop) for accuracy/SDC accounting. `false` runs the virtual-clock
+    /// DES only: serving stats are identical, accuracy is *unknown* (the
+    /// report renders it as null, never 0.0).
+    pub execute: bool,
     /// FAP+T epochs per retrain event.
     pub retrain_epochs: usize,
     /// Simulated downtime charged per retrain event.
@@ -181,6 +186,7 @@ impl Default for FleetConfig {
             queue_timeout_us: 5_000.0,
             latency_slo_us: f64::INFINITY,
             workers: 0,
+            execute: true,
             retrain_epochs: 2,
             retrain_downtime_hours: 200.0,
             max_retrains: 8,

@@ -30,7 +30,20 @@ use crate::data::Dataset;
 use crate::mapping::MaskKind;
 use crate::model::quant::Calibration;
 use crate::model::Params;
+use crate::obs::{LazyCounter, Trace};
 use anyhow::Result;
+
+// Health-loop transition metrics: one increment per transition, so the
+// snapshot's totals equal the per-step counts `fleet.json` reports.
+static M_HEALTH_CHECKS: LazyCounter = LazyCounter::new("fleet.health.checks");
+static M_RETRAIN: LazyCounter = LazyCounter::new("fleet.health.retrain");
+static M_RETIRE: LazyCounter = LazyCounter::new("fleet.health.retire");
+static M_SLO_BREACH: LazyCounter = LazyCounter::new("fleet.health.slo_breach");
+static M_SDC: LazyCounter = LazyCounter::new("fleet.sdc.samples");
+
+/// Trace track the health loop's fleet-wide events render on. Chip tracks
+/// use fleet chip ids, which never reach `u32::MAX`.
+pub const HEALTH_TRACK: u32 = u32::MAX;
 
 /// One health-check epoch of the fleet's life.
 pub struct LifeStep {
@@ -264,6 +277,25 @@ pub fn run_lifetime(
     train: &Dataset,
     eval: &Dataset,
 ) -> Result<FleetOutcome> {
+    run_lifetime_traced(engine, fleet, golden, train, eval, None)
+}
+
+/// [`run_lifetime`] with optional observability: health transitions
+/// (re-detect, retrain, retire, SLO breach, SDC exposure) and each step's
+/// serving window land in `trace` on the fleet's virtual clock, windows
+/// laid end-to-end via [`Trace::advance_base`] so the whole life renders
+/// as one sequential Perfetto timeline.
+pub fn run_lifetime_traced(
+    engine: &mut Engine<'_>,
+    fleet: &mut Fleet,
+    golden: &Params,
+    train: &Dataset,
+    eval: &Dataset,
+    mut trace: Option<&mut Trace>,
+) -> Result<FleetOutcome> {
+    if let Some(t) = trace.as_deref_mut() {
+        t.set_track_name(HEALTH_TRACK, "health loop");
+    }
     let provision_yield = fleet.effective_yield();
     let cfg = fleet.cfg.clone();
     let step_hours = cfg.hours / cfg.life_steps.max(1) as f64;
@@ -292,17 +324,48 @@ pub fn run_lifetime(
         for chip in fleet.chips.iter_mut().filter(|c| c.is_active()) {
             new_faults += chip.aging.advance(step_hours);
         }
-        let retrains_before: usize = fleet.chips.iter().map(|c| c.retrains.len()).sum();
+        // per-chip pre-pass snapshot: retrain/retire transitions this
+        // step are derived by diffing, not threaded through health_check
+        let before: Vec<(usize, bool)> =
+            fleet.chips.iter().map(|c| (c.retrains.len(), c.is_active())).collect();
+        let retrains_before: usize = before.iter().map(|(r, _)| r).sum();
         let retired_before = fleet.chips.len() - fleet.active_chips();
+        M_HEALTH_CHECKS.add(fleet.active_chips() as u64);
         for id in 0..fleet.chips.len() {
             health_check(engine, fleet, id, golden, train, eval)?;
         }
         let retrains: usize =
             fleet.chips.iter().map(|c| c.retrains.len()).sum::<usize>() - retrains_before;
         let retired = (fleet.chips.len() - fleet.active_chips()) - retired_before;
+        M_RETRAIN.add(retrains as u64);
+        M_RETIRE.add(retired as u64);
+        if let Some(t) = trace.as_deref_mut() {
+            // ts 0 within the window = the instant the step's health pass
+            // ran, before any of the step's traffic
+            t.instant(
+                HEALTH_TRACK,
+                0,
+                "health_check",
+                "health",
+                vec![
+                    ("step", step as f64),
+                    ("active", fleet.active_chips() as f64),
+                    ("new_faults", new_faults as f64),
+                ],
+            );
+            for (c, (r0, was_active)) in fleet.chips.iter().zip(&before) {
+                if c.retrains.len() > *r0 {
+                    t.instant(c.id as u32, 0, "retrain", "health", vec![("acc", c.accuracy)]);
+                }
+                if *was_active && !c.is_active() {
+                    t.instant(c.id as u32, 0, "retire", "health", vec![("acc", c.accuracy)]);
+                }
+            }
+        }
 
-        let workload = serve_step(engine, fleet, eval, &cfg, step as u64)?;
+        let workload = serve_step(engine, fleet, eval, &cfg, step as u64, trace.as_deref_mut())?;
         let mut latency_slo_ok = true;
+        let mut step_sdc = 0usize;
         if let Some(w) = &workload {
             for s in &w.per_chip {
                 let chip = fleet.chips.iter_mut().find(|c| c.id == s.chip_id).unwrap();
@@ -313,6 +376,7 @@ pub fn run_lifetime(
                 if chip.escaped_faulty_macs() > 0 {
                     chip.sdc_samples += s.samples;
                     out.sdc_samples += s.samples;
+                    step_sdc += s.samples;
                 }
             }
             out.total_requests += w.requests;
@@ -331,9 +395,35 @@ pub fn run_lifetime(
                 latency_slo_ok = open.p999_latency_us() <= cfg.latency_slo_us;
                 if !latency_slo_ok {
                     out.latency_breach_steps += 1;
+                    M_SLO_BREACH.inc();
+                }
+                if let Some(t) = trace.as_deref_mut() {
+                    let span_ns = (open.virtual_secs * 1e9) as u64;
+                    if !latency_slo_ok {
+                        t.instant(
+                            HEALTH_TRACK,
+                            span_ns,
+                            "slo_breach",
+                            "health",
+                            vec![("p999_us", open.p999_latency_us())],
+                        );
+                    }
+                    if step_sdc > 0 {
+                        t.instant(
+                            HEALTH_TRACK,
+                            span_ns,
+                            "sdc_exposure",
+                            "health",
+                            vec![("samples", step_sdc as f64)],
+                        );
+                    }
+                    // lay the next step's window after this one on the
+                    // whole-life timeline
+                    t.advance_base(span_ns);
                 }
             }
         }
+        M_SDC.add(step_sdc as u64);
         out.steps.push(LifeStep {
             step,
             hours: step as f64 * step_hours,
@@ -360,6 +450,7 @@ fn serve_step(
     eval: &Dataset,
     cfg: &FleetConfig,
     step: u64,
+    trace: Option<&mut Trace>,
 ) -> Result<Option<WorkloadReport>> {
     let active: Vec<&FleetChip> = fleet.chips.iter().filter(|c| c.is_active()).collect();
     if active.is_empty() {
@@ -387,8 +478,8 @@ fn serve_step(
         // deliberately adjusted down to the active-chip count (this is a
         // fleet-size change over time, not a silent config clamp)
         workers: cfg.workers.min(units.len()),
-        execute: true,
+        execute: cfg.execute,
         seed: cfg.seed ^ (step << 32) ^ 0x5EB5,
     };
-    scheduler::serve_open(&units, &fleet.calib, eval, &wcfg).map(Some)
+    scheduler::serve_open_traced(&units, &fleet.calib, eval, &wcfg, trace).map(Some)
 }

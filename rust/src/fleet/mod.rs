@@ -44,13 +44,13 @@ pub mod provision;
 pub mod report;
 pub mod scheduler;
 
-pub use batcher::{BatcherConfig, OpenLoopStats, RequestOutcome, ServingPlan};
+pub use batcher::{BatcherConfig, OpenLoopStats, RequestOutcome, ServingPlan, TraceSink};
 pub use config::{FleetConfig, RoutingPolicy, YieldDist};
-pub use health::{run_lifetime, FleetOutcome, LifeStep};
+pub use health::{run_lifetime, run_lifetime_traced, FleetOutcome, LifeStep, HEALTH_TRACK};
 pub use loadgen::{ArrivalProcess, LoadGen, Request};
 pub use provision::{provision_fleet, ChipStatus, Fleet, FleetChip, RetrainEvent};
 pub use report::{fleet_json, print_summary};
 pub use scheduler::{
-    percentile, serve, serve_open, ChipUnit, OpenWorkloadConfig, WorkloadConfig, WorkloadReport,
-    WrrPicker,
+    percentile, serve, serve_open, serve_open_traced, ChipUnit, OpenWorkloadConfig,
+    WorkloadConfig, WorkloadReport, WrrPicker,
 };

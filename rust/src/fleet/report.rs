@@ -63,10 +63,19 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
                 .field("retrains", Json::num(s.retrains as f64))
                 .field("retired", Json::num(s.retired as f64));
             if let Some(w) = &s.workload {
+                // schema stability across execute modes: the key set is
+                // identical whether phase 2 ran or not; a skipped exec
+                // phase reports accuracy as null (unknown), never 0.0
+                let accuracy =
+                    if w.executed { Json::num(w.accuracy()) } else { Json::Null };
                 j = j
                     .field("requests", Json::num(w.requests as f64))
                     .field("samples", Json::num(w.samples as f64))
-                    .field("accuracy", Json::num(w.accuracy()))
+                    .field("accuracy", accuracy)
+                    .field(
+                        "exec_phase",
+                        Json::str(if w.executed { "executed" } else { "skipped" }),
+                    )
                     .field("samples_per_sec", Json::num(w.samples_per_sec()))
                     .field("sim_cycles", Json::num(w.sim_cycles as f64));
                 if let Some(o) = &w.open {
@@ -110,7 +119,14 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
         .field("slo_accuracy", Json::num(fleet.slo))
         .field("provision_yield", Json::num(outcome.provision_yield))
         .field("effective_yield", Json::num(fleet.effective_yield()))
-        .field("fleet_accuracy", Json::num(outcome.served_accuracy()))
+        .field(
+            "fleet_accuracy",
+            if cfg.execute { Json::num(outcome.served_accuracy()) } else { Json::Null },
+        )
+        .field(
+            "exec_phase",
+            Json::str(if cfg.execute { "executed" } else { "skipped" }),
+        )
         .field("escape_prob", Json::num(cfg.escape_prob))
         .field("sdc_samples", Json::num(outcome.sdc_samples as f64))
         .field("sdc_fraction", Json::num(outcome.sdc_fraction()))
@@ -171,9 +187,14 @@ pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
         outcome.goodput_rps(),
         outcome.mean_batch_fill() * 100.0,
     );
+    let acc = if fleet.cfg.execute {
+        format!("{:.2}%", outcome.served_accuracy() * 100.0)
+    } else {
+        "n/a (exec phase skipped)".to_string()
+    };
     println!(
         "  served {} samples in {} batches at {:.0} samples/s ({:.3e} sim cycles), \
-         latency p50 {:.0}us p99 {:.0}us p99.9 {:.0}us, fleet accuracy {:.2}%",
+         latency p50 {:.0}us p99 {:.0}us p99.9 {:.0}us, fleet accuracy {acc}",
         outcome.total_samples,
         outcome.total_batches,
         outcome.samples_per_sec(),
@@ -181,7 +202,6 @@ pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
         outcome.p50_latency_us(),
         outcome.p99_latency_us(),
         outcome.p999_latency_us(),
-        outcome.served_accuracy() * 100.0
     );
     if outcome.sdc_samples > 0 || fleet.cfg.escape_prob > 0.0 {
         println!(

@@ -25,7 +25,7 @@
 //! least-loaded (live queue depths), and accuracy-weighted (smooth
 //! weighted round-robin over the chips' last health-check accuracies).
 
-use super::batcher::{self, BatcherConfig, OpenLoopStats, PlannedBatch, ServingPlan};
+use super::batcher::{self, BatcherConfig, OpenLoopStats, PlannedBatch, ServingPlan, TraceSink};
 use super::config::RoutingPolicy;
 use super::loadgen::{ArrivalProcess, LoadGen, NS_PER_CYCLE};
 use crate::chip::{Backend, Chip};
@@ -34,6 +34,7 @@ use crate::data::Dataset;
 use crate::exec::{default_threads, quantize_mlp_weights, ChipPlan, WorkerPool};
 use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
+use crate::obs::Trace;
 use crate::systolic::timing;
 use crate::util::Rng;
 use anyhow::{anyhow, ensure, Result};
@@ -157,6 +158,11 @@ pub struct WorkloadReport {
     pub per_chip: Vec<ChipServeStats>,
     /// Open-loop serving stats (None for the closed-loop path).
     pub open: Option<OpenLoopStats>,
+    /// Did the execution phase actually run? The closed loop always
+    /// executes; the open loop skips phase 2 when `execute` is false, and
+    /// then `samples`/`correct` are zero by construction, not measurement
+    /// — reports must render accuracy as null, not 0.0.
+    pub executed: bool,
 }
 
 impl WorkloadReport {
@@ -179,13 +185,11 @@ impl WorkloadReport {
 }
 
 /// Nearest-rank percentile of an ascending-sorted slice (`p` in [0, 1]).
+/// Delegates to the shared [`crate::obs::hist::nearest_rank`] so every
+/// latency quantile in the repo has one definition (bit-identical to the
+/// inline formula this replaced — pinned in `obs::hist` tests).
 pub fn percentile(sorted_ascending: &[f64], p: f64) -> f64 {
-    if sorted_ascending.is_empty() {
-        return 0.0;
-    }
-    let rank = ((p * sorted_ascending.len() as f64).ceil() as usize)
-        .clamp(1, sorted_ascending.len());
-    sorted_ascending[rank - 1]
+    crate::obs::hist::nearest_rank(sorted_ascending, p)
 }
 
 /// Smooth weighted round-robin: each pick adds every lane's weight to its
@@ -404,7 +408,16 @@ pub fn serve(
     let samples: usize = per_chip.iter().map(|c| c.samples).sum();
     let correct: usize = per_chip.iter().map(|c| c.correct).sum();
     let sim_cycles: u64 = per_chip.iter().map(|c| c.sim_cycles).sum();
-    Ok(WorkloadReport { requests, samples, correct, wall_secs, sim_cycles, per_chip, open: None })
+    Ok(WorkloadReport {
+        requests,
+        samples,
+        correct,
+        wall_secs,
+        sim_cycles,
+        per_chip,
+        open: None,
+        executed: true,
+    })
 }
 
 /// Route every request to a chip queue per the configured policy; blocks
@@ -566,6 +579,21 @@ pub fn serve_open(
     data: &Dataset,
     cfg: &OpenWorkloadConfig,
 ) -> Result<WorkloadReport> {
+    serve_open_traced(units, calib, data, cfg, None)
+}
+
+/// [`serve_open`] with an optional trace: phase-1 batching/admission
+/// events land on per-chip tracks named after the **fleet** chip ids (so
+/// tracks stay stable when retirement reindexes the active set). The
+/// trace derives entirely from the single-threaded phase-1 DES, so it is
+/// byte-identical across phase-2 worker counts.
+pub fn serve_open_traced(
+    units: &[ChipUnit<'_>],
+    calib: &Calibration,
+    data: &Dataset,
+    cfg: &OpenWorkloadConfig,
+    trace: Option<&mut Trace>,
+) -> Result<WorkloadReport> {
     ensure!(!units.is_empty(), "scheduler: no active chips to route to");
     ensure!(
         cfg.backend != Backend::Xla,
@@ -607,13 +635,21 @@ pub fn serve_open(
     // Phase 1: deterministic virtual-clock serving simulation.
     let gen = LoadGen::new(cfg.arrival, rate_rps, cfg.offered, data.len(), cfg.seed)?;
     let weights: Vec<f64> = units.iter().map(|u| u.weight).collect();
-    let plan = batcher::simulate(
+    let mut sink = trace.map(|t| {
+        let tracks: Vec<u32> = units.iter().map(|u| u.id as u32).collect();
+        for &tr in &tracks {
+            t.set_track_name(tr, &format!("chip {tr}"));
+        }
+        TraceSink { trace: t, tracks }
+    });
+    let plan = batcher::simulate_traced(
         units.len(),
         cfg.policy,
         &weights,
         gen,
         |chip, k| svc_table[chip][k - 1],
         &cfg.batcher,
+        sink.as_mut(),
     )?;
 
     // Phase 2: execute the planned batches for real (accuracy/SDC).
@@ -634,6 +670,7 @@ pub fn serve_open(
         sim_cycles,
         per_chip,
         open: Some(plan.stats),
+        executed: cfg.execute,
     })
 }
 

@@ -38,6 +38,10 @@
 //!   bounded multi-threaded scheduler, and manage each chip's lifetime
 //!   (aging faults, re-detection, FAP re-masking, FAP+T retrain queue,
 //!   retirement) against an accuracy SLO.
+//! * [`obs`] — the observability layer: process-wide sharded metrics
+//!   registry, shared nearest-rank quantiles, and a virtual-clock tracer
+//!   exporting JSONL + Perfetto (Chrome trace-event) timelines; zero-cost
+//!   when disabled, byte-deterministic when enabled.
 //! * [`util`] — deterministic RNG, JSON emission, micro-bench + property
 //!   harnesses (the vendored registry has no criterion/proptest — see
 //!   Cargo.toml).
@@ -50,6 +54,7 @@ pub mod faults;
 pub mod fleet;
 pub mod mapping;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod systolic;
 pub mod util;

@@ -27,7 +27,7 @@ use repro::data;
 use repro::exec::{default_threads, ChipPlan};
 use repro::faults::{detect, inject_uniform, AgingChip, AgingModel, FaultSpec};
 use repro::fleet::{
-    fleet_json, print_summary, provision_fleet, run_lifetime, FleetConfig, RoutingPolicy, YieldDist,
+    fleet_json, print_summary, provision_fleet, FleetConfig, RoutingPolicy, YieldDist,
 };
 use repro::mapping::MaskKind;
 use repro::model::quant::calibrate_mlp;
@@ -56,7 +56,7 @@ fn allowed_opts(cmd: &str) -> Option<&'static [&'static str]> {
             "artifacts", "backend", "threads",
         ]),
         "plan" => Some(&["model", "array-n", "faults", "seed", "batch", "threads", "backend",
-            "artifacts"]),
+            "artifacts", "trace", "metrics-out"]),
         // no --threads here: fleet parallelism is chip-level (--workers);
         // every session the fleet opens runs its plan single-threaded
         "fleet" => Some(&[
@@ -64,7 +64,7 @@ fn allowed_opts(cmd: &str) -> Option<&'static [&'static str]> {
             "profile", "slo", "defect-rate", "eol-rate", "batch", "life-steps", "managed",
             "queue-depth", "workers", "train-n", "test-n", "steps", "escape-prob",
             "arrival", "rate", "batch-max", "batch-age-us", "queue-timeout-us",
-            "latency-slo-us",
+            "latency-slo-us", "execute", "trace", "metrics-out",
         ]),
         "aging" => Some(&["tau", "beta", "n", "faults", "seed", "points", "hours", "eol-rate"]),
         "detect" => Some(&["n", "faults", "seed", "escape-prob"]),
@@ -225,6 +225,14 @@ fn main() -> Result<()> {
     let args = Args::parse()?;
     let artifacts_dir = args.get("artifacts").unwrap_or("artifacts").to_string();
 
+    // observability opt-in: either flag flips the process-wide recording
+    // switch before any instrumented work runs (zero-cost otherwise)
+    let trace_path = args.get("trace").map(|s| s.to_string());
+    let metrics_out = args.get("metrics-out").map(|s| s.to_string());
+    if trace_path.is_some() || metrics_out.is_some() {
+        repro::obs::set_enabled(true);
+    }
+
     match args.cmd.as_str() {
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -358,6 +366,7 @@ fn main() -> Result<()> {
                 kr.isa().name(),
                 kr.nr()
             );
+            let mut trace = trace_path.as_ref().map(|_| repro::obs::Trace::new());
             for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
                 let chip = chip.clone().mitigate(kind);
                 let mut sess = engine.session(&chip)?;
@@ -365,6 +374,23 @@ fn main() -> Result<()> {
                 let t0 = std::time::Instant::now();
                 let logits = sess.forward_logits(&x, batch)?;
                 let dt = t0.elapsed();
+                if let Some(t) = trace.as_mut() {
+                    // one slice per mitigation forward, timed on the paper's
+                    // virtual clock (deterministic — never wall time)
+                    let cycles = repro::fleet::scheduler::batch_sim_cycles(&a, n, batch);
+                    let dur_ns = ((cycles as f64 * repro::fleet::loadgen::NS_PER_CYCLE) as u64)
+                        .max(1);
+                    t.set_track_name(0, "chip 0");
+                    t.complete(
+                        0,
+                        0,
+                        dur_ns,
+                        format!("forward {kind:?}"),
+                        "plan",
+                        vec![("batch", batch as f64), ("faults", faults as f64)],
+                    );
+                    t.advance_base(dur_ns);
+                }
                 let total_macs: u64 =
                     a.weighted_layers().iter().map(|l| (batch * l.weight_len()) as u64).sum();
                 println!(
@@ -416,6 +442,15 @@ fn main() -> Result<()> {
                     }
                 }
             }
+            let (plans, hits, misses, evictions) = engine.plan_stats();
+            println!(
+                "plan cache: {plans} live plans, {hits} hits, {misses} misses, \
+                 {evictions} evictions"
+            );
+            if let (Some(t), Some(path)) = (&trace, &trace_path) {
+                t.write_files(std::path::Path::new(path))?;
+                eprintln!("[obs] trace -> {path} (+ {path}.jsonl)");
+            }
         }
         "fleet" => {
             // Fleet campaign: provision N chips from the yield distribution,
@@ -443,6 +478,7 @@ fn main() -> Result<()> {
                 slo_frac: args.f64("slo", 0.9)?,
                 managed: args.bool("managed", true)?,
                 workers: args.usize("workers", 0)?,
+                execute: args.bool("execute", true)?,
                 escape_prob: args.f64("escape-prob", 0.0)?,
                 ..FleetConfig::default()
             }
@@ -521,14 +557,32 @@ fn main() -> Result<()> {
                 "provision yield {:.0}% — entering lifetime loop",
                 fleet.effective_yield() * 100.0
             );
-            let outcome = run_lifetime(&mut engine, &mut fleet, &golden, &train, &test)?;
+            let mut trace = trace_path.as_ref().map(|_| repro::obs::Trace::new());
+            let outcome = repro::fleet::run_lifetime_traced(
+                &mut engine,
+                &mut fleet,
+                &golden,
+                &train,
+                &test,
+                trace.as_mut(),
+            )?;
             print_summary(&fleet, &outcome);
             let json = fleet_json(&fleet, &outcome, backend.name());
-            repro::coordinator::report::write_json(
-                args.get("out").unwrap_or("results"),
-                "fleet",
-                &json,
-            )?;
+            let out_dir = args.get("out").unwrap_or("results");
+            repro::coordinator::report::write_json(out_dir, "fleet", &json)?;
+            if let (Some(t), Some(path)) = (&trace, &trace_path) {
+                t.write_files(std::path::Path::new(path))?;
+                eprintln!("[obs] trace -> {path} (+ {path}.jsonl)");
+            }
+            // the snapshot defaults to results/metrics.json whenever
+            // observability ran; --metrics-out (common epilogue) overrides
+            if repro::obs::enabled() && metrics_out.is_none() {
+                repro::coordinator::report::write_json(
+                    out_dir,
+                    "metrics",
+                    &repro::obs::snapshot_json(),
+                )?;
+            }
         }
         "aging" => {
             // Wear-out model sweep: expected vs sampled fault-rate
@@ -628,6 +682,17 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+    if let Some(path) = &metrics_out {
+        let p = std::path::Path::new(path);
+        if let Some(dir) = p.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(p, repro::obs::snapshot_json().render())
+            .with_context(|| format!("writing metrics snapshot {path}"))?;
+        eprintln!("[obs] metrics snapshot -> {path}");
+    }
     Ok(())
 }
 
@@ -665,6 +730,13 @@ OPTIONS:
   --array-n N       physical array dimension (default: 256)
   --profile P       quick | default | paper
   --model M         mnist | timit | alexnet32
+  --trace PATH      (plan | fleet) write a Perfetto-loadable Chrome trace
+                    to PATH and the JSONL event log to PATH.jsonl; enables
+                    observability recording (virtual-clock timestamps only,
+                    byte-identical across same-seed runs)
+  --metrics-out P   (plan | fleet) write the metrics registry snapshot to P
+                    (fleet also defaults to results/metrics.json whenever
+                    observability is on)
 
 FLEET OPTIONS (repro fleet):
   --chips N         fleet size (default: 8)
@@ -696,6 +768,10 @@ FLEET OPTIONS (repro fleet):
   --escape-prob P   per-fault localization escape probability (default: 0;
                     escaped faults serve silent data corruption, reported
                     as sdc_samples / sdc_fraction in results/fleet.json)
+  --execute B       true = run the phase-2 execution pass per life step
+                    (accuracy measured); false = DES-only serving, accuracy
+                    reported as null with exec_phase \"skipped\" (default:
+                    true)
 ";
 
 #[cfg(test)]

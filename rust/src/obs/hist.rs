@@ -1,0 +1,176 @@
+//! Fixed-boundary histograms with the nearest-rank quantile semantics the
+//! fleet scheduler has always reported.
+//!
+//! The repo's latency statistics were defined by the inline nearest-rank
+//! percentile in `fleet/scheduler.rs`; that definition now lives here as
+//! [`nearest_rank`] and every quantile in the codebase — scheduler
+//! percentiles, fleet-outcome latencies, metrics-snapshot histograms —
+//! routes through it, so "p99.9" means the same thing in every report.
+//!
+//! A [`Histo`] keeps *both* views of a sample set: cumulative counts
+//! against fixed bucket boundaries (cheap to eyeball, stable schema) and
+//! the exact retained samples (so quantiles are nearest-rank exact, not
+//! bucket-interpolated — bit-identical to sorting the raw data).
+
+use crate::util::json::Json;
+
+/// Nearest-rank percentile on an ascending-sorted slice: the smallest
+/// sample s.t. at least `p` of the mass is at or below it
+/// (`rank = ceil(p * len)`, clamped to `[1, len]`). Empty input → 0.0.
+///
+/// This is byte-for-byte the semantics `fleet::percentile` has reported
+/// since the open-loop serving PR; `fleet::percentile` now delegates here.
+pub fn nearest_rank(sorted_ascending: &[f64], p: f64) -> f64 {
+    if sorted_ascending.is_empty() {
+        return 0.0;
+    }
+    let rank =
+        ((p * sorted_ascending.len() as f64).ceil() as usize).clamp(1, sorted_ascending.len());
+    sorted_ascending[rank - 1]
+}
+
+/// A merged (single-threaded) histogram: fixed ascending bucket
+/// boundaries plus the exact sorted samples. Built directly for local
+/// use, or by [`super::metrics::Histogram::merged`] from sharded
+/// recording.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histo {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` entries; `counts[i]` counts samples `<=
+    /// bounds[i]` and above the previous bound, the last entry is the
+    /// overflow bucket.
+    counts: Vec<u64>,
+    /// All samples, ascending.
+    samples: Vec<f64>,
+    sum: f64,
+}
+
+impl Histo {
+    /// Build from unsorted samples (sorted internally, NaN-tolerant via
+    /// `total_cmp` like the scheduler's latency sort).
+    pub fn from_samples(bounds: &[f64], mut samples: Vec<f64>) -> Histo {
+        samples.sort_by(|a, b| a.total_cmp(b));
+        Histo::from_sorted(bounds, samples)
+    }
+
+    /// Build from already-ascending samples.
+    pub fn from_sorted(bounds: &[f64], samples: Vec<f64>) -> Histo {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        let mut counts = vec![0u64; bounds.len() + 1];
+        let mut sum = 0.0;
+        for &v in &samples {
+            let i = bounds.partition_point(|&b| b < v);
+            counts[i] += 1;
+            sum += v;
+        }
+        Histo { bounds: bounds.to_vec(), counts, samples, sum }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Nearest-rank quantile over the exact retained samples.
+    pub fn quantile(&self, p: f64) -> f64 {
+        nearest_rank(&self.samples, p)
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Snapshot object: count/sum/min/max, the standard serving quantiles
+    /// (p50/p99/p99.9, nearest-rank), and the fixed-bucket counts.
+    pub fn to_json(&self) -> Json {
+        let min = self.samples.first().copied().unwrap_or(0.0);
+        let max = self.samples.last().copied().unwrap_or(0.0);
+        Json::obj()
+            .field("count", Json::num(self.count() as f64))
+            .field("sum", Json::num(self.sum))
+            .field("min", Json::num(min))
+            .field("max", Json::num(max))
+            .field("p50", Json::num(self.quantile(0.5)))
+            .field("p99", Json::num(self.quantile(0.99)))
+            .field("p999", Json::num(self.quantile(0.999)))
+            .field("bounds", Json::arr(self.bounds.iter().map(|&b| Json::num(b)).collect()))
+            .field(
+                "bucket_counts",
+                Json::arr(self.counts.iter().map(|&c| Json::num(c as f64)).collect()),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The inline formula `fleet/scheduler.rs` shipped with, verbatim —
+    /// the pinning oracle for the deduplicated implementation.
+    fn legacy_percentile(sorted_ascending: &[f64], p: f64) -> f64 {
+        if sorted_ascending.is_empty() {
+            return 0.0;
+        }
+        let rank =
+            ((p * sorted_ascending.len() as f64).ceil() as usize).clamp(1, sorted_ascending.len());
+        sorted_ascending[rank - 1]
+    }
+
+    #[test]
+    fn nearest_rank_pins_legacy_scheduler_quantiles() {
+        // small and skewed sample sets, mirroring the scheduler's own
+        // percentile tests: every quantile must be bit-identical to the
+        // formula it replaced
+        let sets: Vec<Vec<f64>> = vec![
+            vec![],
+            vec![7.5],
+            vec![1.0, 2.0],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            (1..=1000).map(|i| i as f64).collect(),
+            // heavy skew: 990 fast + 10 slow outliers
+            (0..990).map(|_| 10.0).chain((0..10).map(|i| 1e6 + i as f64)).collect(),
+            // sub-microsecond + huge mix, unsorted until we sort
+            vec![0.001, 0.002, 5e9, 0.003, 17.0, 17.0, 17.0],
+        ];
+        for mut s in sets {
+            s.sort_by(|a, b| a.total_cmp(b));
+            for p in [0.0, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                let got = nearest_rank(&s, p);
+                let want = legacy_percentile(&s, p);
+                assert!(
+                    got.to_bits() == want.to_bits(),
+                    "p={p} on {} samples: {got} != {want}",
+                    s.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histo_quantiles_match_nearest_rank_on_raw_samples() {
+        let samples: Vec<f64> = vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let h = Histo::from_samples(&[2.0, 5.0], samples.clone());
+        let mut sorted = samples;
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for p in [0.5, 0.99, 0.999] {
+            assert_eq!(h.quantile(p).to_bits(), nearest_rank(&sorted, p).to_bits());
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.bucket_counts(), &[3, 3, 2]); // <=2, <=5, overflow
+    }
+
+    #[test]
+    fn empty_histo_is_all_zeros() {
+        let h = Histo::from_sorted(&[1.0], Vec::new());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.bucket_counts(), &[0, 0]);
+    }
+}

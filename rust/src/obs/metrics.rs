@@ -1,0 +1,412 @@
+//! Process-wide metrics registry: counters, gauges and fixed-boundary
+//! histograms with per-worker sharded storage, so the exec hot path
+//! records without cross-thread contention.
+//!
+//! Everything is **zero-cost when disabled**: every record path starts
+//! with one relaxed load of the global [`super::enabled`] flag and
+//! returns immediately, so tier-1 campaigns and benches that never opt
+//! in pay a predictable-branch + atomic-load, nothing else (gated by the
+//! `obs_overhead` row in `BENCH_gemm.json`).
+//!
+//! Sharding: each recording thread is assigned one of [`SHARDS`]
+//! cache-line-padded cells round-robin on first use; counters sum their
+//! shards at read time, histograms merge and sort their shards at
+//! snapshot time. Because merges sum (counters) or sort (histogram
+//! samples), snapshots are independent of which thread recorded what —
+//! the determinism contract `results/metrics.json` relies on.
+
+use super::hist::Histo;
+use crate::util::json::Json;
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Fixed shard count; threads beyond it share cells (still correct, just
+/// contended). Sized for the worker counts the scheduler actually spawns.
+pub const SHARDS: usize = 16;
+
+#[repr(align(64))]
+#[derive(Default)]
+struct PadCell(AtomicU64);
+
+/// Round-robin thread→shard assignment, sticky per thread.
+fn shard_index() -> usize {
+    thread_local! {
+        static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    SHARD.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            v
+        } else {
+            let v = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+            s.set(v);
+            v
+        }
+    })
+}
+
+/// Monotonic event counter, sharded per recording thread.
+#[derive(Default)]
+pub struct Counter {
+    shards: [PadCell; SHARDS],
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !super::enabled() {
+            return;
+        }
+        self.shards[shard_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+
+    fn reset(&self) {
+        for c in &self.shards {
+            c.0.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Last-set value plus the maximum ever set (order-independent, so the
+/// max is deterministic even under concurrent setters).
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicI64,
+    max: AtomicI64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if !super::enabled() {
+            return;
+        }
+        self.value.store(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn max_value(&self) -> i64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Sharded sample recorder; merged into a [`Histo`] (exact samples +
+/// fixed buckets, nearest-rank quantiles) at read time.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    shards: Vec<Mutex<Vec<f64>>>,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: f64) {
+        if !super::enabled() {
+            return;
+        }
+        // per-thread shard: uncontended in steady state
+        let mut shard = self.shards[shard_index()].lock().unwrap_or_else(|e| e.into_inner());
+        shard.push(v);
+    }
+
+    /// Merge all shards into one sorted [`Histo`]. Sorting makes the
+    /// result independent of thread→shard assignment.
+    pub fn merged(&self) -> Histo {
+        let mut all = Vec::new();
+        for s in &self.shards {
+            all.extend_from_slice(&s.lock().unwrap_or_else(|e| e.into_inner()));
+        }
+        Histo::from_samples(&self.bounds, all)
+    }
+
+    fn reset(&self) {
+        for s in &self.shards {
+            s.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        }
+    }
+}
+
+/// The process-wide registry. Metric names are flat dot-separated paths
+/// (`layer.subsystem.event`); the snapshot orders them lexicographically,
+/// so `results/metrics.json` is schema-stable run over run.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-register a histogram; the first registration's bucket
+    /// boundaries win (they are part of the metric's identity).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new(bounds))).clone()
+    }
+
+    /// Deterministic snapshot of every registered metric. Contains no
+    /// wall-clock quantity by construction — only event counts and
+    /// virtual-clock durations are ever recorded (see DESIGN.md
+    /// "Observability layer"), so same seed + same config → byte-identical
+    /// snapshot.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, c) in self.counters.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            counters = counters.field(name.clone(), Json::num(c.value() as f64));
+        }
+        let mut gauges = Json::obj();
+        for (name, g) in self.gauges.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            gauges = gauges.field(
+                name.clone(),
+                Json::obj()
+                    .field("value", Json::num(g.value() as f64))
+                    .field("max", Json::num(g.max_value() as f64)),
+            );
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in self.histograms.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            histograms = histograms.field(name.clone(), h.merged().to_json());
+        }
+        Json::obj()
+            .field("schema", Json::str("repro.metrics.v1"))
+            .field("counters", counters)
+            .field("gauges", gauges)
+            .field("histograms", histograms)
+    }
+
+    /// Zero every registered metric (registrations survive). Run
+    /// isolation for tests and multi-campaign processes.
+    pub fn reset(&self) {
+        for c in self.counters.lock().unwrap_or_else(|e| e.into_inner()).values() {
+            c.reset();
+        }
+        for g in self.gauges.lock().unwrap_or_else(|e| e.into_inner()).values() {
+            g.reset();
+        }
+        for h in self.histograms.lock().unwrap_or_else(|e| e.into_inner()).values() {
+            h.reset();
+        }
+    }
+}
+
+/// The process-wide registry every instrumentation site records into.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+/// A `static`-friendly counter handle: resolves its registry entry on
+/// first *enabled* use, so instrumentation sites cost one relaxed load
+/// while observability is off and never allocate.
+pub struct LazyCounter {
+    name: &'static str,
+    cell: OnceLock<Arc<Counter>>,
+}
+
+impl LazyCounter {
+    pub const fn new(name: &'static str) -> LazyCounter {
+        LazyCounter { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    fn handle(&self) -> &Counter {
+        self.cell.get_or_init(|| registry().counter(self.name))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !super::enabled() {
+            return;
+        }
+        self.handle().add(n);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Registers the metric if it has not recorded yet, so it appears in
+    /// the snapshot with value 0 rather than being absent.
+    pub fn value(&self) -> u64 {
+        self.handle().value()
+    }
+}
+
+/// [`LazyCounter`] for gauges.
+pub struct LazyGauge {
+    name: &'static str,
+    cell: OnceLock<Arc<Gauge>>,
+}
+
+impl LazyGauge {
+    pub const fn new(name: &'static str) -> LazyGauge {
+        LazyGauge { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    fn handle(&self) -> &Gauge {
+        self.cell.get_or_init(|| registry().gauge(self.name))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if !super::enabled() {
+            return;
+        }
+        self.handle().set(v);
+    }
+
+    pub fn value(&self) -> i64 {
+        self.handle().value()
+    }
+}
+
+/// [`LazyCounter`] for histograms, with the bucket boundaries fixed at
+/// the declaration site.
+pub struct LazyHistogram {
+    name: &'static str,
+    bounds: &'static [f64],
+    cell: OnceLock<Arc<Histogram>>,
+}
+
+impl LazyHistogram {
+    pub const fn new(name: &'static str, bounds: &'static [f64]) -> LazyHistogram {
+        LazyHistogram { name, bounds, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    fn handle(&self) -> &Histogram {
+        self.cell.get_or_init(|| registry().histogram(self.name, self.bounds))
+    }
+
+    #[inline]
+    pub fn record(&self, v: f64) {
+        if !super::enabled() {
+            return;
+        }
+        self.handle().record(v);
+    }
+
+    pub fn merged(&self) -> Histo {
+        self.handle().merged()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_metrics_record_nothing() {
+        // hold the flag off; a local registry's handles must all
+        // early-return
+        let _lock = crate::obs::test_lock(false);
+        assert!(!crate::obs::enabled());
+        let reg = Registry::default();
+        let c = reg.counter("t.count");
+        let g = reg.gauge("t.gauge");
+        let h = reg.histogram("t.hist", &[1.0]);
+        c.add(5);
+        g.set(9);
+        h.record(2.5);
+        assert_eq!(c.value(), 0);
+        assert_eq!(g.value(), 0);
+        assert_eq!(h.merged().count(), 0);
+    }
+
+    #[test]
+    fn enabled_metrics_accumulate_and_reset() {
+        let _lock = crate::obs::test_guard();
+        let reg = Registry::default();
+        let c = reg.counter("t.count");
+        let g = reg.gauge("t.gauge");
+        let h = reg.histogram("t.hist", &[10.0]);
+        c.add(3);
+        c.inc();
+        g.set(7);
+        g.set(2);
+        h.record(4.0);
+        h.record(40.0);
+        assert_eq!(c.value(), 4);
+        assert_eq!(g.value(), 2);
+        assert_eq!(g.max_value(), 7);
+        let m = h.merged();
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.bucket_counts(), &[1, 1]);
+        reg.reset();
+        assert_eq!(c.value(), 0);
+        assert_eq!(reg.counter("t.count").value(), 0, "registration survives reset");
+        assert_eq!(h.merged().count(), 0);
+    }
+
+    #[test]
+    fn counter_shards_sum_across_threads() {
+        let _lock = crate::obs::test_guard();
+        let reg = Registry::default();
+        let c = reg.counter("t.mt");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), 4000);
+    }
+
+    #[test]
+    fn snapshot_orders_names_and_is_schema_stable() {
+        let _lock = crate::obs::test_guard();
+        let reg = Registry::default();
+        reg.counter("z.last").add(1);
+        reg.counter("a.first").add(2);
+        reg.gauge("m.depth").set(3);
+        reg.histogram("h.lat", &[1.0, 2.0]).record(1.5);
+        let s = reg.snapshot().render();
+        let a = s.find("a.first").unwrap();
+        let z = s.find("z.last").unwrap();
+        assert!(a < z, "counters must render in lexicographic order");
+        assert!(s.contains("repro.metrics.v1"));
+        assert!(s.contains("bucket_counts"));
+    }
+}

@@ -1,0 +1,321 @@
+//! Structured span/event tracer on the fleet's virtual 658 MHz clock.
+//!
+//! Every timestamp is virtual nanoseconds from the discrete-event
+//! simulation (request arrivals, batching windows, service spans from the
+//! timing model) — never wall clock — so the same seed + config produces
+//! a **byte-identical** trace regardless of host speed or worker count.
+//!
+//! Two export formats from one event buffer:
+//!
+//! * [`Trace::render_jsonl`] — one compact JSON object per line, the
+//!   machine-diffable structured event log;
+//! * [`Trace::render_chrome`] — the Chrome trace-event format Perfetto
+//!   loads directly (<https://ui.perfetto.dev>): tracks are chips
+//!   (`tid` = track id, named via metadata events), complete (`"X"`)
+//!   slices are dispatched batches, instants are shed/timeout/health
+//!   transitions, `"C"` events are queue-depth counter tracks.
+//!
+//! The health loop's serving windows each restart their DES clock at 0;
+//! [`Trace::advance_base`] accumulates a per-trace offset so a whole
+//! chip lifetime renders as one sequential timeline.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// Event flavor, mapping 1:1 onto Chrome trace-event phases.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Ph {
+    /// A complete slice (`"X"`): something with a duration on a track.
+    Complete { dur_ns: u64 },
+    /// A point event (`"i"`, thread-scoped).
+    Instant,
+    /// A counter sample (`"C"`): its own chart track in Perfetto.
+    Counter { value: f64 },
+}
+
+/// One virtual-clock event. `args` are numeric key/values only, which
+/// keeps rendering trivially deterministic.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub ts_ns: u64,
+    /// Track id: chip id for serving tracks; see [`Trace::set_track_name`].
+    pub track: u32,
+    pub name: String,
+    pub cat: &'static str,
+    pub ph: Ph,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// An in-memory event buffer for one run. Emission order is simulation
+/// order (deterministic); no sorting happens at render time.
+#[derive(Default)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    base_ns: u64,
+    tracks: Vec<(u32, String)>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    /// Offset added to every incoming timestamp — the start of the
+    /// current serving window on the whole-life timeline.
+    pub fn base_ns(&self) -> u64 {
+        self.base_ns
+    }
+
+    /// Advance the timeline cursor past a window that spanned `span_ns`.
+    pub fn advance_base(&mut self, span_ns: u64) {
+        self.base_ns += span_ns;
+    }
+
+    /// Name a track (idempotent; first name wins). Rendered as Chrome
+    /// `thread_name` metadata so Perfetto labels the row.
+    pub fn set_track_name(&mut self, track: u32, name: &str) {
+        if !self.tracks.iter().any(|(t, _)| *t == track) {
+            self.tracks.push((track, name.to_string()));
+        }
+    }
+
+    fn push(&mut self, mut ev: TraceEvent) {
+        ev.ts_ns += self.base_ns;
+        self.events.push(ev);
+    }
+
+    /// A slice `[ts, ts + dur)` on `track`.
+    pub fn complete(
+        &mut self,
+        track: u32,
+        ts_ns: u64,
+        dur_ns: u64,
+        name: impl Into<String>,
+        cat: &'static str,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        self.push(TraceEvent {
+            ts_ns,
+            track,
+            name: name.into(),
+            cat,
+            ph: Ph::Complete { dur_ns },
+            args,
+        });
+    }
+
+    /// A point event on `track`.
+    pub fn instant(
+        &mut self,
+        track: u32,
+        ts_ns: u64,
+        name: impl Into<String>,
+        cat: &'static str,
+        args: Vec<(&'static str, f64)>,
+    ) {
+        self.push(TraceEvent { ts_ns, track, name: name.into(), cat, ph: Ph::Instant, args });
+    }
+
+    /// A counter sample; each `name` becomes its own chart track.
+    pub fn counter(&mut self, track: u32, ts_ns: u64, name: impl Into<String>, value: f64) {
+        self.push(TraceEvent {
+            ts_ns,
+            track,
+            name: name.into(),
+            cat: "counter",
+            ph: Ph::Counter { value },
+            args: Vec::new(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// The structured event log: one compact JSON object per line, in
+    /// emission order. Numbers render via the same deterministic writer
+    /// as every other repo JSON.
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            let _ = write!(
+                out,
+                "{{\"ts_ns\":{},\"track\":{},\"name\":{},\"cat\":\"{}\"",
+                ev.ts_ns,
+                ev.track,
+                Json::str(ev.name.clone()).render(),
+                ev.cat
+            );
+            match ev.ph {
+                Ph::Complete { dur_ns } => {
+                    let _ = write!(out, ",\"ph\":\"X\",\"dur_ns\":{dur_ns}");
+                }
+                Ph::Instant => out.push_str(",\"ph\":\"i\""),
+                Ph::Counter { value } => {
+                    let _ = write!(out, ",\"ph\":\"C\",\"value\":{}", Json::num(value).render());
+                }
+            }
+            if !ev.args.is_empty() {
+                out.push_str(",\"args\":{");
+                for (i, (k, v)) in ev.args.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "\"{k}\":{}", Json::num(*v).render());
+                }
+                out.push('}');
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// The Chrome trace-event JSON Perfetto loads: metadata names the
+    /// tracks, then one event per line. Timestamps convert to the
+    /// format's microseconds (`ts = ns / 1000`).
+    pub fn render_chrome(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[\n");
+        let mut tracks = self.tracks.clone();
+        tracks.sort_by_key(|t| t.0);
+        let mut first = true;
+        for (track, name) in &tracks {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":{}}}}}",
+                track,
+                Json::str(name.clone()).render()
+            );
+        }
+        for ev in &self.events {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            let ts_us = ev.ts_ns as f64 / 1000.0;
+            let _ = write!(
+                out,
+                "{{\"name\":{},\"cat\":\"{}\",\"pid\":0,\"tid\":{},\"ts\":{}",
+                Json::str(ev.name.clone()).render(),
+                ev.cat,
+                ev.track,
+                Json::num(ts_us).render()
+            );
+            match ev.ph {
+                Ph::Complete { dur_ns } => {
+                    let _ = write!(
+                        out,
+                        ",\"ph\":\"X\",\"dur\":{}",
+                        Json::num(dur_ns as f64 / 1000.0).render()
+                    );
+                }
+                Ph::Instant => out.push_str(",\"ph\":\"i\",\"s\":\"t\""),
+                Ph::Counter { value } => {
+                    let _ = write!(
+                        out,
+                        ",\"ph\":\"C\",\"args\":{{\"value\":{}}}",
+                        Json::num(value).render()
+                    );
+                }
+            }
+            if !ev.args.is_empty() && !matches!(ev.ph, Ph::Counter { .. }) {
+                out.push_str(",\"args\":{");
+                for (i, (k, v)) in ev.args.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "\"{k}\":{}", Json::num(*v).render());
+                }
+                out.push('}');
+            }
+            out.push('}');
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write the Perfetto-loadable Chrome trace to `path` and the JSONL
+    /// event log next to it at `<path>.jsonl`.
+    pub fn write_files(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render_chrome())?;
+        let mut jsonl = path.as_os_str().to_owned();
+        jsonl.push(".jsonl");
+        std::fs::write(&jsonl, self.render_jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new();
+        t.set_track_name(0, "chip 0");
+        t.set_track_name(1, "chip 1");
+        t.complete(0, 1_000, 2_500, "batch", "fleet", vec![("k", 8.0)]);
+        t.instant(1, 1_500, "shed", "fleet", vec![("req", 3.0)]);
+        t.counter(0, 2_000, "queue_depth", 4.0);
+        t.advance_base(10_000);
+        t.complete(1, 0, 500, "batch", "fleet", vec![("k", 2.0)]);
+        t
+    }
+
+    #[test]
+    fn base_offset_applies_to_later_windows() {
+        let t = sample_trace();
+        assert_eq!(t.events()[3].ts_ns, 10_000);
+        assert_eq!(t.base_ns(), 10_000);
+    }
+
+    #[test]
+    fn jsonl_lines_are_compact_json() {
+        let t = sample_trace();
+        let s = t.render_jsonl();
+        assert_eq!(s.lines().count(), 4);
+        for line in s.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "not an object: {line}");
+            assert!(!line.contains('\n'));
+        }
+        assert!(s.contains("\"ph\":\"X\",\"dur_ns\":2500"));
+        assert!(s.contains("\"ph\":\"C\",\"value\":4"));
+        assert!(s.contains("\"args\":{\"k\":8}"));
+    }
+
+    #[test]
+    fn chrome_trace_has_track_metadata_and_microsecond_ts() {
+        let t = sample_trace();
+        let s = t.render_chrome();
+        assert!(s.starts_with("{\"traceEvents\":[\n"));
+        assert!(s.trim_end().ends_with("]}"));
+        assert!(s.contains("\"thread_name\""));
+        assert!(s.contains("{\"name\":\"chip 1\"}"));
+        // 1000 ns -> 1 us, 2500 ns -> 2.5 us
+        assert!(s.contains("\"ts\":1,\"ph\":\"X\",\"dur\":2.5"));
+        assert!(s.contains("\"ph\":\"i\",\"s\":\"t\""));
+    }
+
+    #[test]
+    fn same_events_render_identically() {
+        let (a, b) = (sample_trace(), sample_trace());
+        assert_eq!(a.render_jsonl(), b.render_jsonl());
+        assert_eq!(a.render_chrome(), b.render_chrome());
+    }
+}

@@ -1,0 +1,345 @@
+//! Observability end-to-end: the determinism contract (same seed + same
+//! config → byte-identical JSONL event log, Perfetto trace, and metrics
+//! snapshot, with the trace invariant across phase-2 worker counts), the
+//! DES-only serving mode (skipped exec phase reports `accuracy: null`,
+//! never 0.0, under a stable JSON schema), the conservation invariant on
+//! the admission counters, zero recording when disabled, and the shared
+//! nearest-rank quantile semantics between the fleet scheduler and
+//! `obs::hist`.
+
+use std::collections::BTreeSet;
+
+use repro::chip::{Backend, Chip, Engine};
+use repro::coordinator::trainer::{train_baseline_native, TrainConfig};
+use repro::data::Dataset;
+use repro::fleet::{
+    fleet_json, percentile, provision_fleet, run_lifetime, run_lifetime_traced, serve_open,
+    serve_open_traced, ArrivalProcess, BatcherConfig, ChipUnit, FleetConfig, OpenWorkloadConfig,
+    RoutingPolicy, YieldDist,
+};
+use repro::mapping::MaskKind;
+use repro::model::quant::{calibrate_mlp, Calibration};
+use repro::model::{Arch, Layer, Params};
+use repro::obs::{self, Trace};
+use repro::util::Rng;
+
+fn tiny_arch() -> Arch {
+    Arch {
+        name: "tiny",
+        layers: vec![Layer::fc(12, 16, true), Layer::fc(16, 4, false)],
+        input_shape: vec![12],
+        num_classes: 4,
+        eval_batch: 16,
+        train_batch: 16,
+    }
+}
+
+fn clustered(n: usize, seed: u64) -> Dataset {
+    let mut crng = Rng::new(77);
+    let centers: Vec<Vec<f32>> =
+        (0..4).map(|_| (0..12).map(|_| crng.normal() * 2.0).collect()).collect();
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * 12);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % 4;
+        y.push(c as i32);
+        for d in 0..12 {
+            x.push(centers[c][d] + rng.normal() * 0.5);
+        }
+    }
+    Dataset::new(x, y, 12, 4)
+}
+
+fn bundle() -> (Arch, Params, Calibration, Dataset, Dataset) {
+    let arch = tiny_arch();
+    let train = clustered(320, 1);
+    let test = clustered(160, 2);
+    let cfg = TrainConfig { steps: 300, seed: 5, ..Default::default() };
+    let (golden, _) = train_baseline_native(&arch, &train, &cfg).unwrap();
+    let calib = calibrate_mlp(&arch, &golden, &train.x[..64 * 12], 64);
+    (arch, golden, calib, train, test)
+}
+
+fn open_chips(arch: &Arch, n: usize) -> Vec<Chip> {
+    (0..n)
+        .map(|i| {
+            Chip::new(arch.clone())
+                .array_n(8)
+                .inject(3 + i, 200 + i as u64)
+                .detect()
+                .unwrap()
+                .mitigate(MaskKind::FapBypass)
+                .threads(1)
+        })
+        .collect()
+}
+
+fn open_cfg(rate_rps: f64, offered: usize, execute: bool) -> OpenWorkloadConfig {
+    OpenWorkloadConfig {
+        backend: Backend::Plan,
+        policy: RoutingPolicy::RoundRobin,
+        arrival: ArrivalProcess::Poisson,
+        rate_rps,
+        offered,
+        batcher: BatcherConfig {
+            batch_max: 8,
+            max_batch_age_us: 100.0,
+            queue_timeout_us: 5_000.0,
+            queue_depth: 1,
+        },
+        workers: 2,
+        execute,
+        seed: 13,
+    }
+}
+
+fn fleet_cfg(execute: bool) -> FleetConfig {
+    FleetConfig {
+        chips: 2,
+        array_n: 8,
+        seed: 17,
+        policy: RoutingPolicy::RoundRobin,
+        hours: 8_000.0,
+        life_steps: 2,
+        yield_dist: YieldDist::Fixed(1),
+        eol_fault_rate: 0.2,
+        aging_beta: 2.0,
+        slo_frac: 0.5,
+        batch: 8,
+        queue_depth: 2,
+        batches_per_chip: 2,
+        workers: 2,
+        retrain_epochs: 1,
+        retrain_downtime_hours: 50.0,
+        max_retrains: 1,
+        managed: true,
+        escape_prob: 0.0,
+        execute,
+        ..FleetConfig::default()
+    }
+}
+
+/// Every `"key":` occurrence in a rendered JSON document — the schema
+/// fingerprint the stability tests compare. String *values* are never
+/// followed by `:`, so the scan collects exactly the object keys.
+fn json_keys(render: &str) -> BTreeSet<String> {
+    let b = render.as_bytes();
+    let mut keys = BTreeSet::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && b[j] != b'"' {
+                if b[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            let mut k = j + 1;
+            while k < b.len() && b[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            if k < b.len() && b[k] == b':' {
+                keys.insert(String::from_utf8_lossy(&b[start..j]).into_owned());
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    keys
+}
+
+/// Satellite: one quantile implementation in the repo. The scheduler's
+/// `percentile` must be bit-identical to `obs::hist::nearest_rank` on
+/// arbitrary sorted samples — including the empty, singleton, and
+/// duplicate-heavy cases.
+#[test]
+fn scheduler_percentile_is_bit_identical_to_obs_hist() {
+    let mut rng = Rng::new(0xB17);
+    for _ in 0..200 {
+        let len = rng.below(50);
+        let mut v: Vec<f64> = (0..len).map(|_| (rng.normal() as f64 * 1e3).round()).collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        for p in [0.0, 0.5, 0.99, 0.999, 1.0, rng.f64()] {
+            let (a, b) = (percentile(&v, p), obs::nearest_rank(&v, p));
+            assert_eq!(a.to_bits(), b.to_bits(), "p={p} len={len}: {a} vs {b}");
+        }
+    }
+}
+
+/// The tentpole's determinism contract on the open loop: same seed + same
+/// config produces byte-identical JSONL and Perfetto renders, and the
+/// trace — a phase-1 DES artifact — is further identical across phase-2
+/// worker counts. The admission counters obey conservation:
+/// served + shed + timed_out == offered.
+#[test]
+fn open_loop_trace_is_byte_identical_across_runs_and_workers() {
+    let (arch, golden, calib, _train, test) = bundle();
+    // 3 chips so the workers=3 run passes the workers <= chips validation
+    let chips = open_chips(&arch, 3);
+    let _g = obs::test_guard();
+    let run = |workers: usize| {
+        obs::reset_metrics();
+        let units: Vec<ChipUnit<'_>> = chips
+            .iter()
+            .enumerate()
+            .map(|(i, c)| ChipUnit { id: i, chip: c, params: &golden, weight: 1.0 })
+            .collect();
+        let mut cfg = open_cfg(1e9, 250, true);
+        cfg.workers = workers;
+        let mut trace = Trace::new();
+        let rep = serve_open_traced(&units, &calib, &test, &cfg, Some(&mut trace)).unwrap();
+        assert!(rep.executed);
+        assert!(rep.open.as_ref().unwrap().conservation_ok());
+        (trace.render_jsonl(), trace.render_chrome(), obs::snapshot_json().render())
+    };
+    let (j1, c1, m1) = run(1);
+    let (j2, c2, m2) = run(1);
+    let (j3, c3, _m3) = run(3);
+
+    assert!(!j1.is_empty(), "traced serving must emit events");
+    assert!(c1.contains("traceEvents"), "chrome render must be a trace-event document");
+    assert!(c1.contains("chip 0"), "chip tracks must be named");
+    assert_eq!(j1, j2, "JSONL must be byte-identical across same-seed runs");
+    assert_eq!(c1, c2, "Perfetto trace must be byte-identical across same-seed runs");
+    assert_eq!(m1, m2, "metrics snapshot must be byte-identical across same-seed runs");
+    assert_eq!(j1, j3, "JSONL must not depend on phase-2 worker count");
+    assert_eq!(c1, c3, "Perfetto trace must not depend on phase-2 worker count");
+
+    // conservation on the live counters of the last run
+    let r = obs::registry();
+    let offered = r.counter("fleet.requests.offered").value();
+    let served = r.counter("fleet.requests.served").value();
+    let shed = r.counter("fleet.requests.shed").value();
+    let timed_out = r.counter("fleet.requests.timed_out").value();
+    assert_eq!(offered, 250);
+    assert_eq!(served + shed + timed_out, offered, "admission counters must conserve");
+}
+
+/// Same contract over a whole managed lifetime: health-loop instants and
+/// per-step serving windows land on the virtual clock only, so two
+/// provision+lifetime runs render byte-identical traces and metrics, and
+/// the execution worker count never leaks into the trace.
+#[test]
+fn fleet_lifetime_trace_and_metrics_are_deterministic() {
+    let (arch, golden, calib, train, test) = bundle();
+    let _g = obs::test_guard();
+    let run = |workers: usize| {
+        obs::reset_metrics();
+        let mut engine = Engine::new(Backend::Plan, None).unwrap();
+        let cfg = FleetConfig { workers, ..fleet_cfg(true) };
+        let mut fleet =
+            provision_fleet(&mut engine, cfg, &arch, &golden, &calib, &train, &test).unwrap();
+        let mut trace = Trace::new();
+        let out =
+            run_lifetime_traced(&mut engine, &mut fleet, &golden, &train, &test, Some(&mut trace))
+                .unwrap();
+        assert!(out.total_samples > 0);
+        (trace.render_jsonl(), trace.render_chrome(), obs::snapshot_json().render())
+    };
+    let (j1, c1, m1) = run(2);
+    let (j2, c2, m2) = run(2);
+    let (j3, c3, _m3) = run(1);
+    assert!(!j1.is_empty());
+    assert!(c1.contains("health loop"), "health-loop track must be named");
+    assert_eq!(j1, j2, "lifetime JSONL must be byte-identical across runs");
+    assert_eq!(c1, c2, "lifetime Perfetto trace must be byte-identical across runs");
+    assert_eq!(m1, m2, "lifetime metrics snapshot must be byte-identical across runs");
+    assert_eq!(j1, j3, "lifetime JSONL must not depend on worker count");
+    assert_eq!(c1, c3, "lifetime Perfetto trace must not depend on worker count");
+}
+
+/// DES-only serving (`execute: false`) keeps every phase-1 statistic
+/// bit-identical to the executing run and reports the unmeasured exec
+/// phase honestly: zero samples, `executed == false` — never a fake 0.0
+/// accuracy.
+#[test]
+fn des_only_serving_matches_phase1_and_skips_exec_stats() {
+    let (arch, golden, calib, _train, test) = bundle();
+    let chips = open_chips(&arch, 2);
+    let _g = obs::test_lock(false);
+    let run = |execute: bool| {
+        let units: Vec<ChipUnit<'_>> = chips
+            .iter()
+            .enumerate()
+            .map(|(i, c)| ChipUnit { id: i, chip: c, params: &golden, weight: 1.0 })
+            .collect();
+        serve_open(&units, &calib, &test, &open_cfg(1e9, 200, execute)).unwrap()
+    };
+    let (et, ef) = (run(true), run(false));
+    let (ot, of) = (et.open.as_ref().unwrap(), ef.open.as_ref().unwrap());
+    // phase 1 is identical whether or not phase 2 runs
+    assert_eq!(ot.outcomes, of.outcomes);
+    assert_eq!(ot.latencies_us, of.latencies_us);
+    assert_eq!(ot.offered, of.offered);
+    assert_eq!(ot.served, of.served);
+    assert_eq!(ot.shed, of.shed);
+    assert_eq!(ot.timed_out, of.timed_out);
+    assert_eq!(ot.batches, of.batches);
+    assert_eq!(ot.virtual_secs, of.virtual_secs);
+    assert_eq!(et.sim_cycles, ef.sim_cycles, "virtual cycle accounting is a phase-1 quantity");
+    // phase 2 honestly skipped: nothing measured, nothing faked
+    assert!(et.executed && et.samples > 0 && et.correct > 0);
+    assert!(!ef.executed, "skipped exec phase must be flagged");
+    assert_eq!(ef.samples, 0);
+    assert_eq!(ef.correct, 0);
+}
+
+/// `fleet.json` schema stability across execute modes: the key set is
+/// identical whether phase 2 ran or not, and the skipped mode renders
+/// `accuracy`/`fleet_accuracy` as null with `exec_phase: "skipped"`.
+#[test]
+fn fleet_json_schema_is_stable_across_execute_modes() {
+    let (arch, golden, calib, train, test) = bundle();
+    let _g = obs::test_lock(false);
+    let render = |execute: bool| {
+        let mut engine = Engine::new(Backend::Plan, None).unwrap();
+        let mut fleet =
+            provision_fleet(&mut engine, fleet_cfg(execute), &arch, &golden, &calib, &train, &test)
+                .unwrap();
+        let out = run_lifetime(&mut engine, &mut fleet, &golden, &train, &test).unwrap();
+        fleet_json(&fleet, &out, "plan").render()
+    };
+    let (jt, jf) = (render(true), render(false));
+    assert!(jt.contains("\"exec_phase\": \"executed\""), "{jt}");
+    assert!(!jt.contains("\"fleet_accuracy\": null"));
+    assert!(jf.contains("\"exec_phase\": \"skipped\""), "{jf}");
+    assert!(jf.contains("\"fleet_accuracy\": null"), "skipped exec must report null accuracy");
+    assert!(jf.contains("\"accuracy\": null"), "per-step accuracy must be null when skipped");
+    assert_eq!(
+        json_keys(&jt),
+        json_keys(&jf),
+        "fleet.json key set must not depend on the execute mode"
+    );
+}
+
+/// Disabled observability records nothing: with the flag off, a full
+/// serving run leaves every counter at zero — the instrumented hot paths
+/// pay one relaxed load and bail.
+#[test]
+fn disabled_observability_records_nothing() {
+    let (arch, golden, calib, _train, test) = bundle();
+    let chips = open_chips(&arch, 1);
+    let _g = obs::test_lock(false);
+    obs::reset_metrics();
+    let units: Vec<ChipUnit<'_>> = chips
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ChipUnit { id: i, chip: c, params: &golden, weight: 1.0 })
+        .collect();
+    let rep = serve_open(&units, &calib, &test, &open_cfg(0.0, 60, true)).unwrap();
+    assert!(rep.samples > 0, "serving itself must be unaffected");
+    let r = obs::registry();
+    for name in [
+        "fleet.requests.offered",
+        "fleet.requests.served",
+        "fleet.batches.dispatched",
+        "exec.kernel.dispatch",
+        "chip.quantize.values",
+    ] {
+        assert_eq!(r.counter(name).value(), 0, "{name} recorded while disabled");
+    }
+}

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Schema assertions over the observability artifacts of a fleet run:
+#   check_obs.sh <metrics.json> <trace.json>
+#
+# - metrics.json: repro.metrics.v1 snapshot; the admission counters must
+#   obey the scheduler's conservation invariant
+#   (served + shed + timed_out == offered) and the exec/fleet hot paths
+#   must actually have recorded.
+# - trace.json: Chrome trace-event (Perfetto-loadable) document with
+#   complete slices on named chip tracks and the health-loop track.
+# - trace.json.jsonl: the structured event log; every line must parse.
+#
+# Byte-identical reproduction across same-seed runs is checked by the
+# caller (two runs + cmp); the <2% disabled-overhead gate lives in the
+# quick bench (`obs_overhead` row in BENCH_gemm.json).
+set -euo pipefail
+
+metrics=${1:?usage: check_obs.sh <metrics.json> <trace.json>}
+trace=${2:?usage: check_obs.sh <metrics.json> <trace.json>}
+jsonl="$trace.jsonl"
+
+fail() {
+    echo "check_obs: FAIL: $1" >&2
+    exit 1
+}
+
+jq -e '.schema == "repro.metrics.v1"' "$metrics" >/dev/null \
+    || fail "metrics schema marker missing"
+jq -e '.counters
+    | (.["fleet.requests.served"] + .["fleet.requests.shed"]
+       + .["fleet.requests.timed_out"]) == .["fleet.requests.offered"]' \
+    "$metrics" >/dev/null \
+    || fail "admission counters violate conservation"
+for c in fleet.requests.offered fleet.batches.dispatched \
+    exec.kernel.dispatch chip.quantize.values; do
+    jq -e --arg c "$c" '.counters[$c] > 0' "$metrics" >/dev/null \
+        || fail "counter $c did not record"
+done
+
+jq -e '.traceEvents | length > 0' "$trace" >/dev/null \
+    || fail "trace has no events"
+jq -e '[.traceEvents[] | select(.ph == "X")] | length > 0' "$trace" >/dev/null \
+    || fail "trace has no complete slices"
+jq -e '[.traceEvents[] | select(.ph == "M" and .name == "thread_name")
+        | .args.name] | index("health loop") != null' "$trace" >/dev/null \
+    || fail "health-loop track is unnamed"
+
+[ -s "$jsonl" ] || fail "JSONL event log missing or empty"
+jq -es 'length > 0' "$jsonl" >/dev/null || fail "JSONL line failed to parse"
+
+echo "check_obs: all schema assertions passed"
