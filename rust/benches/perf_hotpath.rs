@@ -14,6 +14,11 @@
 //!   **Parity-gated**: every timed variant's output is compared
 //!   bit-for-bit and a mismatch exits nonzero — the CI quick-bench smoke
 //!   fails on parity, never on timing.
+//! * Train engine: the packed-panel f32 SIMD trainer vs the naive seed
+//!   scalar step, single-thread and pooled, plus measured FAP+T retrain
+//!   wall minutes at the Fig 5 campaign shape vs the paper's 12-minute
+//!   budget (`BENCH_train.json`). **Parity-gated** bit-for-bit across
+//!   ISAs, panel widths and pool lane counts.
 //! * L3 sim: functional systolic matmul (MAC/s) — target ≥100M MAC/s/core.
 //! * L3 masks: LayerMasks synthesis for the TIMIT model on a 256 grid.
 //! * RT (needs `artifacts/`): PJRT fwd latency/throughput (mnist + timit),
@@ -24,10 +29,14 @@
 //! not minutes) while keeping all parity gates live.
 
 use repro::chip::{Backend, Chip, Engine};
-use repro::coordinator::trainer::{ones_masks, train_step, TrainState};
-use repro::data;
+use repro::coordinator::trainer::{
+    he_init, native_train_step, native_train_step_fast, ones_masks, run_steps_native_pooled,
+    train_step, NativeTrainState, TrainConfig, TrainScratch, TrainState,
+};
+use repro::coordinator::{fapt_retrain_native_pooled, FaptConfig};
+use repro::data::{self, Dataset};
 use repro::exec::{
-    default_threads, dot_wrapping, kernel, Kernel, MatmulPlan, PanelOptions, WorkerPool,
+    default_threads, dot_wrapping, kernel, Isa, Kernel, MatmulPlan, PanelOptions, WorkerPool,
 };
 use repro::faults::{inject_uniform, FaultMap, FaultSpec};
 use repro::fleet::{
@@ -37,7 +46,7 @@ use repro::fleet::{
 use repro::mapping::{LayerMasks, MaskKind};
 use repro::model::arch;
 use repro::model::quant::calibrate_mlp;
-use repro::model::Params;
+use repro::model::{Arch, Layer, Params};
 use repro::runtime::{lit_f32, lit_i32, scalar_f32, Runtime};
 use repro::systolic::{timing, TiledMatmul};
 use repro::util::bench;
@@ -721,6 +730,238 @@ fn bench_fleet_scheduler(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Ve
     Ok((meta, rows))
 }
 
+/// Bit pattern of every parameter, layer order — the train parity gates
+/// compare these, so "bit-identical" means exactly that.
+fn params_bits(p: &Params) -> Vec<u32> {
+    p.layers.iter().flat_map(|(w, b)| w.iter().chain(b).map(|v| v.to_bits())).collect()
+}
+
+/// The native training engine: the packed-panel f32 SIMD step vs the
+/// naive seed scalar step, single-thread and pooled (steps/s + samples/s,
+/// emitted as `BENCH_train.json`), plus `retrain_wall_minutes` rows that
+/// run the Fig 5 FAP+T campaign shape and record measured wall minutes
+/// against the paper's 12-minute retraining budget.
+///
+/// **Parity-gated** bit-for-bit: trained parameters and losses must be
+/// identical across the dispatched ISA, the runtime-width scalar
+/// reference, the nr=4 scalar fallback, and 1/2/N pool lanes — a mismatch
+/// exits nonzero (the CI smoke runs this under both `REPRO_SIMD` legs).
+/// The ≥4× speedup floor over the naive step is asserted in full runs on
+/// SIMD hosts only; timing is never gated in the quick smoke.
+fn bench_train(rng: &mut Rng, quick: bool) -> anyhow::Result<(Json, Vec<Json>)> {
+    // quick shrinks the arch like the other sections shrink their shapes;
+    // the full run times the real fig2a mnist MLP at its train batch
+    let a = if quick {
+        Arch {
+            name: "mnist-quick",
+            layers: vec![Layer::fc(96, 64, true), Layer::fc(64, 10, false)],
+            input_shape: vec![96],
+            num_classes: 10,
+            eval_batch: 32,
+            train_batch: 32,
+        }
+    } else {
+        arch::by_name("mnist").unwrap()
+    };
+    let b = a.train_batch;
+    let (wu, it) = if quick { (1, 3) } else { (2, 10) };
+    let kr = *kernel();
+    let threads = default_threads().max(4);
+    let pool = WorkerPool::new(threads);
+    println!(
+        "\n# train engine: f32 packed-panel SIMD ({} x{}) vs naive scalar ({}, batch {b})",
+        kr.isa().name(),
+        kr.nr(),
+        a.name
+    );
+
+    // one fixed batch: sampling stays outside the timed region
+    let x: Vec<f32> = (0..b * a.input_len()).map(|_| rng.normal().abs()).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(a.num_classes) as i32).collect();
+
+    let mut rows = Vec::new();
+    let mut state = NativeTrainState::init(&a, 11);
+    let naive = bench::bench(&format!("naive scalar step (batch {b})"), wu, it, || {
+        bench::black_box(native_train_step(&a, &mut state, None, &x, &y, b, 0.01));
+    });
+    naive.report_throughput(b as u64, "sample");
+
+    let mut scratch = TrainScratch::new(&a, b);
+    let mut state = NativeTrainState::init(&a, 11);
+    let single = bench::bench(&format!("simd step x1 (batch {b})"), wu, it, || {
+        bench::black_box(native_train_step_fast(
+            &a, &mut state, None, &x, &y, 0.01, &mut scratch, None,
+        ));
+    });
+    single.report_throughput(b as u64, "sample");
+
+    let mut state = NativeTrainState::init(&a, 11);
+    let pooled = bench::bench(&format!("simd step x{threads} pooled (batch {b})"), wu, it, || {
+        bench::black_box(native_train_step_fast(
+            &a,
+            &mut state,
+            None,
+            &x,
+            &y,
+            0.01,
+            &mut scratch,
+            Some(&pool),
+        ));
+    });
+    pooled.report_throughput(b as u64, "sample");
+
+    let speedup_single = naive.median.as_secs_f64() / single.median.as_secs_f64().max(1e-12);
+    let speedup_pooled = naive.median.as_secs_f64() / pooled.median.as_secs_f64().max(1e-12);
+    println!("  -> step speedup over naive: x1={speedup_single:.2} x{threads}={speedup_pooled:.2}");
+    // the acceptance floor: the SIMD trainer must be >=4x the seed scalar
+    // step at the paper shapes. Timing gates stay out of the CI smoke, and
+    // a scalar-forced run (REPRO_SIMD=scalar) measures the packing win
+    // alone, so the floor applies to full runs on SIMD hosts only.
+    if !quick && kr.isa() != Isa::Scalar {
+        anyhow::ensure!(
+            speedup_single.max(speedup_pooled) >= 4.0,
+            "SIMD trainer must be >=4x the naive scalar step \
+             (got x1={speedup_single:.2}, x{threads}={speedup_pooled:.2})"
+        );
+    }
+    rows.push(
+        Json::obj()
+            .field("row", Json::str("step_throughput"))
+            .field("model", Json::str(a.name))
+            .field("isa", Json::str(kr.isa().name()))
+            .field("panel_nr", Json::num(kr.nr() as f64))
+            .field("batch", Json::num(b as f64))
+            .field("threads", Json::num(threads as f64))
+            .field("naive", naive.to_json())
+            .field("simd_single", single.to_json())
+            .field("simd_pooled", pooled.to_json())
+            .field("naive_steps_per_s", Json::num(1.0 / naive.median.as_secs_f64().max(1e-12)))
+            .field(
+                "simd_single_steps_per_s",
+                Json::num(1.0 / single.median.as_secs_f64().max(1e-12)),
+            )
+            .field(
+                "simd_pooled_steps_per_s",
+                Json::num(1.0 / pooled.median.as_secs_f64().max(1e-12)),
+            )
+            .field("naive_samples_per_s", Json::num(naive.throughput(b as u64)))
+            .field("simd_single_samples_per_s", Json::num(single.throughput(b as u64)))
+            .field("simd_pooled_samples_per_s", Json::num(pooled.throughput(b as u64)))
+            .field("speedup_single", Json::num(speedup_single))
+            .field("speedup_pooled", Json::num(speedup_pooled)),
+    );
+
+    // ---- parity: pool lane count must not change a single bit ----------
+    let n_train = 4 * b;
+    let ds = {
+        let x: Vec<f32> = (0..n_train * a.input_len()).map(|_| rng.normal().abs()).collect();
+        let y: Vec<i32> = (0..n_train).map(|_| rng.below(a.num_classes) as i32).collect();
+        Dataset::new(x, y, a.input_len(), a.num_classes)
+    };
+    let cfg = TrainConfig {
+        steps: if quick { 4 } else { 12 },
+        lr: 0.05,
+        end_lr_frac: 0.5,
+        seed: 29,
+        log_every: 0,
+    };
+    let pool2 = WorkerPool::new(2);
+    let mut lane_runs = Vec::new();
+    for (label, p) in [("x1", None), ("x2", Some(&pool2)), ("xN", Some(&pool))] {
+        let mut st = NativeTrainState::init(&a, cfg.seed);
+        let losses = run_steps_native_pooled(&a, &mut st, None, &ds, &cfg, p)?;
+        lane_runs.push((label, st.params, losses));
+    }
+    for (label, p, losses) in &lane_runs[1..] {
+        anyhow::ensure!(
+            params_bits(p) == params_bits(&lane_runs[0].1),
+            "parity: {label}-lane trained params != single-thread"
+        );
+        anyhow::ensure!(
+            losses.iter().map(|v| v.to_bits()).eq(lane_runs[0].2.iter().map(|v| v.to_bits())),
+            "parity: {label}-lane loss curve != single-thread"
+        );
+    }
+
+    // ---- parity: dispatched ISA vs scalar kernels, same bits -----------
+    let step_n = if quick { 3 } else { 8 };
+    let mut kernel_runs = Vec::new();
+    for (label, k) in [
+        ("dispatched", kr),
+        ("scalar-ref", Kernel::scalar_reference(kr.nr())),
+        ("scalar-4", Kernel::scalar_fallback()),
+    ] {
+        let mut st = NativeTrainState::init(&a, 31);
+        let mut sc = TrainScratch::with_kernel(&a, b, k);
+        for _ in 0..step_n {
+            native_train_step_fast(&a, &mut st, None, &x, &y, 0.02, &mut sc, None);
+        }
+        kernel_runs.push((label, st.params));
+    }
+    for (label, p) in &kernel_runs[1..] {
+        anyhow::ensure!(
+            params_bits(p) == params_bits(&kernel_runs[0].1),
+            "parity: {label} kernel trained params != dispatched"
+        );
+    }
+    println!(
+        "  parity OK: 1/2/{threads} lanes and dispatched/scalar-ref/scalar-4 kernels \
+         train bit-identical params"
+    );
+
+    // ---- retrain wall minutes: the Fig 5 campaign shape, measured ------
+    let models: &[&str] = if quick { &["mnist"] } else { &["mnist", "timit"] };
+    for &name in models {
+        let ra = arch::by_name(name).unwrap();
+        let samples = if quick { 2 * ra.train_batch } else { 1024 };
+        let (train_ds, _) = data::for_arch(name, samples, 64, 8).unwrap();
+        // the Fig 5 prune density stand-in: every 16th weight pruned
+        let masks: Vec<Vec<f32>> = ra
+            .weighted_layers()
+            .iter()
+            .map(|l| (0..l.weight_len()).map(|i| if i % 16 == 0 { 0.0 } else { 1.0 }).collect())
+            .collect();
+        let mut fap = he_init(&ra, 8);
+        fap.apply_masks(&masks);
+        let fcfg = FaptConfig {
+            max_epochs: if quick { 1 } else { 2 },
+            lr: 0.01,
+            seed: 8,
+            snapshot_epochs: vec![],
+        };
+        let res = fapt_retrain_native_pooled(&ra, &fap, &masks, &train_ds, &fcfg, Some(&pool))?;
+        let minutes = res.wall_minutes();
+        println!(
+            "  retrain {name}: {} epochs x {} samples in {minutes:.3} min wall \
+             ({:.2}s/epoch; paper budget 12 min)",
+            res.epoch_losses.len(),
+            train_ds.len(),
+            res.secs_per_epoch
+        );
+        rows.push(
+            Json::obj()
+                .field("row", Json::str("retrain_wall_minutes"))
+                .field("model", Json::str(name))
+                .field("epochs", Json::num(res.epoch_losses.len() as f64))
+                .field("train_samples", Json::num(train_ds.len() as f64))
+                .field("threads", Json::num(threads as f64))
+                .field("secs_per_epoch", Json::num(res.secs_per_epoch))
+                .field("wall_minutes", Json::num(minutes))
+                .field("paper_budget_minutes", Json::num(12.0)),
+        );
+    }
+
+    let meta = Json::obj()
+        .field("model", Json::str(a.name))
+        .field("batch", Json::num(b as f64))
+        .field("threads", Json::num(threads as f64))
+        .field("simd_isa", Json::str(kr.isa().name()))
+        .field("panel_nr", Json::num(kr.nr() as f64))
+        .field("paper_budget_minutes", Json::num(12.0))
+        .field("quick", Json::num(if quick { 1.0 } else { 0.0 }));
+    Ok((meta, rows))
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var_os("REPRO_BENCH_QUICK").is_some();
     println!("## bench perf_hotpath{}\n", if quick { " (quick smoke)" } else { "" });
@@ -751,6 +992,10 @@ fn main() -> anyhow::Result<()> {
     // ---- fleet scheduler: serving-layer rows, own bench record ----------
     let (fleet_meta, fleet_rows) = bench_fleet_scheduler(&mut rng, quick)?;
     bench::write_bench_json("BENCH_fleet.json", "fleet_scheduler", fleet_meta, fleet_rows)?;
+
+    // ---- train engine: f32 SIMD trainer vs naive scalar, parity-gated ---
+    let (train_meta, train_rows) = bench_train(&mut rng, quick)?;
+    bench::write_bench_json("BENCH_train.json", "train_engine", train_meta, train_rows)?;
 
     if quick {
         // the smoke run exists to exercise the parity gates above; the

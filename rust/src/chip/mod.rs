@@ -46,8 +46,8 @@ pub use sim::SimBackend;
 pub use xla::XlaBackend;
 
 use crate::coordinator::evaluate::{accuracy_over_batches, Evaluator};
-use crate::coordinator::fapt::{fapt_retrain, fapt_retrain_native, FaptConfig, FaptResult};
-use crate::coordinator::trainer::{train_baseline, train_baseline_native, TrainConfig};
+use crate::coordinator::fapt::{fapt_retrain, fapt_retrain_native_pooled, FaptConfig, FaptResult};
+use crate::coordinator::trainer::{train_baseline, train_baseline_native_pooled, TrainConfig};
 use crate::data::Dataset;
 use crate::exec::{default_threads, ChipPlan, PlanCache, WorkerPool};
 use crate::faults::{detect, inject_uniform, FaultMap, FaultSpec, KnownMap, TestPatterns};
@@ -59,13 +59,21 @@ use crate::runtime::Runtime;
 use crate::systolic::timing;
 use crate::util::Rng;
 use anyhow::{bail, ensure, Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Localization runs and the faulty MACs they reported.
 static M_DETECT: LazyCounter = LazyCounter::new("chip.detect.count");
 static M_DETECT_FAULTY: LazyCounter = LazyCounter::new("chip.detect.faulty_macs");
 /// FAP+T retraining invocations through [`Engine::retrain`].
 static M_RETRAIN: LazyCounter = LazyCounter::new("chip.retrain.count");
+
+/// Count a FAP+T retrain dispatched outside [`Engine::retrain`] — the
+/// fleet health loop runs native retrains concurrently on its own threads
+/// and reports each one here so `chip.retrain.count` stays the single
+/// retrain-rate counter.
+pub(crate) fn record_retrain_dispatch() {
+    M_RETRAIN.inc();
+}
 /// Whole-dataset evaluations through [`ChipSession::evaluate`].
 static M_EVALUATE: LazyCounter = LazyCounter::new("chip.evaluate.count");
 
@@ -475,11 +483,13 @@ pub struct Engine<'rt> {
     pub plans: PlanCache,
     threads: usize,
     /// Spawn-once worker pool shared by every plan session the engine
-    /// opens (lazily built; rebuilt only if the thread budget changes).
-    /// This is what makes the campaign hot path spawn-free: a sweep of
-    /// thousands of forwards reuses these threads instead of paying a
-    /// `thread::scope` spawn per call.
-    pool: Option<Arc<WorkerPool>>,
+    /// opens *and* by the native trainer's minibatch sharding (lazily
+    /// built behind a `OnceLock` so `&self` paths like [`Engine::train`]
+    /// and [`Engine::retrain`] reach it; reset — and so rebuilt — when
+    /// the thread budget changes). This is what makes the campaign hot
+    /// path spawn-free: a sweep of thousands of forwards reuses these
+    /// threads instead of paying a `thread::scope` spawn per call.
+    pool: OnceLock<Arc<WorkerPool>>,
 }
 
 impl<'rt> Engine<'rt> {
@@ -487,30 +497,23 @@ impl<'rt> Engine<'rt> {
         if backend == Backend::Xla && rt.is_none() {
             bail!("backend xla needs the PJRT runtime (an artifacts directory)");
         }
-        Ok(Engine { backend, rt, plans: PlanCache::new(), threads: 0, pool: None })
+        Ok(Engine { backend, rt, plans: PlanCache::new(), threads: 0, pool: OnceLock::new() })
     }
 
     /// Worker threads for the plan executor (0 = all cores).
     pub fn with_threads(mut self, threads: usize) -> Engine<'rt> {
         if threads != self.threads {
-            self.pool = None; // lane count changed: rebuild lazily
+            self.pool = OnceLock::new(); // lane count changed: rebuild lazily
         }
         self.threads = threads;
         self
     }
 
     /// The engine's persistent worker pool (spawned once with the current
-    /// thread budget; every plan session shares these lanes).
-    pub fn worker_pool(&mut self) -> Arc<WorkerPool> {
-        let lanes = self.threads();
-        if let Some(p) = &self.pool {
-            if p.lanes() == lanes {
-                return p.clone();
-            }
-        }
-        let p = Arc::new(WorkerPool::new(lanes));
-        self.pool = Some(p.clone());
-        p
+    /// thread budget; every plan session and native training run shares
+    /// these lanes).
+    pub fn worker_pool(&self) -> Arc<WorkerPool> {
+        self.pool.get_or_init(|| Arc::new(WorkerPool::new(self.threads()))).clone()
     }
 
     pub fn backend(&self) -> Backend {
@@ -568,7 +571,10 @@ impl<'rt> Engine<'rt> {
         self.backend.supports(arch, Scenario::Train)?;
         match self.backend {
             Backend::Xla => train_baseline(self.rt.unwrap(), arch, train, cfg),
-            Backend::Sim | Backend::Plan => train_baseline_native(arch, train, cfg),
+            Backend::Sim | Backend::Plan => {
+                let pool = self.worker_pool();
+                train_baseline_native_pooled(arch, train, cfg, Some(&pool))
+            }
         }
     }
 
@@ -588,7 +594,8 @@ impl<'rt> Engine<'rt> {
                 fapt_retrain(self.rt.unwrap(), arch, fap_params, prune_masks, train, cfg)
             }
             Backend::Sim | Backend::Plan => {
-                fapt_retrain_native(arch, fap_params, prune_masks, train, cfg)
+                let pool = self.worker_pool();
+                fapt_retrain_native_pooled(arch, fap_params, prune_masks, train, cfg, Some(&pool))
             }
         }
     }
@@ -767,12 +774,12 @@ mod tests {
 
     #[test]
     fn engine_pool_spawns_once_and_tracks_thread_budget() {
-        let mut engine = Engine::new(Backend::Plan, None).unwrap().with_threads(3);
+        let engine = Engine::new(Backend::Plan, None).unwrap().with_threads(3);
         let p1 = engine.worker_pool();
         let p2 = engine.worker_pool();
         assert!(Arc::ptr_eq(&p1, &p2), "pool must be spawn-once");
         assert_eq!(p1.lanes(), 3);
-        let mut engine = engine.with_threads(2);
+        let engine = engine.with_threads(2);
         let p3 = engine.worker_pool();
         assert!(!Arc::ptr_eq(&p1, &p3), "new thread budget rebuilds the pool");
         assert_eq!(p3.lanes(), 2);

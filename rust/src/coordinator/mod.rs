@@ -13,5 +13,10 @@ pub mod trainer;
 
 pub use evaluate::Evaluator;
 pub use fap::{apply_fap, apply_fap_planned};
-pub use fapt::{fapt_retrain, fapt_retrain_native, provision_chip_engine, FaptConfig};
-pub use trainer::{train_baseline, train_baseline_native, TrainConfig};
+pub use fapt::{
+    fapt_retrain, fapt_retrain_native, fapt_retrain_native_pooled, provision_chip_engine,
+    FaptConfig,
+};
+pub use trainer::{
+    train_baseline, train_baseline_native, train_baseline_native_pooled, TrainConfig, TrainScratch,
+};

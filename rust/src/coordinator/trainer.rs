@@ -13,13 +13,42 @@
 //! plain Rust, so `--backend plan` campaigns run end-to-end with no
 //! artifacts directory present. It is numerically the same family, not
 //! bit-identical to the XLA graph (summation order differs).
+//!
+//! The native hot path ([`native_train_step_fast`]) runs forward/backward
+//! as the three GEMM shapes — `Z = A·W`, `Gw = Aᵀ·dZ`, `dPrev = dZ·Wᵀ` —
+//! over packed f32 panels through the runtime-dispatched SIMD kernels
+//! ([`crate::exec::Kernel::micro4_f32`]), with all staging owned by a
+//! [`TrainScratch`] so steady-state steps allocate nothing, and minibatch
+//! rows sharded across the engine's [`WorkerPool`]. Every output element
+//! is a fused-multiply-add chain in fixed reduction order, so trained
+//! parameters are **bit-identical** across scalar/AVX2/NEON dispatch and
+//! across 1..N pool lanes — the property the train bench parity-gates.
+//! [`native_train_step`] (the naive triple loop) stays as the seed
+//! baseline the train bench measures speedups against.
 
 use crate::data::Dataset;
+use crate::exec::{kernel, pack_panels_f32_into, Kernel, WorkerPool, MAX_NR, MICRO_MR};
 use crate::model::{Arch, Layer, Params};
+use crate::obs::LazyCounter;
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, Executable, Runtime};
 use crate::util::Rng;
 use anyhow::{ensure, Context, Result};
 use std::rc::Rc;
+
+// Optimizer-step throughput counters (baseline training and FAP+T
+// retraining both drive them). Deterministic per seed — safe under the
+// obs layer's byte-identical snapshot contract.
+static M_TRAIN_STEPS: LazyCounter = LazyCounter::new("train.steps");
+static M_TRAIN_SAMPLES: LazyCounter = LazyCounter::new("train.samples");
+
+/// Count one driven optimizer step in the obs registry. The step loops in
+/// this module count their own iterations; the FAP+T epoch driver
+/// ([`super::fapt`]) calls this for each batch it feeds a step closure —
+/// the two driver paths are disjoint, so nothing double-counts.
+pub(crate) fn count_train_step(samples: usize) {
+    M_TRAIN_STEPS.inc();
+    M_TRAIN_SAMPLES.add(samples as u64);
+}
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -173,7 +202,11 @@ pub fn run_steps(
         let lr = cfg.lr * (1.0 - frac * (1.0 - cfg.end_lr_frac));
         let loss = train_step(exe, state, masks, &batch.x, &batch.y, &x_dims, lr)?;
         losses.push(loss);
-        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+        M_TRAIN_STEPS.inc();
+        M_TRAIN_SAMPLES.add(b as u64);
+        // log_every == 0 short-circuits before the modulo and before any
+        // formatting work — the silent configuration costs nothing here
+        if cfg.log_every != 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
             eprintln!("  [{}] step {step}/{} loss {loss:.4} lr {lr:.4}", arch.name, cfg.steps);
         }
     }
@@ -382,7 +415,412 @@ pub fn native_train_step(
     loss
 }
 
+// ---------------------------------------------------------------------------
+// Packed-panel SIMD trainer (the native hot path)
+// ---------------------------------------------------------------------------
+
+/// Session-owned staging for the packed-panel trainer: every activation,
+/// gradient and packed-panel buffer one train step needs, allocated once
+/// per training run so steady-state steps are allocation-free.
+pub struct TrainScratch {
+    kernel: Kernel,
+    batch: usize,
+    /// `acts[0]` stages the input batch; `acts[l + 1]` holds layer `l`'s
+    /// post-activation.
+    acts: Vec<Vec<f32>>,
+    /// `preacts[l]` holds layer `l`'s pre-activation `z` (the backward
+    /// pass reads it for the ReLU gradient gate).
+    preacts: Vec<Vec<f32>>,
+    /// `dzs[l]` holds `dL/dz` of layer `l`.
+    dzs: Vec<Vec<f32>>,
+    gws: Vec<Vec<f32>>,
+    gbs: Vec<Vec<f32>>,
+    /// Packed forward weight panels per layer (`dout` lanes, `din` steps).
+    wpan: Vec<Vec<f32>>,
+    /// Packed transposed weight panels per layer (`din` lanes, `dout`
+    /// steps); empty for layer 0, which has no previous layer to reach.
+    wtpan: Vec<Vec<f32>>,
+    /// Packed `dZ` panels per layer (`dout` lanes, `batch` steps).
+    dzpan: Vec<Vec<f32>>,
+}
+
+impl TrainScratch {
+    /// Scratch sized for `arch` at `batch`, packing panels at the
+    /// process-dispatched kernel's width.
+    pub fn new(arch: &Arch, batch: usize) -> TrainScratch {
+        TrainScratch::with_kernel(arch, batch, *kernel())
+    }
+
+    /// As [`TrainScratch::new`] with an explicit kernel (the parity tests
+    /// pin specific ISAs and panel widths).
+    pub fn with_kernel(arch: &Arch, batch: usize, kr: Kernel) -> TrainScratch {
+        assert!(arch.is_mlp(), "native trainer supports MLP archs only (got {})", arch.name);
+        assert!(batch > 0, "batch must be positive");
+        let nr = kr.nr();
+        let panel_buf = |slots: usize, steps: usize| vec![0.0f32; slots.div_ceil(nr) * steps * nr];
+        let mut s = TrainScratch {
+            kernel: kr,
+            batch,
+            acts: vec![vec![0.0; batch * arch.input_len()]],
+            preacts: Vec::new(),
+            dzs: Vec::new(),
+            gws: Vec::new(),
+            gbs: Vec::new(),
+            wpan: Vec::new(),
+            wtpan: Vec::new(),
+            dzpan: Vec::new(),
+        };
+        for (li, layer) in arch.weighted_layers().iter().enumerate() {
+            let Layer::Fc(fc) = layer else { unreachable!("MLP arch") };
+            s.acts.push(vec![0.0; batch * fc.dout]);
+            s.preacts.push(vec![0.0; batch * fc.dout]);
+            s.dzs.push(vec![0.0; batch * fc.dout]);
+            s.gws.push(vec![0.0; fc.din * fc.dout]);
+            s.gbs.push(vec![0.0; fc.dout]);
+            s.wpan.push(panel_buf(fc.dout, fc.din));
+            s.wtpan.push(if li > 0 { panel_buf(fc.din, fc.dout) } else { Vec::new() });
+            s.dzpan.push(panel_buf(fc.dout, batch));
+        }
+        s
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+}
+
+/// Dispatch `rows` output rows to the pool (or run inline without one).
+fn shard_rows(pool: Option<&WorkerPool>, rows: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    match pool {
+        Some(p) => p.run_row_shards(rows, f),
+        None => f(0, rows),
+    }
+}
+
+/// Forward layer `Z = A·W (+ bias)`, then activation into `a_next`:
+/// `batch` output rows sharded across the pool, each row block running
+/// packed panels through the dispatched f32 microkernels.
+#[allow(clippy::too_many_arguments)]
+fn forward_layer(
+    kr: &Kernel,
+    pool: Option<&WorkerPool>,
+    batch: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    a: &[f32],
+    wpan: &[f32],
+    bias: &[f32],
+    z: &mut [f32],
+    a_next: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), batch * din);
+    debug_assert_eq!(z.len(), batch * dout);
+    debug_assert_eq!(a_next.len(), batch * dout);
+    let nr = kr.nr();
+    // addresses as usize so the shard closure is Sync; shards own disjoint
+    // row ranges, so the &mut slices reconstructed below never alias
+    let z_addr = z.as_mut_ptr() as usize;
+    let an_addr = a_next.as_mut_ptr() as usize;
+    shard_rows(pool, batch, &move |lo: usize, hi: usize| {
+        // SAFETY: lo..hi is in-bounds and disjoint per shard; the backing
+        // borrows of `z` / `a_next` are held by this call frame for the
+        // whole dispatch.
+        let z = unsafe {
+            std::slice::from_raw_parts_mut((z_addr as *mut f32).add(lo * dout), (hi - lo) * dout)
+        };
+        let an = unsafe {
+            std::slice::from_raw_parts_mut((an_addr as *mut f32).add(lo * dout), (hi - lo) * dout)
+        };
+        let mut acc = [0.0f32; MICRO_MR * MAX_NR];
+        let mut r = lo;
+        while r < hi {
+            let mr = (hi - r).min(MICRO_MR);
+            for (p, panel) in wpan.chunks_exact(din * nr).enumerate() {
+                let c0 = p * nr;
+                let cn = nr.min(dout - c0);
+                if mr == MICRO_MR {
+                    kr.micro4_f32(&a[r * din..], din, 1, din, panel, &mut acc);
+                } else {
+                    for ri in 0..mr {
+                        let (_, tail) = acc.split_at_mut(ri * nr);
+                        kr.micro1_f32(&a[(r + ri) * din..], 1, din, panel, tail);
+                    }
+                }
+                for ri in 0..mr {
+                    let zrow = &mut z[(r - lo + ri) * dout + c0..][..cn];
+                    for (j, zv) in zrow.iter_mut().enumerate() {
+                        *zv = acc[ri * nr + j] + bias[c0 + j];
+                    }
+                }
+            }
+            r += mr;
+        }
+        // activation writeback matches the naive step exactly: only
+        // strictly negative pre-activations gate to zero
+        for (av, &zv) in an.iter_mut().zip(z.iter()) {
+            *av = if relu && zv < 0.0 { 0.0 } else { zv };
+        }
+    });
+}
+
+/// Weight gradient `Gw = Aᵀ·dZ`: `din` output rows sharded across the
+/// pool; each `gw` row reduces over the full batch inside the kernel, so
+/// there is no cross-shard reduction to order.
+fn grad_w_layer(
+    kr: &Kernel,
+    pool: Option<&WorkerPool>,
+    batch: usize,
+    din: usize,
+    dout: usize,
+    a: &[f32],
+    dzpan: &[f32],
+    gw: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), batch * din);
+    debug_assert_eq!(gw.len(), din * dout);
+    let nr = kr.nr();
+    let gw_addr = gw.as_mut_ptr() as usize;
+    shard_rows(pool, din, &move |lo: usize, hi: usize| {
+        // SAFETY: as in `forward_layer` — disjoint gw row ranges.
+        let gw = unsafe {
+            std::slice::from_raw_parts_mut((gw_addr as *mut f32).add(lo * dout), (hi - lo) * dout)
+        };
+        let mut acc = [0.0f32; MICRO_MR * MAX_NR];
+        let mut r = lo;
+        while r < hi {
+            let mr = (hi - r).min(MICRO_MR);
+            for (p, panel) in dzpan.chunks_exact(batch * nr).enumerate() {
+                let c0 = p * nr;
+                let cn = nr.min(dout - c0);
+                if mr == MICRO_MR {
+                    kr.micro4_f32(&a[r..], 1, din, batch, panel, &mut acc);
+                } else {
+                    for ri in 0..mr {
+                        let (_, tail) = acc.split_at_mut(ri * nr);
+                        kr.micro1_f32(&a[r + ri..], din, batch, panel, tail);
+                    }
+                }
+                for ri in 0..mr {
+                    let grow = &mut gw[(r - lo + ri) * dout + c0..][..cn];
+                    grow.copy_from_slice(&acc[ri * nr..ri * nr + cn]);
+                }
+            }
+            r += mr;
+        }
+    });
+}
+
+/// Backpropagated gradient `dPrev = dZ·Wᵀ` with the previous layer's ReLU
+/// gate applied at writeback: `batch` output rows sharded across the pool.
+#[allow(clippy::too_many_arguments)]
+fn grad_prev_layer(
+    kr: &Kernel,
+    pool: Option<&WorkerPool>,
+    batch: usize,
+    din: usize,
+    dout: usize,
+    prev_relu: bool,
+    dz: &[f32],
+    wtpan: &[f32],
+    zprev: &[f32],
+    dprev: &mut [f32],
+) {
+    debug_assert_eq!(dz.len(), batch * dout);
+    debug_assert_eq!(zprev.len(), batch * din);
+    debug_assert_eq!(dprev.len(), batch * din);
+    let nr = kr.nr();
+    let dp_addr = dprev.as_mut_ptr() as usize;
+    shard_rows(pool, batch, &move |lo: usize, hi: usize| {
+        // SAFETY: as in `forward_layer` — disjoint dprev row ranges.
+        let dp = unsafe {
+            std::slice::from_raw_parts_mut((dp_addr as *mut f32).add(lo * din), (hi - lo) * din)
+        };
+        let mut acc = [0.0f32; MICRO_MR * MAX_NR];
+        let mut r = lo;
+        while r < hi {
+            let mr = (hi - r).min(MICRO_MR);
+            for (p, panel) in wtpan.chunks_exact(dout * nr).enumerate() {
+                let c0 = p * nr;
+                let cn = nr.min(din - c0);
+                if mr == MICRO_MR {
+                    kr.micro4_f32(&dz[r * dout..], dout, 1, dout, panel, &mut acc);
+                } else {
+                    for ri in 0..mr {
+                        let (_, tail) = acc.split_at_mut(ri * nr);
+                        kr.micro1_f32(&dz[(r + ri) * dout..], 1, dout, panel, tail);
+                    }
+                }
+                for ri in 0..mr {
+                    let row = r + ri;
+                    let dprow = &mut dp[(row - lo) * din + c0..][..cn];
+                    for (j, dv) in dprow.iter_mut().enumerate() {
+                        let k = c0 + j;
+                        // ReLU gradient gate, identical to the naive step:
+                        // gate where the (previous) pre-activation was <= 0
+                        *dv = if prev_relu && zprev[row * din + k] <= 0.0 {
+                            0.0
+                        } else {
+                            acc[ri * nr + j]
+                        };
+                    }
+                }
+            }
+            r += mr;
+        }
+    });
+}
+
+/// One packed-panel SIMD train step — same algorithm and update rule as
+/// [`native_train_step`], restructured as the three GEMM shapes over
+/// `scratch`-owned panels and sharded across `pool`.
+///
+/// Bit-identity: each output element is one fused-multiply-add chain in
+/// fixed reduction order, executed by kernels whose lanes are output
+/// columns — so the trained parameters do not depend on the dispatched
+/// ISA, the panel width, or the pool's lane count. (Results are *not*
+/// bit-comparable to the naive step, which uses unfused multiply-add.)
+#[allow(clippy::too_many_arguments)]
+pub fn native_train_step_fast(
+    arch: &Arch,
+    state: &mut NativeTrainState,
+    masks: Option<&[Vec<f32>]>,
+    x: &[f32],
+    y: &[i32],
+    lr: f32,
+    scratch: &mut TrainScratch,
+    pool: Option<&WorkerPool>,
+) -> f32 {
+    debug_assert!(arch.is_mlp());
+    let layers = arch.weighted_layers();
+    let nl = layers.len();
+    let batch = scratch.batch;
+    debug_assert_eq!(x.len(), batch * arch.input_len());
+    debug_assert_eq!(y.len(), batch);
+    let TrainScratch { kernel: kr, acts, preacts, dzs, gws, gbs, wpan, wtpan, dzpan, .. } = scratch;
+    let kr = *kr;
+    let nr = kr.nr();
+
+    // forward: Z = A·W (+bias), activation into the next act buffer
+    acts[0].copy_from_slice(x);
+    for (li, layer) in layers.iter().enumerate() {
+        let Layer::Fc(fc) = layer else { unreachable!("MLP arch") };
+        let (w, b) = &state.params.layers[li];
+        pack_panels_f32_into(w, fc.din, fc.dout, nr, 1, fc.dout, &mut wpan[li]);
+        let (head, tail) = acts.split_at_mut(li + 1);
+        forward_layer(
+            &kr,
+            pool,
+            batch,
+            fc.din,
+            fc.dout,
+            fc.relu,
+            &head[li],
+            &wpan[li],
+            b,
+            &mut preacts[li],
+            &mut tail[0],
+        );
+    }
+
+    // softmax cross-entropy loss and top-layer logit gradient (serial,
+    // same operation order as the naive step)
+    let classes = arch.num_classes;
+    let logits = &acts[nl];
+    let inv_b = 1.0 / batch as f32;
+    let dz_top = &mut dzs[nl - 1];
+    let mut loss = 0.0f32;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let denom: f32 = row.iter().map(|&v| (v - maxv).exp()).sum();
+        let label = y[bi] as usize;
+        loss -= row[label] - maxv - denom.ln();
+        let drow = &mut dz_top[bi * classes..(bi + 1) * classes];
+        for (d, &v) in drow.iter_mut().zip(row) {
+            *d = (v - maxv).exp() / denom * inv_b;
+        }
+        drow[label] -= inv_b;
+    }
+    loss *= inv_b;
+
+    // backward + update, top layer down
+    for li in (0..nl).rev() {
+        let Layer::Fc(fc) = layers[li] else { unreachable!("MLP arch") };
+
+        // bias gradient: serial batch-order sum (cheap against the GEMMs)
+        let gb = &mut gbs[li];
+        gb.fill(0.0);
+        for bi in 0..batch {
+            let drow = &dzs[li][bi * fc.dout..(bi + 1) * fc.dout];
+            for (g, &d) in gb.iter_mut().zip(drow) {
+                *g += d;
+            }
+        }
+
+        // Gw = Aᵀ·dZ over a packed dZ panel
+        pack_panels_f32_into(&dzs[li], batch, fc.dout, nr, 1, fc.dout, &mut dzpan[li]);
+        grad_w_layer(&kr, pool, batch, fc.din, fc.dout, &acts[li], &dzpan[li], &mut gws[li]);
+
+        // dPrev = dZ·Wᵀ — before this layer's weights move
+        if li > 0 {
+            let Layer::Fc(prev) = layers[li - 1] else { unreachable!("MLP arch") };
+            let w = &state.params.layers[li].0;
+            pack_panels_f32_into(w, fc.dout, fc.din, nr, fc.dout, 1, &mut wtpan[li]);
+            let (dz_lo, dz_hi) = dzs.split_at_mut(li);
+            grad_prev_layer(
+                &kr,
+                pool,
+                batch,
+                fc.din,
+                fc.dout,
+                prev.relu,
+                &dz_hi[0],
+                &wtpan[li],
+                &preacts[li - 1],
+                &mut dz_lo[li - 1],
+            );
+        }
+
+        // masked SGD + momentum update — identical to the naive step
+        let mask = masks.map(|m| m[li].as_slice());
+        let (w, b) = &mut state.params.layers[li];
+        let (vw, vb) = &mut state.vels.layers[li];
+        let gw = &gws[li];
+        match mask {
+            Some(m) => {
+                for i in 0..w.len() {
+                    vw[i] = MOMENTUM * vw[i] - lr * gw[i] * m[i];
+                    w[i] = (w[i] + vw[i]) * m[i]; // Algorithm 1 line 6
+                }
+            }
+            None => {
+                for i in 0..w.len() {
+                    vw[i] = MOMENTUM * vw[i] - lr * gw[i];
+                    w[i] += vw[i];
+                }
+            }
+        }
+        for (bv, (vel, &g)) in b.iter_mut().zip(vb.iter_mut().zip(gbs[li].iter())) {
+            *vel = MOMENTUM * *vel - lr * g;
+            *bv += *vel;
+        }
+    }
+    loss
+}
+
 /// Native analog of [`run_steps`]: shared step loop (baseline and FAP+T).
+///
+/// Batches are sampled through a shuffled index permutation gathered with
+/// [`Dataset::gather_batch`] — the dataset is never cloned — and each
+/// step runs the packed-panel SIMD trainer over a per-call
+/// [`TrainScratch`]. The sample stream (shuffle order, epoch reshuffle,
+/// final-batch padding with the permutation head) is exactly what the old
+/// clone-and-shuffle loop produced.
 pub fn run_steps_native(
     arch: &Arch,
     state: &mut NativeTrainState,
@@ -390,28 +828,54 @@ pub fn run_steps_native(
     train: &Dataset,
     cfg: &TrainConfig,
 ) -> Result<Vec<f32>> {
+    run_steps_native_pooled(arch, state, masks, train, cfg, None)
+}
+
+/// [`run_steps_native`] with minibatch GEMM rows sharded across a worker
+/// pool. Losses and trained parameters are bit-identical at every lane
+/// count (each output element is a fixed-order FMA chain whichever lane
+/// computes it).
+pub fn run_steps_native_pooled(
+    arch: &Arch,
+    state: &mut NativeTrainState,
+    masks: Option<&[Vec<f32>]>,
+    train: &Dataset,
+    cfg: &TrainConfig,
+    pool: Option<&WorkerPool>,
+) -> Result<Vec<f32>> {
     ensure!(arch.is_mlp(), "native trainer supports MLP archs only (got {})", arch.name);
+    ensure!(!train.is_empty(), "empty dataset");
     let b = arch.train_batch;
     let mut rng = Rng::new(cfg.seed);
-    let mut data = train.clone();
-    data.shuffle(&mut rng);
+    let mut perm: Vec<usize> = (0..train.len()).collect();
+    rng.shuffle(&mut perm);
+    let mut scratch = TrainScratch::new(arch, b);
+    let mut ids = vec![0usize; b];
+    let mut xb = vec![0.0f32; b * arch.input_len()];
+    let mut yb = vec![0i32; b];
     let mut losses = Vec::with_capacity(cfg.steps);
-
-    let mut batch_iter = data.batches(b);
+    let mut pos = 0usize;
     for step in 0..cfg.steps {
-        let batch = match batch_iter.next() {
-            Some(bt) => bt,
-            None => {
-                data.shuffle(&mut rng); // new epoch
-                batch_iter = data.batches(b);
-                batch_iter.next().context("empty dataset")?
-            }
-        };
+        if pos >= train.len() {
+            rng.shuffle(&mut perm); // new epoch
+            pos = 0;
+        }
+        let take = (train.len() - pos).min(b);
+        ids[..take].copy_from_slice(&perm[pos..pos + take]);
+        for id in ids[take..].iter_mut() {
+            *id = perm[0]; // pad like `Dataset::batches`: repeat sample 0
+        }
+        pos += take;
+        train.gather_batch(&ids, &mut xb, &mut yb);
         let frac = if cfg.steps > 1 { step as f32 / (cfg.steps - 1) as f32 } else { 0.0 };
         let lr = cfg.lr * (1.0 - frac * (1.0 - cfg.end_lr_frac));
-        let loss = native_train_step(arch, state, masks, &batch.x, &batch.y, b, lr);
+        let loss = native_train_step_fast(arch, state, masks, &xb, &yb, lr, &mut scratch, pool);
         losses.push(loss);
-        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+        M_TRAIN_STEPS.inc();
+        M_TRAIN_SAMPLES.add(b as u64);
+        // log_every == 0 short-circuits before the modulo and before any
+        // formatting work — the silent configuration costs nothing here
+        if cfg.log_every != 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
             eprintln!(
                 "  [{}/native] step {step}/{} loss {loss:.4} lr {lr:.4}",
                 arch.name, cfg.steps
@@ -428,8 +892,19 @@ pub fn train_baseline_native(
     train: &Dataset,
     cfg: &TrainConfig,
 ) -> Result<(Params, Vec<f32>)> {
+    train_baseline_native_pooled(arch, train, cfg, None)
+}
+
+/// [`train_baseline_native`] with pooled minibatch parallelism (the
+/// engine's spawn-once worker pool).
+pub fn train_baseline_native_pooled(
+    arch: &Arch,
+    train: &Dataset,
+    cfg: &TrainConfig,
+    pool: Option<&WorkerPool>,
+) -> Result<(Params, Vec<f32>)> {
     let mut state = NativeTrainState::init(arch, cfg.seed);
-    let losses = run_steps_native(arch, &mut state, None, train, cfg)?;
+    let losses = run_steps_native_pooled(arch, &mut state, None, train, cfg, pool)?;
     Ok((state.params, losses))
 }
 

@@ -50,6 +50,21 @@ impl Dataset {
         Batches { ds: self, batch, pos: 0 }
     }
 
+    /// Gather the samples at `ids` into caller-owned row-major buffers —
+    /// the trainers' index-permutation sampler. Shuffling a `Vec<usize>`
+    /// and gathering through it replaces the old clone-the-whole-dataset
+    /// epoch loop (one usize per sample instead of a second copy of `x`),
+    /// and the gather itself is allocation-free.
+    pub fn gather_batch(&self, ids: &[usize], x: &mut [f32], y: &mut [i32]) {
+        let dim = self.sample_dim;
+        assert_eq!(x.len(), ids.len() * dim);
+        assert_eq!(y.len(), ids.len());
+        for (i, &s) in ids.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(&self.x[s * dim..(s + 1) * dim]);
+            y[i] = self.y[s];
+        }
+    }
+
     /// Class distribution (diagnostics / balance tests).
     pub fn class_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.num_classes];
@@ -146,6 +161,37 @@ mod tests {
         b.sort();
         assert_eq!(a, b);
         after.sort_by_key(|v| v.1);
+    }
+
+    #[test]
+    fn gather_batch_matches_clone_shuffle_batches() {
+        // gathering through a shuffled index permutation must reproduce the
+        // old clone-then-shuffle batch stream exactly, padding included
+        let ds = tiny();
+        let batch = 4;
+        let mut rng_a = Rng::new(9);
+        let mut cloned = ds.clone();
+        cloned.shuffle(&mut rng_a);
+        let want: Vec<_> = cloned.batches(batch).collect();
+
+        let mut rng_b = Rng::new(9);
+        let mut perm: Vec<usize> = (0..ds.len()).collect();
+        rng_b.shuffle(&mut perm);
+        let mut x = vec![0.0f32; batch * ds.sample_dim];
+        let mut y = vec![0i32; batch];
+        let mut ids = vec![0usize; batch];
+        let mut pos = 0;
+        for wb in &want {
+            let take = wb.valid;
+            ids[..take].copy_from_slice(&perm[pos..pos + take]);
+            for id in ids[take..].iter_mut() {
+                *id = perm[0]; // padding repeats (shuffled) sample 0
+            }
+            ds.gather_batch(&ids, &mut x, &mut y);
+            assert_eq!(x, wb.x);
+            assert_eq!(y, wb.y);
+            pos += take;
+        }
     }
 
     #[test]

@@ -88,6 +88,47 @@ pub fn pack_panels_i8(slot_major: &[i32], kh: usize, slots: usize, nr: usize) ->
     Some(packed)
 }
 
+/// Pack `slots` f32 weight columns into panel-major layout at width `nr`,
+/// into a caller-owned buffer (the trainer repacks panels every step, so
+/// this path must not allocate). Source element `(slot, kk)` is read at
+/// `src[slot * lane_stride + kk * step_stride]`, which covers every panel
+/// operand the trainer packs with no transposed copies:
+///
+/// * forward `W` panels: `lane_stride = 1`, `step_stride = dout`
+///   (slots = output columns, steps = din),
+/// * `dZ` panels for `Gw = Aᵀ·dZ`: `lane_stride = 1`, `step_stride = dout`
+///   (steps = batch),
+/// * `Wᵀ` panels for `dPrev = dZ·Wᵀ`: `lane_stride = dout`,
+///   `step_stride = 1` (slots = input columns, steps = dout).
+///
+/// `dst` must hold exactly `slots.div_ceil(nr) * kh * nr` values; tail
+/// panel lanes are zeroed (a padded lane accumulates exact zeros and the
+/// writeback iterates real columns only, so stale `dst` contents never
+/// leak).
+pub fn pack_panels_f32_into(
+    src: &[f32],
+    kh: usize,
+    slots: usize,
+    nr: usize,
+    lane_stride: usize,
+    step_stride: usize,
+    dst: &mut [f32],
+) {
+    let panels = slots.div_ceil(nr);
+    assert_eq!(dst.len(), panels * kh * nr, "packed panel buffer size mismatch");
+    // only the tail panel has lanes the slot loop below never writes
+    if slots % nr != 0 {
+        dst[(panels - 1) * kh * nr..].fill(0.0);
+    }
+    for s in 0..slots {
+        let (p, lane) = (s / nr, s % nr);
+        let dstp = &mut dst[p * kh * nr..(p + 1) * kh * nr];
+        for kk in 0..kh {
+            dstp[kk * nr + lane] = src[s * lane_stride + kk * step_stride];
+        }
+    }
+}
+
 /// The 4x4 register-tiled scalar microkernel: accumulate [`MICRO_MR`]
 /// batch rows of `a` (rows at stride `row_stride`, `kh` active values
 /// each) against one packed panel (`kh * PANEL_NR` weights, see
@@ -392,6 +433,31 @@ mod tests {
         assert!(pack_panels_i8(&[1, 128], 1, 2, 4).is_none());
         assert!(pack_panels_i8(&[-129, 0], 1, 2, 4).is_none());
         assert_eq!(pack_panels_i8(&[], 3, 0, 4), Some(vec![]));
+    }
+
+    #[test]
+    fn pack_panels_f32_strided_layouts_match() {
+        // a 2x3 row-major matrix (kh=2 steps, 3 slots): slot s, step kk
+        let w = [1.0f32, 10.0, 100.0, 2.0, 20.0, 200.0]; // w[kk*3 + s]
+        let nr = 4;
+        // forward layout: lane_stride=1 over columns, step_stride=slots
+        let mut fwd = vec![f32::NAN; 2 * nr];
+        pack_panels_f32_into(&w, 2, 3, nr, 1, 3, &mut fwd);
+        assert_eq!(fwd, vec![1.0, 10.0, 100.0, 0.0, 2.0, 20.0, 200.0, 0.0]);
+        // transposed layout over the same storage: slots=2 (the former
+        // steps), steps=3, so lane_stride=3, step_stride=1
+        let mut tr = vec![f32::NAN; 3 * nr];
+        pack_panels_f32_into(&w, 3, 2, nr, 3, 1, &mut tr);
+        assert_eq!(
+            tr,
+            vec![1.0, 2.0, 0.0, 0.0, 10.0, 20.0, 0.0, 0.0, 100.0, 200.0, 0.0, 0.0]
+        );
+        // aligned slot count: no tail, every dst value written (stale
+        // contents fully overwritten without an explicit fill)
+        let w4 = [1.0f32, 2.0, 3.0, 4.0];
+        let mut full = vec![f32::NAN; 4];
+        pack_panels_f32_into(&w4, 1, 4, nr, 1, 4, &mut full);
+        assert_eq!(full, vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

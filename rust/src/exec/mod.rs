@@ -44,7 +44,8 @@ pub mod simd;
 
 pub use gemm::{
     default_threads, dot_wrapping, for_each_batch_shard, micro_gemm_1x4, micro_gemm_1x4_i8,
-    micro_gemm_4x4, micro_gemm_4x4_i8, pack_panels, pack_panels_i8, MICRO_MR, PANEL_NR,
+    micro_gemm_4x4, micro_gemm_4x4_i8, pack_panels, pack_panels_f32_into, pack_panels_i8,
+    MICRO_MR, PANEL_NR,
 };
 pub use plan::{
     quantize_mlp_weights, qweights_fingerprint, ChipPlan, ExecScratch, MatmulPlan, PanelOptions,

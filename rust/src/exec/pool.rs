@@ -299,6 +299,39 @@ impl WorkerPool {
             f(ac, oc, rows);
         });
     }
+
+    /// Shard `rows` output rows into contiguous, `MICRO_MR`-aligned
+    /// `f(lo, hi)` ranges that cover `0..rows` exactly once — the trainer's
+    /// GEMM dispatch. Unlike [`WorkerPool::for_each_batch_shard`] the
+    /// callee does its own (disjoint) output slicing, because the three
+    /// training GEMM shapes stride their operands differently.
+    ///
+    /// The split is a pure performance knob: the f32 kernels compute every
+    /// output element as an FMA chain in fixed reduction order, so each
+    /// element's value is independent of which lane (or how many lanes)
+    /// produced it — pooled results are bit-identical to inline execution.
+    pub fn run_row_shards(&self, rows: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if rows == 0 {
+            return;
+        }
+        if self.handles.is_empty() || rows == 1 {
+            if crate::obs::enabled() {
+                M_JOBS.inc();
+                M_INLINE.inc();
+                M_SHARDS.record(1.0);
+            }
+            f(0, rows);
+            return;
+        }
+        let rows_per = rows
+            .div_ceil((self.lanes * 2).min(rows))
+            .next_multiple_of(super::gemm::MICRO_MR);
+        let shards = rows.div_ceil(rows_per);
+        self.run(shards, &|s| {
+            let lo = s * rows_per;
+            f(lo, (lo + rows_per).min(rows));
+        });
+    }
 }
 
 impl Drop for WorkerPool {
@@ -416,6 +449,26 @@ mod tests {
             for b in 0..batch {
                 assert_eq!(out[b * m], a[b * k], "lanes={lanes} row {b}");
                 assert_eq!(out[b * m + 1], 1, "lanes={lanes} row {b} visited once");
+            }
+        }
+    }
+
+    #[test]
+    fn row_shards_cover_every_row_once_and_align() {
+        for rows in [1usize, 4, 13, 27, 128] {
+            for lanes in [1usize, 2, 4, 16] {
+                let pool = WorkerPool::new(lanes);
+                let hits: Vec<AtomicUsize> = (0..rows).map(|_| AtomicUsize::new(0)).collect();
+                pool.run_row_shards(rows, &|lo, hi| {
+                    assert!(lo < hi && hi <= rows, "lanes={lanes} rows={rows}");
+                    assert_eq!(lo % crate::exec::MICRO_MR, 0, "shard start unaligned");
+                    for h in &hits[lo..hi] {
+                        h.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+                for (r, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::SeqCst), 1, "lanes={lanes} row {r}");
+                }
             }
         }
     }

@@ -20,7 +20,18 @@
 //!   that execute *any* panel width — the parity oracle for the SIMD
 //!   layouts on hosts that cannot run them.
 //!
-//! Each family comes in an **i32** and an **i8→i32** panel flavour: plans
+//! A fourth flavour serves the **trainer**: f32 microkernels (AVX2
+//! `_mm256_fmadd_ps`, NEON `vfmaq_n_f32`, scalar `f32::mul_add`) behind
+//! the same table. Floats are not associative, so the f32 kernels buy
+//! bit-identity differently: every output element is a fused
+//! multiply-add chain in fixed `kk` order, lanes are output *columns*
+//! (never reduction splits), and `f32::mul_add` is the correctly-rounded
+//! scalar FMA — so scalar, AVX2 and NEON produce the same bits at every
+//! panel width, and pooled row-sharding cannot change any element's
+//! value. That is what lets `REPRO_SIMD` legs and 1..N trainer threads
+//! gate on bit-identical trained parameters.
+//!
+//! Each integer family comes in an **i32** and an **i8→i32** panel flavour: plans
 //! whose effective weights all fit `i8` (every quantized model — the
 //! datapath clamps to ±127) pack 4× narrower panels and the kernels widen
 //! to i32 lanes in-register (`_mm256_cvtepi8_epi32` / `vmovl_s8`), cutting
@@ -79,6 +90,12 @@ type Micro4I32 = unsafe fn(&[i32], usize, usize, &[i32], usize, &mut [i32]);
 type Micro1I32 = unsafe fn(&[i32], usize, &[i32], usize, &mut [i32]);
 type Micro4I8 = unsafe fn(&[i32], usize, usize, &[i8], usize, &mut [i32]);
 type Micro1I8 = unsafe fn(&[i32], usize, &[i8], usize, &mut [i32]);
+// The f32 trainer kernels carry a second activation stride (`k_stride`)
+// so one kernel family executes all three training GEMM shapes with no
+// transposed copies: element (r, kk) of the A operand lives at
+// `a[r * row_stride + kk * k_stride]`.
+type Micro4F32 = unsafe fn(&[f32], usize, usize, usize, &[f32], usize, &mut [f32]);
+type Micro1F32 = unsafe fn(&[f32], usize, usize, &[f32], usize, &mut [f32]);
 
 /// One resolved microkernel set: an ISA, its panel width, and the four
 /// kernel entry points (i32/i8 panels × 4-row/1-row tiles).
@@ -94,6 +111,8 @@ pub struct Kernel {
     m1_i32: Micro1I32,
     m4_i8: Micro4I8,
     m1_i8: Micro1I8,
+    m4_f32: Micro4F32,
+    m1_f32: Micro1F32,
 }
 
 impl std::fmt::Debug for Kernel {
@@ -123,6 +142,8 @@ impl Kernel {
             m1_i32: fallback_micro1_i32,
             m4_i8: fallback_micro4_i8,
             m1_i8: fallback_micro1_i8,
+            m4_f32: scalar_micro4_f32,
+            m1_f32: scalar_micro1_f32,
         }
     }
 
@@ -138,6 +159,8 @@ impl Kernel {
             m1_i32: scalar_micro1_i32,
             m4_i8: scalar_micro4_i8,
             m1_i8: scalar_micro1_i8,
+            m4_f32: scalar_micro4_f32,
+            m1_f32: scalar_micro1_f32,
         }
     }
 
@@ -146,6 +169,12 @@ impl Kernel {
         #[cfg(target_arch = "x86_64")]
         {
             if std::arch::is_x86_feature_detected!("avx2") {
+                // The f32 kernels need FMA (fused `_mm256_fmadd_ps` is what
+                // makes them bit-identical to scalar `f32::mul_add`). AVX2
+                // without FMA is essentially hypothetical, but degrade to
+                // the runtime-width scalar FMA kernels at nr = 8 — same
+                // bits, same layout, no parity impact.
+                let fma = std::arch::is_x86_feature_detected!("fma");
                 return Some(Kernel {
                     isa: Isa::Avx2,
                     nr: avx2::NR,
@@ -153,6 +182,8 @@ impl Kernel {
                     m1_i32: avx2::micro1_i32,
                     m4_i8: avx2::micro4_i8,
                     m1_i8: avx2::micro1_i8,
+                    m4_f32: if fma { avx2::micro4_f32 } else { scalar_micro4_f32 },
+                    m1_f32: if fma { avx2::micro1_f32 } else { scalar_micro1_f32 },
                 });
             }
         }
@@ -174,6 +205,8 @@ impl Kernel {
                 m1_i32: neon::micro1_i32,
                 m4_i8: neon::micro4_i8,
                 m1_i8: neon::micro1_i8,
+                m4_f32: neon::micro4_f32,
+                m1_f32: neon::micro1_f32,
             });
         }
         None
@@ -242,6 +275,55 @@ impl Kernel {
                 unsafe { (self.m1_i8)(a_row, kh, p, self.nr, acc) }
             }
         }
+    }
+
+    /// Trainer tile: `MICRO_MR` A-operand rows against one packed f32
+    /// panel, overwriting `acc[r * nr + j]` with the FMA-chain dot
+    /// product of row `r` and panel lane `j` in fixed `kk` order.
+    ///
+    /// Element `(r, kk)` of A is read at `a[r * row_stride + kk * k_stride]`,
+    /// so the same kernel executes `Z = A·W` (`k_stride = 1`),
+    /// `Gw = Aᵀ·dZ` (`row_stride = 1`, `k_stride = din`) and
+    /// `dPrev = dZ·Wᵀ` (`k_stride = 1`) with no transposed copies.
+    #[inline]
+    pub fn micro4_f32(
+        &self,
+        a: &[f32],
+        row_stride: usize,
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        acc: &mut [f32],
+    ) {
+        assert!(acc.len() >= MICRO_MR * self.nr, "acc buffer too small");
+        assert!(
+            kh == 0 || a.len() >= (MICRO_MR - 1) * row_stride + (kh - 1) * k_stride + 1,
+            "A operand slice too short for {MICRO_MR} rows"
+        );
+        assert!(panel.len() >= kh * self.nr, "panel too short");
+        // SAFETY: as in `micro4` — verified ISA, bounds asserted above.
+        unsafe { (self.m4_f32)(a, row_stride, k_stride, kh, panel, self.nr, acc) }
+    }
+
+    /// Single-row f32 edge tile, overwriting `acc[..nr]`. Same contract
+    /// as [`Kernel::micro4_f32`].
+    #[inline]
+    pub fn micro1_f32(
+        &self,
+        a_row: &[f32],
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        acc: &mut [f32],
+    ) {
+        assert!(acc.len() >= self.nr, "acc buffer too small");
+        assert!(
+            kh == 0 || a_row.len() >= (kh - 1) * k_stride + 1,
+            "A operand row too short"
+        );
+        assert!(panel.len() >= kh * self.nr, "panel too short");
+        // SAFETY: as in `micro4_f32`.
+        unsafe { (self.m1_f32)(a_row, k_stride, kh, panel, self.nr, acc) }
     }
 }
 
@@ -371,6 +453,53 @@ pub fn scalar_micro1_i8(a_row: &[i32], kh: usize, panel: &[i8], nr: usize, acc: 
         let w = &panel[kk * nr..(kk + 1) * nr];
         for (o, &wv) in acc.iter_mut().zip(w) {
             *o = o.wrapping_add(av.wrapping_mul(wv as i32));
+        }
+    }
+}
+
+/// Runtime-width scalar f32 reference: the full `MICRO_MR x nr` trainer
+/// tile. `f32::mul_add` is the correctly-rounded IEEE fused multiply-add,
+/// so at matching panel layout this is bit-identical to the AVX2/NEON FMA
+/// kernels — the f32 parity oracle at any width.
+pub fn scalar_micro4_f32(
+    a: &[f32],
+    row_stride: usize,
+    k_stride: usize,
+    kh: usize,
+    panel: &[f32],
+    nr: usize,
+    acc: &mut [f32],
+) {
+    let acc = &mut acc[..MICRO_MR * nr];
+    acc.fill(0.0);
+    for kk in 0..kh {
+        let w = &panel[kk * nr..(kk + 1) * nr];
+        for r in 0..MICRO_MR {
+            let av = a[r * row_stride + kk * k_stride];
+            let row = &mut acc[r * nr..(r + 1) * nr];
+            for (o, &wv) in row.iter_mut().zip(w) {
+                *o = av.mul_add(wv, *o);
+            }
+        }
+    }
+}
+
+/// Runtime-width scalar f32 reference: one row.
+pub fn scalar_micro1_f32(
+    a_row: &[f32],
+    k_stride: usize,
+    kh: usize,
+    panel: &[f32],
+    nr: usize,
+    acc: &mut [f32],
+) {
+    let acc = &mut acc[..nr];
+    acc.fill(0.0);
+    for kk in 0..kh {
+        let av = a_row[kk * k_stride];
+        let w = &panel[kk * nr..(kk + 1) * nr];
+        for (o, &wv) in acc.iter_mut().zip(w) {
+            *o = av.mul_add(wv, *o);
         }
     }
 }
@@ -539,6 +668,100 @@ mod avx2 {
         debug_assert_eq!(nr, NR);
         unsafe { micro1_i8_impl(a_row, kh, panel, acc) }
     }
+
+    // f32 trainer kernels: `_mm256_fmadd_ps` performs one correctly-rounded
+    // fused multiply-add per lane — the same operation as scalar
+    // `f32::mul_add` — and each lane is a distinct output column, so the
+    // vector accumulators are bit-identical to the scalar reference.
+
+    /// # Safety
+    /// Requires AVX2+FMA (checked at dispatch). A-operand element
+    /// `(r, kk)` is read at `a[r * row_stride + kk * k_stride]`; `a` must
+    /// cover `(MICRO_MR - 1) * row_stride + (kh - 1) * k_stride + 1`
+    /// values, `panel` at least `kh * NR`, `acc` at least `MICRO_MR * NR`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn micro4_f32_impl(
+        a: &[f32],
+        row_stride: usize,
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        acc: &mut [f32],
+    ) {
+        unsafe {
+            let pa = a.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut acc2 = _mm256_setzero_ps();
+            let mut acc3 = _mm256_setzero_ps();
+            for kk in 0..kh {
+                let w = _mm256_loadu_ps(pp.add(kk * NR));
+                let a0 = _mm256_set1_ps(*pa.add(kk * k_stride));
+                let a1 = _mm256_set1_ps(*pa.add(row_stride + kk * k_stride));
+                let a2 = _mm256_set1_ps(*pa.add(2 * row_stride + kk * k_stride));
+                let a3 = _mm256_set1_ps(*pa.add(3 * row_stride + kk * k_stride));
+                acc0 = _mm256_fmadd_ps(a0, w, acc0);
+                acc1 = _mm256_fmadd_ps(a1, w, acc1);
+                acc2 = _mm256_fmadd_ps(a2, w, acc2);
+                acc3 = _mm256_fmadd_ps(a3, w, acc3);
+            }
+            let po = acc.as_mut_ptr();
+            _mm256_storeu_ps(po, acc0);
+            _mm256_storeu_ps(po.add(NR), acc1);
+            _mm256_storeu_ps(po.add(2 * NR), acc2);
+            _mm256_storeu_ps(po.add(3 * NR), acc3);
+        }
+    }
+
+    /// # Safety
+    /// As [`micro4_f32_impl`], single row (`a_row` covers
+    /// `(kh - 1) * k_stride + 1` values).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn micro1_f32_impl(
+        a_row: &[f32],
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        acc: &mut [f32],
+    ) {
+        unsafe {
+            let pa = a_row.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = _mm256_setzero_ps();
+            for kk in 0..kh {
+                let w = _mm256_loadu_ps(pp.add(kk * NR));
+                let av = _mm256_set1_ps(*pa.add(kk * k_stride));
+                acc0 = _mm256_fmadd_ps(av, w, acc0);
+            }
+            _mm256_storeu_ps(acc.as_mut_ptr(), acc0);
+        }
+    }
+
+    pub unsafe fn micro4_f32(
+        a: &[f32],
+        row_stride: usize,
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        nr: usize,
+        acc: &mut [f32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe { micro4_f32_impl(a, row_stride, k_stride, kh, panel, acc) }
+    }
+
+    pub unsafe fn micro1_f32(
+        a_row: &[f32],
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        nr: usize,
+        acc: &mut [f32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe { micro1_f32_impl(a_row, k_stride, kh, panel, acc) }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -666,6 +889,70 @@ mod neon {
             vst1q_s32(acc.as_mut_ptr(), acc0);
         }
     }
+
+    // f32 trainer kernels: `vfmaq_n_f32` is a correctly-rounded fused
+    // multiply-add per lane (FMLA), the same operation as scalar
+    // `f32::mul_add`, so the vector sums are bit-identical to the scalar
+    // reference at nr = 4.
+
+    /// # Safety
+    /// A-operand element `(r, kk)` is read at
+    /// `a[r * row_stride + kk * k_stride]`; `a` must cover
+    /// `(MICRO_MR - 1) * row_stride + (kh - 1) * k_stride + 1` values,
+    /// `panel` at least `kh * NR`, `acc` at least `MICRO_MR * NR`.
+    pub unsafe fn micro4_f32(
+        a: &[f32],
+        row_stride: usize,
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        nr: usize,
+        acc: &mut [f32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe {
+            let pa = a.as_ptr();
+            let pp = panel.as_ptr();
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut acc2 = vdupq_n_f32(0.0);
+            let mut acc3 = vdupq_n_f32(0.0);
+            for kk in 0..kh {
+                let w = vld1q_f32(pp.add(kk * NR));
+                acc0 = vfmaq_n_f32(acc0, w, *pa.add(kk * k_stride));
+                acc1 = vfmaq_n_f32(acc1, w, *pa.add(row_stride + kk * k_stride));
+                acc2 = vfmaq_n_f32(acc2, w, *pa.add(2 * row_stride + kk * k_stride));
+                acc3 = vfmaq_n_f32(acc3, w, *pa.add(3 * row_stride + kk * k_stride));
+            }
+            let po = acc.as_mut_ptr();
+            vst1q_f32(po, acc0);
+            vst1q_f32(po.add(NR), acc1);
+            vst1q_f32(po.add(2 * NR), acc2);
+            vst1q_f32(po.add(3 * NR), acc3);
+        }
+    }
+
+    /// # Safety
+    /// As [`micro4_f32`], single row.
+    pub unsafe fn micro1_f32(
+        a_row: &[f32],
+        k_stride: usize,
+        kh: usize,
+        panel: &[f32],
+        nr: usize,
+        acc: &mut [f32],
+    ) {
+        debug_assert_eq!(nr, NR);
+        unsafe {
+            let pp = panel.as_ptr();
+            let mut acc0 = vdupq_n_f32(0.0);
+            for kk in 0..kh {
+                let w = vld1q_f32(pp.add(kk * NR));
+                acc0 = vfmaq_n_f32(acc0, w, *a_row.as_ptr().add(kk * k_stride));
+            }
+            vst1q_f32(acc.as_mut_ptr(), acc0);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -770,6 +1057,87 @@ mod tests {
             let mut acc = [0i32; MICRO_MR * MAX_NR];
             kr.micro4(&a, stride, kh, PanelRef::I32(&p32), &mut acc);
             assert_eq!(&acc[..MICRO_MR * nr], &want[..], "{:?}", kr.isa());
+        }
+    }
+
+    /// ReLU-sparse-ish f32 values: negatives, exact zeros, and a wide
+    /// magnitude range so FMA-vs-separate-rounding differences would show.
+    fn rand_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.bool(0.3) {
+                    0.0
+                } else {
+                    rng.range_f32(-2.0, 2.0) * if rng.bool(0.2) { 1e4 } else { 1.0 }
+                }
+            })
+            .collect()
+    }
+
+    /// Every constructible kernel's f32 tile is bit-identical to an
+    /// independent sequential `mul_add` chain in kk order — across both
+    /// stride shapes the trainer uses, partial-tile widths included.
+    /// This is the property that makes trained params bit-identical
+    /// across `REPRO_SIMD` legs.
+    #[test]
+    fn all_f32_kernels_match_fma_chain_bitwise() {
+        let mut kernels = vec![Kernel::scalar_fallback(), *kernel()];
+        if let Some(k) = Kernel::avx2() {
+            kernels.push(k);
+        }
+        if let Some(k) = Kernel::neon() {
+            kernels.push(k);
+        }
+        let mut rng = Rng::new(0xF32);
+        for kr in kernels {
+            let nr = kr.nr();
+            let reference = Kernel::scalar_reference(nr);
+            for kh in [1usize, 2, 5, 8, 17, 64] {
+                // (row_stride, k_stride): the forward/dPrev shape
+                // (contiguous rows) and the Gw shape (unit row stride,
+                // strided kk walk).
+                for (row_stride, k_stride) in [(kh + 3, 1usize), (1usize, kh + 3)] {
+                    let alen = (MICRO_MR - 1) * row_stride + (kh - 1) * k_stride + 1;
+                    let a = rand_f32(&mut rng, alen);
+                    let cols: Vec<Vec<f32>> =
+                        (0..nr).map(|_| rand_f32(&mut rng, kh)).collect();
+                    // independent oracle: sequential fused chain per element
+                    let mut want = vec![0.0f32; MICRO_MR * nr];
+                    for r in 0..MICRO_MR {
+                        for (j, col) in cols.iter().enumerate() {
+                            let mut s = 0.0f32;
+                            for (kk, &wv) in col.iter().enumerate() {
+                                s = a[r * row_stride + kk * k_stride].mul_add(wv, s);
+                            }
+                            want[r * nr + j] = s;
+                        }
+                    }
+                    let mut panel = vec![0.0f32; kh * nr];
+                    for (j, col) in cols.iter().enumerate() {
+                        for (kk, &wv) in col.iter().enumerate() {
+                            panel[kk * nr + j] = wv;
+                        }
+                    }
+
+                    let mut acc = [0.0f32; MICRO_MR * MAX_NR];
+                    for k in [&kr, &reference] {
+                        k.micro4_f32(&a, row_stride, k_stride, kh, &panel, &mut acc);
+                        let got: Vec<u32> =
+                            acc[..MICRO_MR * nr].iter().map(|v| v.to_bits()).collect();
+                        let wantb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(
+                            got,
+                            wantb,
+                            "{:?} micro4_f32 kh={kh} rs={row_stride} ks={k_stride}",
+                            k.isa()
+                        );
+
+                        k.micro1_f32(&a, k_stride, kh, &panel, &mut acc);
+                        let got1: Vec<u32> = acc[..nr].iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(got1, wantb[..nr], "{:?} micro1_f32 kh={kh}", k.isa());
+                    }
+                }
+            }
         }
     }
 

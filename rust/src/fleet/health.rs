@@ -23,15 +23,19 @@ use super::batcher::BatcherConfig;
 use super::config::FleetConfig;
 use super::provision::{ChipStatus, Fleet, FleetChip, RetrainEvent};
 use super::scheduler::{self, ChipUnit, OpenWorkloadConfig, WorkloadReport};
-use crate::chip::{Chip, Engine};
+use crate::chip::{Backend, Chip, Engine};
 use crate::coordinator::fap::apply_fap_planned;
-use crate::coordinator::fapt::FaptConfig;
+use crate::coordinator::fapt::{fapt_retrain_native_pooled, FaptConfig, FaptResult};
 use crate::data::Dataset;
+use crate::exec::ChipPlan;
 use crate::mapping::MaskKind;
 use crate::model::quant::Calibration;
-use crate::model::Params;
-use crate::obs::{LazyCounter, Trace};
+use crate::model::{Arch, Params};
+use crate::obs::{LazyCounter, LazyHistogram, Trace};
 use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 // Health-loop transition metrics: one increment per transition, so the
 // snapshot's totals equal the per-step counts `fleet.json` reports.
@@ -40,6 +44,16 @@ static M_RETRAIN: LazyCounter = LazyCounter::new("fleet.health.retrain");
 static M_RETIRE: LazyCounter = LazyCounter::new("fleet.health.retire");
 static M_SLO_BREACH: LazyCounter = LazyCounter::new("fleet.health.slo_breach");
 static M_SDC: LazyCounter = LazyCounter::new("fleet.sdc.samples");
+/// Per-retrain *virtual* downtime in minutes (`cfg.retrain_downtime_hours`
+/// × 60) — deliberately the modeled figure, not measured wall time, so
+/// `results/metrics.json` stays byte-identical across same-seed runs (see
+/// DESIGN.md "Observability layer"). True wall minutes per retrain go to
+/// `fleet.json` (`wall_minutes` / `retrain_minutes_total`) and the health
+/// log line, which are not under the byte-identity contract.
+static M_RETRAIN_MINUTES: LazyHistogram = LazyHistogram::new(
+    "fleet.health.retrain_downtime_minutes",
+    &[1.0, 5.0, 10.0, 12.0, 20.0, 30.0, 60.0, 120.0],
+);
 
 /// Trace track the health loop's fleet-wide events render on. Chip tracks
 /// use fleet chip ids, which never reach `u32::MAX`.
@@ -173,22 +187,39 @@ fn evaluate_on(
     sess.evaluate(eval)
 }
 
-/// One health pass over chip `id`: re-localize from the aging snapshot,
-/// re-mask, evaluate against the SLO, retrain / retire as needed. Also the
-/// provisioning pass (at hour 0 the "aged" state is the fab state).
-pub fn health_check(
+/// One FAP+T retrain the probe pass queued: everything the retrain needs,
+/// detached from the fleet borrow so queued jobs can run concurrently.
+struct RetrainJob {
+    id: usize,
+    at_hours: f64,
+    acc_before: f64,
+    /// Detected faulty MACs at probe time (for the retrain event record).
+    faulty_macs: usize,
+    /// Golden baseline pruned by the chip's current masks — Algorithm 1's
+    /// starting point.
+    fap_golden: Params,
+    /// The chip's compiled plan (shared from the engine cache); the job
+    /// retrains against its prune masks.
+    plan: Arc<ChipPlan>,
+    fcfg: FaptConfig,
+}
+
+/// Probe pass over chip `id`: re-localize from the aging snapshot,
+/// re-mask, evaluate against the SLO. Chips that pass (or exhaust the
+/// retrain budget and retire) are handled in place; a chip below the SLO
+/// with budget left returns a [`RetrainJob`] for the retrain phase.
+fn probe_chip(
     engine: &mut Engine<'_>,
     fleet: &mut Fleet,
     id: usize,
     golden: &Params,
-    train: &Dataset,
     eval: &Dataset,
-) -> Result<()> {
+) -> Result<Option<RetrainJob>> {
     let Fleet { cfg, arch, calib, slo, chips, .. } = fleet;
     let slo = *slo;
     let chip = &mut chips[id];
     if !chip.is_active() {
-        return Ok(());
+        return Ok(None);
     }
     let at_hours = chip.aging.hours();
     let snapshot = chip.aging.snapshot();
@@ -205,7 +236,7 @@ pub fn health_check(
             .mitigate(MaskKind::Unmitigated)
             .threads(1);
         chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
-        return Ok(());
+        return Ok(None);
     }
 
     // managed: re-run localization exactly like the post-fab flow, then
@@ -231,17 +262,16 @@ pub fn health_check(
     chip.params = remasked;
     chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
     if chip.accuracy >= slo {
-        return Ok(());
+        return Ok(None);
     }
 
     if chip.retrains.len() >= cfg.max_retrains {
         chip.status = ChipStatus::Retired { at_hours };
-        return Ok(());
+        return Ok(None);
     }
 
     // FAP+T (Algorithm 1) from the golden baseline pruned by the current
     // masks — the per-chip retrain the paper amortizes over the lifetime
-    let acc_before = chip.accuracy;
     let (fap_golden, _) = apply_fap_planned(golden, &plan);
     let fcfg = FaptConfig {
         max_epochs: cfg.retrain_epochs,
@@ -249,20 +279,154 @@ pub fn health_check(
         seed: cfg.seed ^ ((id as u64) << 8) ^ chip.retrains.len() as u64,
         snapshot_epochs: vec![],
     };
-    let result = engine.retrain(arch, &fap_golden, &plan.masks().prune, train, &fcfg)?;
-    chip.params = result.params;
-    chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
-    chip.downtime_hours += cfg.retrain_downtime_hours;
-    chip.retrains.push(RetrainEvent {
+    Ok(Some(RetrainJob {
+        id,
         at_hours,
+        acc_before: chip.accuracy,
         faulty_macs: known.faulty_mac_count(),
-        acc_before,
-        acc_after: chip.accuracy,
-        epochs: cfg.retrain_epochs,
-        downtime_hours: cfg.retrain_downtime_hours,
+        fap_golden,
+        plan,
+        fcfg,
+    }))
+}
+
+/// Run the probe pass's queued retrains — concurrently when the engine is
+/// native and more than one chip breached. Returns `(result,
+/// wall_minutes)` per job, in job order.
+fn run_retrains(
+    engine: &mut Engine<'_>,
+    arch: &Arch,
+    jobs: &[RetrainJob],
+    train: &Dataset,
+) -> Result<Vec<(FaptResult, f64)>> {
+    if jobs.is_empty() {
+        return Ok(Vec::new());
+    }
+    if engine.backend() == Backend::Xla {
+        // the PJRT runtime stays on this thread: retrain serially through
+        // the engine (which also counts the dispatch)
+        let mut out = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let t0 = Instant::now();
+            let result = engine.retrain(
+                arch,
+                &job.fap_golden,
+                &job.plan.masks().prune,
+                train,
+                &job.fcfg,
+            )?;
+            out.push((result, t0.elapsed().as_secs_f64() / 60.0));
+        }
+        return Ok(out);
+    }
+    // native retrains bypass Engine::retrain, so count the dispatches here
+    for _ in jobs {
+        crate::chip::record_retrain_dispatch();
+    }
+    if jobs.len() == 1 {
+        // one breached chip: give it every lane of the engine's pool
+        let job = &jobs[0];
+        let pool = engine.worker_pool();
+        let t0 = Instant::now();
+        let result = fapt_retrain_native_pooled(
+            arch,
+            &job.fap_golden,
+            &job.plan.masks().prune,
+            train,
+            &job.fcfg,
+            Some(&pool),
+        )?;
+        return Ok(vec![(result, t0.elapsed().as_secs_f64() / 60.0)]);
+    }
+    // several breached chips: chip-level parallelism beats minibatch-level
+    // here — run each retrain single-threaded, one per worker, bounded by
+    // the engine's thread budget. Results are slotted by job index, so
+    // the claim order (and any interleaving) never reorders them; each
+    // retrain is internally deterministic per its seed either way.
+    let budget = engine.threads().min(jobs.len()).max(1);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<(FaptResult, f64)>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..budget {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let job = &jobs[i];
+                let t0 = Instant::now();
+                let res = fapt_retrain_native_pooled(
+                    arch,
+                    &job.fap_golden,
+                    &job.plan.masks().prune,
+                    train,
+                    &job.fcfg,
+                    None,
+                )
+                .map(|r| (r, t0.elapsed().as_secs_f64() / 60.0));
+                *slots[i].lock().unwrap() = Some(res);
+            });
+        }
     });
-    if chip.accuracy < slo {
-        chip.status = ChipStatus::Retired { at_hours };
+    let mut out = Vec::with_capacity(jobs.len());
+    for slot in slots {
+        out.push(slot.into_inner().unwrap().expect("retrain worker finished its slot")?);
+    }
+    Ok(out)
+}
+
+/// One health pass over the whole fleet: probe every chip (re-localize,
+/// re-mask, evaluate against the SLO, retire at budget), then run every
+/// queued FAP+T retrain — concurrently on native engines — and apply the
+/// results in chip-id order. Also the provisioning pass (at hour 0 the
+/// "aged" state is the fab state).
+pub fn health_check_all(
+    engine: &mut Engine<'_>,
+    fleet: &mut Fleet,
+    golden: &Params,
+    train: &Dataset,
+    eval: &Dataset,
+) -> Result<()> {
+    let mut jobs = Vec::new();
+    for id in 0..fleet.chips.len() {
+        if let Some(job) = probe_chip(engine, fleet, id, golden, eval)? {
+            jobs.push(job);
+        }
+    }
+    let arch = fleet.arch.clone();
+    let results = run_retrains(engine, &arch, &jobs, train)?;
+    for (job, (result, wall_minutes)) in jobs.into_iter().zip(results) {
+        let Fleet { cfg, calib, slo, chips, .. } = &mut *fleet;
+        let slo = *slo;
+        let chip = &mut chips[job.id];
+        chip.params = result.params;
+        chip.accuracy = evaluate_on(engine, &chip.view, &chip.params, calib, eval)?;
+        chip.downtime_hours += cfg.retrain_downtime_hours;
+        // the obs histogram records the *virtual* downtime figure (see
+        // M_RETRAIN_MINUTES); measured wall minutes go to fleet.json
+        M_RETRAIN_MINUTES.record(cfg.retrain_downtime_hours * 60.0);
+        eprintln!(
+            "[fleet] chip {} retrain #{} at {:.0}h: acc {:.3} -> {:.3} ({:.2} min wall)",
+            job.id,
+            chip.retrains.len() + 1,
+            job.at_hours,
+            job.acc_before,
+            chip.accuracy,
+            wall_minutes,
+        );
+        chip.retrains.push(RetrainEvent {
+            at_hours: job.at_hours,
+            faulty_macs: job.faulty_macs,
+            acc_before: job.acc_before,
+            acc_after: chip.accuracy,
+            epochs: cfg.retrain_epochs,
+            downtime_hours: cfg.retrain_downtime_hours,
+            wall_minutes,
+        });
+        if chip.accuracy < slo {
+            chip.status = ChipStatus::Retired { at_hours: job.at_hours };
+        }
     }
     Ok(())
 }
@@ -331,9 +495,7 @@ pub fn run_lifetime_traced(
         let retrains_before: usize = before.iter().map(|(r, _)| r).sum();
         let retired_before = fleet.chips.len() - fleet.active_chips();
         M_HEALTH_CHECKS.add(fleet.active_chips() as u64);
-        for id in 0..fleet.chips.len() {
-            health_check(engine, fleet, id, golden, train, eval)?;
-        }
+        health_check_all(engine, fleet, golden, train, eval)?;
         let retrains: usize =
             fleet.chips.iter().map(|c| c.retrains.len()).sum::<usize>() - retrains_before;
         let retired = (fleet.chips.len() - fleet.active_chips()) - retired_before;
@@ -356,6 +518,25 @@ pub fn run_lifetime_traced(
             for (c, (r0, was_active)) in fleet.chips.iter().zip(&before) {
                 if c.retrains.len() > *r0 {
                     t.instant(c.id as u32, 0, "retrain", "health", vec![("acc", c.accuracy)]);
+                    // retrain downtime as a span on the health track: one
+                    // virtual downtime minute renders as one millisecond.
+                    // Deterministic mapping only — measured wall minutes
+                    // never enter the trace (byte-identity contract)
+                    let ev = c.retrains.last().unwrap();
+                    let downtime_min = ev.downtime_hours * 60.0;
+                    t.complete(
+                        HEALTH_TRACK,
+                        0,
+                        (downtime_min * 1e6) as u64,
+                        "retrain",
+                        "health",
+                        vec![
+                            ("chip", c.id as f64),
+                            ("acc_before", ev.acc_before),
+                            ("acc_after", ev.acc_after),
+                            ("downtime_min", downtime_min),
+                        ],
+                    );
                 }
                 if *was_active && !c.is_active() {
                     t.instant(c.id as u32, 0, "retire", "health", vec![("acc", c.accuracy)]);

@@ -25,6 +25,7 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
                     .field("acc_after", Json::num(r.acc_after))
                     .field("epochs", Json::num(r.epochs as f64))
                     .field("downtime_hours", Json::num(r.downtime_hours))
+                    .field("wall_minutes", Json::num(r.wall_minutes))
             })
             .collect::<Vec<_>>();
         let (status, retired_at) = match c.status {
@@ -95,6 +96,10 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
 
     let total_retrains: usize = fleet.chips.iter().map(|c| c.retrains.len()).sum();
     let total_downtime: f64 = fleet.chips.iter().map(|c| c.downtime_hours).sum();
+    // measured wall minutes across every retrain in the fleet's life —
+    // the host-side cost behind the paper's 12-minute-per-chip budget
+    let retrain_minutes_total: f64 =
+        fleet.chips.iter().flat_map(|c| c.retrains.iter().map(|r| r.wall_minutes)).sum();
     Json::obj()
         .field("campaign", Json::str("fleet"))
         .field("backend", Json::str(backend.to_string()))
@@ -151,6 +156,7 @@ pub fn fleet_json(fleet: &Fleet, outcome: &FleetOutcome, backend: &str) -> Json 
         .field("latency_breach_steps", Json::num(outcome.latency_breach_steps as f64))
         .field("total_retrains", Json::num(total_retrains as f64))
         .field("total_downtime_hours", Json::num(total_downtime))
+        .field("retrain_minutes_total", Json::num(retrain_minutes_total))
         .field("steps", Json::Arr(steps))
         .field("per_chip", Json::Arr(chips))
 }
@@ -175,6 +181,18 @@ pub fn print_summary(fleet: &Fleet, outcome: &FleetOutcome) {
         outcome.provision_yield * 100.0,
         fleet.effective_yield() * 100.0
     );
+    let total_retrains: usize = fleet.chips.iter().map(|c| c.retrains.len()).sum();
+    if total_retrains > 0 {
+        let minutes: f64 =
+            fleet.chips.iter().flat_map(|c| c.retrains.iter().map(|r| r.wall_minutes)).sum();
+        println!(
+            "  retrains: {} across the fleet, {:.2} min host wall time total \
+             ({:.2} min/retrain; paper budget 12 min)",
+            total_retrains,
+            minutes,
+            minutes / total_retrains as f64,
+        );
+    }
     println!(
         "  open loop ({} arrivals): offered {} served {} shed {} timed-out {} \
          ({:.0} rps offered, {:.0} rps goodput, batch fill {:.0}%)",

@@ -1,0 +1,277 @@
+//! Property tests: the packed-panel f32 training kernels and the pooled
+//! minibatch trainer ([`repro::coordinator::trainer`]).
+//!
+//! Two bit-identity contracts are pinned here:
+//!
+//! * **Kernel**: the dispatched f32 microkernels (AVX2 FMA / NEON /
+//!   scalar `mul_add`) produce bit-identical accumulators to the
+//!   runtime-width scalar reference at every stride pattern the trainer
+//!   uses (`Z = A·W`, `Gw = Aᵀ·dZ`, `dPrev = dZ·Wᵀ`), including partial
+//!   tail panels and ReLU-sparse operands.
+//! * **Trainer**: trained parameters and losses are bit-identical across
+//!   pool lane counts and across kernel/panel-width choices — the
+//!   property that lets the fleet shard retrains without changing a
+//!   single result bit.
+//!
+//! Uses the in-repo harness (`rust/src/util/prop.rs`; the offline registry
+//! has no proptest). Failing cases replay with `PROP_REPLAY=<seed>`.
+
+use repro::coordinator::trainer::{
+    he_init, native_train_step, native_train_step_fast, run_steps_native_pooled,
+    NativeTrainState, TrainConfig, TrainScratch,
+};
+use repro::data::Dataset;
+use repro::exec::{kernel, Kernel, WorkerPool, MAX_NR, MICRO_MR};
+use repro::model::{Arch, Layer, Params};
+use repro::prop_assert;
+use repro::util::{prop, Rng};
+
+fn tiny_arch() -> Arch {
+    Arch {
+        name: "tiny",
+        layers: vec![Layer::fc(9, 16, true), Layer::fc(16, 3, false)],
+        input_shape: vec![9],
+        num_classes: 3,
+        eval_batch: 16,
+        train_batch: 16,
+    }
+}
+
+/// Random activations with post-ReLU-style sparsity (exact zeros).
+fn sparse_operand(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| if rng.bool(0.3) { 0.0 } else { rng.normal() }).collect()
+}
+
+fn random_dataset(rng: &mut Rng, arch: &Arch, n: usize) -> Dataset {
+    let x: Vec<f32> = sparse_operand(rng, n * arch.input_len());
+    let y: Vec<i32> = (0..n).map(|_| rng.below(arch.num_classes) as i32).collect();
+    Dataset::new(x, y, arch.input_len(), arch.num_classes)
+}
+
+fn bits(p: &Params) -> Vec<u32> {
+    p.layers.iter().flat_map(|(w, b)| w.iter().chain(b).map(|v| v.to_bits())).collect()
+}
+
+/// The dispatched f32 microkernels are bit-identical to the runtime-width
+/// scalar reference for every (kh, stride, sparsity) case — covering all
+/// three GEMM stride patterns the trainer issues, and the nr=4 fallback
+/// against the reference at its own width. On AVX2/NEON hosts this pins
+/// the real vector FMA kernels against scalar `f32::mul_add` chains.
+#[test]
+fn prop_f32_micro_kernels_match_scalar_reference() {
+    prop::check("f32_micro_vs_reference", 0xF1, 60, |rng| {
+        let kh = 1 + rng.below(40);
+        // the trainer's stride patterns: rows contiguous (k_stride 1,
+        // row_stride >= kh) and columns-of-A walks (k_stride = lead,
+        // row_stride 1) — plus arbitrary combinations
+        let (row_stride, k_stride) = match rng.below(3) {
+            0 => (kh + rng.below(4), 1),
+            1 => (1, kh + rng.below(4)),
+            _ => (1 + rng.below(5), 1 + rng.below(5)),
+        };
+        let a_len = (MICRO_MR - 1) * row_stride + (kh - 1) * k_stride + 1;
+        let a = sparse_operand(rng, a_len);
+        for kr in [*kernel(), Kernel::scalar_fallback()] {
+            let nr = kr.nr();
+            let oracle = Kernel::scalar_reference(nr);
+            let panel = sparse_operand(rng, kh * nr);
+
+            let mut got = vec![f32::NAN; MICRO_MR * MAX_NR];
+            let mut want = vec![f32::NAN; MICRO_MR * MAX_NR];
+            kr.micro4_f32(&a, row_stride, k_stride, kh, &panel, &mut got);
+            oracle.micro4_f32(&a, row_stride, k_stride, kh, &panel, &mut want);
+            for i in 0..MICRO_MR * nr {
+                prop_assert!(
+                    got[i].to_bits() == want[i].to_bits(),
+                    "micro4 {:?} nr={nr}: kh={kh} rs={row_stride} ks={k_stride} i={i}: \
+                     {} != {}",
+                    kr.isa(),
+                    got[i],
+                    want[i]
+                );
+            }
+
+            let mut got1 = vec![f32::NAN; MAX_NR];
+            let mut want1 = vec![f32::NAN; MAX_NR];
+            kr.micro1_f32(&a, k_stride, kh, &panel, &mut got1);
+            oracle.micro1_f32(&a, k_stride, kh, &panel, &mut want1);
+            for j in 0..nr {
+                prop_assert!(
+                    got1[j].to_bits() == want1[j].to_bits(),
+                    "micro1 {:?} nr={nr}: kh={kh} ks={k_stride} j={j}",
+                    kr.isa()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The packed-panel fast step computes the same gradients as the naive
+/// triple-loop step to float tolerance (they are the same reduction in a
+/// different association: fused mul_add chains vs separate mul+add, so
+/// bit equality is not expected — closeness is).
+#[test]
+fn prop_fast_step_matches_naive_step_approximately() {
+    prop::check("fast_vs_naive_step", 0xF2, 25, |rng| {
+        let arch = tiny_arch();
+        let b = arch.train_batch;
+        let x = sparse_operand(rng, b * arch.input_len());
+        let y: Vec<i32> = (0..b).map(|_| rng.below(arch.num_classes) as i32).collect();
+        let seed = rng.below(1 << 20) as u64;
+        let lr = 0.05;
+
+        let mut naive = NativeTrainState::init(&arch, seed);
+        let loss_naive = native_train_step(&arch, &mut naive, None, &x, &y, b, lr);
+
+        let mut fast = NativeTrainState::init(&arch, seed);
+        let mut scratch = TrainScratch::new(&arch, b);
+        let loss_fast =
+            native_train_step_fast(&arch, &mut fast, None, &x, &y, lr, &mut scratch, None);
+
+        prop_assert!(
+            (loss_naive - loss_fast).abs() <= 1e-4 * (1.0 + loss_naive.abs()),
+            "loss diverged: naive {loss_naive} vs fast {loss_fast}"
+        );
+        for (li, ((wn, bn), (wf, bf))) in
+            naive.params.layers.iter().zip(&fast.params.layers).enumerate()
+        {
+            for (i, (a, b)) in wn.iter().zip(wf).chain(bn.iter().zip(bf)).enumerate() {
+                prop_assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + a.abs()),
+                    "layer {li} param {i}: naive {a} vs fast {b}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Training through the pooled driver is bit-identical at every lane
+/// count — losses and trained parameters — including lane counts that
+/// exceed the batch, and with the final-batch padding path exercised
+/// (dataset size not a batch multiple).
+#[test]
+fn prop_pooled_training_is_bit_identical() {
+    let pools: Vec<WorkerPool> = [1usize, 2, 3, 7].into_iter().map(WorkerPool::new).collect();
+    prop::check("pooled_training_bits", 0xF3, 12, |rng| {
+        let arch = tiny_arch();
+        // 24..56 samples at batch 16: mostly not a batch multiple, so the
+        // final-batch padding path runs
+        let ds = random_dataset(rng, &arch, 24 + rng.below(33));
+        let cfg = TrainConfig {
+            steps: 5 + rng.below(4),
+            lr: 0.05,
+            end_lr_frac: 0.5,
+            seed: rng.below(1 << 20) as u64,
+            log_every: 0,
+        };
+        let mut single = NativeTrainState::init(&arch, cfg.seed);
+        let losses = run_steps_native_pooled(&arch, &mut single, None, &ds, &cfg, None)
+            .map_err(|e| e.to_string())?;
+        for pool in &pools {
+            let mut st = NativeTrainState::init(&arch, cfg.seed);
+            let got = run_steps_native_pooled(&arch, &mut st, None, &ds, &cfg, Some(pool))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                got.iter().map(|v| v.to_bits()).eq(losses.iter().map(|v| v.to_bits())),
+                "losses differ at {} lanes (n={})",
+                pool.lanes(),
+                ds.len()
+            );
+            prop_assert!(
+                bits(&st.params) == bits(&single.params),
+                "params differ at {} lanes (n={})",
+                pool.lanes(),
+                ds.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The trained bits do not depend on which kernel computed them: the
+/// dispatched ISA, the runtime-width scalar reference at the same panel
+/// width, and the nr=4 scalar fallback all train identical parameters
+/// (panel width only changes tail-panel zero padding, which never enters
+/// an FMA chain's value).
+#[test]
+fn prop_kernel_and_panel_width_do_not_change_trained_bits() {
+    prop::check("kernel_choice_bits", 0xF4, 15, |rng| {
+        let arch = tiny_arch();
+        let b = arch.train_batch;
+        let x = sparse_operand(rng, b * arch.input_len());
+        let y: Vec<i32> = (0..b).map(|_| rng.below(arch.num_classes) as i32).collect();
+        let seed = rng.below(1 << 20) as u64;
+        let steps = 2 + rng.below(4);
+
+        let mut runs: Vec<Params> = Vec::new();
+        for kr in [*kernel(), Kernel::scalar_reference(kernel().nr()), Kernel::scalar_fallback()]
+        {
+            let mut st = NativeTrainState::init(&arch, seed);
+            let mut sc = TrainScratch::with_kernel(&arch, b, kr);
+            for _ in 0..steps {
+                native_train_step_fast(&arch, &mut st, None, &x, &y, 0.03, &mut sc, None);
+            }
+            runs.push(st.params);
+        }
+        prop_assert!(bits(&runs[0]) == bits(&runs[1]), "dispatched != scalar reference");
+        prop_assert!(bits(&runs[0]) == bits(&runs[2]), "dispatched != nr=4 fallback");
+        Ok(())
+    });
+}
+
+/// Masked (FAP+T) training through the fast pooled path keeps pruned
+/// weights exactly zero after every step, and the surviving weights
+/// match the naive masked step to float tolerance.
+#[test]
+fn prop_masked_fast_training_keeps_pruned_weights_zero() {
+    let pool = WorkerPool::new(3);
+    prop::check("masked_fast_zeros", 0xF5, 15, |rng| {
+        let arch = tiny_arch();
+        let b = arch.train_batch;
+        let masks: Vec<Vec<f32>> = arch
+            .weighted_layers()
+            .iter()
+            .map(|l| (0..l.weight_len()).map(|_| if rng.bool(0.3) { 0.0 } else { 1.0 }).collect())
+            .collect();
+        let mut init = he_init(&arch, rng.below(1 << 20) as u64);
+        init.apply_masks(&masks);
+
+        let mut st = NativeTrainState::from_params(&arch, &init);
+        let mut sc = TrainScratch::new(&arch, b);
+        for step in 0..4 {
+            let x = sparse_operand(rng, b * arch.input_len());
+            let y: Vec<i32> = (0..b).map(|_| rng.below(arch.num_classes) as i32).collect();
+            native_train_step_fast(
+                &arch,
+                &mut st,
+                Some(&masks),
+                &x,
+                &y,
+                0.05,
+                &mut sc,
+                Some(&pool),
+            );
+            for (li, ((w, _), m)) in st.params.layers.iter().zip(&masks).enumerate() {
+                for (i, (&wv, &mv)) in w.iter().zip(m).enumerate() {
+                    if mv == 0.0 {
+                        prop_assert!(
+                            wv == 0.0,
+                            "pruned weight drifted: layer {li} idx {i} = {wv} (step {step})"
+                        );
+                    }
+                }
+            }
+        }
+        // the mask left something alive, and training moved it
+        let moved = st
+            .params
+            .layers
+            .iter()
+            .zip(&init.layers)
+            .any(|((w, _), (w0, _))| w.iter().zip(w0).any(|(a, b)| a != b));
+        prop_assert!(moved, "masked training moved no weights");
+        Ok(())
+    });
+}
