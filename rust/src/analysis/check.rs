@@ -1,0 +1,638 @@
+//! Exhaustive-interleaving model checking of the crate's two load-bearing
+//! concurrency protocols:
+//!
+//! * the [`crate::exec::WorkerPool`] claim/completion protocol (one
+//!   `Mutex<State>`, two condvars, three atomics — PR 4), and
+//! * the fleet scheduler's `Depths` admission gauge (`Mutex<Vec<usize>>`
+//!   + `Condvar`, blocking `acquire`/`release` — PR 7).
+//!
+//! The models are small state machines whose *atomic steps* mirror the
+//! real code's race windows: predicate loads that happen under the lock
+//! are separate steps from the `Condvar::wait` that follows them, and
+//! atomic counters mutate without the lock — exactly the interleavings
+//! that make lock-before-notify load-bearing. Condvars are modeled
+//! without spurious wakeups, so a *lost* notification shows up as a
+//! deadlock instead of being papered over by a spurious wake.
+//!
+//! [`explore`] walks every reachable interleaving by DFS with state
+//! dedup and reports: a safety violation (a state failing
+//! [`Model::check`]), a deadlock (no enabled thread in a non-final
+//! state), or success with the number of distinct states visited.
+//!
+//! Each protocol model carries its historical bug as a switchable
+//! variant — `run_shard`'s completion notify without taking the state
+//! lock, and `Depths::release` with `notify_one` — and the tests prove
+//! the checker finds the deadlock those variants allow. The same
+//! protocols are additionally exercised under `loom` (CI leg; see
+//! `exec::pool`'s `#[cfg(loom)]` tests) with real atomics — this module
+//! is the always-on, dependency-free half of that coverage.
+
+use std::collections::BTreeSet;
+
+/// A finite-state concurrency model. `Ord` (not `Hash`) is required so
+/// visited-state dedup can use a `BTreeSet` — the analysis layer's own
+/// determinism lint bans unordered collections in this crate.
+pub trait Model: Clone + Ord + std::fmt::Debug {
+    /// Number of threads (step targets).
+    fn threads(&self) -> usize;
+    /// May thread `t` take a step in this state? Blocked (lock held by
+    /// another thread, sleeping on a condvar) and finished threads are
+    /// disabled.
+    fn enabled(&self, t: usize) -> bool;
+    /// All successor states of thread `t` taking its next atomic step.
+    /// More than one successor models genuine nondeterminism (e.g. which
+    /// waiter a `notify_one` wakes).
+    fn step(&self, t: usize) -> Vec<Self>;
+    /// Is this a legal final state (every thread finished)?
+    fn done(&self) -> bool;
+    /// Safety invariant, checked in every reachable state.
+    fn check(&self) -> Result<(), String>;
+}
+
+/// Result of an exhaustive exploration.
+#[derive(Debug)]
+pub struct Outcome {
+    /// Distinct states visited.
+    pub states: usize,
+}
+
+/// Exhaustively explore every interleaving of `init` (DFS, state dedup).
+/// Fails on the first safety violation, deadlock, or when more than
+/// `max_states` distinct states are reached (model too big — not a
+/// property violation, but the run is inconclusive and fails loudly).
+pub fn explore<M: Model>(init: M, max_states: usize) -> Result<Outcome, String> {
+    let mut visited: BTreeSet<M> = BTreeSet::new();
+    let mut stack = vec![init];
+    while let Some(s) = stack.pop() {
+        if !visited.insert(s.clone()) {
+            continue;
+        }
+        if visited.len() > max_states {
+            return Err(format!("state space exceeds {max_states} states"));
+        }
+        s.check().map_err(|e| format!("safety violation: {e} in {s:?}"))?;
+        let enabled: Vec<usize> = (0..s.threads()).filter(|&t| s.enabled(t)).collect();
+        if enabled.is_empty() {
+            if s.done() {
+                continue;
+            }
+            return Err(format!("deadlock: no enabled thread in non-final state {s:?}"));
+        }
+        for t in enabled {
+            for next in s.step(t) {
+                if !visited.contains(&next) {
+                    stack.push(next);
+                }
+            }
+        }
+    }
+    Ok(Outcome { states: visited.len() })
+}
+
+// ---------------------------------------------------------------------------
+// WorkerPool claim/completion protocol
+// ---------------------------------------------------------------------------
+
+/// Per-thread program counter of the pool model. Thread 0 is the owner
+/// (`WorkerPool::run` + the `Drop` shutdown broadcast); threads 1.. are
+/// `worker_loop`s.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum PoolPc {
+    // owner
+    OPublish,
+    OClaim,
+    OComplete,
+    ODoneNotify,
+    OBarLock,
+    OBarCheck,
+    OBarWait,
+    OBarSleep,
+    OEnd,
+    // workers
+    WLock,
+    WCheck,
+    WSleep,
+    WClaim,
+    WComplete,
+    WDoneNotify,
+    WDrop,
+    WDrainNotify,
+    WEnd,
+}
+
+/// Abstract state of one `WorkerPool` dispatching a single job of
+/// `shards` shards across `threads-1` workers, then shutting down.
+///
+/// `locked_notify = true` models the shipped protocol (completion and
+/// drain notifies take the state lock first); `false` models the
+/// historical bug class where `run_shard` notifies `done` without the
+/// lock — the owner's barrier then has a load→wait window in which the
+/// last completion's wakeup is lost.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PoolModel {
+    locked_notify: bool,
+    shards: u8,
+    /// Thread currently holding the state mutex.
+    lock: Option<u8>,
+    job: bool,
+    epoch: u8,
+    shutdown: bool,
+    /// The three atomics (mutate without the lock, like the real code).
+    next: u8,
+    pending: u8,
+    active: u8,
+    /// Ghost counter: shards whose task body ran (exactly-once check).
+    completed: u8,
+    work_wait: Vec<u8>,
+    done_wait: Vec<u8>,
+    /// Notified, not yet rescheduled.
+    woken: Vec<u8>,
+    pcs: Vec<PoolPc>,
+    /// Workers' epoch-seen registers.
+    seen: Vec<u8>,
+}
+
+impl PoolModel {
+    /// `workers` worker threads plus the owner, one job of `shards`.
+    pub fn new(workers: usize, shards: u8, locked_notify: bool) -> PoolModel {
+        let mut pcs = vec![PoolPc::OPublish];
+        pcs.extend((0..workers).map(|_| PoolPc::WLock));
+        PoolModel {
+            locked_notify,
+            shards,
+            lock: None,
+            job: false,
+            epoch: 0,
+            shutdown: false,
+            next: 0,
+            pending: 0,
+            active: 0,
+            completed: 0,
+            work_wait: Vec::new(),
+            done_wait: Vec::new(),
+            woken: Vec::new(),
+            pcs,
+            seen: vec![0; workers + 1],
+        }
+    }
+
+    fn notify_all_work(&mut self) {
+        self.woken.append(&mut self.work_wait);
+        self.woken.sort_unstable();
+    }
+
+    fn notify_all_done(&mut self) {
+        self.woken.append(&mut self.done_wait);
+        self.woken.sort_unstable();
+    }
+
+    /// The `pending.fetch_sub(1) == 1 → notify done` completion path.
+    /// Under `locked_notify` the notify step additionally requires (and
+    /// transiently takes) the state lock.
+    fn needs_lock_for_notify(&self, t: usize) -> bool {
+        self.locked_notify
+            && matches!(
+                self.pcs[t],
+                PoolPc::ODoneNotify | PoolPc::WDoneNotify | PoolPc::WDrainNotify
+            )
+    }
+}
+
+impl Model for PoolModel {
+    fn threads(&self) -> usize {
+        self.pcs.len()
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        let tb = t as u8;
+        match self.pcs[t] {
+            PoolPc::OEnd | PoolPc::WEnd => false,
+            // sleeping on a condvar: runnable only once notified
+            PoolPc::OBarSleep | PoolPc::WSleep => self.woken.contains(&tb),
+            // lock acquisitions
+            PoolPc::OPublish | PoolPc::OBarLock | PoolPc::WLock => self.lock.is_none(),
+            PoolPc::ODoneNotify | PoolPc::WDoneNotify | PoolPc::WDrainNotify => {
+                !self.needs_lock_for_notify(t) || self.lock.is_none()
+            }
+            // steps taken while already holding the lock, or lockless
+            _ => true,
+        }
+    }
+
+    fn step(&self, t: usize) -> Vec<Self> {
+        let mut s = self.clone();
+        let tb = t as u8;
+        match s.pcs[t] {
+            // owner: publish the job under the lock, broadcast work
+            PoolPc::OPublish => {
+                debug_assert!(s.lock.is_none() && !s.job);
+                s.next = 0;
+                s.pending = s.shards;
+                s.epoch += 1;
+                s.job = true;
+                s.notify_all_work();
+                s.pcs[t] = PoolPc::OClaim;
+            }
+            // claim loop (owner as lane 0): `next.fetch_add` is lockless
+            PoolPc::OClaim => {
+                let i = s.next;
+                s.next += 1;
+                s.pcs[t] = if i >= s.shards { PoolPc::OBarLock } else { PoolPc::OComplete };
+            }
+            // run the shard body, then `pending.fetch_sub`
+            PoolPc::OComplete => {
+                s.completed += 1;
+                s.pending -= 1;
+                s.pcs[t] = if s.pending == 0 { PoolPc::ODoneNotify } else { PoolPc::OClaim };
+            }
+            PoolPc::ODoneNotify | PoolPc::WDoneNotify => {
+                // locked mode: lock is free (enabled()), take+release
+                // around the notify in one atomic step; buggy mode: fire
+                // regardless — current sleepers wake, the rest is lost
+                s.notify_all_done();
+                s.pcs[t] = if s.pcs[t] == PoolPc::ODoneNotify { PoolPc::OClaim } else { PoolPc::WClaim };
+            }
+            PoolPc::OBarLock => {
+                debug_assert!(s.lock.is_none());
+                s.lock = Some(tb);
+                s.pcs[t] = PoolPc::OBarCheck;
+            }
+            // the barrier's predicate LOAD — deliberately a separate step
+            // from the wait-enqueue below, with the lock held across both.
+            // pending/active are lockless atomics, so a completion can
+            // land in between; only a notify that takes the state lock is
+            // forced to wait until the owner is enqueued. This is exactly
+            // the window the lock-before-notify rule protects.
+            PoolPc::OBarCheck => {
+                if s.pending == 0 && s.active == 0 {
+                    s.job = false;
+                    s.shutdown = true; // Drop folded in: broadcast + exit
+                    s.notify_all_done();
+                    s.notify_all_work();
+                    s.lock = None;
+                    s.pcs[t] = PoolPc::OEnd;
+                } else {
+                    // predicate loaded stale-able values; keep the lock
+                    s.pcs[t] = PoolPc::OBarWait;
+                }
+            }
+            // Condvar::wait: atomically enqueue + release the lock
+            PoolPc::OBarWait => {
+                debug_assert_eq!(s.lock, Some(tb));
+                s.done_wait.push(tb);
+                s.done_wait.sort_unstable();
+                s.lock = None;
+                s.pcs[t] = PoolPc::OBarSleep;
+            }
+            PoolPc::OBarSleep => {
+                // woken: reacquire the lock, re-check the predicate
+                s.woken.retain(|&w| w != tb);
+                s.pcs[t] = PoolPc::OBarLock;
+            }
+            // workers
+            PoolPc::WLock => {
+                debug_assert!(s.lock.is_none());
+                s.lock = Some(tb);
+                s.pcs[t] = PoolPc::WCheck;
+            }
+            // the whole guarded check runs under the lock, and every
+            // variable it reads (job/epoch/shutdown) is only written
+            // under the lock — one atomic step is faithful
+            PoolPc::WCheck => {
+                if s.shutdown {
+                    s.lock = None;
+                    s.pcs[t] = PoolPc::WEnd;
+                } else if s.epoch != s.seen[t] && s.job {
+                    s.seen[t] = s.epoch;
+                    s.active += 1; // still under the lock, like the code
+                    s.lock = None;
+                    s.pcs[t] = PoolPc::WClaim;
+                } else {
+                    s.work_wait.push(tb);
+                    s.work_wait.sort_unstable();
+                    s.lock = None;
+                    s.pcs[t] = PoolPc::WSleep;
+                }
+            }
+            PoolPc::WSleep => {
+                s.woken.retain(|&w| w != tb);
+                s.pcs[t] = PoolPc::WLock;
+            }
+            PoolPc::WClaim => {
+                let i = s.next;
+                s.next = s.next.saturating_add(1);
+                s.pcs[t] = if i >= s.shards { PoolPc::WDrop } else { PoolPc::WComplete };
+            }
+            PoolPc::WComplete => {
+                s.completed += 1;
+                s.pending -= 1;
+                s.pcs[t] = if s.pending == 0 { PoolPc::WDoneNotify } else { PoolPc::WClaim };
+            }
+            PoolPc::WDrop => {
+                s.active -= 1;
+                s.pcs[t] = if s.active == 0 { PoolPc::WDrainNotify } else { PoolPc::WLock };
+            }
+            PoolPc::WDrainNotify => {
+                s.notify_all_done();
+                s.pcs[t] = PoolPc::WLock;
+            }
+            PoolPc::OEnd | PoolPc::WEnd => unreachable!("terminal threads are never enabled"),
+        }
+        vec![s]
+    }
+
+    fn done(&self) -> bool {
+        self.pcs.iter().all(|&pc| pc == PoolPc::OEnd || pc == PoolPc::WEnd)
+    }
+
+    fn check(&self) -> Result<(), String> {
+        // lifetime-erasure safety: `run` returns (OEnd) only after every
+        // dispatched call returned and every worker left the claim loop —
+        // a worker still touching the task closure after that is the
+        // use-after-free the active-counter barrier exists to prevent
+        if self.pcs[0] == PoolPc::OEnd
+            && self.pcs.iter().any(|&pc| pc == PoolPc::WComplete || pc == PoolPc::WDoneNotify)
+        {
+            return Err("worker still running a shard after run() returned".into());
+        }
+        if self.completed > self.shards {
+            return Err(format!("{} completions for {} shards", self.completed, self.shards));
+        }
+        if self.done() && self.completed != self.shards {
+            return Err(format!(
+                "job finished with {}/{} shards run",
+                self.completed, self.shards
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet admission gauge (scheduler::Depths)
+// ---------------------------------------------------------------------------
+
+/// One thread's script against the gauge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum GaugeOp {
+    Acquire(u8),
+    Release(u8),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum GaugePc {
+    /// About to start the next op (or finished if the script is drained).
+    Ready,
+    /// Holds the lock, about to run acquire's guarded check.
+    AcqCheck(u8),
+    /// Sleeping on `freed`, waiting for chip `.0`.
+    Sleep(u8),
+    /// Decremented under the lock; the (post-unlock) notify is next.
+    Notify,
+}
+
+/// Model of `Depths`: `acquire` blocks while `d[chip] >= cap`; `release`
+/// decrements under the lock and notifies *after* unlocking.
+/// `notify_all = false` models the bug class the gauge avoids: with
+/// `notify_one`, a wakeup can land on a waiter for a still-full chip and
+/// the waiter for the freed chip sleeps forever.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GaugeModel {
+    notify_all: bool,
+    cap: u8,
+    lock: Option<u8>,
+    d: Vec<u8>,
+    waiters: Vec<u8>,
+    woken: Vec<u8>,
+    pcs: Vec<GaugePc>,
+    scripts: Vec<Vec<GaugeOp>>,
+    ips: Vec<u8>,
+}
+
+impl GaugeModel {
+    /// `d0` is the initial depth vector (slots already held by callers
+    /// outside the model, e.g. in-flight batches at scenario start).
+    pub fn new(d0: Vec<u8>, cap: u8, scripts: Vec<Vec<GaugeOp>>, notify_all: bool) -> GaugeModel {
+        let n = scripts.len();
+        GaugeModel {
+            notify_all,
+            cap,
+            lock: None,
+            d: d0,
+            waiters: Vec::new(),
+            woken: Vec::new(),
+            pcs: vec![GaugePc::Ready; n],
+            scripts,
+            ips: vec![0; n],
+        }
+    }
+
+    fn cur_op(&self, t: usize) -> Option<GaugeOp> {
+        self.scripts[t].get(self.ips[t] as usize).copied()
+    }
+}
+
+impl Model for GaugeModel {
+    fn threads(&self) -> usize {
+        self.pcs.len()
+    }
+
+    fn enabled(&self, t: usize) -> bool {
+        let tb = t as u8;
+        match self.pcs[t] {
+            GaugePc::Ready => self.cur_op(t).is_some() && self.lock.is_none(),
+            GaugePc::AcqCheck(_) => true,
+            GaugePc::Sleep(_) => self.woken.contains(&tb),
+            // notify runs after the unlock — never blocks
+            GaugePc::Notify => true,
+        }
+    }
+
+    fn step(&self, t: usize) -> Vec<Self> {
+        let tb = t as u8;
+        match self.pcs[t] {
+            GaugePc::Ready => {
+                let mut s = self.clone();
+                match s.cur_op(t).expect("enabled() guarantees an op") {
+                    GaugeOp::Acquire(c) => {
+                        s.lock = Some(tb);
+                        s.pcs[t] = GaugePc::AcqCheck(c);
+                    }
+                    GaugeOp::Release(c) => {
+                        s.lock = Some(tb);
+                        s.d[c as usize] -= 1;
+                        s.lock = None; // drop(d) before the notify
+                        s.pcs[t] = GaugePc::Notify;
+                    }
+                }
+                vec![s]
+            }
+            GaugePc::AcqCheck(c) => {
+                let mut s = self.clone();
+                if s.d[c as usize] >= s.cap {
+                    // Condvar::wait: enqueue + release the lock atomically
+                    s.waiters.push(tb);
+                    s.waiters.sort_unstable();
+                    s.lock = None;
+                    s.pcs[t] = GaugePc::Sleep(c);
+                } else {
+                    s.d[c as usize] += 1;
+                    s.lock = None;
+                    s.ips[t] += 1;
+                    s.pcs[t] = GaugePc::Ready;
+                }
+                vec![s]
+            }
+            GaugePc::Sleep(_) => {
+                // woken: go back to Ready without advancing the script —
+                // the acquire re-contends for the lock and re-checks the
+                // predicate, exactly like a Condvar::wait return
+                let mut s = self.clone();
+                s.woken.retain(|&w| w != tb);
+                s.pcs[t] = GaugePc::Ready;
+                vec![s]
+            }
+            GaugePc::Notify => {
+                if self.notify_all {
+                    let mut s = self.clone();
+                    s.woken.append(&mut s.waiters);
+                    s.woken.sort_unstable();
+                    s.ips[t] += 1;
+                    s.pcs[t] = GaugePc::Ready;
+                    vec![s]
+                } else if self.waiters.is_empty() {
+                    let mut s = self.clone();
+                    s.ips[t] += 1;
+                    s.pcs[t] = GaugePc::Ready;
+                    vec![s]
+                } else {
+                    // notify_one: branch over every waiter it could pick
+                    self.waiters
+                        .iter()
+                        .map(|&w| {
+                            let mut s = self.clone();
+                            s.waiters.retain(|&x| x != w);
+                            s.woken.push(w);
+                            s.woken.sort_unstable();
+                            s.ips[t] += 1;
+                            s.pcs[t] = GaugePc::Ready;
+                            s
+                        })
+                        .collect()
+                }
+            }
+        }
+    }
+
+    fn done(&self) -> bool {
+        (0..self.threads())
+            .all(|t| self.pcs[t] == GaugePc::Ready && self.cur_op(t).is_none())
+    }
+
+    fn check(&self) -> Result<(), String> {
+        for (i, &depth) in self.d.iter().enumerate() {
+            if depth > self.cap {
+                return Err(format!("chip {i} admitted {depth} > cap {}", self.cap));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_protocol_passes_exhaustive_check() {
+        // 1 owner + 2 workers over 2 shards: every interleaving completes
+        // every shard exactly once and run() returns only after the drain
+        let out = explore(PoolModel::new(2, 2, true), 2_000_000).expect("protocol is sound");
+        assert!(out.states > 100, "suspiciously small state space: {}", out.states);
+    }
+
+    #[test]
+    fn pool_protocol_passes_with_more_shards_than_lanes() {
+        explore(PoolModel::new(1, 3, true), 2_000_000).expect("protocol is sound");
+    }
+
+    #[test]
+    fn unlocked_completion_notify_loses_the_last_wakeup() {
+        // the historical bug class run_shard's lock-before-notify exists
+        // for: without the lock, the owner's pending-check → wait window
+        // can swallow the final completion's notification — the checker
+        // must find that deadlock
+        let err = explore(PoolModel::new(1, 1, false), 2_000_000)
+            .expect_err("lost wakeup must deadlock some interleaving");
+        assert!(err.contains("deadlock"), "unexpected failure mode: {err}");
+    }
+
+    #[test]
+    fn gauge_protocol_passes_exhaustive_check() {
+        // two chips at cap 1, both full at scenario start; two blocked
+        // acquirers and a releaser freeing both chips: with notify_all,
+        // every interleaving admits both acquirers
+        let scripts = vec![
+            vec![GaugeOp::Acquire(0)],
+            vec![GaugeOp::Acquire(1)],
+            vec![GaugeOp::Release(0), GaugeOp::Release(1)],
+        ];
+        let out = explore(GaugeModel::new(vec![1, 1], 1, scripts, true), 1_000_000)
+            .expect("gauge is sound");
+        assert!(out.states > 20, "suspiciously small state space: {}", out.states);
+    }
+
+    #[test]
+    fn gauge_never_admits_past_cap() {
+        // saturation: three acquirers on one chip with cap 2 and one
+        // releaser — the cap invariant holds in every reachable state
+        // and nobody deadlocks (two slots + one release = three admits)
+        let scripts = vec![
+            vec![GaugeOp::Acquire(0)],
+            vec![GaugeOp::Acquire(0)],
+            vec![GaugeOp::Acquire(0)],
+            vec![GaugeOp::Release(0)],
+        ];
+        explore(GaugeModel::new(vec![1], 2, scripts, true), 1_000_000).expect("gauge is sound");
+    }
+
+    #[test]
+    fn notify_one_gauge_strands_a_waiter() {
+        // the bug class Depths::release's notify_all avoids: a single
+        // wakeup can land on the waiter of a still-full chip
+        let scripts = vec![
+            vec![GaugeOp::Acquire(0)],
+            vec![GaugeOp::Acquire(1)],
+            vec![GaugeOp::Release(0), GaugeOp::Release(1)],
+        ];
+        let err = explore(GaugeModel::new(vec![1, 1], 1, scripts, false), 1_000_000)
+            .expect_err("notify_one must strand a waiter in some interleaving");
+        assert!(err.contains("deadlock"), "unexpected failure mode: {err}");
+    }
+
+    #[test]
+    fn explorer_reports_safety_violations() {
+        // a model whose invariant fails immediately
+        #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+        struct Bad(u8);
+        impl Model for Bad {
+            fn threads(&self) -> usize {
+                1
+            }
+            fn enabled(&self, _t: usize) -> bool {
+                false
+            }
+            fn step(&self, _t: usize) -> Vec<Self> {
+                vec![]
+            }
+            fn done(&self) -> bool {
+                true
+            }
+            fn check(&self) -> Result<(), String> {
+                Err("boom".into())
+            }
+        }
+        let err = explore(Bad(0), 10).expect_err("must surface check failures");
+        assert!(err.contains("safety violation"), "{err}");
+    }
+}

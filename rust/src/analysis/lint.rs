@@ -1,0 +1,326 @@
+//! Determinism lint: a source-level scan for constructs that break the
+//! repo's byte-identical-replay contract (ROADMAP north star; the PR-8
+//! obs layer and the fleet replay gate both depend on it).
+//!
+//! Three rules, each with a stable id:
+//!
+//! * **D001-wall-clock** — `Instant::now` / `SystemTime::now` in crate
+//!   code. Wall-clock reads are fine for *reporting* (bench timings,
+//!   health telemetry) but must never feed simulated state; every use
+//!   is either allowlisted with a justification or a bug.
+//! * **D002-unordered-iteration** — iteration over `std::collections::
+//!   HashMap`/`HashSet` state. Hash iteration order is randomized per
+//!   process, so any loop over it that feeds output, reductions, or
+//!   eviction decisions is nondeterministic. Keyed *lookups* are fine,
+//!   but the lint flags the declaration site: deterministic sections
+//!   use `BTreeMap`/sorted vectors instead (cf. `obs::Registry`,
+//!   `exec::PlanCache`).
+//! * **D003-thread-order-float** — float accumulation across thread
+//!   results outside the blessed fixed-order merge paths (`f32`/`f64`
+//!   `+=` in code that names worker/thread results). Float addition is
+//!   non-associative, so thread completion order changes the sum.
+//!
+//! The scan is intentionally a lexical lint, not a type-checked
+//! analysis: it is cheap enough to run on every CI job, and the
+//! allowlist (`scripts/determinism_allowlist.txt`) keeps audited sites
+//! explicit and reviewable — exactly the shape of the verifier's rule
+//! ids, so one report format covers both tools.
+
+use std::fmt;
+use std::path::Path;
+
+/// A single lint hit: rule, file, line, and the offending source line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the repo root (as scanned).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub snippet: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}:{}: {}", self.rule, self.file, self.line, self.snippet.trim())
+    }
+}
+
+/// One allowlist entry: `RULE path-suffix [snippet-substring]`.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path_suffix: String,
+    pub snippet_contains: Option<String>,
+}
+
+/// Parse the allowlist format: one entry per line, `#` comments, blank
+/// lines ignored. Fields are whitespace-separated; everything after the
+/// second field is the optional snippet substring.
+pub fn parse_allowlist(text: &str) -> Vec<AllowEntry> {
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, char::is_whitespace);
+        let (Some(rule), Some(path)) = (parts.next(), parts.next()) else { continue };
+        entries.push(AllowEntry {
+            rule: rule.to_string(),
+            path_suffix: path.to_string(),
+            snippet_contains: parts.next().map(|s| s.trim().to_string()),
+        });
+    }
+    entries
+}
+
+fn allowed(f: &Finding, allow: &[AllowEntry]) -> bool {
+    allow.iter().any(|a| {
+        a.rule == f.rule
+            && f.file.ends_with(&a.path_suffix)
+            && a.snippet_contains.as_ref().is_none_or(|s| f.snippet.contains(s))
+    })
+}
+
+/// Needles are assembled at runtime so the lint never flags its own
+/// source (or this file's doc comments) when scanning the crate.
+fn needle(parts: &[&str]) -> String {
+    parts.concat()
+}
+
+/// Lint one file's source text. `file` is the path recorded in findings.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let wall: Vec<String> = vec![
+        needle(&["Instant", "::now"]),
+        needle(&["SystemTime", "::now"]),
+    ];
+    let hash_tys: Vec<String> = vec![
+        needle(&["Hash", "Map", "<"]),
+        needle(&["Hash", "Set", "<"]),
+    ];
+    let float_acc: Vec<String> = vec![
+        needle(&["f32", " += "]),
+        needle(&["f64", " += "]),
+    ];
+    let thread_ctx = ["thread", "worker", "pool", "shard"];
+
+    let mut findings = Vec::new();
+    let mut in_block_comment = false;
+    for (i, raw) in src.lines().enumerate() {
+        let line = strip_comments(raw, &mut in_block_comment);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let push = |findings: &mut Vec<Finding>, rule: &'static str| {
+            findings.push(Finding {
+                rule,
+                file: file.to_string(),
+                line: i + 1,
+                snippet: raw.trim().to_string(),
+            });
+        };
+        if wall.iter().any(|n| line.contains(n.as_str())) {
+            push(&mut findings, "D001-wall-clock");
+        }
+        // Flag hash-map *state declarations* (struct fields, bindings,
+        // type aliases) — the sites whose iteration order could leak.
+        // `use std::collections::...` imports alone are not flagged.
+        if hash_tys.iter().any(|n| line.contains(n.as_str())) && !line.trim_start().starts_with("use ")
+        {
+            push(&mut findings, "D002-unordered-iteration");
+        }
+        // Thread-order float accumulation: a float `+=` on a line that
+        // also names cross-thread context.
+        if float_acc.iter().any(|n| line.contains(n.as_str()))
+            && thread_ctx.iter().any(|c| line.to_lowercase().contains(c))
+        {
+            push(&mut findings, "D003-thread-order-float");
+        }
+    }
+    findings
+}
+
+/// Remove `//` and `/* */` comment text (tracking block comments across
+/// lines) so commented-out code and docs never trip the lint. String
+/// literals are not parsed — the needles don't occur in string data in
+/// this crate, and false positives would land in the allowlist anyway.
+fn strip_comments(line: &str, in_block: &mut bool) -> String {
+    let mut out = String::with_capacity(line.len());
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if *in_block {
+            if bytes[i] == b'*' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+                *in_block = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else if bytes[i] == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'*' {
+            *in_block = true;
+            i += 2;
+        } else if bytes[i] == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+            break; // line comment: rest of the line is comment text
+        } else {
+            out.push(bytes[i] as char);
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Recursively lint every `.rs` file under `dir`, in sorted path order
+/// (the report itself must be deterministic). Paths in findings are
+/// relative to `root`.
+pub fn scan_dir(
+    root: &Path,
+    dir: &Path,
+    findings: &mut Vec<Finding>,
+    files_scanned: &mut usize,
+) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?.into_iter().map(|e| e.path()).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            scan_dir(root, &path, findings, files_scanned)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path).display().to_string();
+            let src = std::fs::read_to_string(&path)?;
+            *files_scanned += 1;
+            findings.extend(lint_source(&rel, &src));
+        }
+    }
+    Ok(())
+}
+
+/// Lint report: everything found, split into allowed (audited) and
+/// violations.
+pub struct Report {
+    pub violations: Vec<Finding>,
+    pub allowed: usize,
+    pub files_scanned: usize,
+}
+
+/// Run the determinism lint over `src_root` (the crate's `src/`
+/// directory) with the given allowlist text. Returns the report; the
+/// caller decides the exit code.
+pub fn run(src_root: &Path, allowlist: &str) -> std::io::Result<Report> {
+    let allow = parse_allowlist(allowlist);
+    let mut findings = Vec::new();
+    let mut files_scanned = 0;
+    scan_dir(src_root, src_root, &mut findings, &mut files_scanned)?;
+    let (allowed_v, violations): (Vec<_>, Vec<_>) =
+        findings.into_iter().partition(|f| allowed(f, &allow));
+    Ok(Report { violations, allowed: allowed_v.len(), files_scanned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Test sources are assembled so this file's own text never contains
+    // the needles outside of `needle()` construction.
+    fn src(parts: &[&str]) -> String {
+        parts.concat()
+    }
+
+    #[test]
+    fn wall_clock_reads_are_flagged() {
+        let code = src(&["fn f() { let t = std::time::Instant", "::now(); }\n"]);
+        let f = lint_source("x.rs", &code);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D001-wall-clock");
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn hash_state_is_flagged_but_imports_are_not() {
+        let code = src(&[
+            "use std::collections::Hash",
+            "Map;\n",
+            "struct S { m: Hash",
+            "Map<u32, u32> }\n",
+        ]);
+        let f = lint_source("x.rs", &code);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "D002-unordered-iteration");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn thread_order_float_accumulation_is_flagged() {
+        // accumulation with thread context on the line: flagged
+        let code = src(&["for r in worker_results { total_f3", "2 += r; }\n"]);
+        let f = lint_source("x.rs", &code);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "D003-thread-order-float");
+        // plain non-compound float math, even with thread context: clean
+        let ok = src(&["fn merge(worker: &[f32]) { let s: f32 = worker.iter().sum(); }\n"]);
+        assert!(lint_source("x.rs", &ok).is_empty());
+        // compound float accumulation without thread context: clean
+        let ok2 = src(&["let mut loss_f3", "2 += step_loss;\n"]);
+        assert!(lint_source("x.rs", &ok2).is_empty());
+    }
+
+    #[test]
+    fn comments_do_not_trip_the_lint() {
+        let code = src(&[
+            "// Instant",
+            "::now is banned here\n",
+            "/* Hash",
+            "Map<K, V> in a block\ncomment spanning lines: Instant",
+            "::now */\n",
+            "fn ok() {}\n",
+        ]);
+        assert!(lint_source("x.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn allowlist_suppresses_audited_sites_only() {
+        let code = src(&["let t = Instant", "::now(); // bench timing\n"]);
+        let findings = lint_source("util/bench.rs", &code);
+        assert_eq!(findings.len(), 1);
+        let allow = parse_allowlist(
+            "# audited\nD001-wall-clock util/bench.rs bench timing\nD001-wall-clock other.rs\n",
+        );
+        assert!(super::allowed(&findings[0], &allow));
+        let wrong_rule = parse_allowlist("D002-unordered-iteration util/bench.rs\n");
+        assert!(!super::allowed(&findings[0], &wrong_rule));
+        let wrong_snip = parse_allowlist("D001-wall-clock util/bench.rs somewhere else\n");
+        assert!(!super::allowed(&findings[0], &wrong_snip));
+    }
+
+    #[test]
+    fn allowlist_parser_handles_comments_and_blanks() {
+        let entries = parse_allowlist("\n# c\nD001-wall-clock a.rs\n  \nD002-unordered-iteration b/c.rs has spaces in it\n");
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].rule, "D001-wall-clock");
+        assert_eq!(entries[0].snippet_contains, None);
+        assert_eq!(entries[1].path_suffix, "b/c.rs");
+        assert_eq!(entries[1].snippet_contains.as_deref(), Some("has spaces in it"));
+    }
+
+    #[test]
+    fn crate_source_is_clean_under_the_checked_in_allowlist() {
+        // the real gate also runs in CI (`repro lint`); keeping it as a
+        // unit test means `cargo test` alone catches a regression
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let allowlist = std::fs::read_to_string(
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("../scripts/determinism_allowlist.txt"),
+        )
+        .expect("allowlist present");
+        let report = run(&root, &allowlist).expect("scan");
+        assert!(
+            report.violations.is_empty(),
+            "determinism lint violations:\n{}",
+            report
+                .violations
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Static analysis of the exec/fleet stack: checked invariants instead
+//! of one-off regression tests.
+//!
+//! Three tools, one theme — the properties the paper's mitigation story
+//! rests on are *proved about artifacts* (compiled plans, crate source,
+//! protocol state machines), not sampled by execution:
+//!
+//! * [`verify`] — walks every compiled [`crate::exec::MatmulPlan`] /
+//!   [`crate::exec::ChipPlan`] IR and proves bypass coverage (every
+//!   known-faulty MAC zeroed, no tail lane aliasing a bypassed column),
+//!   truth/known role separation (corruption ops from *truth* only,
+//!   bypass/prune from *known* only), and layout integrity (panel
+//!   shapes, i8 range, `MICRO_MR` alignment). Hooked into the compile
+//!   paths under `debug_assertions` / `REPRO_VERIFY=1`; swept across
+//!   campaign configs by `repro verify`.
+//! * [`lint`] — a source-level determinism lint (wall-clock reads,
+//!   unordered hash iteration, thread-order float accumulation) with an
+//!   audited allowlist; run by `repro lint` and CI.
+//! * [`check`] — an exhaustive-interleaving model checker over the
+//!   WorkerPool claim/completion protocol and the fleet admission
+//!   gauge, including their historical bug variants (dependency-free
+//!   counterpart of the `#[cfg(loom)]` CI leg).
+
+pub mod check;
+pub mod lint;
+pub mod verify;
+
+pub use check::{explore, GaugeModel, GaugeOp, Model, PoolModel};
+pub use lint::{lint_source, parse_allowlist, Finding};
+pub use verify::{
+    render, runtime_verify_enabled, verify_chip_plan, verify_layer_masks, verify_matmul_plan,
+    Diagnostic, Rule,
+};

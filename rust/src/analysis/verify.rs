@@ -1,0 +1,1139 @@
+//! Static verification of compiled plans: prove the lowering invariants
+//! by walking the program IR, never by executing it.
+//!
+//! The exec layer's correctness story rests on three invariant families
+//! that have each been violated silently in the past (PR 5's truth/known
+//! swap, PR 6's panel-tail aliasing — both caught only by bespoke
+//! regression tests after the fact):
+//!
+//! * **A — bypass coverage.** Under [`MaskKind::FapBypass`], every MAC
+//!   the controller *knows* is faulty must have a zero effective weight
+//!   in the compiled program (dense panel element or chain-seg weight),
+//!   and no corruption op may fire at a bypassed site.
+//! * **B — role separation.** Corruption ops (chain-seg AND/OR masks,
+//!   folded additive constants) derive only from the fabricated *truth*
+//!   map; bypass/prune decisions derive only from the controller's
+//!   *known* view. Every live truth fault must be represented exactly
+//!   once, with exactly truth's masks, at exactly its row.
+//! * **C — layout integrity.** Dense slots and chain columns partition
+//!   the tile's columns exactly once (no padded tail lane can alias a
+//!   real column), panels are sized `ceil(slots/nr) * kh * nr` with
+//!   inert zero padding, i8 panels only hold i8-range weights, and the
+//!   blocked executor's constants respect `MICRO_MR` alignment.
+//!
+//! [`verify_matmul_plan`] / [`verify_chip_plan`] recompute the expected
+//! lowering *facts* (effective weights, live-fault sets, fold constants)
+//! directly from `(truth, known, kind, weights)` — independently of the
+//! compiler's control flow — and diff them against the compiled IR.
+//! Violations come back as structured [`Diagnostic`]s carrying the plan
+//! fingerprints, tile, op coordinates and a stable [`Rule`] id.
+//!
+//! The checks are wired into `MatmulPlan::compile*` and
+//! `ChipPlan::compile*` behind `debug_assertions` (every test compile is
+//! verified) and the `REPRO_VERIFY=1` environment override (release CI
+//! legs); `repro verify` sweeps the campaign configurations explicitly.
+
+use crate::exec::gemm::MICRO_MR;
+use crate::exec::plan::{ChipPlan, MatmulPlan, BATCH_BLOCK};
+use crate::exec::simd::MAX_NR;
+use crate::faults::{FaultMap, KnownMap};
+use crate::mapping::{conv, fc, LayerMasks, MaskKind};
+use crate::model::{Arch, Layer};
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Stable rule identifiers for verifier diagnostics. The letter groups
+/// the invariant family (A bypass coverage, B truth/known separation,
+/// C layout, F identity, M host masks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// A1: a known-faulty MAC's effective weight is non-zero under FAP.
+    BypassMissing,
+    /// A2: a corruption op fires at a bypassed (known-faulty) site.
+    BypassCorrupted,
+    /// B1: a corruption op's mask does not come from the truth map.
+    CorruptionNotTruth,
+    /// B2: a folded additive constant differs from truth's exact fold.
+    FoldMismatch,
+    /// B3: a live truth fault has no corruption op at its site.
+    CorruptionMissing,
+    /// C1: dense/chain columns do not partition the tile exactly once,
+    /// or a padded tail lane carries a non-zero weight.
+    TailAlias,
+    /// C2: panel/base storage sized inconsistently with `(slots, kh, nr)`.
+    PanelShape,
+    /// C3: a packed weight differs from the expected effective weight.
+    PanelValue,
+    /// C4: an i8 panel would need a weight outside i8 range.
+    I8Range,
+    /// C5: chain segs do not cover `0..kh` contiguously.
+    ChainShape,
+    /// C6: executor layout constants violate `MICRO_MR`/width contracts.
+    Layout,
+    /// C0: the tile grid does not cover `k x m` in row-major `n` steps.
+    TileGrid,
+    /// F1: plan identity (fingerprints, grid size, kind) inconsistent.
+    Fingerprint,
+    /// M0: per-layer mask vectors sized inconsistently with the arch.
+    MaskShape,
+    /// M1: a prune mask disagrees with the known view.
+    MaskPrune,
+    /// M2: a bypass mask disagrees with `(kind, known)`.
+    MaskBypass,
+    /// M3: an AND/OR corruption mask disagrees with the truth map.
+    MaskCorruption,
+}
+
+impl Rule {
+    /// The stable string id used in reports and asserted by tests.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::BypassMissing => "A1-bypass-missing",
+            Rule::BypassCorrupted => "A2-bypass-corrupted",
+            Rule::CorruptionNotTruth => "B1-corruption-not-truth",
+            Rule::FoldMismatch => "B2-fold-mismatch",
+            Rule::CorruptionMissing => "B3-corruption-missing",
+            Rule::TailAlias => "C1-tail-alias",
+            Rule::PanelShape => "C2-panel-shape",
+            Rule::PanelValue => "C3-panel-value",
+            Rule::I8Range => "C4-i8-range",
+            Rule::ChainShape => "C5-chain-shape",
+            Rule::Layout => "C6-layout",
+            Rule::TileGrid => "C0-tile-grid",
+            Rule::Fingerprint => "F1-fingerprint",
+            Rule::MaskShape => "M0-mask-shape",
+            Rule::MaskPrune => "M1-mask-prune",
+            Rule::MaskBypass => "M2-mask-bypass",
+            Rule::MaskCorruption => "M3-mask-corruption",
+        }
+    }
+}
+
+/// One verifier violation, locatable down to the op: which plan (both
+/// fingerprint roles), which layer (for chip plans), which tile, which
+/// column/row, which rule.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    /// Truth-map fingerprint of the offending plan.
+    pub plan_fp: u64,
+    /// Known-view fingerprint of the offending plan.
+    pub known_fp: u64,
+    /// Weighted-layer index (chip plans only).
+    pub layer: Option<usize>,
+    /// `(k0, m0)` of the offending tile.
+    pub tile: Option<(usize, usize)>,
+    /// Tile-local column of the offending op.
+    pub col: Option<usize>,
+    /// Tile-local row of the offending op.
+    pub row: Option<usize>,
+    pub detail: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] plan {:#018x}/{:#018x}", self.rule.id(), self.plan_fp, self.known_fp)?;
+        if let Some(li) = self.layer {
+            write!(f, " layer {li}")?;
+        }
+        if let Some((k0, m0)) = self.tile {
+            write!(f, " tile ({k0},{m0})")?;
+        }
+        if let Some(c) = self.col {
+            write!(f, " col {c}")?;
+        }
+        if let Some(r) = self.row {
+            write!(f, " row {r}")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+/// Diagnostics are capped so a structurally broken plan reports its
+/// first violations instead of allocating one entry per weight.
+const MAX_DIAGS: usize = 64;
+
+struct Sink {
+    plan_fp: u64,
+    known_fp: u64,
+    layer: Option<usize>,
+    diags: Vec<Diagnostic>,
+    dropped: usize,
+}
+
+impl Sink {
+    fn new(plan_fp: u64, known_fp: u64) -> Sink {
+        Sink { plan_fp, known_fp, layer: None, diags: Vec::new(), dropped: 0 }
+    }
+
+    fn push(
+        &mut self,
+        rule: Rule,
+        tile: Option<(usize, usize)>,
+        col: Option<usize>,
+        row: Option<usize>,
+        detail: String,
+    ) {
+        if self.diags.len() >= MAX_DIAGS {
+            self.dropped += 1;
+            return;
+        }
+        self.diags.push(Diagnostic {
+            rule,
+            plan_fp: self.plan_fp,
+            known_fp: self.known_fp,
+            layer: self.layer,
+            tile,
+            col,
+            row,
+            detail,
+        });
+    }
+
+    fn full(&self) -> bool {
+        self.diags.len() >= MAX_DIAGS
+    }
+
+    fn finish(mut self) -> Vec<Diagnostic> {
+        if self.dropped > 0 {
+            let (fp, kfp, layer) = (self.plan_fp, self.known_fp, self.layer);
+            self.diags.push(Diagnostic {
+                rule: Rule::Layout,
+                plan_fp: fp,
+                known_fp: kfp,
+                layer,
+                tile: None,
+                col: None,
+                row: None,
+                detail: format!("{} further diagnostics suppressed", self.dropped),
+            });
+        }
+        self.diags
+    }
+}
+
+/// Is the compile-time hook active? Debug builds always verify; release
+/// builds opt in with `REPRO_VERIFY=1` (the CI default), read once.
+pub fn runtime_verify_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        matches!(
+            std::env::var("REPRO_VERIFY").ok().as_deref(),
+            Some("1" | "true" | "on" | "yes")
+        )
+    })
+}
+
+#[inline]
+fn compile_hook_enabled() -> bool {
+    cfg!(debug_assertions) || runtime_verify_enabled()
+}
+
+/// Compile-path hook: panic with every diagnostic if `plan` fails
+/// verification. No-op unless debug assertions or `REPRO_VERIFY=1`.
+pub(crate) fn assert_matmul_plan_verified(
+    plan: &MatmulPlan,
+    truth: &FaultMap,
+    known: &KnownMap,
+    w: &[i32],
+) {
+    if !compile_hook_enabled() {
+        return;
+    }
+    let diags = verify_matmul_plan(plan, truth, known, w);
+    assert!(diags.is_empty(), "{}", render("compiled MatmulPlan failed verification", &diags));
+}
+
+/// Compile-path hook for the host-mask synthesis (`ChipPlan::compile*`).
+pub(crate) fn assert_layer_masks_verified(
+    arch: &Arch,
+    masks: &LayerMasks,
+    truth: &FaultMap,
+    known: &KnownMap,
+    kind: MaskKind,
+) {
+    if !compile_hook_enabled() {
+        return;
+    }
+    let diags = verify_layer_masks(arch, masks, truth, known, kind);
+    assert!(diags.is_empty(), "{}", render("compiled LayerMasks failed verification", &diags));
+}
+
+/// Render a diagnostic list for panics and CLI output.
+pub fn render(header: &str, diags: &[Diagnostic]) -> String {
+    let mut out = format!("{header} ({} violation(s)):", diags.len());
+    for d in diags {
+        out.push_str("\n  ");
+        out.push_str(&d.to_string());
+    }
+    out
+}
+
+/// Expected effective weight of tile-local `(r, c)` — the single source
+/// of the bypass semantics the verifier holds the compiler to.
+#[inline]
+fn expected_eff(
+    w: &[i32],
+    m: usize,
+    k0: usize,
+    m0: usize,
+    r: usize,
+    c: usize,
+    bypassed: bool,
+) -> i32 {
+    if bypassed {
+        0
+    } else {
+        w[(k0 + r) * m + (m0 + c)]
+    }
+}
+
+/// Walk one compiled [`MatmulPlan`] and return every invariant violation
+/// against the `(truth, known, weights)` it claims to have been lowered
+/// from. Empty result = verified.
+pub fn verify_matmul_plan(
+    plan: &MatmulPlan,
+    truth: &FaultMap,
+    known: &KnownMap,
+    w: &[i32],
+) -> Vec<Diagnostic> {
+    let mut sink = Sink::new(plan.fingerprint(), plan.known_fingerprint());
+    let (n, k, m) = (plan.n(), plan.k(), plan.m());
+    let nr = plan.panel_nr();
+    let fap = plan.kind() == MaskKind::FapBypass;
+
+    // F1: the plan must identify the exact views it was compiled from.
+    if plan.fingerprint() != truth.fingerprint() {
+        sink.push(Rule::Fingerprint, None, None, None, "truth fingerprint mismatch".into());
+    }
+    if plan.known_fingerprint() != known.fingerprint() {
+        sink.push(Rule::Fingerprint, None, None, None, "known fingerprint mismatch".into());
+    }
+    if n != truth.n() || n != known.n() {
+        sink.push(
+            Rule::Fingerprint,
+            None,
+            None,
+            None,
+            format!("grid {} vs truth {} / known {}", n, truth.n(), known.n()),
+        );
+        return sink.finish();
+    }
+    if w.len() != k * m {
+        sink.push(
+            Rule::Fingerprint,
+            None,
+            None,
+            None,
+            format!("weights len {} != k*m = {}", w.len(), k * m),
+        );
+        return sink.finish();
+    }
+
+    // C6: executor layout constants.
+    if BATCH_BLOCK % MICRO_MR != 0 {
+        sink.push(Rule::Layout, None, None, None, "BATCH_BLOCK not MICRO_MR aligned".into());
+    }
+    if !(1..=MAX_NR).contains(&nr) {
+        sink.push(Rule::Layout, None, None, None, format!("panel width {nr} out of 1..={MAX_NR}"));
+        return sink.finish();
+    }
+
+    // C0: row-major tile grid in n-steps.
+    let (kt, mt) = (k.div_ceil(n), m.div_ceil(n));
+    if plan.tiles().len() != kt * mt {
+        sink.push(
+            Rule::TileGrid,
+            None,
+            None,
+            None,
+            format!("{} tiles, expected {}", plan.tiles().len(), kt * mt),
+        );
+        return sink.finish();
+    }
+    for (t, tile) in plan.tiles().iter().enumerate() {
+        let (ek0, em0) = ((t / mt) * n, (t % mt) * n);
+        let (ekh, emw) = ((k - ek0).min(n), (m - em0).min(n));
+        if tile.k0 != ek0 || tile.m0 != em0 || tile.kh != ekh || tile.mw != emw {
+            sink.push(
+                Rule::TileGrid,
+                Some((tile.k0, tile.m0)),
+                None,
+                None,
+                format!(
+                    "tile {t}: ({},{})x({},{}), expected ({ek0},{em0})x({ekh},{emw})",
+                    tile.k0, tile.m0, tile.kh, tile.mw
+                ),
+            );
+            return sink.finish();
+        }
+    }
+
+    for tile in plan.tiles() {
+        verify_tile(&mut sink, tile, truth, known, fap, w, m, nr);
+        if sink.full() {
+            break;
+        }
+    }
+    sink.finish()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn verify_tile(
+    sink: &mut Sink,
+    tile: &crate::exec::plan::TileProgram,
+    truth: &FaultMap,
+    known: &KnownMap,
+    fap: bool,
+    w: &[i32],
+    m: usize,
+    nr: usize,
+) {
+    let at = Some((tile.k0, tile.m0));
+    let (kh, mw) = (tile.kh, tile.mw);
+    let slots = tile.dense_cols().len();
+    let bypassed = |r: usize, c: usize| fap && known.is_faulty(r, c);
+
+    // C1: dense slots + chain cols partition 0..mw exactly once.
+    let mut seen = vec![0u32; mw];
+    for &c in tile.dense_cols() {
+        match seen.get_mut(c as usize) {
+            Some(s) => *s += 1,
+            None => sink.push(
+                Rule::TailAlias,
+                at,
+                Some(c as usize),
+                None,
+                format!("dense slot column {c} out of tile width {mw}"),
+            ),
+        }
+    }
+    for (c, _) in tile.chain_views() {
+        match seen.get_mut(c) {
+            Some(s) => *s += 1,
+            None => sink.push(
+                Rule::TailAlias,
+                at,
+                Some(c),
+                None,
+                format!("chain column {c} out of tile width {mw}"),
+            ),
+        }
+    }
+    for (c, &hits) in seen.iter().enumerate() {
+        if hits != 1 {
+            sink.push(
+                Rule::TailAlias,
+                at,
+                Some(c),
+                None,
+                format!("column lowered {hits} times (a padded lane may alias it)"),
+            );
+        }
+    }
+
+    // C2: storage shapes.
+    let shape_ok = tile.bases().len() == slots
+        && tile.panel_len() == slots.div_ceil(nr) * kh * nr;
+    if !shape_ok {
+        sink.push(
+            Rule::PanelShape,
+            at,
+            None,
+            None,
+            format!(
+                "{} base consts / {} panel elems for {slots} slots x {kh} rows at nr={nr}",
+                tile.bases().len(),
+                tile.panel_len()
+            ),
+        );
+    }
+
+    if shape_ok {
+        // C1 (pad lanes): padded tail lanes must be inert zeros.
+        for s in slots..slots.div_ceil(nr) * nr {
+            for r in 0..kh {
+                if tile.panel_elem(s, r, nr) != 0 {
+                    sink.push(
+                        Rule::TailAlias,
+                        at,
+                        Some(s),
+                        Some(r),
+                        "padded tail lane holds a non-zero weight".into(),
+                    );
+                }
+            }
+        }
+        // A1/C3/C4 + B2/B3 per dense slot.
+        let i8_panels = tile.panels_are_i8();
+        for (s, &col) in tile.dense_cols().iter().enumerate() {
+            let c = col as usize;
+            if c >= mw {
+                continue; // already a C1 diagnostic
+            }
+            let mut live: Vec<usize> = Vec::new();
+            for r in 0..kh {
+                let byp = bypassed(r, c);
+                let want = expected_eff(w, m, tile.k0, tile.m0, r, c, byp);
+                if i8_panels && i8::try_from(want).is_err() {
+                    sink.push(
+                        Rule::I8Range,
+                        at,
+                        Some(c),
+                        Some(r),
+                        format!("effective weight {want} outside i8 range in an i8 panel"),
+                    );
+                    continue;
+                }
+                let got = tile.panel_elem(s, r, nr);
+                if got != want {
+                    if byp && got != 0 {
+                        sink.push(
+                            Rule::BypassMissing,
+                            at,
+                            Some(c),
+                            Some(r),
+                            format!("known-faulty MAC keeps weight {got} (expected 0)"),
+                        );
+                    } else {
+                        sink.push(
+                            Rule::PanelValue,
+                            at,
+                            Some(c),
+                            Some(r),
+                            format!("packed weight {got}, expected {want}"),
+                        );
+                    }
+                }
+                if truth.is_faulty(r, c) && !byp {
+                    live.push(r);
+                }
+            }
+            // B2/B3: a dense column's live faults must all sit on an
+            // all-zero effective-weight prefix and fold exactly.
+            let mut want_base = 0i32;
+            if let Some(&last) = live.last() {
+                let prefix_zero = (0..=last)
+                    .all(|r| expected_eff(w, m, tile.k0, tile.m0, r, c, bypassed(r, c)) == 0);
+                if !prefix_zero {
+                    sink.push(
+                        Rule::CorruptionMissing,
+                        at,
+                        Some(c),
+                        Some(last),
+                        "live truth fault on a non-zero prefix lowered dense (chain required)"
+                            .into(),
+                    );
+                }
+                for &r in &live {
+                    want_base = (want_base & truth.and_at(r, c)) | truth.or_at(r, c);
+                }
+            }
+            if tile.bases()[s] != want_base {
+                sink.push(
+                    Rule::FoldMismatch,
+                    at,
+                    Some(c),
+                    None,
+                    format!(
+                        "folded constant {:#010x}, truth's exact fold is {:#010x}",
+                        tile.bases()[s],
+                        want_base
+                    ),
+                );
+            }
+        }
+    }
+
+    // Chain columns: C5 shape, A1/C3 weights, A2/B1/B3 masks.
+    for (c, segs) in tile.chain_views() {
+        if c >= mw {
+            continue; // already a C1 diagnostic
+        }
+        let mut pos = 0usize;
+        let mut masked_rows: Vec<usize> = Vec::new();
+        let last_seg = segs.len().saturating_sub(1);
+        for (si, (start, weights, and_mask, or_mask)) in segs.iter().enumerate() {
+            if *start != pos {
+                sink.push(
+                    Rule::ChainShape,
+                    at,
+                    Some(c),
+                    Some(*start),
+                    format!("seg {si} starts at {start}, expected {pos}"),
+                );
+            }
+            pos = start + weights.len();
+            if pos > kh {
+                sink.push(
+                    Rule::ChainShape,
+                    at,
+                    Some(c),
+                    Some(*start),
+                    format!("seg {si} runs past tile height {kh}"),
+                );
+                break;
+            }
+            for (i, &wv) in weights.iter().enumerate() {
+                let r = start + i;
+                let byp = bypassed(r, c);
+                let want = expected_eff(w, m, tile.k0, tile.m0, r, c, byp);
+                if wv != want {
+                    if byp && wv != 0 {
+                        sink.push(
+                            Rule::BypassMissing,
+                            at,
+                            Some(c),
+                            Some(r),
+                            format!("known-faulty MAC keeps chain weight {wv} (expected 0)"),
+                        );
+                    } else {
+                        sink.push(
+                            Rule::PanelValue,
+                            at,
+                            Some(c),
+                            Some(r),
+                            format!("chain weight {wv}, expected {want}"),
+                        );
+                    }
+                }
+            }
+            let identity = *and_mask == -1 && *or_mask == 0;
+            if identity {
+                if si != last_seg {
+                    sink.push(
+                        Rule::ChainShape,
+                        at,
+                        Some(c),
+                        Some(*start),
+                        format!("identity-mask seg {si} before the chain tail"),
+                    );
+                }
+                continue;
+            }
+            let rt = pos - 1; // the seg's terminal MAC
+            if bypassed(rt, c) {
+                sink.push(
+                    Rule::BypassCorrupted,
+                    at,
+                    Some(c),
+                    Some(rt),
+                    "corruption mask applied at a bypassed (known-faulty) MAC".into(),
+                );
+            } else if !truth.is_faulty(rt, c) {
+                sink.push(
+                    Rule::CorruptionNotTruth,
+                    at,
+                    Some(c),
+                    Some(rt),
+                    "corruption mask at a MAC the truth map calls healthy".into(),
+                );
+            } else if (*and_mask, *or_mask) != (truth.and_at(rt, c), truth.or_at(rt, c)) {
+                sink.push(
+                    Rule::CorruptionNotTruth,
+                    at,
+                    Some(c),
+                    Some(rt),
+                    format!(
+                        "mask ({:#010x},{:#010x}) != truth's ({:#010x},{:#010x})",
+                        and_mask,
+                        or_mask,
+                        truth.and_at(rt, c),
+                        truth.or_at(rt, c)
+                    ),
+                );
+            } else {
+                masked_rows.push(rt);
+            }
+        }
+        if pos != kh {
+            sink.push(
+                Rule::ChainShape,
+                at,
+                Some(c),
+                None,
+                format!("segs cover rows 0..{pos}, tile height is {kh}"),
+            );
+        }
+        // B3: every live truth fault in a chain column must carry its
+        // mask at exactly its row.
+        for r in 0..kh {
+            if truth.is_faulty(r, c) && !bypassed(r, c) && !masked_rows.contains(&r) {
+                sink.push(
+                    Rule::CorruptionMissing,
+                    at,
+                    Some(c),
+                    Some(r),
+                    "live truth fault with no corruption op at its row".into(),
+                );
+            }
+        }
+    }
+}
+
+/// Verify the host-side per-layer masks of a chip plan: prune/bypass
+/// from `known` only (M1/M2), AND/OR corruption from `truth` only (M3),
+/// across the paper's FC and conv weight->MAC mappings.
+pub fn verify_layer_masks(
+    arch: &Arch,
+    masks: &LayerMasks,
+    truth: &FaultMap,
+    known: &KnownMap,
+    kind: MaskKind,
+) -> Vec<Diagnostic> {
+    let mut sink = Sink::new(truth.fingerprint(), known.fingerprint());
+    let n = truth.n();
+    let layers = arch.weighted_layers();
+    let fap = kind == MaskKind::FapBypass;
+    if masks.prune.len() != layers.len()
+        || masks.and_m.len() != layers.len()
+        || masks.or_m.len() != layers.len()
+        || masks.bypass.len() != layers.len()
+    {
+        sink.push(
+            Rule::MaskShape,
+            None,
+            None,
+            None,
+            format!("mask vectors for {} layers, arch has {}", masks.prune.len(), layers.len()),
+        );
+        return sink.finish();
+    }
+    for (li, layer) in layers.iter().enumerate() {
+        sink.layer = Some(li);
+        let want_len = layer.weight_len();
+        if masks.prune[li].len() != want_len
+            || masks.and_m[li].len() != want_len
+            || masks.or_m[li].len() != want_len
+            || masks.bypass[li].len() != want_len
+        {
+            sink.push(
+                Rule::MaskShape,
+                None,
+                None,
+                None,
+                format!("layer mask len {} != weight len {want_len}", masks.prune[li].len()),
+            );
+            continue;
+        }
+        let mut check = |idx: usize, r: usize, c: usize, sink: &mut Sink| {
+            let known_f = known.is_faulty(r, c);
+            if (masks.prune[li][idx] == 0.0) != known_f {
+                sink.push(
+                    Rule::MaskPrune,
+                    None,
+                    Some(c),
+                    Some(r),
+                    format!(
+                        "prune {} at weight {idx}, known says {}",
+                        masks.prune[li][idx],
+                        if known_f { "faulty" } else { "healthy" }
+                    ),
+                );
+            }
+            if (masks.bypass[li][idx] == 1) != (fap && known_f) {
+                sink.push(
+                    Rule::MaskBypass,
+                    None,
+                    Some(c),
+                    Some(r),
+                    format!("bypass {} at weight {idx} under {kind:?}", masks.bypass[li][idx]),
+                );
+            }
+            if masks.and_m[li][idx] != truth.and_at(r, c)
+                || masks.or_m[li][idx] != truth.or_at(r, c)
+            {
+                sink.push(
+                    Rule::MaskCorruption,
+                    None,
+                    Some(c),
+                    Some(r),
+                    format!(
+                        "AND/OR ({:#010x},{:#010x}) != truth's ({:#010x},{:#010x})",
+                        masks.and_m[li][idx],
+                        masks.or_m[li][idx],
+                        truth.and_at(r, c),
+                        truth.or_at(r, c)
+                    ),
+                );
+            }
+        };
+        match layer {
+            Layer::Fc(f) => {
+                for kk in 0..f.din {
+                    for j in 0..f.dout {
+                        let (r, c) = fc::fc_mac_of(kk, j, n);
+                        check(kk * f.dout + j, r, c, &mut sink);
+                        if sink.full() {
+                            return sink.finish();
+                        }
+                    }
+                }
+            }
+            Layer::Conv(cv) => {
+                let cs = cv.din * cv.dout;
+                for t in 0..cv.kh * cv.kw {
+                    for di in 0..cv.din {
+                        for do_ in 0..cv.dout {
+                            let (r, c) = conv::conv_mac_of(di, do_, n);
+                            check(t * cs + di * cv.dout + do_, r, c, &mut sink);
+                            if sink.full() {
+                                return sink.finish();
+                            }
+                        }
+                    }
+                }
+            }
+            Layer::Pool(_) => {}
+        }
+    }
+    sink.finish()
+}
+
+/// Verify a whole [`ChipPlan`]: identity, host masks, and (when the
+/// quantized weights it was compiled from are provided) every per-layer
+/// tile program.
+pub fn verify_chip_plan(
+    plan: &ChipPlan,
+    arch: &Arch,
+    truth: &FaultMap,
+    known: &KnownMap,
+    qweights: Option<&[Vec<i32>]>,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut ident = |detail: String| {
+        diags.push(Diagnostic {
+            rule: Rule::Fingerprint,
+            plan_fp: plan.fingerprint(),
+            known_fp: plan.known_fingerprint(),
+            layer: None,
+            tile: None,
+            col: None,
+            row: None,
+            detail,
+        });
+    };
+    if plan.fingerprint() != truth.fingerprint() {
+        ident("chip plan truth fingerprint mismatch".into());
+    }
+    if plan.known_fingerprint() != known.fingerprint() {
+        ident("chip plan known fingerprint mismatch".into());
+    }
+    if plan.arch_name() != arch.name {
+        ident(format!("chip plan arch {:?} != {:?}", plan.arch_name(), arch.name));
+    }
+    if plan.n() != truth.n() {
+        ident(format!("chip plan grid {} != truth grid {}", plan.n(), truth.n()));
+        return diags;
+    }
+    diags.extend(verify_layer_masks(arch, plan.masks(), truth, known, plan.kind()));
+
+    let layers = arch.weighted_layers();
+    for li in 0..layers.len() {
+        let Some(lp) = plan.layer_plan(li) else { continue };
+        if lp.kind() != plan.kind()
+            || lp.fingerprint() != plan.fingerprint()
+            || lp.known_fingerprint() != plan.known_fingerprint()
+        {
+            ident(format!("layer {li} plan compiled under a different (truth, known, kind)"));
+            continue;
+        }
+        if let Some(qw) = qweights {
+            let mut layer_diags = verify_matmul_plan(lp, truth, known, &qw[li]);
+            for d in &mut layer_diags {
+                d.layer = Some(li);
+            }
+            diags.extend(layer_diags);
+        }
+    }
+    diags.truncate(MAX_DIAGS + 1);
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::plan::PanelOptions;
+    use crate::faults::{inject_uniform, FaultSpec, StuckAt};
+    use crate::model::arch::{alexnet32, mnist};
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn rand_weights(rng: &mut Rng, k: usize, m: usize) -> Vec<i32> {
+        (0..k * m).map(|_| rng.below(255) as i32 - 127).collect()
+    }
+
+    fn has_rule(diags: &[Diagnostic], rule: Rule) -> bool {
+        diags.iter().any(|d| d.rule == rule)
+    }
+
+    #[test]
+    fn accepts_compiler_output_across_configs() {
+        let mut rng = Rng::new(11);
+        for n in [2usize, 4, 6] {
+            let truth = inject_uniform(FaultSpec::new(n), n, &mut Rng::new(n as u64));
+            let partial =
+                KnownMap::from_macs(n, truth.faulty_macs().into_iter().step_by(2));
+            for known in [KnownMap::perfect(&truth), partial] {
+                for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
+                    for nr in [4usize, 8] {
+                        for allow_i8 in [false, true] {
+                            let (k, m) = (2 * n + 1, n + 3);
+                            let w = rand_weights(&mut rng, k, m);
+                            let plan = MatmulPlan::compile_views_opts(
+                                &truth,
+                                &known,
+                                kind,
+                                &w,
+                                k,
+                                m,
+                                PanelOptions { nr, allow_i8 },
+                            );
+                            let diags = verify_matmul_plan(&plan, &truth, &known, &w);
+                            assert!(
+                                diags.is_empty(),
+                                "n={n} {kind:?} nr={nr} i8={allow_i8}:\n{}",
+                                render("unexpected", &diags)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accepts_compiled_chip_plans_and_masks() {
+        for arch in [mnist(), alexnet32()] {
+            let truth = inject_uniform(FaultSpec::new(16), 10, &mut Rng::new(3));
+            let known = KnownMap::from_macs(16, truth.faulty_macs().into_iter().take(6));
+            for kind in [MaskKind::Unmitigated, MaskKind::FapBypass] {
+                let plan = crate::exec::ChipPlan::compile_views(&arch, &truth, &known, kind);
+                let diags = verify_chip_plan(&plan, &arch, &truth, &known, None);
+                assert!(diags.is_empty(), "{}:\n{}", arch.name, render("unexpected", &diags));
+            }
+        }
+        // weight-compiled MLP plans verify down to the tile programs
+        let arch = mnist();
+        let truth = inject_uniform(FaultSpec::new(16), 8, &mut Rng::new(4));
+        let known = KnownMap::perfect(&truth);
+        let mut rng = Rng::new(5);
+        let qw: Vec<Vec<i32>> = arch
+            .weighted_layers()
+            .iter()
+            .map(|l| (0..l.weight_len()).map(|_| rng.below(255) as i32 - 127).collect())
+            .collect();
+        let plan =
+            crate::exec::ChipPlan::compile_mlp_views(&arch, &truth, &known, MaskKind::FapBypass, &qw);
+        let diags = verify_chip_plan(&plan, &arch, &truth, &known, Some(&qw));
+        assert!(diags.is_empty(), "{}", render("unexpected", &diags));
+    }
+
+    #[test]
+    fn wrong_views_are_rejected_by_fingerprint() {
+        let truth = inject_uniform(FaultSpec::new(4), 3, &mut Rng::new(9));
+        let other = inject_uniform(FaultSpec::new(4), 3, &mut Rng::new(10));
+        let known = KnownMap::perfect(&truth);
+        let w = vec![1i32; 8 * 8];
+        let plan = MatmulPlan::compile_views(&truth, &known, MaskKind::FapBypass, &w, 8, 8);
+        let diags = verify_matmul_plan(&plan, &other, &KnownMap::perfect(&other), &w);
+        assert!(has_rule(&diags, Rule::Fingerprint));
+    }
+
+    /// Seeded bug class 1 (PR-6 family): a bypass op the compiler
+    /// "forgot" — the known-faulty MAC keeps its weight.
+    #[test]
+    fn prop_dropped_bypass_rejected_as_a1() {
+        prop::check("verify.dropped_bypass", 0xA1, 64, |rng| {
+            let n = 2 + rng.below(5);
+            let (r, c) = (rng.below(n), rng.below(n));
+            let truth = FaultMap::from_faults(
+                n,
+                [StuckAt {
+                    row: r as u16,
+                    col: c as u16,
+                    bit: 20 + rng.below(8) as u8,
+                    value: true,
+                }],
+            );
+            let known = KnownMap::perfect(&truth);
+            let (k, m) = (n + rng.below(8), n + rng.below(8));
+            let w: Vec<i32> = (0..k * m).map(|_| 1 + rng.below(40) as i32).collect();
+            let mut plan =
+                MatmulPlan::compile_views(&truth, &known, MaskKind::FapBypass, &w, k, m);
+            prop_assert!(
+                verify_matmul_plan(&plan, &truth, &known, &w).is_empty(),
+                "pristine plan must verify"
+            );
+            let nr = plan.panel_nr();
+            let tile = &mut plan.tiles_mut()[0];
+            let slot = tile
+                .dense_cols()
+                .iter()
+                .position(|&dc| dc as usize == c)
+                .expect("bypassed column is dense under perfect-knowledge FAP");
+            tile.test_set_panel_elem(slot, r, nr, 7);
+            let diags = verify_matmul_plan(&plan, &truth, &known, &w);
+            prop_assert!(
+                diags.iter().any(|d| d.rule == Rule::BypassMissing),
+                "expected A1-bypass-missing, got: {}",
+                render("", &diags)
+            );
+            Ok(())
+        });
+    }
+
+    /// Seeded bug class 2 (PR-6 family): a padded tail lane aliasing a
+    /// real (bypassed) column.
+    #[test]
+    fn prop_tail_alias_rejected_as_c1() {
+        prop::check("verify.tail_alias", 0xC1, 64, |rng| {
+            let n = 2 + rng.below(5);
+            let (r, c) = (rng.below(n), rng.below(n));
+            let truth = FaultMap::from_faults(
+                n,
+                [StuckAt { row: r as u16, col: c as u16, bit: 22, value: true }],
+            );
+            let known = KnownMap::perfect(&truth);
+            let (k, m) = (n + rng.below(6), n + rng.below(6));
+            let w: Vec<i32> = (0..k * m).map(|_| 1 + rng.below(40) as i32).collect();
+            let mut plan =
+                MatmulPlan::compile_views(&truth, &known, MaskKind::FapBypass, &w, k, m);
+            plan.tiles_mut()[0].test_alias_tail_lane(c as u32);
+            let diags = verify_matmul_plan(&plan, &truth, &known, &w);
+            prop_assert!(
+                diags.iter().any(|d| d.rule == Rule::TailAlias),
+                "expected C1-tail-alias, got: {}",
+                render("", &diags)
+            );
+            Ok(())
+        });
+    }
+
+    /// Seeded bug class 3 (PR-5 family): a corruption op whose mask does
+    /// not come from the truth map.
+    #[test]
+    fn prop_corruption_not_from_truth_rejected_as_b1() {
+        prop::check("verify.corruption_source", 0xB1, 64, |rng| {
+            let n = 2 + rng.below(5);
+            let (r, c) = (rng.below(n), rng.below(n));
+            let truth = FaultMap::from_faults(
+                n,
+                [StuckAt {
+                    row: r as u16,
+                    col: c as u16,
+                    bit: 16 + rng.below(8) as u8,
+                    value: true,
+                }],
+            );
+            // unmitigated + non-zero weights: the faulty column must
+            // lower to a chain program
+            let known = KnownMap::perfect(&truth);
+            let (k, m) = (n + rng.below(6), n + rng.below(6));
+            let w: Vec<i32> = (0..k * m).map(|_| 1 + rng.below(40) as i32).collect();
+            let mut plan =
+                MatmulPlan::compile_views(&truth, &known, MaskKind::Unmitigated, &w, k, m);
+            let tile = &mut plan.tiles_mut()[0];
+            prop_assert!(tile.test_chain_cols() > 0, "fault on non-zero prefix must chain");
+            let (and_t, or_t) = (truth.and_at(r, c), truth.or_at(r, c));
+            // a mask value truth never produced at this site
+            let wrong_or = if or_t ^ 2 == 0 { or_t ^ 4 } else { or_t ^ 2 };
+            tile.test_set_chain_mask(0, 0, and_t, wrong_or);
+            let diags = verify_matmul_plan(&plan, &truth, &known, &w);
+            prop_assert!(
+                diags.iter().any(|d| d.rule == Rule::CorruptionNotTruth),
+                "expected B1-corruption-not-truth, got: {}",
+                render("", &diags)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corruption_at_bypassed_site_rejected_as_a2() {
+        // chain column via a truth fault on a non-zero prefix, plus a
+        // *known* (bypassed) site at the chain's tail row: re-pointing
+        // the tail seg's identity mask at the bypassed MAC must trip A2
+        let n = 4;
+        let truth =
+            FaultMap::from_faults(n, [StuckAt { row: 1, col: 2, bit: 20, value: true }]);
+        let known = KnownMap::from_macs(n, [(3usize, 2usize)]); // false positive: bypassed tail
+        let (k, m) = (n, n);
+        let w: Vec<i32> = (0..k * m).map(|i| 1 + (i as i32 % 5)).collect();
+        let mut plan = MatmulPlan::compile_views(&truth, &known, MaskKind::FapBypass, &w, k, m);
+        assert!(verify_matmul_plan(&plan, &truth, &known, &w).is_empty());
+        let tile = &mut plan.tiles_mut()[0];
+        assert!(tile.test_chain_cols() > 0);
+        // the tail seg (index 1) covers rows 2..4; its terminal row 3 is
+        // the bypassed MAC
+        tile.test_set_chain_mask(0, 1, -1, 1 << 20);
+        let diags = verify_matmul_plan(&plan, &truth, &known, &w);
+        assert!(
+            has_rule(&diags, Rule::BypassCorrupted),
+            "expected A2-bypass-corrupted, got: {}",
+            render("", &diags)
+        );
+    }
+
+    #[test]
+    fn mask_level_truth_known_swap_rejected() {
+        // compile masks with the roles swapped (the PR-5 bug, restaged)
+        // and hold them against the correct views
+        let arch = mnist();
+        let truth = inject_uniform(FaultSpec::new(16), 6, &mut Rng::new(21));
+        let known = KnownMap::from_macs(16, truth.faulty_macs().into_iter().take(3));
+        // "swapped": corruption from the known view's MACs only
+        let truth_as_known = FaultMap::from_faults(
+            16,
+            truth
+                .faults()
+                .iter()
+                .copied()
+                .filter(|f| known.is_faulty(f.row as usize, f.col as usize)),
+        );
+        let swapped =
+            LayerMasks::build_views(&arch, &truth_as_known, &known, MaskKind::FapBypass);
+        let diags = verify_layer_masks(&arch, &swapped, &truth, &known, MaskKind::FapBypass);
+        assert!(
+            has_rule(&diags, Rule::MaskCorruption),
+            "corruption masks from the known view must be rejected: {}",
+            render("", &diags)
+        );
+    }
+
+    #[test]
+    fn diagnostics_carry_structure_and_render() {
+        let truth = FaultMap::from_faults(4, [StuckAt { row: 0, col: 1, bit: 24, value: true }]);
+        let known = KnownMap::perfect(&truth);
+        let w = vec![2i32; 16];
+        let mut plan = MatmulPlan::compile_views(&truth, &known, MaskKind::FapBypass, &w, 4, 4);
+        let nr = plan.panel_nr();
+        plan.tiles_mut()[0].test_set_panel_elem(1, 0, nr, 9);
+        let diags = verify_matmul_plan(&plan, &truth, &known, &w);
+        assert_eq!(diags.len(), 1);
+        let d = &diags[0];
+        assert_eq!(d.rule, Rule::BypassMissing);
+        assert_eq!(d.rule.id(), "A1-bypass-missing");
+        assert_eq!(d.plan_fp, truth.fingerprint());
+        assert_eq!(d.known_fp, known.fingerprint());
+        assert_eq!(d.tile, Some((0, 0)));
+        assert_eq!((d.col, d.row), (Some(1), Some(0)));
+        let text = d.to_string();
+        assert!(text.contains("A1-bypass-missing"), "{text}");
+        assert!(text.contains("tile (0,0)"), "{text}");
+    }
+
+    #[test]
+    fn diagnostic_flood_is_capped() {
+        let truth = FaultMap::healthy(8);
+        let known = KnownMap::perfect(&truth);
+        let w = vec![3i32; 64 * 64];
+        let plan = MatmulPlan::compile_views(&truth, &known, MaskKind::Unmitigated, &w, 64, 64);
+        // verify against zeroed weights: every packed element mismatches
+        let zeros = vec![0i32; 64 * 64];
+        let diags = verify_matmul_plan(&plan, &truth, &known, &zeros);
+        assert!(!diags.is_empty());
+        assert!(diags.len() <= MAX_DIAGS + 1, "cap exceeded: {}", diags.len());
+    }
+}

@@ -26,7 +26,7 @@ use crate::model::{arch, Arch, Params};
 use crate::systolic::synthesis;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 #[derive(Clone, Debug)]
 pub struct HarnessConfig {
@@ -74,7 +74,7 @@ struct ModelBundle {
 pub struct Harness<'rt> {
     engine: Engine<'rt>,
     pub cfg: HarnessConfig,
-    bundles: HashMap<String, ModelBundle>,
+    bundles: BTreeMap<String, ModelBundle>,
 }
 
 impl<'rt> Harness<'rt> {
@@ -88,7 +88,7 @@ impl<'rt> Harness<'rt> {
         if engine.backend() == Backend::Plan {
             let _ = engine.worker_pool();
         }
-        Harness { engine, cfg, bundles: HashMap::new() }
+        Harness { engine, cfg, bundles: BTreeMap::new() }
     }
 
     /// The execution engine (backend, plan cache, runtime handle).

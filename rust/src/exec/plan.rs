@@ -31,7 +31,7 @@ use crate::model::quant::Calibration;
 use crate::model::{Arch, Layer, Params};
 use crate::obs::LazyCounter;
 use crate::systolic::fixed;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 // Exec-layer instrumentation. Each plan execution pays one enabled check
@@ -238,6 +238,102 @@ impl TileProgram {
         };
         TileProgram { k0, m0, kh, mw, panels, dense_cols, base, chain_cols }
     }
+
+    // -- read-only IR views for the analysis layer ------------------------
+    //
+    // `analysis::verify` proves the lowering invariants by *walking* the
+    // compiled program, so it needs to read the private program arrays —
+    // but never to execute or mutate them. Everything below is crate-
+    // visible and side-effect free.
+
+    /// Tile-local output column of each dense slot, in slot order.
+    pub(crate) fn dense_cols(&self) -> &[u32] {
+        &self.dense_cols
+    }
+
+    /// Additive fault-correction constant per dense slot.
+    pub(crate) fn bases(&self) -> &[i32] {
+        &self.base
+    }
+
+    /// Total packed panel elements (both element widths).
+    pub(crate) fn panel_len(&self) -> usize {
+        match &self.panels {
+            PanelData::I32(v) => v.len(),
+            PanelData::I8(v) => v.len(),
+        }
+    }
+
+    /// Did this tile pack i8 panels?
+    pub(crate) fn panels_are_i8(&self) -> bool {
+        self.panels.is_i8()
+    }
+
+    /// Packed panel element of dense slot `s` at reduction row `r`,
+    /// widened to i32 (the exact value the microkernel multiplies with).
+    /// Layout mirrors [`gemm::pack_panels`]: panel `s / nr`, interleaved
+    /// row-major inside the panel.
+    pub(crate) fn panel_elem(&self, s: usize, r: usize, nr: usize) -> i32 {
+        let idx = (s / nr) * self.kh * nr + r * nr + (s % nr);
+        match &self.panels {
+            PanelData::I32(v) => v[idx],
+            PanelData::I8(v) => v[idx] as i32,
+        }
+    }
+
+    /// Borrowed views of the chain programs: one `(col, segs)` per chain
+    /// column, each seg as `(start, weights, and_mask, or_mask)`.
+    pub(crate) fn chain_views(&self) -> impl Iterator<Item = (usize, Vec<(usize, &[i32], i32, i32)>)> + '_ {
+        self.chain_cols.iter().map(|cc| {
+            let segs = cc
+                .segs
+                .iter()
+                .map(|s| (s.start, s.weights.as_slice(), s.and_mask, s.or_mask))
+                .collect();
+            (cc.col, segs)
+        })
+    }
+
+    // -- test-only mutation hooks -----------------------------------------
+    //
+    // The verifier's negative tests seed exactly the historical bug
+    // classes into an otherwise-valid compiled program (PR-5 truth/known
+    // swap, PR-6 tail-lane aliasing, a dropped bypass). Production code
+    // never mutates a compiled tile — these exist only under `cfg(test)`.
+
+    /// Overwrite the packed panel element of dense slot `s` at row `r`
+    /// (models a bypass op the compiler failed to apply).
+    #[cfg(test)]
+    pub(crate) fn test_set_panel_elem(&mut self, s: usize, r: usize, nr: usize, v: i32) {
+        let idx = (s / nr) * self.kh * nr + r * nr + (s % nr);
+        match &mut self.panels {
+            PanelData::I32(p) => p[idx] = v,
+            PanelData::I8(p) => p[idx] = i8::try_from(v).expect("test value must fit i8"),
+        }
+    }
+
+    /// Append a dense slot aliasing column `col` without repacking the
+    /// panels (models a padded tail lane writing a real column).
+    #[cfg(test)]
+    pub(crate) fn test_alias_tail_lane(&mut self, col: u32) {
+        self.dense_cols.push(col);
+        self.base.push(0);
+    }
+
+    /// Overwrite the fault masks of chain seg `(cc, seg)` (models a
+    /// corruption op derived from the wrong fault-map role).
+    #[cfg(test)]
+    pub(crate) fn test_set_chain_mask(&mut self, cc: usize, seg: usize, and_mask: i32, or_mask: i32) {
+        let s = &mut self.chain_cols[cc].segs[seg];
+        s.and_mask = and_mask;
+        s.or_mask = or_mask;
+    }
+
+    /// Chain-column count (lets tests pick a mutable chain target).
+    #[cfg(test)]
+    pub(crate) fn test_chain_cols(&self) -> usize {
+        self.chain_cols.len()
+    }
 }
 
 /// Aggregate lowering statistics (what fraction of the matmul runs on the
@@ -278,7 +374,9 @@ pub struct MatmulPlan {
 
 /// Batch-block size for the cache-tiled executor: one block of activation
 /// rows stays L1-resident while a tile's weight columns stream through.
-const BATCH_BLOCK: usize = 32;
+/// Crate-visible so the analysis layer can statically check the
+/// `MICRO_MR` alignment contract (`analysis::verify`, rule C6-layout).
+pub(crate) const BATCH_BLOCK: usize = 32;
 
 impl MatmulPlan {
     /// [`MatmulPlan::compile_views`] under perfect controller knowledge
@@ -351,7 +449,7 @@ impl MatmulPlan {
             }
             k0 += n;
         }
-        MatmulPlan {
+        let plan = MatmulPlan {
             n,
             k,
             m,
@@ -361,7 +459,24 @@ impl MatmulPlan {
             panel_nr: opts.nr,
             tiles,
             stats,
-        }
+        };
+        // every plan compiled under a debug build (or REPRO_VERIFY=1) is
+        // statically verified against the inputs it was lowered from —
+        // the invariant layer of analysis::verify, on by default in CI
+        crate::analysis::verify::assert_matmul_plan_verified(&plan, truth, known, w);
+        plan
+    }
+
+    /// The compiled tile programs, for the analysis layer's IR walk.
+    pub(crate) fn tiles(&self) -> &[TileProgram] {
+        &self.tiles
+    }
+
+    /// Mutable tile access for the verifier's negative tests (seeding
+    /// historical bug classes into an otherwise-valid program).
+    #[cfg(test)]
+    pub(crate) fn tiles_mut(&mut self) -> &mut [TileProgram] {
+        &mut self.tiles
     }
 
     pub fn n(&self) -> usize {
@@ -690,6 +805,7 @@ impl ChipPlan {
     ) -> ChipPlan {
         M_COMPILE.inc();
         let masks = LayerMasks::build_views(arch, truth, known, kind);
+        crate::analysis::verify::assert_layer_masks_verified(arch, &masks, truth, known, kind);
         ChipPlan {
             arch_name: arch.name.to_string(),
             n: truth.n(),
@@ -843,7 +959,11 @@ impl ChipPlan {
 /// shared across the worker pool's threads and the fleet's serving
 /// workers instead of being recompiled per thread.
 pub struct PlanCache {
-    map: HashMap<(String, u64, u64, u8), CacheEntry>,
+    /// Ordered map so every walk over the cache (LRU scan, debugging
+    /// dumps) visits entries in a deterministic key order — HashMap
+    /// iteration order is seeded per process and the determinism lint
+    /// (`repro lint`, rule D002) bans it from feeding decisions.
+    map: BTreeMap<(String, u64, u64, u8), CacheEntry>,
     capacity: usize,
     /// Logical clock bumped per access; entries carry their last-touched
     /// tick, and eviction removes the minimum.
@@ -874,7 +994,7 @@ impl PlanCache {
 
     /// A cache bounded to `capacity` live plans (0 disables caching).
     pub fn with_capacity(capacity: usize) -> PlanCache {
-        PlanCache { map: HashMap::new(), capacity, tick: 0, hits: 0, misses: 0, evictions: 0 }
+        PlanCache { map: BTreeMap::new(), capacity, tick: 0, hits: 0, misses: 0, evictions: 0 }
     }
 
     /// [`PlanCache::get_or_compile_views`] under perfect controller
@@ -1296,6 +1416,31 @@ mod tests {
         assert!(cache.contains(&a, &maps[1], MaskKind::Unmitigated));
         assert!(!cache.contains(&a, &maps[2], MaskKind::Unmitigated), "map 2 was the LRU");
         assert!(cache.contains(&a, &maps[3], MaskKind::Unmitigated));
+    }
+
+    /// Regression (determinism lint D002): the LRU scan iterates the
+    /// cache map; with the old `HashMap` backing the walk order was
+    /// seeded per process. Two identical access sequences must leave two
+    /// caches holding exactly the same plan set.
+    #[test]
+    fn eviction_is_deterministic_across_identical_runs() {
+        let a = mnist();
+        let maps: Vec<FaultMap> = (0..8u64)
+            .map(|s| inject_uniform(FaultSpec::new(16), 4, &mut Rng::new(100 + s)))
+            .collect();
+        let run = || {
+            let mut cache = PlanCache::with_capacity(3);
+            for fm in &maps {
+                let _ = cache.get_or_compile(&a, fm, MaskKind::FapBypass);
+            }
+            // interleave touches so eviction decisions depend on the walk
+            let _ = cache.get_or_compile(&a, &maps[7], MaskKind::FapBypass);
+            let _ = cache.get_or_compile(&a, &maps[0], MaskKind::FapBypass);
+            maps.iter()
+                .map(|fm| cache.contains(&a, fm, MaskKind::FapBypass))
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -27,9 +27,36 @@
 
 use crate::obs::{LazyCounter, LazyHistogram};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+
+// Sync primitives route through a shim so the whole protocol can run
+// under loom's model checker (CI leg: `RUSTFLAGS="--cfg loom" cargo test
+// loom_`). The `loom` cfg is never set in normal builds — loom is a
+// CI-only dev-dependency, not part of the vendored registry — so the
+// shipped code compiles against std exactly as before. The same
+// protocol is also model-checked without any dependency by
+// `crate::analysis::check` (abstract state machines, always-on tests).
+#[cfg(not(loom))]
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(not(loom))]
 use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+#[cfg(not(loom))]
+type WorkerHandle = std::thread::JoinHandle<()>;
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+type WorkerHandle = loom::thread::JoinHandle<()>;
+
+#[cfg(not(loom))]
+fn spawn_worker(name: String, f: impl FnOnce() + Send + 'static) -> WorkerHandle {
+    std::thread::Builder::new().name(name).spawn(f).expect("spawn worker thread")
+}
+
+#[cfg(loom)]
+fn spawn_worker(_name: String, f: impl FnOnce() + Send + 'static) -> WorkerHandle {
+    loom::thread::spawn(f)
+}
 
 // Pool occupancy metrics. Only *claim-side* quantities are recorded (job
 // count, shards per job, inline dispatches) — realized thread concurrency
@@ -79,10 +106,15 @@ struct Shared {
     poisoned: AtomicBool,
 }
 
+// Address of the pool whose task this thread is currently inside — lets
+// [`WorkerPool::run`] turn a reentrant dispatch (a guaranteed deadlock)
+// into an immediate panic with a diagnosis.
+#[cfg(not(loom))]
 thread_local! {
-    /// Address of the pool whose task this thread is currently inside —
-    /// lets [`WorkerPool::run`] turn a reentrant dispatch (a guaranteed
-    /// deadlock) into an immediate panic with a diagnosis.
+    static RUNNING_POOL: std::cell::Cell<usize> = std::cell::Cell::new(0);
+}
+#[cfg(loom)]
+loom::thread_local! {
     static RUNNING_POOL: std::cell::Cell<usize> = std::cell::Cell::new(0);
 }
 
@@ -113,7 +145,7 @@ impl Shared {
 /// nothing for the abstraction.
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Vec<WorkerHandle>,
     lanes: usize,
 }
 
@@ -134,10 +166,7 @@ impl WorkerPool {
         let handles = (1..lanes)
             .map(|i| {
                 let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("repro-exec-{i}"))
-                    .spawn(move || worker_loop(&shared))
-                    .expect("spawn worker thread")
+                spawn_worker(format!("repro-exec-{i}"), move || worker_loop(&shared))
             })
             .collect();
         WorkerPool { shared, handles, lanes }
@@ -388,7 +417,51 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
-#[cfg(test)]
+// loom's model-checked schedules: the same WorkerPool code, with every
+// Mutex/Condvar/atomic swapped for loom's instrumented versions by the
+// shim above. Run on the CI loom leg only:
+//   cargo add loom --dev && RUSTFLAGS="--cfg loom" cargo test --release loom_
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    /// Every schedule of a 2-lane pool over 2 shards runs each shard
+    /// exactly once and `run` returns only after both completed.
+    #[test]
+    fn loom_pool_claim_completion_protocol() {
+        loom::model(|| {
+            let pool = WorkerPool::new(2);
+            let hits: Arc<[AtomicUsize; 2]> =
+                Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+            let h = hits.clone();
+            pool.run(2, &move |i| {
+                h[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(hits[0].load(Ordering::SeqCst), 1);
+            assert_eq!(hits[1].load(Ordering::SeqCst), 1);
+            drop(pool); // join barrier under the model too
+        });
+    }
+
+    /// Back-to-back jobs on one pool: the epoch gate keeps a worker that
+    /// drained job 1 from re-entering it while job 2 is being published.
+    #[test]
+    fn loom_pool_epoch_gate_across_jobs() {
+        loom::model(|| {
+            let pool = WorkerPool::new(2);
+            let total = Arc::new(AtomicUsize::new(0));
+            for _ in 0..2 {
+                let t = total.clone();
+                pool.run(2, &move |_| {
+                    t.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            assert_eq!(total.load(Ordering::SeqCst), 4);
+        });
+    }
+}
+
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;

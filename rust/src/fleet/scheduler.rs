@@ -39,8 +39,17 @@ use crate::systolic::timing;
 use crate::util::Rng;
 use anyhow::{anyhow, ensure, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::sync::{Arc, Barrier};
 use std::time::Instant;
+
+// The admission gauge's primitives route through a shim so the gauge can
+// run under loom's model checker (CI leg; the `loom` cfg is never set in
+// normal builds). `crate::analysis::check::GaugeModel` is the always-on,
+// dependency-free model of the same protocol.
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex};
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex};
 
 /// One serving lane the scheduler can route to: a chip's controller view,
 /// the weights deployed on it, and its routing weight (last health-check
@@ -268,6 +277,33 @@ impl Depths {
     fn least_loaded(&self) -> usize {
         let d = self.state.lock().unwrap();
         (0..d.len()).min_by_key(|&i| (d[i], i)).unwrap()
+    }
+}
+
+// loom model checking of the gauge (CI leg: RUSTFLAGS="--cfg loom"
+// cargo test loom_). The abstract always-on model of the same protocol —
+// including the notify_one bug variant — lives in analysis::check.
+#[cfg(all(loom, test))]
+mod loom_gauge_tests {
+    use super::*;
+
+    /// Every schedule: two producers through a cap-1 chip never exceed
+    /// the cap, never deadlock, and both complete.
+    #[test]
+    fn loom_gauge_blocks_at_cap_and_wakes() {
+        loom::model(|| {
+            let depths = std::sync::Arc::new(Depths::new(1, 1));
+            let d2 = depths.clone();
+            let t = loom::thread::spawn(move || {
+                d2.acquire(0);
+                d2.release(0);
+            });
+            depths.acquire(0);
+            depths.release(0);
+            t.join().unwrap();
+            assert_eq!(depths.least_loaded(), 0);
+            assert!(*depths.state.lock().unwrap() == vec![0]);
+        });
     }
 }
 

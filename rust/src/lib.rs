@@ -45,7 +45,14 @@
 //! * [`util`] — deterministic RNG, JSON emission, micro-bench + property
 //!   harnesses (the vendored registry has no criterion/proptest — see
 //!   Cargo.toml).
+//! * [`analysis`] — static analysis over all of the above: the compiled-
+//!   plan verifier (bypass coverage, truth/known role separation, panel
+//!   layout — hooked into every compile under `debug_assertions` /
+//!   `REPRO_VERIFY=1`), the source-level determinism lint behind
+//!   `repro lint`, and an exhaustive-interleaving model checker for the
+//!   WorkerPool and fleet-admission concurrency protocols.
 
+pub mod analysis;
 pub mod chip;
 pub mod coordinator;
 pub mod data;

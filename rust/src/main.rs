@@ -11,6 +11,8 @@
 //! repro detect --faults K [--n N]            fault localization demo
 //! repro synthesis                            synthesis + yield model
 //! repro smoke                                artifact round-trip checks
+//! repro verify [--array-n N]                 static plan verifier sweep
+//! repro lint                                 source determinism lint
 //! ```
 //!
 //! Common options: `--backend sim|plan|xla` (execution engine; `sim`/`plan`
@@ -34,7 +36,7 @@ use repro::model::quant::calibrate_mlp;
 use repro::model::{arch, Params};
 use repro::runtime::Runtime;
 use repro::util::Rng;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Accepted `--option` keys per subcommand (every key is validated; a
 /// misspelled option errors with the nearest accepted match instead of
@@ -69,6 +71,8 @@ fn allowed_opts(cmd: &str) -> Option<&'static [&'static str]> {
         "aging" => Some(&["tau", "beta", "n", "faults", "seed", "points", "hours", "eol-rate"]),
         "detect" => Some(&["n", "faults", "seed", "escape-prob"]),
         "smoke" => Some(&["artifacts"]),
+        "verify" => Some(&["array-n", "seed"]),
+        "lint" => Some(&["src", "allowlist"]),
         _ => None,
     }
 }
@@ -100,9 +104,11 @@ fn nearest<'a>(key: &str, allowed: &[&'a str]) -> Option<&'a str> {
 }
 
 /// Minimal `--key value` argument parser (offline registry has no clap).
+/// `BTreeMap` keeps option iteration (and hence which of several unknown
+/// options gets reported) deterministic — see D002 in `repro lint`.
 struct Args {
     cmd: String,
-    opts: HashMap<String, String>,
+    opts: BTreeMap<String, String>,
 }
 
 impl Args {
@@ -113,7 +119,7 @@ impl Args {
     fn parse_from(it: impl IntoIterator<Item = String>) -> Result<Args> {
         let mut it = it.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".into());
-        let mut opts = HashMap::new();
+        let mut opts = BTreeMap::new();
         while let Some(k) = it.next() {
             let key = k
                 .strip_prefix("--")
@@ -677,6 +683,144 @@ fn main() -> Result<()> {
             }
             println!("smoke OK ({:?} XLA compile)", rt.compile_time());
         }
+        "verify" => {
+            // Static plan verification sweep: compile every campaign-shaped
+            // config natively and run the analysis rules over the resulting
+            // IR. Release builds have no `debug_assertions` compile hook, so
+            // the sweep calls the verifier explicitly (CI also exports
+            // REPRO_VERIFY=1 to arm the hook for everything else it runs).
+            use repro::analysis::verify::{
+                render, verify_chip_plan, verify_layer_masks, verify_matmul_plan,
+            };
+            use repro::exec::{MatmulPlan, PanelOptions};
+            use repro::faults::KnownMap;
+            use repro::mapping::LayerMasks;
+
+            let n = args.usize("array-n", 16)?;
+            let seed = args.u64("seed", 42)?;
+            anyhow::ensure!(n >= 4, "--array-n must be >= 4, got {n}");
+            let mut rng = Rng::new(seed);
+            let fault_counts = [0usize, n, (n * n) / 8];
+            let kinds = [MaskKind::Unmitigated, MaskKind::FapBypass];
+            let mut checked = 0usize;
+            let mut bad = 0usize;
+
+            for &faults in &fault_counts {
+                let truth = inject_uniform(FaultSpec::new(n), faults, &mut rng);
+                // controller views: perfect detection and a partial view
+                // that misses every other fault (escapes)
+                let perfect = KnownMap::perfect(&truth);
+                let partial = KnownMap::from_macs(
+                    n,
+                    truth.faulty_macs().into_iter().step_by(2),
+                );
+                for (kname, known) in [("perfect", &perfect), ("partial", &partial)] {
+                    for kind in kinds {
+                        // host-side mask level, across all paper archs
+                        for model in ["mnist", "timit", "alexnet32"] {
+                            let a = arch::by_name(model).unwrap();
+                            let masks = LayerMasks::build_views(&a, &truth, known, kind);
+                            let diags = verify_layer_masks(&a, &masks, &truth, known, kind);
+                            checked += 1;
+                            if !diags.is_empty() {
+                                bad += 1;
+                                let hdr = format!(
+                                    "masks {model} {kind:?} {faults} faults ({kname} known)"
+                                );
+                                eprint!("{}", render(&hdr, &diags));
+                            }
+                        }
+                        // tile-program level: random +/-127 weights, ragged
+                        // dims (partial-tile tails), both panel widths and
+                        // both panel element types
+                        let (k, m) = (n + 3, 2 * n + 5);
+                        let w: Vec<i32> =
+                            (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+                        for nr in [4usize, 8] {
+                            for allow_i8 in [false, true] {
+                                let plan = MatmulPlan::compile_views_opts(
+                                    &truth,
+                                    known,
+                                    kind,
+                                    &w,
+                                    k,
+                                    m,
+                                    PanelOptions { nr, allow_i8 },
+                                );
+                                let diags = verify_matmul_plan(&plan, &truth, known, &w);
+                                checked += 1;
+                                if !diags.is_empty() {
+                                    bad += 1;
+                                    let hdr = format!(
+                                        "plan {k}x{m} {kind:?} {faults} faults ({kname} \
+                                         known, nr {nr}, i8 {allow_i8})"
+                                    );
+                                    eprint!("{}", render(&hdr, &diags));
+                                }
+                            }
+                        }
+                        // whole-chip level: quantized MLP lowering
+                        let a = arch::by_name("mnist").unwrap();
+                        let qweights: Vec<Vec<i32>> = a
+                            .weighted_layers()
+                            .iter()
+                            .map(|l| {
+                                (0..l.weight_len())
+                                    .map(|_| rng.below(255) as i32 - 127)
+                                    .collect()
+                            })
+                            .collect();
+                        let cp =
+                            ChipPlan::compile_mlp_views(&a, &truth, known, kind, &qweights);
+                        let diags =
+                            verify_chip_plan(&cp, &a, &truth, known, Some(&qweights));
+                        checked += 1;
+                        if !diags.is_empty() {
+                            bad += 1;
+                            let hdr = format!(
+                                "chip mnist {kind:?} {faults} faults ({kname} known)"
+                            );
+                            eprint!("{}", render(&hdr, &diags));
+                        }
+                    }
+                }
+            }
+            println!(
+                "verify: {checked} compiled configs checked on a {n}x{n} array, \
+                 {bad} with violations"
+            );
+            anyhow::ensure!(bad == 0, "static plan verification failed for {bad} configs");
+        }
+        "lint" => {
+            // Source-level determinism lint over the crate, with the
+            // audited allowlist checked into scripts/. Defaults resolve
+            // relative to the crate manifest so the command works from any
+            // working directory.
+            let src_default = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+            let allow_default =
+                concat!(env!("CARGO_MANIFEST_DIR"), "/../scripts/determinism_allowlist.txt");
+            let src_root = args.get("src").unwrap_or(src_default).to_string();
+            let allow_path = args.get("allowlist").unwrap_or(allow_default).to_string();
+            let allow = std::fs::read_to_string(&allow_path)
+                .with_context(|| format!("reading allowlist {allow_path}"))?;
+            let rep = repro::analysis::lint::run(std::path::Path::new(&src_root), &allow)
+                .with_context(|| format!("linting {src_root}"))?;
+            for f in &rep.violations {
+                println!("{f}");
+            }
+            println!(
+                "lint: {} files scanned, {} allowlisted findings, {} violations",
+                rep.files_scanned,
+                rep.allowed,
+                rep.violations.len()
+            );
+            anyhow::ensure!(
+                rep.violations.is_empty(),
+                "determinism lint found {} violations (audit and extend {allow_path} only \
+                 with a justifying comment)",
+                rep.violations.len()
+            );
+        }
         other => {
             eprintln!("unknown command {other:?}\n{HELP}");
             std::process::exit(2);
@@ -717,6 +861,14 @@ COMMANDS:
   detect                      post-fab fault localization demo
   synthesis                   45nm synthesis + yield model tables
   smoke                       compile key artifacts, verify the runtime
+  verify                      static plan verifier sweep: compile the
+                              campaign configs (archs x fault counts x
+                              mitigation x controller views x panel
+                              widths) and prove the IR invariants
+  lint                        source determinism lint (wall-clock reads,
+                              unordered hash iteration, thread-order
+                              float accumulation) vs the audited
+                              allowlist in scripts/
 
 OPTIONS:
   --backend B       execution engine: sim | plan | xla
@@ -805,6 +957,27 @@ mod tests {
         // --id belongs to `experiment`, not `train`
         let err = Args::parse_from(argv(&["train", "--id", "fig2a"])).unwrap_err().to_string();
         assert!(err.contains("unknown option --id"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_report_order_is_deterministic() {
+        // opts is a BTreeMap: with several unknown options the
+        // lexicographically first one is reported, run after run (a
+        // HashMap here made the error message flap between --aaa and
+        // --zzz across invocations)
+        for _ in 0..8 {
+            let err = Args::parse_from(argv(&["detect", "--zzz", "1", "--aaa", "2"]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("unknown option --aaa"), "{err}");
+        }
+    }
+
+    #[test]
+    fn verify_and_lint_accept_their_options() {
+        assert!(Args::parse_from(argv(&["verify", "--array-n", "8"])).is_ok());
+        assert!(Args::parse_from(argv(&["lint", "--src", "src"])).is_ok());
+        assert!(Args::parse_from(argv(&["verify", "--model", "mnist"])).is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,7 +58,7 @@ pub struct ArtifactSpec {
     pub name: String,
     /// Path relative to the artifacts directory.
     pub file: String,
-    pub meta: HashMap<String, String>,
+    pub meta: BTreeMap<String, String>,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
 }
@@ -72,7 +72,7 @@ impl ArtifactSpec {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
-    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
 fn parse_tensor(rest: &str) -> Result<TensorSpec> {
@@ -102,7 +102,7 @@ impl Manifest {
     }
 
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
-        let mut artifacts = HashMap::new();
+        let mut artifacts = BTreeMap::new();
         let mut cur: Option<ArtifactSpec> = None;
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -118,7 +118,7 @@ impl Manifest {
                     cur = Some(ArtifactSpec {
                         name: rest.to_string(),
                         file: String::new(),
-                        meta: HashMap::new(),
+                        meta: BTreeMap::new(),
                         inputs: vec![],
                         outputs: vec![],
                     });

@@ -8,7 +8,7 @@ use super::artifacts::Manifest;
 use super::executable::Executable;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
@@ -16,7 +16,7 @@ use std::time::Instant;
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
     /// Cumulative XLA compile time (reported by the CLI for transparency).
     compile_time: RefCell<std::time::Duration>,
 }
@@ -29,7 +29,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
             compile_time: RefCell::new(std::time::Duration::ZERO),
         })
     }

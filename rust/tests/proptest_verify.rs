@@ -1,0 +1,146 @@
+//! Property tests for the static plan verifier ([`repro::analysis`]):
+//! every plan the compiler produces — any shape, fault map, controller
+//! view, mitigation, panel width or panel element type — must verify
+//! with zero diagnostics. This is the acceptance half of the verifier's
+//! contract; the rejection half (seeded mutations must be caught with
+//! the right rule ids) lives in the crate's unit tests, which can reach
+//! the IR mutation hooks.
+//!
+//! Uses the in-repo harness (`rust/src/util/prop.rs`; the offline
+//! registry has no proptest). Failing cases replay with
+//! `PROP_REPLAY=<seed>`.
+
+use repro::analysis::verify::{verify_chip_plan, verify_layer_masks, verify_matmul_plan};
+use repro::exec::{MatmulPlan, PanelOptions};
+use repro::faults::{inject_uniform, FaultSpec, KnownMap};
+use repro::mapping::{LayerMasks, MaskKind};
+use repro::model::arch;
+use repro::prop_assert;
+use repro::util::{prop, Rng};
+
+/// Random `(truth, known)` pair: uniform stuck-at faults plus a
+/// controller view that is the truth, a subset of it (escapes), or a
+/// superset-shaped independent detection (false positives are legal —
+/// bypassing a healthy column only costs accuracy, never correctness).
+fn random_views(rng: &mut Rng, n: usize, max_faults: usize) -> (repro::faults::FaultMap, KnownMap) {
+    let faults = rng.below(max_faults.min(n * n) + 1);
+    let truth = inject_uniform(FaultSpec::new(n), faults, &mut Rng::new(rng.next_u64()));
+    let known = match rng.below(3) {
+        0 => KnownMap::perfect(&truth),
+        1 => KnownMap::from_macs(
+            n,
+            truth.faulty_macs().into_iter().filter(|_| rng.bool(0.6)),
+        ),
+        _ => {
+            let mut macs = truth.faulty_macs();
+            for _ in 0..rng.below(4) {
+                macs.push((rng.below(n), rng.below(n)));
+            }
+            KnownMap::from_macs(n, macs)
+        }
+    };
+    (truth, known)
+}
+
+fn kind_of(rng: &mut Rng) -> MaskKind {
+    if rng.bool(0.5) {
+        MaskKind::FapBypass
+    } else {
+        MaskKind::Unmitigated
+    }
+}
+
+/// Every compiler-produced tile program verifies clean, across random
+/// shapes (partial tiles included), views, panel widths and both panel
+/// element types.
+#[test]
+fn prop_compiled_matmul_plans_verify_clean() {
+    prop::check("verifier_accepts_compiled_plans", 0x5AFE, 80, |rng| {
+        let n = 2 + rng.below(9);
+        // bias toward non-multiples of n: partial-height and
+        // partial-width tiles (the C1 tail-lane surface) are the
+        // common case
+        let k = 1 + rng.below(3 * n);
+        let m = 1 + rng.below(3 * n);
+        let (truth, known) = random_views(rng, n, 8);
+        let kind = kind_of(rng);
+        let mut w: Vec<i32> = (0..k * m).map(|_| rng.below(255) as i32 - 127).collect();
+        // exact zeros exercise the dense additive-constant fold path
+        for v in w.iter_mut() {
+            if rng.bool(0.15) {
+                *v = 0;
+            }
+        }
+        let nr = if rng.bool(0.5) { 4 } else { 8 };
+        let allow_i8 = rng.bool(0.5);
+        let plan = MatmulPlan::compile_views_opts(
+            &truth,
+            &known,
+            kind,
+            &w,
+            k,
+            m,
+            PanelOptions { nr, allow_i8 },
+        );
+        let diags = verify_matmul_plan(&plan, &truth, &known, &w);
+        prop_assert!(
+            diags.is_empty(),
+            "{k}x{m} on {n}x{n} ({kind:?}, {} faults, {} known, nr {nr}, i8 {allow_i8}) \
+             raised: {}",
+            truth.faulty_mac_count(),
+            known.faulty_mac_count(),
+            diags[0]
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compiled_layer_masks_verify_clean() {
+    prop::check("verifier_accepts_built_masks", 0xA11, 40, |rng| {
+        let n = 4 + rng.below(13);
+        let (truth, known) = random_views(rng, n, n * n / 6);
+        let kind = kind_of(rng);
+        for model in ["mnist", "timit", "alexnet32"] {
+            let a = arch::by_name(model).unwrap();
+            let masks = LayerMasks::build_views(&a, &truth, &known, kind);
+            let diags = verify_layer_masks(&a, &masks, &truth, &known, kind);
+            prop_assert!(
+                diags.is_empty(),
+                "masks for {model} ({kind:?}, {} faults, {} known) raised: {}",
+                truth.faulty_mac_count(),
+                known.faulty_mac_count(),
+                diags[0]
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Whole-chip acceptance: the quantized-MLP lowering path verifies
+/// clean end to end (identity, host masks, and every per-layer tile
+/// program against the quantized weights it was compiled from).
+#[test]
+fn prop_compiled_chip_plans_verify_clean() {
+    prop::check("verifier_accepts_chip_plans", 0xC41, 12, |rng| {
+        let n = 4 + rng.below(13);
+        let (truth, known) = random_views(rng, n, n * n / 6);
+        let kind = kind_of(rng);
+        let a = arch::mnist();
+        let qweights: Vec<Vec<i32>> = a
+            .weighted_layers()
+            .iter()
+            .map(|l| (0..l.weight_len()).map(|_| rng.below(255) as i32 - 127).collect())
+            .collect();
+        let plan = repro::exec::ChipPlan::compile_mlp_views(&a, &truth, &known, kind, &qweights);
+        let diags = verify_chip_plan(&plan, &a, &truth, &known, Some(&qweights));
+        prop_assert!(
+            diags.is_empty(),
+            "chip plan ({kind:?}, {} faults, {} known) raised: {}",
+            truth.faulty_mac_count(),
+            known.faulty_mac_count(),
+            diags[0]
+        );
+        Ok(())
+    });
+}

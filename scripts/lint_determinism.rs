@@ -1,0 +1,60 @@
+//! Standalone driver for the determinism lint (`repro lint` without the
+//! rest of the CLI): scans the crate source for wall-clock reads (D001),
+//! unordered hash-map iteration (D002) and thread-order float
+//! accumulation (D003), then diffs the findings against the audited
+//! allowlist.
+//!
+//! ```text
+//! cargo run --release --bin lint_determinism [SRC_DIR [ALLOWLIST]]
+//! ```
+//!
+//! Defaults resolve relative to the crate manifest (`rust/src` and
+//! `scripts/determinism_allowlist.txt`), so the bin works from any
+//! working directory. Exit code 0 = clean, 1 = violations, 2 = I/O
+//! error. CI runs this (via `repro lint`) as a required step; the crate
+//! test-suite also asserts the same scan is clean, so a violation fails
+//! `cargo test` too.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let src_root =
+        args.next().unwrap_or_else(|| concat!(env!("CARGO_MANIFEST_DIR"), "/src").to_string());
+    let allow_path = args.next().unwrap_or_else(|| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../scripts/determinism_allowlist.txt").to_string()
+    });
+    let allow = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => text,
+        Err(e) => {
+            eprintln!("lint_determinism: reading allowlist {allow_path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match repro::analysis::lint::run(Path::new(&src_root), &allow) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint_determinism: scanning {src_root}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for f in &report.violations {
+        println!("{f}");
+    }
+    println!(
+        "lint_determinism: {} files scanned, {} allowlisted findings, {} violations",
+        report.files_scanned,
+        report.allowed,
+        report.violations.len()
+    );
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "determinism lint failed — fix the sites above or (only with an audit \
+             comment) extend {allow_path}"
+        );
+        ExitCode::from(1)
+    }
+}
